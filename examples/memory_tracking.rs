@@ -1,0 +1,69 @@
+//! Fig 4 reproduction: activation memory per worker when training with N
+//! workers under DP (in-phase: per-worker memory = the single-pass curve)
+//! vs CDP (staggered: per-worker memory = the cyclic mean), for ResNet-50
+//! and ViT-B/16 analytic profiles, N ∈ {4, 8, 32}.
+//!
+//! Run: `cargo run --release --example memory_tracking -- --batch 64 --out results/fig4.csv`
+
+use cyclic_dp::cli::Args;
+use cyclic_dp::memsim::{extrapolate, resnet50_profile, vit_b16_profile, MemoryCurve};
+use cyclic_dp::metrics::Metrics;
+use cyclic_dp::util::stats::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let batch = args.u64_or("batch", 64);
+    let out = args.str_or("out", "results/fig4.csv").to_string();
+    let ns = [4usize, 8, 32];
+
+    let mut metrics = Metrics::new();
+    for (arch, layers) in [
+        ("resnet50", resnet50_profile(batch)),
+        ("vit_b16", vit_b16_profile(batch)),
+    ] {
+        let curve = MemoryCurve::from_layers(&layers);
+        println!(
+            "\n=== {arch} (batch {batch}) — single-pass activation curve: peak {}, mean {} ===",
+            fmt_bytes(curve.peak() as u64),
+            fmt_bytes(curve.mean() as u64)
+        );
+        for n in ns {
+            let e = extrapolate(&curve, n, 512);
+            for (tau, dp, cdp) in e.samples.iter().step_by(8) {
+                metrics.record(&format!("{arch}_dp_n{n}"), *tau, *dp);
+                metrics.record(&format!("{arch}_cdp_n{n}"), *tau, *cdp);
+            }
+            println!(
+                "N={:<3} DP peak/worker {:>10}  CDP peak/worker {:>10}  reduction {:>5.1}%",
+                n,
+                fmt_bytes(e.dp_peak as u64),
+                fmt_bytes(e.cdp_peak as u64),
+                e.reduction * 100.0
+            );
+        }
+        // optimal halving reference line (paper's 'Optimal')
+        let e32 = extrapolate(&curve, 32, 512);
+        println!(
+            "   optimal halving = {} | CDP N=32 reaches {}",
+            fmt_bytes((e32.dp_peak / 2.0) as u64),
+            fmt_bytes(e32.cdp_peak as u64)
+        );
+    }
+
+    let names: Vec<String> = ["resnet50", "vit_b16"]
+        .iter()
+        .flat_map(|a| {
+            ns.iter().flat_map(move |n| {
+                [format!("{a}_dp_n{n}"), format!("{a}_cdp_n{n}")]
+            })
+        })
+        .collect();
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    metrics.write_series_csv(std::path::Path::new(&out), &refs)?;
+    println!("\nwrote Fig-4 curves to {out}");
+    println!(
+        "paper shape: CDP flattens as N grows; ViT (homogeneous) ≈42% saving, \
+         ResNet (heterogeneous) ≈30%"
+    );
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: train the tiny transformer bundle under all three update
+//! rules and watch the losses coincide at step 0 (bootstrap) then track
+//! each other — the paper's core claim that the CDP delay is benign.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use cyclic_dp::coordinator::single::RefTrainer;
+use cyclic_dp::model::artifacts_root;
+use cyclic_dp::parallel::Rule;
+use cyclic_dp::runtime::BundleRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_root().join("tiny");
+    println!("loading bundle {dir:?} (PJRT CPU, HLO-text artifacts)…");
+    let rt = BundleRuntime::load(&dir)?;
+    println!(
+        "model: {} | {} stages | {} params | micro-batch {:?}",
+        rt.manifest.family,
+        rt.manifest.n_stages,
+        rt.manifest.total_param_elems,
+        rt.manifest.stages[0].input.shape,
+    );
+
+    let steps = 12;
+    let mut curves = Vec::new();
+    for rule in [Rule::Dp, Rule::CdpV1, Rule::CdpV2] {
+        let mut t = RefTrainer::new(&rt, rule.clone())?;
+        let logs = t.train(steps)?;
+        println!("\n--- rule {} ---", rule.name());
+        for l in &logs {
+            println!("step {:>3}  loss {:.5}", l.step, l.loss);
+        }
+        curves.push((rule.name(), logs));
+    }
+
+    println!("\nstep-0 losses identical across rules (θ_-1 := θ_0 bootstrap):");
+    for (name, logs) in &curves {
+        println!("  {name:>7}: {:.6}", logs[0].loss);
+    }
+    let final_losses: Vec<f64> = curves.iter().map(|(_, l)| l[steps - 1].loss).collect();
+    println!(
+        "final losses: dp {:.4} | cdp_v1 {:.4} | cdp_v2 {:.4}",
+        final_losses[0], final_losses[1], final_losses[2]
+    );
+    Ok(())
+}

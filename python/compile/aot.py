@@ -1,0 +1,189 @@
+"""AOT compiler: staged models → HLO-text artifact bundles for the rust runtime.
+
+For each bundle (configs.py) this emits into ``artifacts/<bundle>/``:
+
+- ``stage{j}_fwd.hlo.txt``      j < N-1
+- ``stage{j}_fwdbwd.hlo.txt``   all j (arity differs; see manifest)
+- ``stage{N-1}_fwdloss.hlo.txt`` and, for classifiers, ``..._predict.hlo.txt``
+- ``stage{j}_sgd.hlo.txt``      fused SGD-momentum for that stage's tensors
+- ``params.bin``                f32 LE init params, manifest order
+- ``manifest.json``             shapes/dtypes/arity/data/hyperparams
+- ``golden.json``               per-step losses of DP / CDP-v1 / CDP-v2 from
+                                the python mirror trainer (cross-language test)
+
+Interchange is **HLO text**, not serialized protos: jax ≥ 0.5 emits 64-bit
+instruction ids that xla_extension 0.5.1 (the version the rust `xla` crate
+binds) rejects; the text parser reassigns ids (see /opt/xla-example).
+
+Python runs ONCE here; nothing in this package is imported at runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, mirror
+from .model import make_stage_fns
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPES[dtype])
+
+
+def lower_to_file(fn, arg_specs, path: str) -> int:
+    # keep_unused=True: the rust caller passes every manifest argument;
+    # without it jit DCEs dead inputs (e.g. a final bias whose effect is
+    # only visible in the discarded fwd output of a fwdbwd artifact) and
+    # the arities disagree at execute time.
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def build_bundle(name: str, out_root: str, skip_golden: bool = False) -> None:
+    t0 = time.time()
+    bc = configs.bundle_config(name)
+    model = configs.make_bundle_model(bc)
+    out_dir = os.path.join(out_root, name)
+    os.makedirs(out_dir, exist_ok=True)
+    n = model.n_stages
+    is_class = bc["data"]["kind"] == "class"
+
+    params0 = model.init_params(bc["seed"])
+
+    stages_meta = []
+    for j in range(n):
+        specs_j = model.stage_specs[j]
+        pspecs = [spec(s.shape) for s in specs_j]
+        in_spec = model.input_spec(j)
+        x_spec = spec(in_spec.shape, in_spec.dtype)
+        fns = make_stage_fns(model, j)
+        arts = {}
+        last = j == n - 1
+        if not last:
+            out_spec = model.output_spec(j)
+            gy_spec = spec(out_spec.shape, out_spec.dtype)
+            arts["fwd"] = f"stage{j}_fwd.hlo.txt"
+            lower_to_file(fns["fwd"], pspecs + [x_spec], os.path.join(out_dir, arts["fwd"]))
+            arts["fwdbwd"] = f"stage{j}_fwdbwd.hlo.txt"
+            lower_to_file(
+                fns["fwdbwd"], pspecs + [x_spec, gy_spec],
+                os.path.join(out_dir, arts["fwdbwd"]),
+            )
+        else:
+            t_spec_ = model.target_spec()
+            tgt_spec = spec(t_spec_.shape, t_spec_.dtype)
+            arts["fwd_loss"] = f"stage{j}_fwdloss.hlo.txt"
+            lower_to_file(
+                fns["fwd_loss"], pspecs + [x_spec, tgt_spec],
+                os.path.join(out_dir, arts["fwd_loss"]),
+            )
+            arts["fwdbwd"] = f"stage{j}_fwdbwd.hlo.txt"
+            lower_to_file(
+                fns["fwdbwd"], pspecs + [x_spec, tgt_spec],
+                os.path.join(out_dir, arts["fwdbwd"]),
+            )
+            if is_class:
+                arts["predict"] = f"stage{j}_predict.hlo.txt"
+                lower_to_file(
+                    fns["predict"], pspecs + [x_spec],
+                    os.path.join(out_dir, arts["predict"]),
+                )
+        arts["sgd"] = f"stage{j}_sgd.hlo.txt"
+        lr_spec = spec((1,))
+        lower_to_file(
+            fns["sgd"], pspecs + pspecs + pspecs + [lr_spec],
+            os.path.join(out_dir, arts["sgd"]),
+        )
+
+        out_sp = model.output_spec(j) if not last else None
+        stages_meta.append(
+            dict(
+                index=j,
+                params=[dict(name=s.name, shape=list(s.shape)) for s in specs_j],
+                n_params=len(specs_j),
+                param_elems=int(sum(s.elems for s in specs_j)),
+                input=dict(shape=list(in_spec.shape), dtype=in_spec.dtype),
+                output=(dict(shape=list(out_sp.shape), dtype=out_sp.dtype)
+                        if out_sp else None),
+                act_bytes=int(model.stage_act_bytes(j)),
+                flops=int(model.stage_flops(j)),
+                artifacts=arts,
+            )
+        )
+
+    # params.bin: stage-major, manifest order, f32 LE.
+    with open(os.path.join(out_dir, "params.bin"), "wb") as f:
+        for st in params0:
+            for a in st:
+                f.write(np.ascontiguousarray(a, dtype="<f4").tobytes())
+
+    golden = None
+    if bc["golden_steps"] > 0 and not skip_golden:
+        tr = mirror.MirrorTrainer(model, bc["data"], bc["lr"], bc["momentum"])
+        golden = {"steps": bc["golden_steps"], "rules": {}}
+        for rule in mirror.RULES:
+            losses, _ = tr.train(params0, rule, bc["golden_steps"])
+            if not all(np.isfinite(losses)):
+                raise RuntimeError(
+                    f"bundle {name} rule {rule} diverged: {losses} — "
+                    "golden traces must be finite"
+                )
+            golden["rules"][rule] = losses
+        with open(os.path.join(out_dir, "golden.json"), "w") as f:
+            json.dump(golden, f, indent=1)
+
+    tspec = model.target_spec()
+    manifest = dict(
+        name=name,
+        family=bc["family"],
+        n_stages=n,
+        n_microbatches=n,  # paper: N stages == N micro-batches
+        lr=bc["lr"],
+        momentum=bc["momentum"],
+        data=bc["data"],
+        target=dict(shape=list(tspec.shape), dtype=tspec.dtype),
+        stages=stages_meta,
+        params_bin="params.bin",
+        golden="golden.json" if golden else None,
+        golden_steps=bc["golden_steps"] if golden else 0,
+        total_param_elems=int(sum(m["param_elems"] for m in stages_meta)),
+    )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] bundle {name}: {n} stages, "
+          f"{manifest['total_param_elems']:,} params, {time.time()-t0:.1f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-root", default="../artifacts")
+    ap.add_argument("--bundles", nargs="+", default=["tiny", "mlp"])
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+    for b in args.bundles:
+        build_bundle(b, args.out_root, args.skip_golden)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Bundle configurations: one entry per AOT artifact set `make artifacts` builds.
+
+A bundle = staged model + data distribution + optimizer hyperparams +
+golden-trace length.  ``tiny`` / ``mlp`` / ``convnet`` are small enough to
+carry cross-language golden traces; ``lm_small`` is the end-to-end LM
+driver's default; ``lm_gpt2s`` is the ~100M-class config (GPT-2-small
+shape), built on demand (`python -m compile.aot --bundles lm_gpt2s`).
+"""
+
+from __future__ import annotations
+
+from .model import ConvNetConfig, MlpConfig, TransformerConfig, build_model
+
+
+def bundle_config(name: str) -> dict:
+    if name == "tiny":
+        cfg = TransformerConfig(
+            vocab=64, d_model=32, n_heads=2, n_layers=4, d_ff=64, seq=16,
+            microbatch=4, n_stages=4,
+        )
+        return dict(
+            name=name, family="transformer", cfg=cfg, seed=1234,
+            lr=0.05, momentum=0.9, golden_steps=8,
+            data=dict(kind="lm", vocab=cfg.vocab, seq=cfg.seq,
+                      batch=cfg.microbatch, seed=42),
+        )
+    if name == "mlp":
+        cfg = MlpConfig(classes=10, input_dim=64, hidden=128,
+                        layers_per_stage=2, microbatch=8, n_stages=4)
+        return dict(
+            name=name, family="mlp", cfg=cfg, seed=7, lr=0.01, momentum=0.9,
+            golden_steps=8,
+            data=dict(kind="class", classes=10, input_dim=64, noise=0.3,
+                      batch=cfg.microbatch, seed=99),
+        )
+    if name == "convnet":
+        cfg = ConvNetConfig(classes=10, image_hw=32, in_channels=3,
+                            base_channels=16, blocks_per_stage=1,
+                            microbatch=8, n_stages=4)
+        return dict(
+            name=name, family="convnet", cfg=cfg, seed=21, lr=0.05,
+            momentum=0.9, golden_steps=4,
+            data=dict(kind="class", classes=10, input_dim=cfg.input_dim,
+                      noise=0.3, batch=cfg.microbatch, seed=77),
+        )
+    if name == "lm_small":
+        cfg = TransformerConfig(
+            vocab=512, d_model=256, n_heads=8, n_layers=8, d_ff=1024,
+            seq=64, microbatch=4, n_stages=4,
+        )
+        return dict(
+            name=name, family="transformer", cfg=cfg, seed=3407,
+            lr=0.05, momentum=0.9, golden_steps=0,
+            data=dict(kind="lm", vocab=cfg.vocab, seq=cfg.seq,
+                      batch=cfg.microbatch, seed=2026),
+        )
+    if name == "lm_gpt2s":
+        # GPT-2-small class: 12 layers, d=768, ~110M params (V=16384).
+        cfg = TransformerConfig(
+            vocab=16384, d_model=768, n_heads=12, n_layers=12, d_ff=3072,
+            seq=256, microbatch=1, n_stages=4,
+        )
+        return dict(
+            name=name, family="transformer", cfg=cfg, seed=3407,
+            lr=0.01, momentum=0.9, golden_steps=0,
+            data=dict(kind="lm", vocab=cfg.vocab, seq=cfg.seq,
+                      batch=cfg.microbatch, seed=2026),
+        )
+    raise ValueError(f"unknown bundle: {name}")
+
+
+def make_bundle_model(bc: dict):
+    return build_model(bc["family"], bc["cfg"])

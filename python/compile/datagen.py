@@ -1,0 +1,113 @@
+"""Deterministic synthetic data, bit-compatible with rust/src/data/.
+
+Both languages implement the identical xorshift64* generator and the
+identical f32 arithmetic (sequential 12-uniform Irwin–Hall sums for
+normals), so the rust coordinator and the python mirror trainer consume the
+*same bytes* — that is what makes golden.json a meaningful cross-language
+test of the update rules rather than a statistical one.
+
+Two workloads (DESIGN.md substitution #2):
+
+- ``lm``    — noisy affine Markov chain over a vocab: next = (5·cur + 1 +
+              rng % (V/4)) mod V.  A bigram model can reduce loss from
+              log(V) to ~log(V/4), so the loss curve shows real learning.
+- ``class`` — C Gaussian class prototypes + isotropic noise; prototypes are
+              drawn once from the seed, so train/test splits share them.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+PHI64 = 0x9E3779B97F4A7C15
+
+
+class XorShift64Star:
+    """xorshift64* — matches rust/src/util/rng.rs exactly."""
+
+    def __init__(self, seed: int):
+        self.s = (seed & MASK64) or PHI64
+
+    def next_u64(self) -> int:
+        s = self.s
+        s ^= s >> 12
+        s = (s ^ (s << 25)) & MASK64
+        s ^= s >> 27
+        self.s = s
+        return (s * 0x2545F4914F6CDD1D) & MASK64
+
+    def next_below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def uniform(self) -> np.float32:
+        """f32 in [0, 1) with exactly 24 bits of mantissa."""
+        return np.float32((self.next_u64() >> 40) * (1.0 / (1 << 24)))
+
+    def normal(self) -> np.float32:
+        """Irwin–Hall(12) − 6, summed sequentially in f32."""
+        acc = np.float32(0.0)
+        for _ in range(12):
+            acc = np.float32(acc + self.uniform())
+        return np.float32(acc - np.float32(6.0))
+
+
+def splitmix64(x: int) -> int:
+    """Finalizer used to derive per-(step, microbatch) seeds."""
+    x = (x + PHI64) & MASK64
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return z ^ (z >> 31)
+
+
+def microbatch_seed(base: int, step: int, mb: int) -> int:
+    return splitmix64((base ^ (step * 1000003 + mb + 1)) & MASK64)
+
+
+# ------------------------------------------------------------------- lm ----
+def lm_microbatch(base_seed: int, step: int, mb: int, batch: int, seq: int, vocab: int):
+    """Returns (inputs [B,S] int32, targets [B,S] int32)."""
+    rng = XorShift64Star(microbatch_seed(base_seed, step, mb))
+    noise = max(vocab // 4, 1)
+    toks = np.empty((batch, seq + 1), dtype=np.int32)
+    for b in range(batch):
+        cur = rng.next_below(vocab)
+        toks[b, 0] = cur
+        for s in range(seq):
+            cur = (5 * cur + 1 + rng.next_below(noise)) % vocab
+            toks[b, s + 1] = cur
+    return toks[:, :-1], toks[:, 1:]
+
+
+# ---------------------------------------------------------------- class ----
+def class_prototypes(base_seed: int, classes: int, dim: int) -> np.ndarray:
+    """[C, dim] f32 prototypes; derived from base_seed ^ 0xC1A55."""
+    rng = XorShift64Star(splitmix64(base_seed ^ 0xC1A55))
+    out = np.empty((classes, dim), dtype=np.float32)
+    for c in range(classes):
+        for d in range(dim):
+            out[c, d] = rng.normal()
+    return out
+
+
+def class_microbatch(
+    base_seed: int,
+    step: int,
+    mb: int,
+    batch: int,
+    protos: np.ndarray,
+    noise: float = 0.3,
+):
+    """Returns (x [B, dim] f32, labels [B] int32)."""
+    classes, dim = protos.shape
+    rng = XorShift64Star(microbatch_seed(base_seed, step, mb))
+    x = np.empty((batch, dim), dtype=np.float32)
+    y = np.empty((batch,), dtype=np.int32)
+    nf = np.float32(noise)
+    for b in range(batch):
+        c = rng.next_below(classes)
+        y[b] = c
+        for d in range(dim):
+            x[b, d] = np.float32(protos[c, d] + nf * rng.normal())
+    return x, y

@@ -1,0 +1,47 @@
+"""Fused causal attention Pallas kernel.
+
+One grid cell = one attention head: QKᵀ → numerically-stable causal softmax
+→ ·V computed entirely in VMEM, so the S×S score matrix never touches HBM —
+the flash-attention insight restated for TPU scratchpad memory (DESIGN.md
+§Hardware-adaptation).  For the sequence lengths this repo trains
+(S ≤ 512), a whole head's scores (512² f32 = 1 MiB) fit VMEM comfortably,
+so no K/V streaming loop is needed; the streaming variant is noted in
+DESIGN.md §Perf-L1 as the S > 2048 extension.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]  # [S, Dh]
+    k = k_ref[0]
+    v = v_ref[0]
+    s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # Causal mask via iota comparison (2D iota: TPU-friendly).
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    scores = jnp.where(cols <= rows, scores, jnp.finfo(scores.dtype).min)
+    mx = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - mx)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p / denom, v, preferred_element_type=jnp.float32)
+
+
+def attention(q, k, v):
+    """Causal attention over [H, S, Dh] (heads in the grid axis)."""
+    h, s, dh = q.shape
+    spec = pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(h,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((h, s, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)

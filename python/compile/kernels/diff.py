@@ -1,0 +1,122 @@
+"""Differentiable wrappers around the Pallas kernels.
+
+``pallas_call`` has no automatic VJP, so each kernel gets a ``custom_vjp``:
+
+- ``linear``      — fwd: Pallas tiled GEMM; bwd: *also* Pallas GEMMs
+                    (gx = gz·wᵀ, gw = xᵀ·gz) since those carry the FLOPs.
+                    The pre-activation z is recomputed in the bwd (stage-level
+                    remat — DESIGN.md §Perf-L2) instead of being stashed.
+- ``layernorm``   — fwd: Pallas; bwd: closed-form jnp (memory-bound
+                    elementwise, XLA fuses it).
+- ``attention``   — fwd: Pallas fused head kernel; bwd: vjp of the jnp
+                    reference (recompute).  A dedicated bwd kernel is the
+                    flash-bwd extension noted in DESIGN.md §Perf-L1.
+
+The result: every staged-model fwd AND bwd HLO contains the Pallas-lowered
+ops on its hot path, while remaining fully differentiable for jax.vjp in
+model.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_k
+from . import layernorm as ln_k
+from . import matmul as mm_k
+from . import ref
+
+
+# ----------------------------------------------------------------- linear --
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear(x, w, b, activation):
+    return mm_k.linear(x, w, b, activation)
+
+
+def _linear_fwd(x, w, b, activation):
+    return mm_k.linear(x, w, b, activation), (x, w, b)
+
+
+def _act_grad(z, activation):
+    """d act(z) / dz, elementwise."""
+    if activation is None or activation == "none":
+        return jnp.ones_like(z)
+    if activation == "relu":
+        return (z > 0).astype(z.dtype)
+    if activation == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        inner = c * (z + 0.044715 * z**3)
+        t = jnp.tanh(inner)
+        return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t**2) * c * (
+            1.0 + 3 * 0.044715 * z**2
+        )
+    raise ValueError(activation)
+
+
+def _linear_bwd(activation, res, gy):
+    x, w, b = res
+    if activation is None or activation == "none":
+        gz = gy
+    else:
+        z = mm_k.linear(x, w, b, None)  # remat the pre-activation
+        gz = gy * _act_grad(z, activation)
+    gx = mm_k.linear(gz, w.T, None, None)
+    gw = mm_k.linear(x.T, gz, None, None)
+    gb = None if b is None else jnp.sum(gz, axis=0)
+    return gx, gw, gb
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+# -------------------------------------------------------------- layernorm --
+@jax.custom_vjp
+def layernorm(x, gamma, beta):
+    return ln_k.layernorm(x, gamma, beta)
+
+
+def _ln_fwd(x, gamma, beta):
+    return ln_k.layernorm(x, gamma, beta), (x, gamma)
+
+
+def _ln_bwd(res, gy):
+    x, gamma = res
+    eps = 1e-5
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = (x - mean) * inv
+    gxhat = gy * gamma
+    gx = inv * (
+        gxhat
+        - jnp.mean(gxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(gxhat * xhat, axis=-1, keepdims=True)
+    )
+    ggamma = jnp.sum(gy * xhat, axis=0)
+    gbeta = jnp.sum(gy, axis=0)
+    return gx, ggamma, gbeta
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)
+
+
+# -------------------------------------------------------------- attention --
+@jax.custom_vjp
+def attention(q, k, v):
+    return attn_k.attention(q, k, v)
+
+
+def _attn_fwd(q, k, v):
+    return attn_k.attention(q, k, v), (q, k, v)
+
+
+def _attn_bwd(res, gy):
+    q, k, v = res
+    _, vjp = jax.vjp(ref.attention_ref, q, k, v)
+    return vjp(gy)
+
+
+attention.defvjp(_attn_fwd, _attn_bwd)

@@ -1,0 +1,44 @@
+"""Row-blocked layernorm Pallas kernel.
+
+Each grid cell normalizes a [block_rows, D] tile entirely in VMEM: one HBM
+read and one write per element (mean/var/normalize fused), versus three
+passes for the naive composition.  D stays un-tiled — a transformer row
+(D <= 4096 f32 = 16 KiB) always fits a VMEM tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[...] = (x - mean) * inv * g_ref[...] + b_ref[...]
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5, *, block_rows: int = 128):
+    """Row-wise layernorm. x: [M, D], gamma/beta: [D]."""
+    m, d = x.shape
+    br = min(m, block_rows)
+    while m % br != 0:
+        br -= 1
+    grid = (m // br,)
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(x, gamma, beta)

@@ -1,0 +1,119 @@
+"""Tiled matmul + bias + activation Pallas kernel (the GEMM hot path).
+
+TPU mapping of the paper's cuDNN GEMM substrate (DESIGN.md
+§Hardware-adaptation): the (M, N, K) iteration space is tiled into
+VMEM-resident blocks via ``BlockSpec``; the output block persists across the
+K grid axis and accumulates partial products — the MXU systolic schedule.
+Bias add + activation are fused into the final K step so the output tile is
+written to HBM exactly once.
+
+Run with ``interpret=True`` everywhere in this repo: the CPU PJRT client
+cannot execute Mosaic custom-calls.  Block-shape choice is therefore a
+*structural* optimization (VMEM footprint / MXU alignment), quantified in
+DESIGN.md §Perf-L1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default MXU-aligned tile. f32 VMEM budget for (bm,bk)+(bk,bn)+(bm,bn)
+# at 128³ is 3 * 64 KiB = 192 KiB, far under the ~16 MiB/core budget; the
+# default leaves room for double-buffering (see DESIGN.md §Perf-L1).
+DEFAULT_BLOCK = 128
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is <= preferred (power-of-two dims)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, activation, nk: int):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (fastest) axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        acc = o_ref[...]
+        if b_ref is not None:
+            acc = acc + b_ref[...]
+        o_ref[...] = ref.apply_activation(acc, activation)
+
+
+def linear(
+    x,
+    w,
+    b=None,
+    activation: str | None = None,
+    *,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+):
+    """act(x @ w + b) with x: [M, K], w: [K, N], optional b: [N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    bm = _pick_block(m, block_m or DEFAULT_BLOCK)
+    bn = _pick_block(n, block_n or DEFAULT_BLOCK)
+    bk = _pick_block(k, block_k or DEFAULT_BLOCK)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    args = [x, w]
+    if b is not None:
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j, kk: (j,)))
+        args.append(b)
+        kernel = functools.partial(_matmul_kernel, activation=activation, nk=nk)
+    else:
+        kernel = functools.partial(
+            lambda x_ref, w_ref, o_ref, **kw: _matmul_kernel(
+                x_ref, w_ref, None, o_ref, **kw
+            ),
+            activation=activation,
+            nk=nk,
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(*args)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Resident VMEM for one grid cell (x, w and o tiles)."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_alignment(bm: int, bn: int, bk: int, lane: int = 128) -> float:
+    """Fraction of the tile that maps onto whole MXU lanes (1.0 = perfect)."""
+
+    def frac(d):
+        return (d // lane) * lane / d if d >= lane else d / lane
+
+    return min(frac(bm), frac(bn), frac(bk))

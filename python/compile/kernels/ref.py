@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: `pytest python/tests/test_kernels.py`
+sweeps shapes/dtypes (hypothesis) and asserts the Pallas kernels (run under
+``interpret=True``) match these within tolerance.  The L2 model also uses
+these implementations under ``use_pallas=False`` so model-level tests can
+cross-check the two paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_ref(x, w, b=None, activation: str | None = None):
+    """y = act(x @ w + b). x: [M, K], w: [K, N], b: [N] or None."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b
+    return apply_activation(y, activation)
+
+
+def apply_activation(y, activation: str | None):
+    if activation is None or activation == "none":
+        return y
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "gelu":
+        # tanh approximation, matches the kernel exactly.
+        c = jnp.sqrt(2.0 / jnp.pi).astype(y.dtype)
+        return 0.5 * y * (1.0 + jnp.tanh(c * (y + 0.044715 * y**3)))
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def layernorm_ref(x, gamma, beta, eps: float = 1e-5):
+    """Row-wise layernorm. x: [M, D], gamma/beta: [D]."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    return (x - mean) * inv * gamma + beta
+
+
+def attention_ref(q, k, v):
+    """Scaled dot-product attention with causal mask.
+
+    q, k, v: [H, S, Dh] (single micro-batch element, H heads folded in the
+    leading dim).  Returns [H, S, Dh].
+    """
+    s = q.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def sgd_momentum_ref(p, m, g, lr, mu: float = 0.9):
+    """Fused SGD with momentum (PyTorch convention, no dampening).
+
+    m' = mu * m + g ; p' = p - lr * m'.  lr is a scalar array of shape (1,).
+    """
+    m_new = mu * m + g
+    p_new = p - lr.reshape(()) * m_new
+    return p_new, m_new

@@ -1,0 +1,145 @@
+"""Pure-JAX mirror of the rust coordinator's update rules.
+
+This is the *semantic* reference for DP / CDP-v1 / CDP-v2 (paper Sec. 3.2):
+it executes the same per-stage functions that aot.py lowers to HLO, applies
+the same u_{i,j} parameter-version selection, the same gradient averaging
+and the same fused SGD-momentum — on the same deterministic data stream
+(datagen).  aot.py records its per-step losses into ``golden.json``; a rust
+integration test replays the bundle and must match within fp tolerance.
+
+Update-rule semantics (θ_{-1} := θ_0 bootstrap, micro-batches i = 1..N,
+stages j = 1..N):
+
+- DP     : θ̂_{i}^j = θ_t^j                      (all fresh)
+- CDP-v1 : θ̂_{i}^j = θ_{t-1}^j                  (all stale; PipeDream-2BW)
+- CDP-v2 : θ̂_{i}^j = θ_t^j iff j ≥ N-i+1        (suffix fresh)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen
+from .model import make_stage_fns
+
+RULES = ("dp", "cdp_v1", "cdp_v2")
+
+
+def use_fresh(rule: str, i: int, j: int, n: int) -> bool:
+    """Does micro-batch i (1-based) see the *fresh* θ_t for stage j (1-based)?"""
+    if rule == "dp":
+        return True
+    if rule == "cdp_v1":
+        return False
+    if rule == "cdp_v2":
+        return j >= n - i + 1
+    raise ValueError(rule)
+
+
+class MirrorTrainer:
+    def __init__(self, model, data_cfg: dict, lr: float, momentum: float = 0.9):
+        self.model = model
+        self.data_cfg = data_cfg
+        self.lr = lr
+        self.momentum = momentum
+        self.n = model.n_stages
+        self.fns = [make_stage_fns(model, j) for j in range(self.n)]
+        self.jit = [
+            {k: jax.jit(f) for k, f in stage.items()} for stage in self.fns
+        ]
+        if data_cfg["kind"] == "class":
+            self.protos = datagen.class_prototypes(
+                data_cfg["seed"], data_cfg["classes"], data_cfg["input_dim"]
+            )
+
+    # ---- data ----------------------------------------------------------
+    def microbatch(self, step: int, i: int):
+        """Micro-batch i (0-based here) of training step `step`."""
+        d = self.data_cfg
+        if d["kind"] == "lm":
+            return datagen.lm_microbatch(
+                d["seed"], step, i, d["batch"], d["seq"], d["vocab"]
+            )
+        return datagen.class_microbatch(
+            d["seed"], step, i, d["batch"], self.protos, d.get("noise", 0.3)
+        )
+
+    # ---- one micro-batch fwd+bwd ----------------------------------------
+    def run_microbatch(self, params_hat: List[List[jnp.ndarray]], x, targets):
+        n = self.n
+        acts = [jnp.asarray(x)]
+        for j in range(n - 1):
+            (y,) = self.jit[j]["fwd"](*params_hat[j], acts[j])
+            acts.append(y)
+        out = self.jit[n - 1]["fwdbwd"](
+            *params_hat[n - 1], acts[n - 1], jnp.asarray(targets)
+        )
+        loss, gx, gp_last = out[0], out[1], list(out[2:])
+        grads = [None] * n
+        grads[n - 1] = gp_last
+        for j in range(n - 2, 0, -1):
+            out = self.jit[j]["fwdbwd"](*params_hat[j], acts[j], gx)
+            gx, grads[j] = out[0], list(out[1:])
+        if n > 1:  # for n == 1 the loss stage IS stage 0
+            grads[0] = list(self.jit[0]["fwdbwd"](*params_hat[0], acts[0], gx))
+        return float(loss), grads
+
+    # ---- training --------------------------------------------------------
+    def train(self, params0: List[List[np.ndarray]], rule: str, steps: int):
+        n = self.n
+        theta = [[jnp.asarray(a) for a in st] for st in params0]
+        theta_prev = theta
+        mom = [[jnp.zeros_like(a) for a in st] for st in theta]
+        lr_arr = jnp.asarray([self.lr], dtype=jnp.float32)
+        losses = []
+        for t in range(steps):
+            acc = None
+            step_losses = []
+            for i in range(1, n + 1):  # micro-batch index, 1-based
+                hat = [
+                    theta[j] if use_fresh(rule, i, j + 1, n) else theta_prev[j]
+                    for j in range(n)
+                ]
+                x, tgt = self.microbatch(t, i - 1)
+                loss, grads = self.run_microbatch(hat, x, tgt)
+                step_losses.append(loss)
+                if acc is None:
+                    acc = grads
+                else:
+                    acc = [
+                        [a + g for a, g in zip(sa, sg)]
+                        for sa, sg in zip(acc, grads)
+                    ]
+            inv_n = jnp.float32(1.0 / n)
+            new_theta, new_mom = [], []
+            for j in range(n):
+                gbar = [a * inv_n for a in acc[j]]
+                out = self.jit[j]["sgd"](*theta[j], *mom[j], *gbar, lr_arr)
+                k = len(theta[j])
+                new_theta.append(list(out[:k]))
+                new_mom.append(list(out[k:]))
+            theta_prev = theta
+            theta = new_theta
+            mom = new_mom
+            losses.append(float(np.mean(step_losses)))
+        return losses, theta
+
+    # ---- eval (classification) -------------------------------------------
+    def accuracy(self, theta, n_batches: int = 8, split_base: int = 1_000_000):
+        assert self.data_cfg["kind"] == "class"
+        correct = total = 0
+        for k in range(n_batches):
+            x, y = self.microbatch(split_base + k, 0)
+            a = jnp.asarray(x)
+            for j in range(self.n - 1):
+                (a,) = self.jit[j]["fwd"](*theta[j], a)
+            (logits,) = self.jit[self.n - 1]["predict"](*theta[self.n - 1], a)
+            pred = np.asarray(jnp.argmax(logits, axis=-1))
+            correct += int((pred == y).sum())
+            total += len(y)
+        return correct / total

@@ -1,0 +1,610 @@
+"""L2: staged JAX models whose per-stage fwd / fwd+bwd lower to HLO.
+
+The paper's execution unit is a *stage*: the model is partitioned into N
+stages (paper: "split into 4 stages with similar FLOPs"), and one time step
+executes one stage-granularity forward or backward on one micro-batch.  We
+therefore AOT-export per-stage functions, never a whole-model function:
+
+  stage 0      : fwd(params, tokens|x) -> y          bwd(params, x, gy) -> gparams
+  stage j mid  : fwd(params, x) -> y                 bwd(params, x, gy) -> (gx, gparams)
+  stage N-1    : fwd_loss(params, x, tgt) -> loss    bwd(params, x, tgt) -> (loss, gx, gparams)
+                 predict(params, x) -> logits        (classification eval)
+  every stage  : sgd(params, moms, grads, lr) -> (params', moms')
+
+The backward recomputes the stage forward from the stage *input* (stage-
+granularity rematerialization): the only activation that crosses the
+Rust↔HLO boundary between a micro-batch's fwd and bwd of a stage is the
+stage input, which is exactly the activation-stash unit the paper's memory
+accounting (Fig 4, Tab 1) is phrased in.
+
+Three families share the interface (`StagedModel`):
+
+- ``transformer`` — pre-LN GPT-style LM; Pallas kernels on every hot path.
+- ``convnet``     — ResNet-style residual CNN for the CIFAR-10 analog
+                    (Table 2).  BatchNorm is replaced by stateless
+                    channel-LayerNorm (DESIGN.md substitution #2).
+- ``mlp``         — small residual MLP classifier; fast numeric model for
+                    benches and tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import diff
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+
+    @property
+    def elems(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class IoSpec:
+    shape: Tuple[int, ...]
+    dtype: str  # "f32" | "i32"
+
+
+def split_layers(n_layers: int, n_stages: int) -> List[int]:
+    """Distribute layers as evenly as possible (earlier stages get extras)."""
+    base, rem = divmod(n_layers, n_stages)
+    return [base + (1 if i < rem else 0) for i in range(n_stages)]
+
+
+# =========================================================== transformer ===
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 64
+    d_model: int = 32
+    n_heads: int = 2
+    n_layers: int = 4
+    d_ff: int = 64
+    seq: int = 16
+    microbatch: int = 4
+    n_stages: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def _layer_specs(prefix: str, d: int, f: int) -> List[ParamSpec]:
+    return [
+        ParamSpec(f"{prefix}.ln1_g", (d,)),
+        ParamSpec(f"{prefix}.ln1_b", (d,)),
+        ParamSpec(f"{prefix}.wqkv", (d, 3 * d)),
+        ParamSpec(f"{prefix}.bqkv", (3 * d,)),
+        ParamSpec(f"{prefix}.wo", (d, d)),
+        ParamSpec(f"{prefix}.bo", (d,)),
+        ParamSpec(f"{prefix}.ln2_g", (d,)),
+        ParamSpec(f"{prefix}.ln2_b", (d,)),
+        ParamSpec(f"{prefix}.w1", (d, f)),
+        ParamSpec(f"{prefix}.b1", (f,)),
+        ParamSpec(f"{prefix}.w2", (f, d)),
+        ParamSpec(f"{prefix}.b2", (d,)),
+    ]
+
+
+PARAMS_PER_LAYER = 12
+
+
+class Transformer:
+    """GPT-style causal LM, partitioned into n_stages stages."""
+
+    family = "transformer"
+
+    def __init__(self, cfg: TransformerConfig):
+        self.cfg = cfg
+        self.n_stages = cfg.n_stages
+        counts = split_layers(cfg.n_layers, cfg.n_stages)
+        self.layer_counts = counts
+        d, f = cfg.d_model, cfg.d_ff
+        self.stage_specs: List[List[ParamSpec]] = []
+        layer_idx = 0
+        for j in range(cfg.n_stages):
+            specs: List[ParamSpec] = []
+            if j == 0:
+                specs.append(ParamSpec("tok_emb", (cfg.vocab, d)))
+                specs.append(ParamSpec("pos_emb", (cfg.seq, d)))
+            for _ in range(counts[j]):
+                specs.extend(_layer_specs(f"layer{layer_idx}", d, f))
+                layer_idx += 1
+            if j == cfg.n_stages - 1:
+                specs.append(ParamSpec("lnf_g", (d,)))
+                specs.append(ParamSpec("lnf_b", (d,)))
+                specs.append(ParamSpec("w_head", (d, cfg.vocab)))
+                specs.append(ParamSpec("b_head", (cfg.vocab,)))
+            self.stage_specs.append(specs)
+
+    # ---- io specs -----------------------------------------------------
+    def input_spec(self, j: int) -> IoSpec:
+        c = self.cfg
+        if j == 0:
+            return IoSpec((c.microbatch, c.seq), "i32")
+        return IoSpec((c.microbatch, c.seq, c.d_model), "f32")
+
+    def output_spec(self, j: int) -> IoSpec:
+        c = self.cfg
+        return IoSpec((c.microbatch, c.seq, c.d_model), "f32")
+
+    def target_spec(self) -> IoSpec:
+        c = self.cfg
+        return IoSpec((c.microbatch, c.seq), "i32")
+
+    # ---- init ----------------------------------------------------------
+    def init_params(self, seed: int) -> List[List[np.ndarray]]:
+        rng = np.random.default_rng(seed)
+        out: List[List[np.ndarray]] = []
+        for specs in self.stage_specs:
+            stage = []
+            for s in specs:
+                leaf = s.name.rsplit(".", 1)[-1]
+                if leaf.endswith("_g"):
+                    a = np.ones(s.shape, np.float32)
+                elif leaf.startswith("b") or leaf.endswith("_b"):
+                    a = np.zeros(s.shape, np.float32)
+                elif leaf in ("tok_emb", "pos_emb"):
+                    a = rng.normal(0.0, 0.02, s.shape).astype(np.float32)
+                else:
+                    std = 1.0 / math.sqrt(s.shape[0])
+                    a = rng.normal(0.0, std, s.shape).astype(np.float32)
+                stage.append(a)
+            out.append(stage)
+        return out
+
+    # ---- compute -------------------------------------------------------
+    def _layer(self, p: Sequence[jnp.ndarray], x2: jnp.ndarray) -> jnp.ndarray:
+        c = self.cfg
+        b, s, d, h = c.microbatch, c.seq, c.d_model, c.n_heads
+        dh = c.head_dim
+        ln1g, ln1b, wqkv, bqkv, wo, bo, ln2g, ln2b, w1, b1, w2, b2 = p
+        hdd = diff.layernorm(x2, ln1g, ln1b)
+        qkv = diff.linear(hdd, wqkv, bqkv, None)  # [B*S, 3D]
+        qkv = qkv.reshape(b, s, 3, h, dh).transpose(2, 0, 3, 1, 4)
+        q, k, v = (t.reshape(b * h, s, dh) for t in (qkv[0], qkv[1], qkv[2]))
+        a = diff.attention(q, k, v)
+        a = a.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b * s, d)
+        x2 = x2 + diff.linear(a, wo, bo, None)
+        h2 = diff.layernorm(x2, ln2g, ln2b)
+        m = diff.linear(h2, w1, b1, "gelu")
+        x2 = x2 + diff.linear(m, w2, b2, None)
+        return x2
+
+    def _stage_layers(self, j: int, params: Sequence[jnp.ndarray], x2, lo: int):
+        for li in range(self.layer_counts[j]):
+            p = params[lo + li * PARAMS_PER_LAYER : lo + (li + 1) * PARAMS_PER_LAYER]
+            x2 = self._layer(p, x2)
+        return x2
+
+    def stage_apply(self, j: int, params: Sequence[jnp.ndarray], x):
+        """Forward of stage j (j < n_stages-1 plain; j = n_stages-1 via
+        loss_apply/predict_apply)."""
+        c = self.cfg
+        b, s, d = c.microbatch, c.seq, c.d_model
+        if j == 0:
+            tok_emb, pos_emb = params[0], params[1]
+            x3 = tok_emb[x] + pos_emb[None, :, :]
+            x2 = x3.reshape(b * s, d)
+            x2 = self._stage_layers(0, params, x2, 2)
+        else:
+            x2 = x.reshape(b * s, d)
+            x2 = self._stage_layers(j, params, x2, 0)
+        return x2.reshape(b, s, d)
+
+    def _final_logits(self, params: Sequence[jnp.ndarray], x):
+        c = self.cfg
+        b, s, d = c.microbatch, c.seq, c.d_model
+        x2 = x.reshape(b * s, d)
+        x2 = self._stage_layers(self.n_stages - 1, params, x2, 0)
+        lnf_g, lnf_b, w_head, b_head = params[-4:]
+        hdd = diff.layernorm(x2, lnf_g, lnf_b)
+        return diff.linear(hdd, w_head, b_head, None)  # [B*S, V]
+
+    def loss_apply(self, params: Sequence[jnp.ndarray], x, targets):
+        logits = self._final_logits(params, x)
+        t = targets.reshape(-1)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, t[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - ll)
+
+    def predict_apply(self, params: Sequence[jnp.ndarray], x):
+        return self._final_logits(params, x)
+
+    # ---- accounting ------------------------------------------------------
+    def stage_act_bytes(self, j: int) -> int:
+        """Analytic activation stash of one micro-batch's fwd through stage
+        j (floats held awaiting bwd), following the paper's B·Ψ_A unit."""
+        c = self.cfg
+        tokens = c.microbatch * c.seq
+        per_tok = 0
+        if j == 0:
+            per_tok += 2 * c.d_model  # embedding output + residual
+        # per layer: ln in/out, qkv, attn out, wo out, ln2, mlp hidden, out
+        per_layer = 4 * c.d_model + 3 * c.d_model + 2 * c.d_model + c.d_ff
+        per_tok += self.layer_counts[j] * per_layer
+        if j == self.n_stages - 1:
+            per_tok += c.d_model + c.vocab
+        return 4 * tokens * per_tok
+
+    def stage_flops(self, j: int) -> int:
+        c = self.cfg
+        tokens = c.microbatch * c.seq
+        d, f = c.d_model, c.d_ff
+        per_layer = 2 * tokens * (3 * d * d + d * d + 2 * d * f) + 4 * tokens * c.seq * d
+        fl = self.layer_counts[j] * per_layer
+        if j == 0:
+            fl += 2 * tokens * d
+        if j == self.n_stages - 1:
+            fl += 2 * tokens * d * c.vocab
+        return fl
+
+
+# =============================================================== convnet ===
+@dataclasses.dataclass(frozen=True)
+class ConvNetConfig:
+    classes: int = 10
+    image_hw: int = 32
+    in_channels: int = 3
+    base_channels: int = 16
+    blocks_per_stage: int = 1
+    microbatch: int = 8
+    n_stages: int = 4
+
+    @property
+    def input_dim(self) -> int:
+        return self.image_hw * self.image_hw * self.in_channels
+
+
+def _conv(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+class ConvNet:
+    """Residual CNN (ResNet-style; channel-LN instead of BN)."""
+
+    family = "convnet"
+
+    def __init__(self, cfg: ConvNetConfig):
+        self.cfg = cfg
+        self.n_stages = cfg.n_stages
+        # Stage s has channels base * 2^min(s, 2) and halves HW from stage 1.
+        self.stage_channels = [
+            cfg.base_channels * (2 ** min(s, 2)) for s in range(cfg.n_stages)
+        ]
+        self.stage_hw = [
+            max(cfg.image_hw // (2 ** min(s, 2)), 4) for s in range(cfg.n_stages)
+        ]
+        self.stage_specs: List[List[ParamSpec]] = []
+        for j in range(cfg.n_stages):
+            specs: List[ParamSpec] = []
+            cj = self.stage_channels[j]
+            if j == 0:
+                specs.append(ParamSpec("stem_w", (3, 3, cfg.in_channels, cj)))
+            else:
+                cprev = self.stage_channels[j - 1]
+                specs.append(ParamSpec(f"down{j}_w", (3, 3, cprev, cj)))
+            for b in range(cfg.blocks_per_stage):
+                specs.extend(
+                    [
+                        ParamSpec(f"s{j}b{b}.ln1_g", (cj,)),
+                        ParamSpec(f"s{j}b{b}.ln1_b", (cj,)),
+                        ParamSpec(f"s{j}b{b}.conv1_w", (3, 3, cj, cj)),
+                        ParamSpec(f"s{j}b{b}.ln2_g", (cj,)),
+                        ParamSpec(f"s{j}b{b}.ln2_b", (cj,)),
+                        ParamSpec(f"s{j}b{b}.conv2_w", (3, 3, cj, cj)),
+                    ]
+                )
+            if j == cfg.n_stages - 1:
+                specs.append(ParamSpec("fc_w", (cj, cfg.classes)))
+                specs.append(ParamSpec("fc_b", (cfg.classes,)))
+            self.stage_specs.append(specs)
+
+    def input_spec(self, j: int) -> IoSpec:
+        c = self.cfg
+        if j == 0:
+            return IoSpec((c.microbatch, c.input_dim), "f32")
+        hw = self.stage_hw[j - 1]
+        return IoSpec((c.microbatch, hw, hw, self.stage_channels[j - 1]), "f32")
+
+    def output_spec(self, j: int) -> IoSpec:
+        c = self.cfg
+        hw = self.stage_hw[j]
+        return IoSpec((c.microbatch, hw, hw, self.stage_channels[j]), "f32")
+
+    def target_spec(self) -> IoSpec:
+        return IoSpec((self.cfg.microbatch,), "i32")
+
+    def init_params(self, seed: int) -> List[List[np.ndarray]]:
+        rng = np.random.default_rng(seed)
+        out = []
+        for specs in self.stage_specs:
+            stage = []
+            for s in specs:
+                leaf = s.name.rsplit(".", 1)[-1]
+                if leaf.endswith("_g"):
+                    a = np.ones(s.shape, np.float32)
+                elif leaf.endswith("_b") or leaf == "fc_b":
+                    a = np.zeros(s.shape, np.float32)
+                else:
+                    fan_in = int(np.prod(s.shape[:-1]))
+                    a = rng.normal(0.0, math.sqrt(2.0 / fan_in), s.shape).astype(
+                        np.float32
+                    )
+                stage.append(a)
+            out.append(stage)
+        return out
+
+    def _chan_ln(self, x, g, b):
+        n, h, w, c = x.shape
+        return diff.layernorm(x.reshape(n * h * w, c), g, b).reshape(n, h, w, c)
+
+    def _block(self, p, x):
+        ln1g, ln1b, w1, ln2g, ln2b, w2 = p
+        h = jnp.maximum(_conv(self._chan_ln(x, ln1g, ln1b), w1), 0.0)
+        h = _conv(self._chan_ln(h, ln2g, ln2b), w2)
+        return x + h
+
+    def _stage_body(self, j: int, params, x):
+        cfg = self.cfg
+        if j == 0:
+            x = x.reshape(cfg.microbatch, cfg.image_hw, cfg.image_hw, cfg.in_channels)
+            x = _conv(x, params[0], 1)
+        else:
+            stride = 2 if self.stage_hw[j] < self.stage_hw[j - 1] else 1
+            x = _conv(x, params[0], stride)
+        for b in range(cfg.blocks_per_stage):
+            x = self._block(params[1 + 6 * b : 1 + 6 * (b + 1)], x)
+        return x
+
+    def stage_apply(self, j: int, params, x):
+        return self._stage_body(j, params, x)
+
+    def _final_logits(self, params, x):
+        x = self._stage_body(self.n_stages - 1, params, x)
+        pooled = jnp.mean(x, axis=(1, 2))  # [B, C]
+        fc_w, fc_b = params[-2:]
+        return diff.linear(pooled, fc_w, fc_b, None)
+
+    def loss_apply(self, params, x, targets):
+        logits = self._final_logits(params, x)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - ll)
+
+    def predict_apply(self, params, x):
+        return self._final_logits(params, x)
+
+    def stage_act_bytes(self, j: int) -> int:
+        c = self.cfg
+        hw = self.stage_hw[j]
+        elems = c.microbatch * hw * hw * self.stage_channels[j]
+        per_block = 6  # ln1, conv1, relu, ln2, conv2, residual
+        n = 1 + per_block * c.blocks_per_stage
+        return 4 * elems * n
+
+    def stage_flops(self, j: int) -> int:
+        c = self.cfg
+        hw = self.stage_hw[j]
+        ch = self.stage_channels[j]
+        pix = c.microbatch * hw * hw
+        per_conv = 2 * pix * 9 * ch * ch
+        fl = (1 + 2 * c.blocks_per_stage) * per_conv
+        if j == self.n_stages - 1:
+            fl += 2 * c.microbatch * ch * c.classes
+        return fl
+
+
+# =================================================================== mlp ===
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    classes: int = 10
+    input_dim: int = 64
+    hidden: int = 128
+    layers_per_stage: int = 2
+    microbatch: int = 8
+    n_stages: int = 4
+
+
+class Mlp:
+    """Residual MLP classifier (fast numeric model for benches/tests)."""
+
+    family = "mlp"
+
+    def __init__(self, cfg: MlpConfig):
+        self.cfg = cfg
+        self.n_stages = cfg.n_stages
+        self.stage_specs = []
+        for j in range(cfg.n_stages):
+            specs = []
+            if j == 0:
+                specs.append(ParamSpec("in_w", (cfg.input_dim, cfg.hidden)))
+                specs.append(ParamSpec("in_b", (cfg.hidden,)))
+            for l in range(cfg.layers_per_stage):
+                specs.append(ParamSpec(f"s{j}l{l}_w", (cfg.hidden, cfg.hidden)))
+                specs.append(ParamSpec(f"s{j}l{l}_b", (cfg.hidden,)))
+            if j == cfg.n_stages - 1:
+                specs.append(ParamSpec("out_w", (cfg.hidden, cfg.classes)))
+                specs.append(ParamSpec("out_b", (cfg.classes,)))
+            self.stage_specs.append(specs)
+
+    def input_spec(self, j: int) -> IoSpec:
+        c = self.cfg
+        if j == 0:
+            return IoSpec((c.microbatch, c.input_dim), "f32")
+        return IoSpec((c.microbatch, c.hidden), "f32")
+
+    def output_spec(self, j: int) -> IoSpec:
+        return IoSpec((self.cfg.microbatch, self.cfg.hidden), "f32")
+
+    def target_spec(self) -> IoSpec:
+        return IoSpec((self.cfg.microbatch,), "i32")
+
+    def init_params(self, seed: int) -> List[List[np.ndarray]]:
+        rng = np.random.default_rng(seed)
+        out = []
+        for specs in self.stage_specs:
+            stage = []
+            for s in specs:
+                if s.name.endswith("_b"):
+                    stage.append(np.zeros(s.shape, np.float32))
+                elif s.name == "out_w":
+                    # small classifier head: initial logits near zero so
+                    # the initial loss sits at ln(classes)
+                    stage.append(rng.normal(0.0, 0.05, s.shape).astype(np.float32))
+                else:
+                    std = math.sqrt(1.0 / s.shape[0])
+                    stage.append(rng.normal(0.0, std, s.shape).astype(np.float32))
+            out.append(stage)
+        return out
+
+    # Residual branches are scaled so activation variance stays bounded
+    # across the n_stages*layers_per_stage residual adds (without this the
+    # logits blow up ~2x per layer and SGD diverges).
+    RES_SCALE = 0.3
+
+    def stage_apply(self, j: int, params, x):
+        c = self.cfg
+        i = 0
+        if j == 0:
+            x = diff.linear(x, params[0], params[1], "relu")
+            i = 2
+        for _ in range(c.layers_per_stage):
+            x = x + self.RES_SCALE * diff.linear(x, params[i], params[i + 1], "relu")
+            i += 2
+        return x
+
+    def _final_logits(self, params, x):
+        x = self.stage_apply(self.n_stages - 1, params[:-2], x)
+        return diff.linear(x, params[-2], params[-1], None)
+
+    def loss_apply(self, params, x, targets):
+        logits = self._final_logits(params, x)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - ll)
+
+    def predict_apply(self, params, x):
+        return self._final_logits(params, x)
+
+    def stage_act_bytes(self, j: int) -> int:
+        c = self.cfg
+        n = 2 * c.layers_per_stage + (2 if j == 0 else 0)
+        return 4 * c.microbatch * c.hidden * n
+
+    def stage_flops(self, j: int) -> int:
+        c = self.cfg
+        fl = 2 * c.microbatch * c.hidden * c.hidden * c.layers_per_stage
+        if j == 0:
+            fl += 2 * c.microbatch * c.input_dim * c.hidden
+        if j == self.n_stages - 1:
+            fl += 2 * c.microbatch * c.hidden * c.classes
+        return fl
+
+
+# =============================================================== helpers ===
+def make_stage_fns(model, j: int):
+    """Returns dict of pure functions for stage j, with flat-args signatures
+    suitable for AOT lowering (params unpacked positionally)."""
+    n_params = len(model.stage_specs[j])
+    last = j == model.n_stages - 1
+
+    def pack(args):
+        return tuple(args[:n_params]), args[n_params:]
+
+    fns = {}
+    if not last:
+
+        def fwd(*args):
+            params, rest = pack(args)
+            return (model.stage_apply(j, params, rest[0]),)
+
+        if j == 0:
+
+            def fwdbwd(*args):
+                params, rest = pack(args)
+                x, gy = rest
+                _, vjp = jax.vjp(lambda p: model.stage_apply(j, p, x), params)
+                (gp,) = vjp(gy)
+                return tuple(gp)
+
+        else:
+
+            def fwdbwd(*args):
+                params, rest = pack(args)
+                x, gy = rest
+                _, vjp = jax.vjp(
+                    lambda p, xx: model.stage_apply(j, p, xx), params, x
+                )
+                gp, gx = vjp(gy)
+                return (gx,) + tuple(gp)
+
+        fns["fwd"] = fwd
+        fns["fwdbwd"] = fwdbwd
+    else:
+
+        def fwd_loss(*args):
+            params, rest = pack(args)
+            x, targets = rest
+            return (model.loss_apply(params, x, targets),)
+
+        def fwdbwd(*args):
+            params, rest = pack(args)
+            x, targets = rest
+            loss, vjp = jax.vjp(
+                lambda p, xx: model.loss_apply(p, xx, targets), params, x
+            )
+            gp, gx = vjp(jnp.float32(1.0))
+            return (loss, gx) + tuple(gp)
+
+        def predict(*args):
+            params, rest = pack(args)
+            return (model.predict_apply(params, rest[0]),)
+
+        fns["fwd_loss"] = fwd_loss
+        fns["fwdbwd"] = fwdbwd
+        fns["predict"] = predict
+
+    def sgd(*args):
+        from .kernels import sgd as sgd_k
+
+        ps = args[:n_params]
+        ms = args[n_params : 2 * n_params]
+        gs = args[2 * n_params : 3 * n_params]
+        lr = args[3 * n_params]
+        new_p, new_m = [], []
+        for p, m, g in zip(ps, ms, gs):
+            pn, mn = sgd_k.sgd_momentum(p, m, g, lr)
+            new_p.append(pn)
+            new_m.append(mn)
+        return tuple(new_p) + tuple(new_m)
+
+    fns["sgd"] = sgd
+    return fns
+
+
+def build_model(family: str, cfg):
+    if family == "transformer":
+        return Transformer(cfg)
+    if family == "convnet":
+        return ConvNet(cfg)
+    if family == "mlp":
+        return Mlp(cfg)
+    raise ValueError(family)

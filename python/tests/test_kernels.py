@@ -1,0 +1,181 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; fixed tests pin the block-edge cases.  Tolerances
+are fp32 accumulation-order tolerances, not behavioural slack.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, diff, layernorm, matmul, ref, sgd
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ------------------------------------------------------------ matmul -------
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 3, 8, 16, 64, 130]),
+    k=st.sampled_from([1, 4, 32, 96, 128]),
+    n=st.sampled_from([1, 5, 16, 48, 256]),
+    act=st.sampled_from([None, "relu", "gelu"]),
+    bias=st.booleans(),
+)
+def test_linear_matches_ref(m, k, n, act, bias):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    x, w = rnd(rng, m, k), rnd(rng, k, n)
+    b = rnd(rng, n) if bias else None
+    got = matmul.linear(x, w, b, act)
+    want = ref.linear_ref(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("blocks", [(16, 16, 16), (32, 64, 16), (128, 128, 128)])
+def test_linear_block_shapes_equivalent(blocks):
+    """Block shape is a schedule choice: result must be block-invariant."""
+    rng = np.random.default_rng(0)
+    x, w, b = rnd(rng, 64, 128), rnd(rng, 128, 64), rnd(rng, 64)
+    bm, bn, bk = blocks
+    got = matmul.linear(x, w, b, "gelu", block_m=bm, block_n=bn, block_k=bk)
+    want = ref.linear_ref(x, w, b, "gelu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_linear_rejects_mismatched_inner_dims():
+    x, w = jnp.ones((4, 8)), jnp.ones((9, 4))
+    with pytest.raises(AssertionError):
+        matmul.linear(x, w)
+
+
+def test_vmem_accounting():
+    assert matmul.vmem_bytes(128, 128, 128) == 3 * 128 * 128 * 4
+    assert matmul.mxu_alignment(128, 128, 128) == 1.0
+    assert matmul.mxu_alignment(64, 128, 128) == 0.5
+
+
+# --------------------------------------------------------- layernorm -------
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 7, 64, 200]),
+    d=st.sampled_from([4, 32, 128, 384]),
+)
+def test_layernorm_matches_ref(m, d):
+    rng = np.random.default_rng(m + d)
+    x, g, b = rnd(rng, m, d), rnd(rng, d), rnd(rng, d)
+    got = layernorm.layernorm(x, g, b)
+    want = ref.layernorm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_zero_variance_row():
+    x = jnp.ones((4, 16)) * 3.0  # constant rows: var = 0, rsqrt(eps) path
+    g, b = jnp.ones(16), jnp.zeros(16)
+    got = np.asarray(layernorm.layernorm(x, g, b))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, 0.0, atol=1e-3)
+
+
+# --------------------------------------------------------- attention -------
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 8]),
+    s=st.sampled_from([1, 4, 16, 64]),
+    dh=st.sampled_from([4, 16, 32]),
+)
+def test_attention_matches_ref(h, s, dh):
+    rng = np.random.default_rng(h * 100 + s + dh)
+    q, k, v = rnd(rng, h, s, dh), rnd(rng, h, s, dh), rnd(rng, h, s, dh)
+    got = attention.attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_attention_is_causal():
+    """Changing future keys/values must not change past outputs."""
+    rng = np.random.default_rng(5)
+    q, k, v = (rnd(rng, 2, 8, 4) for _ in range(3))
+    base = np.asarray(attention.attention(q, k, v))
+    k2 = k.at[:, -1, :].set(99.0)
+    v2 = v.at[:, -1, :].set(-99.0)
+    pert = np.asarray(attention.attention(q, k2, v2))
+    np.testing.assert_allclose(base[:, :-1], pert[:, :-1], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(base[:, -1], pert[:, -1])
+
+
+# --------------------------------------------------------------- sgd -------
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.sampled_from([1, 3, 100, 1024, 5000]),
+    lr=st.sampled_from([0.0, 0.01, 0.5]),
+    mu=st.sampled_from([0.0, 0.9]),
+)
+def test_sgd_matches_ref(l, lr, mu):
+    rng = np.random.default_rng(l)
+    p, m, g = rnd(rng, l), rnd(rng, l), rnd(rng, l)
+    lr_arr = jnp.asarray([lr], dtype=jnp.float32)
+    p1, m1 = sgd.sgd_momentum_flat(p, m, g, lr_arr, mu)
+    p2, m2 = ref.sgd_momentum_ref(p, m, g, lr_arr, mu)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_shape_preserving():
+    rng = np.random.default_rng(1)
+    p = rnd(rng, 4, 6)
+    m, g = jnp.zeros_like(p), rnd(rng, 4, 6)
+    lr = jnp.asarray([0.1], dtype=jnp.float32)
+    p1, m1 = sgd.sgd_momentum(p, m, g, lr)
+    assert p1.shape == (4, 6) and m1.shape == (4, 6)
+    np.testing.assert_allclose(
+        np.asarray(p1), np.asarray(p - 0.1 * g), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_sgd_zero_lr_keeps_params():
+    rng = np.random.default_rng(2)
+    p, m, g = rnd(rng, 64), rnd(rng, 64), rnd(rng, 64)
+    lr = jnp.asarray([0.0], dtype=jnp.float32)
+    p1, m1 = sgd.sgd_momentum_flat(p, m, g, lr)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p))
+    # momentum still accumulates
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(0.9 * m + g), rtol=1e-6)
+
+
+# ----------------------------------------------------- differentiability ---
+def test_linear_grad_matches_jnp():
+    rng = np.random.default_rng(3)
+    x, w, b = rnd(rng, 16, 32), rnd(rng, 32, 8), rnd(rng, 8)
+
+    def f_pallas(w, b):
+        return jnp.sum(diff.linear(x, w, b, "gelu") ** 2)
+
+    def f_ref(w, b):
+        return jnp.sum(ref.linear_ref(x, w, b, "gelu") ** 2)
+
+    gw1, gb1 = jax.grad(f_pallas, argnums=(0, 1))(w, b)
+    gw2, gb2 = jax.grad(f_ref, argnums=(0, 1))(w, b)
+    np.testing.assert_allclose(np.asarray(gw1), np.asarray(gw2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb1), np.asarray(gb2), rtol=1e-4, atol=1e-4)
+
+
+def test_layernorm_grad_matches_jnp():
+    rng = np.random.default_rng(4)
+    x, g, b = rnd(rng, 8, 32), rnd(rng, 32), rnd(rng, 32)
+    g1 = jax.grad(lambda x: jnp.sum(jnp.sin(diff.layernorm(x, g, b))))(x)
+    g2 = jax.grad(lambda x: jnp.sum(jnp.sin(ref.layernorm_ref(x, g, b))))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-4)
+
+
+def test_attention_grad_matches_jnp():
+    rng = np.random.default_rng(6)
+    q, k, v = (rnd(rng, 2, 8, 4) for _ in range(3))
+    g1 = jax.grad(lambda q: jnp.sum(diff.attention(q, k, v) ** 2))(q)
+    g2 = jax.grad(lambda q: jnp.sum(ref.attention_ref(q, k, v) ** 2))(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-4)

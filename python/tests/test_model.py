@@ -1,0 +1,156 @@
+"""L2 correctness: staged models — shapes, composition, gradient integrity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, datagen
+from compile.model import (
+    ConvNet, ConvNetConfig, Mlp, MlpConfig, Transformer, TransformerConfig,
+    build_model, make_stage_fns, split_layers,
+)
+
+
+def test_split_layers():
+    assert split_layers(4, 4) == [1, 1, 1, 1]
+    assert split_layers(12, 4) == [3, 3, 3, 3]
+    assert split_layers(10, 4) == [3, 3, 2, 2]
+    assert split_layers(2, 4) == [1, 1, 0, 0]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = TransformerConfig()
+    return Transformer(cfg), cfg
+
+
+def test_transformer_stage_specs(tiny):
+    model, cfg = tiny
+    assert model.n_stages == 4
+    # stage 0: embeddings + 1 layer; stage 3: 1 layer + final ln/head
+    assert model.stage_specs[0][0].name == "tok_emb"
+    assert model.stage_specs[3][-2].name == "w_head"
+    assert len(model.stage_specs[1]) == 12
+
+
+def test_transformer_fwd_shapes(tiny):
+    model, cfg = tiny
+    params = [[jnp.asarray(a) for a in st] for st in model.init_params(0)]
+    x, tgt = datagen.lm_microbatch(1, 0, 0, cfg.microbatch, cfg.seq, cfg.vocab)
+    a = jnp.asarray(x)
+    y = model.stage_apply(0, params[0], a)
+    assert y.shape == (cfg.microbatch, cfg.seq, cfg.d_model)
+    y = model.stage_apply(1, params[1], y)
+    y = model.stage_apply(2, params[2], y)
+    loss = model.loss_apply(params[3], y, jnp.asarray(tgt))
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    # initial loss ~ log(V) for a random model
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+
+
+def test_staged_grads_match_monolithic(tiny):
+    """Chained per-stage vjp == grad of the composed model (the crucial
+    decomposition the whole coordinator relies on)."""
+    model, cfg = tiny
+    params = [[jnp.asarray(a) for a in st] for st in model.init_params(0)]
+    x, tgt = datagen.lm_microbatch(1, 0, 0, cfg.microbatch, cfg.seq, cfg.vocab)
+    x, tgt = jnp.asarray(x), jnp.asarray(tgt)
+
+    def full_loss(all_params):
+        a = model.stage_apply(0, all_params[0], x)
+        a = model.stage_apply(1, all_params[1], a)
+        a = model.stage_apply(2, all_params[2], a)
+        return model.loss_apply(all_params[3], a, tgt)
+
+    want = jax.grad(full_loss)([tuple(p) for p in params])
+
+    fns = [make_stage_fns(model, j) for j in range(4)]
+    acts = [x]
+    for j in range(3):
+        (y,) = fns[j]["fwd"](*params[j], acts[j])
+        acts.append(y)
+    out = fns[3]["fwdbwd"](*params[3], acts[3], tgt)
+    _, gx, got3 = out[0], out[1], out[2:]
+    out = fns[2]["fwdbwd"](*params[2], acts[2], gx)
+    gx, got2 = out[0], out[1:]
+    out = fns[1]["fwdbwd"](*params[1], acts[1], gx)
+    gx, got1 = out[0], out[1:]
+    got0 = fns[0]["fwdbwd"](*params[0], acts[0], gx)
+
+    for got_stage, want_stage in zip([got0, got1, got2, got3], want):
+        for g, wnt in zip(got_stage, want_stage):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(wnt), rtol=2e-4, atol=2e-5
+            )
+
+
+@pytest.mark.parametrize("family,cfg", [
+    ("mlp", MlpConfig(microbatch=4)),
+    ("convnet", ConvNetConfig(microbatch=2, base_channels=8)),
+])
+def test_classifier_families_compose(family, cfg):
+    model = build_model(family, cfg)
+    params = [[jnp.asarray(a) for a in st] for st in model.init_params(0)]
+    protos = datagen.class_prototypes(
+        5, 10, cfg.input_dim if family != "mlp" else cfg.input_dim
+    )
+    x, y = datagen.class_microbatch(5, 0, 0, cfg.microbatch, protos)
+    a = jnp.asarray(x)
+    for j in range(model.n_stages - 1):
+        a = model.stage_apply(j, params[j], a)
+        assert a.shape == tuple(model.output_spec(j).shape)
+    loss = model.loss_apply(params[-1], a, jnp.asarray(y))
+    assert np.isfinite(float(loss))
+    assert abs(float(loss) - np.log(10)) < 1.5
+    logits = model.predict_apply(params[-1], a)
+    assert logits.shape == (cfg.microbatch, 10)
+
+
+def test_convnet_grads_flow_to_all_stages():
+    cfg = ConvNetConfig(microbatch=2, base_channels=8)
+    model = ConvNet(cfg)
+    params = [[jnp.asarray(a) for a in st] for st in model.init_params(0)]
+    protos = datagen.class_prototypes(5, 10, cfg.input_dim)
+    x, y = datagen.class_microbatch(5, 0, 0, cfg.microbatch, protos)
+    fns = [make_stage_fns(model, j) for j in range(4)]
+    acts = [jnp.asarray(x)]
+    for j in range(3):
+        (a,) = fns[j]["fwd"](*params[j], acts[j])
+        acts.append(a)
+    out = fns[3]["fwdbwd"](*params[3], acts[3], jnp.asarray(y))
+    gx = out[1]
+    for j in (2, 1):
+        out = fns[j]["fwdbwd"](*params[j], acts[j], gx)
+        gx = out[0]
+        assert all(np.isfinite(np.asarray(g)).all() for g in out[1:])
+        assert any(float(jnp.abs(g).max()) > 0 for g in out[1:])
+    g0 = fns[0]["fwdbwd"](*params[0], acts[0], gx)
+    assert any(float(jnp.abs(g).max()) > 0 for g in g0)
+
+
+def test_sgd_stage_fn_updates(tiny):
+    model, _ = tiny
+    fns = make_stage_fns(model, 1)
+    params = [jnp.asarray(a) for a in model.init_params(0)[1]]
+    moms = [jnp.zeros_like(p) for p in params]
+    grads = [jnp.ones_like(p) for p in params]
+    lr = jnp.asarray([0.1], dtype=jnp.float32)
+    out = fns["sgd"](*params, *moms, *grads, lr)
+    k = len(params)
+    for p_new, p in zip(out[:k], params):
+        np.testing.assert_allclose(
+            np.asarray(p_new), np.asarray(p) - 0.1, rtol=1e-5, atol=1e-6
+        )
+    for m_new in out[k:]:
+        np.testing.assert_allclose(np.asarray(m_new), 1.0, rtol=1e-6)
+
+
+def test_act_bytes_and_flops_positive(tiny):
+    model, _ = tiny
+    for j in range(model.n_stages):
+        assert model.stage_act_bytes(j) > 0
+        assert model.stage_flops(j) > 0
+    # last stage carries the vocab projection: most FLOPs for tiny
+    assert model.stage_flops(3) > model.stage_flops(1)

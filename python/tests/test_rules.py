@@ -1,0 +1,112 @@
+"""Update-rule semantics (paper Sec. 3.2) verified on the python mirror."""
+
+import numpy as np
+import pytest
+
+from compile import configs, mirror
+from compile.model import MlpConfig, Mlp
+from compile.mirror import MirrorTrainer, use_fresh
+
+
+def test_use_fresh_dp_and_v1():
+    for i in range(1, 5):
+        for j in range(1, 5):
+            assert use_fresh("dp", i, j, 4)
+            assert not use_fresh("cdp_v1", i, j, 4)
+
+
+def test_use_fresh_v2_suffix_pattern():
+    n = 4
+    # micro-batch 1 sees fresh only for stage N; micro-batch N all fresh.
+    assert [use_fresh("cdp_v2", 1, j, n) for j in range(1, 5)] == [
+        False, False, False, True,
+    ]
+    assert [use_fresh("cdp_v2", 4, j, n) for j in range(1, 5)] == [True] * 4
+    assert [use_fresh("cdp_v2", 2, j, n) for j in range(1, 5)] == [
+        False, False, True, True,
+    ]
+
+
+def test_use_fresh_unknown_rule():
+    with pytest.raises(ValueError):
+        use_fresh("bogus", 1, 1, 4)
+
+
+@pytest.fixture(scope="module")
+def mlp_setup():
+    cfg = MlpConfig(classes=4, input_dim=16, hidden=32,
+                    layers_per_stage=1, microbatch=4, n_stages=4)
+    model = Mlp(cfg)
+    data = dict(kind="class", classes=4, input_dim=16, noise=0.3,
+                batch=4, seed=5)
+    params0 = model.init_params(3)
+    return model, data, params0
+
+
+def test_rules_agree_at_step0(mlp_setup):
+    """θ_{-1} := θ_0 bootstrap ⇒ all rules produce the same first loss."""
+    model, data, params0 = mlp_setup
+    tr = MirrorTrainer(model, data, lr=0.05)
+    first = {r: tr.train(params0, r, 1)[0][0] for r in mirror.RULES}
+    assert first["dp"] == pytest.approx(first["cdp_v1"], rel=1e-6)
+    assert first["dp"] == pytest.approx(first["cdp_v2"], rel=1e-6)
+
+
+def test_rules_diverge_then_all_learn(mlp_setup):
+    model, data, params0 = mlp_setup
+    tr = MirrorTrainer(model, data, lr=0.05)
+    curves = {r: tr.train(params0, r, 12)[0] for r in mirror.RULES}
+    # delayed rules differ from DP after the first step
+    assert curves["dp"][2] != curves["cdp_v1"][2]
+    assert curves["cdp_v1"][2] != curves["cdp_v2"][2]
+    # but every rule trains: final loss well under initial
+    for r, c in curves.items():
+        assert c[-1] < c[0] * 0.9, (r, c)
+
+
+def test_n1_degenerate_case():
+    """N = 1: CDP-v2's single micro-batch sees the fresh parameters
+    (j = 1 ≥ N−i+1 = 1), so CDP-v2 ≡ DP exactly.  CDP-v1 however remains
+    *delayed-by-one SGD* even for N = 1 (θ̂ = θ_{t−1}) — a genuinely
+    different trajectory after the bootstrap step."""
+    cfg = MlpConfig(classes=4, input_dim=16, hidden=32,
+                    layers_per_stage=2, microbatch=4, n_stages=1)
+    model = Mlp(cfg)
+    data = dict(kind="class", classes=4, input_dim=16, noise=0.3,
+                batch=4, seed=5)
+    params0 = model.init_params(0)
+    tr = MirrorTrainer(model, data, lr=0.05)
+    curves = {r: tr.train(params0, r, 5)[0] for r in mirror.RULES}
+    np.testing.assert_allclose(curves["dp"], curves["cdp_v2"], rtol=1e-6)
+    # bootstrap: first step identical; delay visible from step 1 on
+    assert curves["dp"][0] == pytest.approx(curves["cdp_v1"][0], rel=1e-6)
+    assert curves["dp"][1] != curves["cdp_v1"][1]
+    # and delayed SGD still converges (paper Sec 3.2 remark)
+    assert curves["cdp_v1"][-1] < curves["cdp_v1"][0]
+
+
+def test_v2_is_between_dp_and_v1_in_staleness(mlp_setup):
+    """CDP-v2 uses strictly fewer stale stage-params than CDP-v1 and more
+    than DP: count over the (i, j) grid."""
+    n = 6
+    stale = {
+        r: sum(
+            not use_fresh(r, i, j, n)
+            for i in range(1, n + 1)
+            for j in range(1, n + 1)
+        )
+        for r in mirror.RULES
+    }
+    assert stale["dp"] == 0
+    assert stale["cdp_v1"] == n * n
+    # mb i has N−i stale stages ⇒ Σ_{i=1..N} (N−i) = N(N−1)/2
+    assert stale["cdp_v2"] == n * (n - 1) / 2
+    assert 0 < stale["cdp_v2"] < n * n
+
+
+def test_classifier_actually_learns_to_accuracy(mlp_setup):
+    model, data, params0 = mlp_setup
+    tr = MirrorTrainer(model, data, lr=0.1)
+    _, theta = tr.train(params0, "cdp_v2", 30)
+    acc = tr.accuracy(theta, n_batches=4)
+    assert acc > 0.5  # 4 classes, random = 0.25

@@ -1,0 +1,43 @@
+//! Fig 1: execution timelines for DP, CDP-v1/v2 (N = 3, as in the paper),
+//! with the properties the figure illustrates: barrier positions,
+//! per-step activation totals, hand-off events; plus schedule-generation
+//! throughput for large N.
+
+mod harness;
+
+use cyclic_dp::parallel::Schedule;
+
+fn main() {
+    let b = harness::Bench::new("fig1_timeline");
+
+    b.section("Fig 1a — DP, N=3");
+    let dp = Schedule::dp(3, 12);
+    print!("{}", dp.render(12));
+    println!("barriers: {:?}", dp.barrier_steps(12));
+
+    b.section("Fig 1b/c — CDP, N=3 (delay 2(i-1))");
+    let cdp = Schedule::cyclic(3, 14);
+    print!("{}", cdp.render(14));
+    for k in 5..11 {
+        let h = cdp.handoffs_after(k);
+        println!("t={k}: hand-offs {h:?}");
+    }
+
+    b.section("activation totals per time step (N=3)");
+    print!("DP : ");
+    (0..12).for_each(|k| print!("{:>3}", dp.total_stashes_after(k)));
+    print!("\nCDP: ");
+    (0..12).for_each(|k| print!("{:>3}", cdp.total_stashes_after(k)));
+    println!();
+    let (dpk, dpm) = dp.stash_stats();
+    let (ck, cm) = cdp.stash_stats();
+    println!("DP peak {dpk} (mean {dpm:.1}) | CDP peak {ck} (mean {cm:.1})");
+
+    b.section("schedule generation throughput");
+    for n in [8usize, 64, 256] {
+        b.time(&format!("cyclic schedule N={n}, horizon=8N"), 2, 20, || {
+            let s = Schedule::cyclic(n, 8 * n);
+            std::hint::black_box(s.stash_stats());
+        });
+    }
+}

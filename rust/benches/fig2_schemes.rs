@@ -1,0 +1,47 @@
+//! Fig 2: per-scheme device / memory / communication schematics ± CDP
+//! (N = 3 as the paper draws them, plus N = 4, 8 scaling), from the
+//! discrete-time simulation.
+
+mod harness;
+
+use cyclic_dp::sim::{schemes, Scheme, SymbolicCosts};
+
+fn main() {
+    let b = harness::Bench::new("fig2_schemes");
+    let c = SymbolicCosts {
+        psi_p: 4_000_000,
+        b_psi_a: 8_000_000,
+        b_psi_a_int: 400_000,
+    };
+
+    for n in [3usize, 4, 8] {
+        b.section(&format!("N = {n}"));
+        for s in Scheme::all() {
+            println!("{}", schemes::render_scheme(s, n, c));
+        }
+        // the paper's headline deltas
+        let mp = schemes::simulate_scheme(Scheme::DpMp, n, c);
+        let mpc = schemes::simulate_scheme(Scheme::DpMpCdp, n, c);
+        println!(
+            "→ MP devices: {} → {} ({}% saved), idle {:.0}% → {:.0}%",
+            mp.n_devices,
+            mpc.n_devices,
+            100 * (mp.n_devices - mpc.n_devices) / mp.n_devices,
+            mp.idle_fraction * 100.0,
+            mpc.idle_fraction * 100.0
+        );
+        let zb = schemes::simulate_scheme(Scheme::ZeroDp, n, c);
+        let zc = schemes::simulate_scheme(Scheme::ZeroCdp, n, c);
+        println!(
+            "→ ZeRO msgs/boundary: {} → {}",
+            zb.max_comm_events_per_boundary, zc.max_comm_events_per_boundary
+        );
+    }
+
+    b.section("simulation throughput");
+    b.time("simulate all 9 schemes, N=64", 2, 50, || {
+        for s in Scheme::all() {
+            std::hint::black_box(schemes::simulate_scheme(s, 64, c));
+        }
+    });
+}

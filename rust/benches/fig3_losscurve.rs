@@ -1,0 +1,56 @@
+//! Fig 3 (short form): training-loss curves of the three rules on the tiny
+//! LM bundle — checks the paper's shape (CDP-v1 higher early, all three
+//! converging together).  `examples/train_lm.rs` is the full-scale run.
+
+mod harness;
+
+use cyclic_dp::coordinator::single::RefTrainer;
+use cyclic_dp::metrics::Series;
+use cyclic_dp::model::artifacts_root;
+use cyclic_dp::parallel::rule_by_name;
+use cyclic_dp::runtime::BundleRuntime;
+
+fn main() {
+    let b = harness::Bench::new("fig3_losscurve");
+    if !harness::have_bundle("tiny") {
+        return;
+    }
+    let rt = BundleRuntime::load(&artifacts_root().join("tiny")).unwrap();
+    let steps = 30;
+
+    b.section(&format!("tiny LM bundle, {steps} steps"));
+    let mut curves: Vec<(&str, Series)> = Vec::new();
+    for rule_name in ["dp", "cdp_v1", "cdp_v2"] {
+        let rule = rule_by_name(rule_name).unwrap();
+        let mut t = RefTrainer::new(&rt, rule).unwrap();
+        let mut s = Series::new(rule_name);
+        for step in 0..steps {
+            let log = t.step().unwrap();
+            s.push(step as f64, log.loss);
+        }
+        curves.push((rule_name, s));
+    }
+
+    // render a compact ascii table, smoothed like the paper (window 5)
+    println!("{:>5} {:>9} {:>9} {:>9}", "step", "dp", "cdp_v1", "cdp_v2");
+    let smoothed: Vec<Vec<(f64, f64)>> =
+        curves.iter().map(|(_, s)| s.smoothed(5)).collect();
+    for i in (0..steps).step_by(3) {
+        println!(
+            "{:>5} {:>9.4} {:>9.4} {:>9.4}",
+            i, smoothed[0][i].1, smoothed[1][i].1, smoothed[2][i].1
+        );
+    }
+
+    let early = 5usize;
+    println!(
+        "\nearly (step {early}) smoothed: dp {:.4} | v1 {:.4} | v2 {:.4}  \
+         (paper: v1 visibly higher early)",
+        smoothed[0][early].1, smoothed[1][early].1, smoothed[2][early].1
+    );
+    let last = steps - 1;
+    println!(
+        "final: dp {:.4} | v1 {:.4} | v2 {:.4}  (paper: all converge together)",
+        smoothed[0][last].1, smoothed[1][last].1, smoothed[2][last].1
+    );
+}

@@ -1,0 +1,69 @@
+//! Fig 4: activation memory per worker, DP vs CDP, ResNet-50 and ViT-B/16
+//! profiles, N ∈ {4, 8, 32} — plus the tiny/lm bundles' own manifests as a
+//! third profile source (activation bytes measured from the staged models).
+
+mod harness;
+
+use cyclic_dp::memsim::{extrapolate, resnet50_profile, vit_b16_profile, LayerProfile, MemoryCurve};
+use cyclic_dp::model::{artifacts_root, Manifest};
+use cyclic_dp::util::stats::fmt_bytes;
+
+fn main() {
+    let b = harness::Bench::new("fig4_memory");
+
+    for (arch, layers) in [
+        ("resnet50 (heterogeneous)", resnet50_profile(64)),
+        ("vit_b16 (homogeneous)", vit_b16_profile(64)),
+    ] {
+        b.section(arch);
+        let curve = MemoryCurve::from_layers(&layers);
+        println!(
+            "single-pass: peak {} mean {} ({} layers)",
+            fmt_bytes(curve.peak() as u64),
+            fmt_bytes(curve.mean() as u64),
+            layers.len()
+        );
+        for n in [4usize, 8, 32] {
+            let e = extrapolate(&curve, n, 512);
+            println!(
+                "N={:<3} DP {:>10}/worker  CDP {:>10}/worker  reduction {:>5.1}%",
+                n,
+                fmt_bytes(e.dp_peak as u64),
+                fmt_bytes(e.cdp_peak as u64),
+                e.reduction * 100.0
+            );
+        }
+    }
+
+    // bundle-derived profile: the staged models' own act_bytes
+    if harness::have_bundle("tiny") {
+        b.section("tiny bundle manifest profile (transformer, 4 stages)");
+        let m = Manifest::load(&artifacts_root().join("tiny")).unwrap();
+        let layers: Vec<LayerProfile> = m
+            .stages
+            .iter()
+            .map(|s| LayerProfile {
+                name: format!("stage{}", s.index),
+                act_bytes: s.act_bytes,
+                flops: s.flops,
+            })
+            .collect();
+        let curve = MemoryCurve::from_layers(&layers);
+        for n in [4usize, 8, 32] {
+            let e = extrapolate(&curve, n, 256);
+            println!(
+                "N={:<3} DP {:>10}  CDP {:>10}  reduction {:>5.1}%",
+                n,
+                fmt_bytes(e.dp_peak as u64),
+                fmt_bytes(e.cdp_peak as u64),
+                e.reduction * 100.0
+            );
+        }
+    }
+
+    b.section("extrapolation throughput");
+    let curve = MemoryCurve::from_layers(&vit_b16_profile(64));
+    b.time("extrapolate N=32, 512 samples", 2, 50, || {
+        std::hint::black_box(extrapolate(&curve, 32, 512));
+    });
+}

@@ -1,0 +1,69 @@
+//! Shared bench harness (criterion is unavailable offline — DESIGN.md
+//! substitution #4).  Each bench binary is `harness = false` and prints a
+//! table of timed sections; `cargo bench` runs them all.
+
+#![allow(dead_code)]
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    name: String,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        println!("\n════════ bench: {name} ════════");
+        Self { name: name.to_string() }
+    }
+
+    /// Time `f` with warmup and report mean ± std / min.
+    pub fn time<F: FnMut()>(&self, label: &str, warmup: usize, iters: usize, mut f: F) {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        let mean: Duration = samples.iter().sum::<Duration>() / iters as u32;
+        let min = samples.iter().min().copied().unwrap_or_default();
+        let max = samples.iter().max().copied().unwrap_or_default();
+        println!(
+            "  {label:<44} mean {:>10} | min {:>10} | max {:>10} | n={iters}",
+            fmt(mean),
+            fmt(min),
+            fmt(max)
+        );
+    }
+
+    pub fn section(&self, label: &str) {
+        println!("---- {label} ----");
+    }
+}
+
+pub fn fmt(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Artifacts guard: returns false (and prints) when a bundle is missing.
+pub fn have_bundle(name: &str) -> bool {
+    let ok = cyclic_dp::model::artifacts_root()
+        .join(name)
+        .join("manifest.json")
+        .exists();
+    if !ok {
+        println!("SKIP: bundle `{name}` not built — run `make artifacts`");
+    }
+    ok
+}

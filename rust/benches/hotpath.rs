@@ -1,0 +1,114 @@
+//! Hot-path microbenchmarks (DESIGN.md §Perf-L3): the per-step cost
+//! decomposition of the coordinator — execution, literal conversion,
+//! gradient reduction, SGD — plus fabric primitives.  This is the bench
+//! the §Perf iteration log in EXPERIMENTS.md is measured with.
+
+mod harness;
+
+use std::sync::Arc;
+
+use cyclic_dp::comm::collectives::{allreduce_mean, ring_allreduce};
+use cyclic_dp::comm::Fabric;
+use cyclic_dp::coordinator::single::RefTrainer;
+use cyclic_dp::coordinator::{multi, SharedRuntime};
+use cyclic_dp::data::DataSource;
+use cyclic_dp::model::artifacts_root;
+use cyclic_dp::parallel::Rule;
+use cyclic_dp::runtime::{tensor_to_literal, BundleRuntime};
+use cyclic_dp::tensor::ops::{add_into, reduce_rows};
+use cyclic_dp::tensor::Tensor;
+
+fn main() {
+    let b = harness::Bench::new("hotpath");
+
+    b.section("host reduction primitives (1M f32)");
+    let x: Vec<f32> = (0..1_000_000).map(|i| i as f32 * 1e-6).collect();
+    let mut acc = x.clone();
+    b.time("add_into 1M f32", 3, 50, || {
+        add_into(&mut acc, &x);
+    });
+    let rows: Vec<&[f32]> = vec![&x, &x, &x, &x];
+    b.time("reduce_rows 4×1M f32", 3, 20, || {
+        std::hint::black_box(reduce_rows(&rows));
+    });
+
+    b.section("fabric collectives (4 workers, 1M f32)");
+    for (label, ring) in [("flat allreduce", false), ("ring allreduce", true)] {
+        b.time(label, 1, 5, || {
+            let (eps, _) = Fabric::new(4);
+            let handles: Vec<_> = eps
+                .into_iter()
+                .map(|mut ep| {
+                    std::thread::spawn(move || {
+                        let mut data = vec![1.0f32; 1_000_000];
+                        if ring {
+                            ring_allreduce(&mut ep, 0, &mut data);
+                        } else {
+                            allreduce_mean(&mut ep, 0, &mut data);
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().for_each(|h| h.join().unwrap());
+        });
+    }
+
+    if !harness::have_bundle("mlp") {
+        return;
+    }
+    let rt = BundleRuntime::load(&artifacts_root().join("mlp")).unwrap();
+
+    b.section("literal conversion (mlp stage-1 params)");
+    let params = rt.init_params().unwrap();
+    b.time("tensor_to_literal stage 1 (4 tensors)", 3, 100, || {
+        for t in &params[1] {
+            std::hint::black_box(tensor_to_literal(t).unwrap());
+        }
+    });
+
+    b.section("executable dispatch (mlp bundle)");
+    let data = DataSource::from_manifest(&rt.manifest);
+    let mb = data.microbatch(0, 0);
+    let x = match &mb {
+        cyclic_dp::data::MicroBatch::Class { x, .. } => x.clone(),
+        _ => unreachable!(),
+    };
+    let hx = cyclic_dp::tensor::HostTensor::F32(x);
+    b.time("stage_fwd(1)", 3, 50, || {
+        let y = rt.stage_fwd(0, &params[0], &hx).unwrap();
+        std::hint::black_box(y);
+    });
+
+    b.section("end-to-end training step");
+    let mut t = RefTrainer::new(&rt, Rule::CdpV2).unwrap();
+    b.time("RefTrainer::step (cdp_v2, mlp)", 2, 10, || {
+        t.step().unwrap();
+    });
+
+    b.section("multi-worker step (4 threads)");
+    let shared = SharedRuntime(Arc::new(rt));
+    b.time("multi ring 2 steps (cdp_v2)", 1, 3, || {
+        std::hint::black_box(
+            multi::train(shared.clone(), Rule::CdpV2, multi::CommPattern::Ring, 2)
+                .unwrap(),
+        );
+    });
+    b.time("multi barrier 2 steps (dp)", 1, 3, || {
+        std::hint::black_box(
+            multi::train(shared.clone(), Rule::Dp, multi::CommPattern::Barrier, 2)
+                .unwrap(),
+        );
+    });
+
+    let mut sgd_params = shared.init_params().unwrap();
+    let mut moms = shared.zero_like_params();
+    let grads = shared.zero_like_params();
+    b.section("optimizer");
+    b.time("sgd_update all stages", 2, 20, || {
+        for j in 0..shared.manifest.n_stages {
+            shared
+                .sgd_update(j, &mut sgd_params[j], &mut moms[j], &grads[j], 0.01)
+                .unwrap();
+        }
+    });
+}

@@ -1,0 +1,73 @@
+//! Table 1: theoretical cost of every parallelism implementation ± CDP,
+//! from (a) the closed forms and (b) the discrete-time simulation, plus a
+//! measured cross-check of the comm columns from the real trainers on the
+//! mlp bundle.
+
+mod harness;
+
+use std::sync::Arc;
+
+use cyclic_dp::coordinator::{multi, zero, SharedRuntime};
+use cyclic_dp::model::artifacts_root;
+use cyclic_dp::parallel::Rule;
+use cyclic_dp::runtime::BundleRuntime;
+use cyclic_dp::sim::{analytic, schemes, Scheme, SymbolicCosts};
+use cyclic_dp::util::stats::fmt_bytes;
+
+fn main() {
+    let b = harness::Bench::new("table1_costs");
+
+    b.section("analytic Table 1 (paper units)");
+    for n in [3usize, 4, 8] {
+        print!("{}", analytic::render_table1(n));
+    }
+
+    b.section("discrete simulation cross-check (N = 4, mlp-sized model)");
+    let c = SymbolicCosts {
+        psi_p: 4 * 141_706,     // mlp bundle Ψ_P
+        b_psi_a: 8 * 128 * 4 * 10, // rough B·Ψ_A
+        b_psi_a_int: 8 * 128 * 4,
+    };
+    for s in Scheme::all() {
+        println!("{}", schemes::render_scheme(s, 4, c));
+    }
+
+    if !harness::have_bundle("mlp") {
+        return;
+    }
+    b.section("measured comm from real trainers (mlp bundle, 4 steps)");
+    let rt = SharedRuntime(Arc::new(
+        BundleRuntime::load(&artifacts_root().join("mlp")).unwrap(),
+    ));
+    let psi_p = rt.manifest.psi_p_bytes();
+
+    let dp = multi::train(rt.clone(), Rule::Dp, multi::CommPattern::Barrier, 4).unwrap();
+    println!(
+        "Multi-GPU DP      : {} total ({:.2} Ψ_P/step), {} msgs, {} optimizer replicas",
+        fmt_bytes(dp.comm_bytes),
+        dp.comm_bytes as f64 / 4.0 / psi_p as f64,
+        dp.comm_messages,
+        dp.optimizer_replicas
+    );
+    let ring =
+        multi::train(rt.clone(), Rule::CdpV2, multi::CommPattern::Ring, 4).unwrap();
+    println!(
+        "Multi-GPU + Cyclic: {} total ({:.2} Ψ_P/step), {} msgs, {} optimizer replica",
+        fmt_bytes(ring.comm_bytes),
+        ring.comm_bytes as f64 / 4.0 / psi_p as f64,
+        ring.comm_messages,
+        ring.optimizer_replicas
+    );
+    let zb = zero::train(rt.clone(), Rule::Dp, zero::StateFlow::Broadcast, 4).unwrap();
+    let zc = zero::train(rt.clone(), Rule::CdpV2, zero::StateFlow::Cyclic, 4).unwrap();
+    println!(
+        "ZeRO-DP           : {} total, max msgs/timestep {}",
+        fmt_bytes(zb.comm_bytes),
+        zb.max_msgs_per_timestep
+    );
+    println!(
+        "ZeRO-DP + Cyclic  : {} total, max msgs/timestep {}",
+        fmt_bytes(zc.comm_bytes),
+        zc.max_msgs_per_timestep
+    );
+}

@@ -1,0 +1,45 @@
+//! Table 2 (short form): held-out accuracy for DP / CDP-v1 / CDP-v2 on the
+//! synthetic classification task (mlp bundle; `examples/classify.rs
+//! --bundle convnet --seeds 5` is the full-depth run recorded in
+//! EXPERIMENTS.md).  The paper's claim under test: the three rules land
+//! within noise of each other.
+
+mod harness;
+
+use cyclic_dp::coordinator::single::RefTrainer;
+use cyclic_dp::model::artifacts_root;
+use cyclic_dp::parallel::rule_by_name;
+use cyclic_dp::runtime::BundleRuntime;
+
+fn main() {
+    let b = harness::Bench::new("table2_accuracy");
+    if !harness::have_bundle("mlp") {
+        return;
+    }
+    let rt = BundleRuntime::load(&artifacts_root().join("mlp")).unwrap();
+    let steps = 40;
+
+    b.section(&format!("mlp bundle, {steps} steps, 2 seeds (short)"));
+    println!("{:<8} {:>8} {:>8}", "rule", "final", "acc");
+    for rule_name in ["dp", "cdp_v1", "cdp_v2"] {
+        let rule = rule_by_name(rule_name).unwrap();
+        let mut t = RefTrainer::new(&rt, rule).unwrap();
+        let logs = t.train(steps).unwrap();
+        let acc = t.accuracy(8).unwrap();
+        println!(
+            "{:<8} {:>8.4} {:>7.2}%",
+            rule_name,
+            logs.last().unwrap().loss,
+            acc * 100.0
+        );
+    }
+
+    b.section("per-step cost of each rule (same compute, different versions)");
+    for rule_name in ["dp", "cdp_v2"] {
+        let rule = rule_by_name(rule_name).unwrap();
+        let mut t = RefTrainer::new(&rt, rule).unwrap();
+        b.time(&format!("train step ({rule_name})"), 2, 10, || {
+            t.step().unwrap();
+        });
+    }
+}

@@ -1,0 +1,121 @@
+//! Tiny argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments.  Typed getters with defaults keep call sites terse.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable); skip argv[0] yourself.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                    out.present.push(rest.to_string());
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                    out.present.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: expected integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: expected integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: expected number, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key}: expected bool, got `{v}`"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn kv_styles() {
+        let a = parse("train --bundle tiny --steps=10 --verbose --lr 0.5");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.str_or("bundle", "x"), "tiny");
+        assert_eq!(a.usize_or("steps", 0), 10);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.f64_or("lr", 0.0), 0.5);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize_or("steps", 7), 7);
+        assert_eq!(a.str_or("bundle", "tiny"), "tiny");
+        assert!(!a.has("anything"));
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse("--flag sub cmd");
+        // `--flag sub`: consumes `sub` as its value (documented behaviour)
+        assert_eq!(a.get("flag"), Some("sub"));
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Device memory ledger: tracks live allocations (parameters, optimizer
+//! state, activation stashes) against a capacity, recording the peak.
+//! This is the per-GPU "Memory" column of Table 1 measured rather than
+//! assumed.
+
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct DeviceMem {
+    pub capacity: u64,
+    used: u64,
+    peak: u64,
+    /// (label, bytes) of live allocations, for diagnostics.
+    live: Vec<(String, u64)>,
+}
+
+impl DeviceMem {
+    pub fn new(capacity: u64) -> Self {
+        Self { capacity, used: 0, peak: 0, live: Vec::new() }
+    }
+
+    /// Unbounded device (measurement-only mode).
+    pub fn unbounded() -> Self {
+        Self::new(u64::MAX)
+    }
+
+    pub fn alloc(&mut self, label: &str, bytes: u64) -> Result<()> {
+        anyhow::ensure!(
+            self.used + bytes <= self.capacity,
+            "device OOM: {} + {} > {} (live: {:?})",
+            self.used,
+            bytes,
+            self.capacity,
+            self.live
+        );
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        self.live.push((label.to_string(), bytes));
+        Ok(())
+    }
+
+    /// Free the most recent allocation with this label.
+    pub fn free(&mut self, label: &str) -> Result<()> {
+        let idx = self
+            .live
+            .iter()
+            .rposition(|(l, _)| l == label)
+            .ok_or_else(|| anyhow::anyhow!("free of unknown allocation `{label}`"))?;
+        let (_, bytes) = self.live.remove(idx);
+        self.used -= bytes;
+        Ok(())
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_peak() {
+        let mut d = DeviceMem::new(100);
+        d.alloc("a", 40).unwrap();
+        d.alloc("b", 50).unwrap();
+        assert_eq!(d.used(), 90);
+        d.free("a").unwrap();
+        assert_eq!(d.used(), 50);
+        d.alloc("c", 10).unwrap();
+        assert_eq!(d.peak(), 90);
+    }
+
+    #[test]
+    fn oom_is_an_error() {
+        let mut d = DeviceMem::new(10);
+        assert!(d.alloc("x", 11).is_err());
+        d.alloc("x", 10).unwrap();
+        assert!(d.alloc("y", 1).is_err());
+    }
+
+    #[test]
+    fn free_unknown_label_errors() {
+        let mut d = DeviceMem::new(10);
+        assert!(d.free("ghost").is_err());
+    }
+
+    #[test]
+    fn lifo_free_with_duplicate_labels() {
+        let mut d = DeviceMem::new(100);
+        d.alloc("act", 10).unwrap();
+        d.alloc("act", 20).unwrap();
+        d.free("act").unwrap(); // frees the 20
+        assert_eq!(d.used(), 10);
+    }
+}

@@ -1,0 +1,45 @@
+//! Simulated cluster: device memory models + worker thread helpers
+//! (DESIGN.md substitution #1 — each "GPU" is an OS thread with its own
+//! state, endpoint and memory ledger).
+
+pub mod device;
+
+pub use device::DeviceMem;
+
+use std::thread;
+
+/// Spawn `n` workers and join them, propagating panics.  Returns each
+/// worker's result in rank order.
+pub fn run_workers<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(usize) -> T + Send + Sync + 'static,
+{
+    let f = std::sync::Arc::new(f);
+    let mut handles = Vec::with_capacity(n);
+    for w in 0..n {
+        let f = f.clone();
+        handles.push(
+            thread::Builder::new()
+                .name(format!("worker-{w}"))
+                .spawn(move || f(w))
+                .expect("spawn worker"),
+        );
+    }
+    handles
+        .into_iter()
+        .enumerate()
+        .map(|(w, h)| h.join().unwrap_or_else(|_| panic!("worker {w} panicked")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workers_run_in_rank_order_results() {
+        let out = run_workers(4, |w| w * 10);
+        assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+}

@@ -1,0 +1,215 @@
+//! Communication fabric: byte-counted point-to-point channels between
+//! workers plus the collectives the paper compares (paper Sec. 4 / Tab 1).
+//!
+//! Every transfer is accounted (bytes, messages) in shared [`CommStats`];
+//! the trainers' comm numbers in EXPERIMENTS.md come from here, not from
+//! analytic formulas (those live in `sim::analytic` and are cross-checked).
+//!
+//! Determinism: `reduce_to_root` adds contributions in rank order, and the
+//! cyclic ring accumulates in micro-batch order — both match the
+//! single-process reference trainer bit-for-bit (DESIGN.md invariants).
+
+pub mod collectives;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Global transfer accounting, shared by all endpoints of a fabric.
+#[derive(Debug, Default)]
+pub struct CommStats {
+    pub bytes: AtomicU64,
+    pub messages: AtomicU64,
+}
+
+impl CommStats {
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug)]
+struct Msg {
+    from: usize,
+    tag: u64,
+    data: Vec<f32>,
+}
+
+/// One worker's endpoint: send to any peer, tagged blocking receive.
+pub struct Endpoint {
+    pub id: usize,
+    pub n: usize,
+    txs: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    /// Out-of-order arrivals parked until someone asks for them.
+    parked: HashMap<(usize, u64), Vec<Vec<f32>>>,
+    stats: Arc<CommStats>,
+}
+
+impl Endpoint {
+    /// Send `data` to `to` under `tag`.  f32 payloads only (params, grads,
+    /// activations — everything the paper communicates).
+    pub fn send(&self, to: usize, tag: u64, data: Vec<f32>) {
+        assert_ne!(to, self.id, "self-send");
+        self.stats
+            .bytes
+            .fetch_add(data.len() as u64 * 4, Ordering::Relaxed);
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.txs[to]
+            .send(Msg { from: self.id, tag, data })
+            .expect("peer endpoint dropped");
+    }
+
+    /// Blocking receive of the message sent by `from` under `tag`.
+    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
+        if let Some(q) = self.parked.get_mut(&(from, tag)) {
+            if !q.is_empty() {
+                return q.remove(0);
+            }
+        }
+        loop {
+            let msg = self.rx.recv().expect("fabric closed");
+            if msg.from == from && msg.tag == tag {
+                return msg.data;
+            }
+            self.parked
+                .entry((msg.from, msg.tag))
+                .or_default()
+                .push(msg.data);
+        }
+    }
+
+    pub fn stats(&self) -> &Arc<CommStats> {
+        &self.stats
+    }
+
+    pub fn right(&self) -> usize {
+        (self.id + 1) % self.n
+    }
+
+    pub fn left(&self) -> usize {
+        (self.id + self.n - 1) % self.n
+    }
+}
+
+/// Build a fully-connected fabric of `n` endpoints.
+pub struct Fabric;
+
+impl Fabric {
+    pub fn new(n: usize) -> (Vec<Endpoint>, Arc<CommStats>) {
+        let stats = Arc::new(CommStats::default());
+        let mut txs_all = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            txs_all.push(tx);
+            rxs.push(rx);
+        }
+        let endpoints = rxs
+            .into_iter()
+            .enumerate()
+            .map(|(id, rx)| Endpoint {
+                id,
+                n,
+                txs: txs_all.clone(),
+                rx,
+                parked: HashMap::new(),
+                stats: stats.clone(),
+            })
+            .collect();
+        (endpoints, stats)
+    }
+}
+
+/// Tag namespaces so concurrent protocols on one fabric can't collide.
+pub mod tags {
+    /// grad fragment for (step, stage)
+    pub fn grad(step: u64, stage: usize) -> u64 {
+        0x1_0000_0000 | (step << 8) | stage as u64
+    }
+
+    /// updated params for (step, stage)
+    pub fn param(step: u64, stage: usize) -> u64 {
+        0x2_0000_0000 | (step << 8) | stage as u64
+    }
+
+    /// scalar loss report for step
+    pub fn loss(step: u64) -> u64 {
+        0x3_0000_0000 | step
+    }
+
+    /// ring all-reduce phase p of step
+    pub fn ring(step: u64, phase: usize) -> u64 {
+        0x4_0000_0000 | (step << 8) | phase as u64
+    }
+
+    /// activation / activation-grad between pipeline stages
+    pub fn act(step: u64, mb: usize, fwd: bool) -> u64 {
+        let dir = if fwd { 0x10 } else { 0x20 };
+        0x5_0000_0000 | (step << 16) | ((mb as u64) << 8) | dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn p2p_roundtrip_and_accounting() {
+        let (mut eps, stats) = Fabric::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            let got = e1.recv(0, 7);
+            assert_eq!(got, vec![1.0, 2.0, 3.0]);
+            e1.send(0, 8, vec![4.0]);
+        });
+        e0.send(1, 7, vec![1.0, 2.0, 3.0]);
+        let mut e0 = e0;
+        assert_eq!(e0.recv(1, 8), vec![4.0]);
+        h.join().unwrap();
+        assert_eq!(stats.bytes(), 16);
+        assert_eq!(stats.messages(), 2);
+    }
+
+    #[test]
+    fn out_of_order_tags_are_parked() {
+        let (mut eps, _) = Fabric::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e0.send(1, 100, vec![1.0]);
+        e0.send(1, 200, vec![2.0]);
+        // receive in reverse order
+        assert_eq!(e1.recv(0, 200), vec![2.0]);
+        assert_eq!(e1.recv(0, 100), vec![1.0]);
+    }
+
+    #[test]
+    fn neighbors_modulo_n() {
+        let (eps, _) = Fabric::new(3);
+        assert_eq!(eps[0].right(), 1);
+        assert_eq!(eps[2].right(), 0);
+        assert_eq!(eps[0].left(), 2);
+    }
+
+    #[test]
+    fn tags_disjoint() {
+        let mut seen = std::collections::HashSet::new();
+        for step in 0..4u64 {
+            for stage in 0..4usize {
+                assert!(seen.insert(tags::grad(step, stage)));
+                assert!(seen.insert(tags::param(step, stage)));
+                assert!(seen.insert(tags::ring(step, stage)));
+                assert!(seen.insert(tags::act(step, stage, true)));
+                assert!(seen.insert(tags::act(step, stage, false)));
+            }
+            assert!(seen.insert(tags::loss(step)));
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Trainers: the paper's parallelism settings, each as a coordinator that
+//! drives the AOT artifacts through a schedule + update rule.
+//!
+//! - [`single`]   — single-process reference (exact update-rule numerics;
+//!                  also the "Single-GPU DP/CDP" setting of paper §4.1).
+//! - [`multi`]    — N worker threads, full replicas: Multi-GPU DP with the
+//!                  barrier all-reduce vs CDP with the balanced ring (§4.2).
+//! - [`zero`]     — ZeRO-DP state sharding: broadcast vs cyclic p2p
+//!                  hand-off of the model states (§4.4).
+//! - [`pipeline`] — pipeline engine over stages: GPipe and 1F1B schedules;
+//!                  CDP-v1 under PP reproduces PipeDream-2BW (§4.3).
+//!
+//! All trainers share the invariant: same bundle + same rule + same steps
+//! ⇒ same loss sequence as [`single::RefTrainer`] (bit-for-bit for
+//! rank-ordered reductions; tested in rust/tests/).
+
+pub mod multi;
+pub mod pipeline;
+pub mod single;
+pub mod zero;
+
+use std::sync::Arc;
+
+use crate::runtime::BundleRuntime;
+
+/// Thread-shareable runtime handle.
+///
+/// SAFETY: the `xla` crate's wrappers hold raw pointers without Send/Sync,
+/// but the underlying PJRT C++ objects are documented thread-safe for
+/// compilation-free use: `PjRtLoadedExecutable::Execute` may be called
+/// concurrently, and each call here constructs its own `Literal`s.  We
+/// never share a Literal across threads, never mutate an executable, and
+/// compile everything before spawning workers.
+pub struct SharedRuntime(pub Arc<BundleRuntime>);
+
+unsafe impl Send for SharedRuntime {}
+unsafe impl Sync for SharedRuntime {}
+
+impl Clone for SharedRuntime {
+    fn clone(&self) -> Self {
+        SharedRuntime(self.0.clone())
+    }
+}
+
+impl std::ops::Deref for SharedRuntime {
+    type Target = BundleRuntime;
+
+    fn deref(&self) -> &Self::Target {
+        &self.0
+    }
+}
+
+/// Per-step training record common to all trainers.
+#[derive(Clone, Debug)]
+pub struct StepLog {
+    pub step: u64,
+    /// Mean loss over the N micro-batches (at their θ̂ versions).
+    pub loss: f64,
+}

@@ -1,0 +1,314 @@
+//! Multi-worker trainer (paper §4.2): N worker threads, each a full model
+//! replica handling one micro-batch per training step.
+//!
+//! - **DP mode** — the classic barrier pattern: every worker computes all
+//!   2N time steps, then a synchronous all-reduce (rank-ordered flat tree;
+//!   O(log N)-step collectives are modelled in `sim::analytic`, the flat
+//!   tree keeps the sum order bit-identical to the reference trainer).
+//!   Every replica applies the same averaged update locally — N copies of
+//!   optimizer state.
+//! - **CDP mode** — the cyclic pattern: gradients travel the ring as
+//!   partial sums in micro-batch order (worker i adds its contribution and
+//!   forwards), so the reduction is *balanced across the training step*
+//!   with only point-to-point transfers; the last worker (micro-batch N)
+//!   holds the only optimizer state, applies the update as each stage's sum
+//!   completes, and the fresh stage parameters hop the ring back — the
+//!   paper's Fig 1c communication scheme.  Note the asymmetry the paper
+//!   highlights: max communications *between two time steps* is O(1) here
+//!   vs a collective in DP.
+//!
+//! Loss sequences are bit-identical to [`super::single::RefTrainer`] under
+//! the same rule (tested in rust/tests/trainer_equivalence.rs).
+
+use anyhow::Result;
+
+use super::{SharedRuntime, StepLog};
+use crate::cluster::run_workers;
+use crate::comm::collectives::{broadcast, reduce_to_root};
+use crate::comm::{tags, CommStats, Endpoint, Fabric};
+use crate::data::{DataSource, MicroBatch};
+use crate::parallel::{ParamStore, Rule};
+use crate::tensor::{HostTensor, Tensor};
+use std::sync::Arc;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommPattern {
+    /// Barrier all-reduce at the end of each training step.
+    Barrier,
+    /// Balanced ring: per-stage partial sums + param hand-off (CDP).
+    Ring,
+}
+
+pub struct MultiReport {
+    pub logs: Vec<StepLog>,
+    pub comm_bytes: u64,
+    pub comm_messages: u64,
+    /// Optimizer-state replicas across the cluster (DP: N, CDP ring: 1).
+    pub optimizer_replicas: usize,
+}
+
+/// Train `steps` steps on `n` worker threads.
+pub fn train(
+    rt: SharedRuntime,
+    rule: Rule,
+    pattern: CommPattern,
+    steps: usize,
+) -> Result<MultiReport> {
+    let n = rt.manifest.n_microbatches;
+    let (endpoints, stats) = Fabric::new(n);
+    let mut slots: Vec<Option<Endpoint>> = endpoints.into_iter().map(Some).collect();
+    let eps: Arc<Vec<std::sync::Mutex<Option<Endpoint>>>> = Arc::new(
+        slots.iter_mut().map(|e| std::sync::Mutex::new(e.take())).collect(),
+    );
+
+    let rt_arc = rt.clone();
+    let rule_c = rule.clone();
+    let results = run_workers(n, move |w| {
+        let mut ep = eps[w].lock().unwrap().take().expect("endpoint taken twice");
+        let out = match pattern {
+            CommPattern::Barrier => {
+                worker_dp(&rt_arc, &rule_c, &mut ep, w, steps)
+            }
+            CommPattern::Ring => worker_ring(&rt_arc, &rule_c, &mut ep, w, steps),
+        };
+        out.expect("worker failed")
+    });
+
+    // worker 0 reports the canonical loss log
+    let logs = results.into_iter().next().unwrap();
+    Ok(MultiReport {
+        logs,
+        comm_bytes: stats.bytes(),
+        comm_messages: stats.messages(),
+        optimizer_replicas: match pattern {
+            CommPattern::Barrier => n,
+            CommPattern::Ring => 1,
+        },
+    })
+}
+
+/// Flatten per-stage grads (stage-major, manifest order).
+fn flatten(grads: &[Vec<Tensor>]) -> Vec<f32> {
+    grads
+        .iter()
+        .flat_map(|st| st.iter().flat_map(|t| t.data.iter().copied()))
+        .collect()
+}
+
+fn unflatten_into(flat: &[f32], dst: &mut [Vec<Tensor>]) {
+    let mut off = 0;
+    for st in dst.iter_mut() {
+        for t in st.iter_mut() {
+            let len = t.data.len();
+            t.data.copy_from_slice(&flat[off..off + len]);
+            off += len;
+        }
+    }
+    assert_eq!(off, flat.len());
+}
+
+/// One micro-batch fwd+bwd at θ̂ (shared by both worker bodies).
+fn compute_grads(
+    rt: &SharedRuntime,
+    store: &ParamStore,
+    data: &DataSource,
+    rule: &Rule,
+    t: u64,
+    i: usize,
+) -> Result<(f32, Vec<Vec<Tensor>>)> {
+    let n = rt.manifest.n_stages;
+    let mb = data.microbatch(t, (i - 1) as u64);
+    let (x0, targets) = match &mb {
+        MicroBatch::Lm { tokens, targets } => {
+            (HostTensor::I32(tokens.clone()), targets.clone())
+        }
+        MicroBatch::Class { x, labels } => {
+            (HostTensor::F32(x.clone()), labels.clone())
+        }
+    };
+    let mut inputs: Vec<HostTensor> = vec![x0];
+    for j in 0..n - 1 {
+        let y = rt.stage_fwd(j, store.select(rule, i, j), &inputs[j])?;
+        inputs.push(HostTensor::F32(y));
+    }
+    let mut grads: Vec<Vec<Tensor>> = vec![Vec::new(); n];
+    let last = n - 1;
+    let (loss, mut gx, gp) = rt.last_bwd(
+        store.select(rule, i, last),
+        inputs[last].as_f32().unwrap(),
+        &targets,
+    )?;
+    grads[last] = gp;
+    for j in (1..last).rev() {
+        let (gx_new, gp) =
+            rt.mid_bwd(j, store.select(rule, i, j), inputs[j].as_f32().unwrap(), &gx)?;
+        grads[j] = gp;
+        gx = gx_new;
+    }
+    grads[0] = rt.first_bwd(store.select(rule, i, 0), &inputs[0], &gx)?;
+    Ok((loss, grads))
+}
+
+/// DP worker: compute → barrier all-reduce → identical local update.
+fn worker_dp(
+    rt: &SharedRuntime,
+    rule: &Rule,
+    ep: &mut Endpoint,
+    w: usize,
+    steps: usize,
+) -> Result<Vec<StepLog>> {
+    let n = rt.manifest.n_stages;
+    let init = rt.init_params()?;
+    let mut store = ParamStore::new(init);
+    let data = DataSource::from_manifest(&rt.manifest);
+    let mut logs = Vec::new();
+
+    for t in 0..steps as u64 {
+        let (loss, grads) = compute_grads(rt, &store, &data, rule, t, w + 1)?;
+
+        // synchronous all-reduce (the paper's waiting barrier)
+        let mut flat = flatten(&grads);
+        reduce_to_root(ep, 0, t, &mut flat);
+        if ep.id == 0 {
+            let inv = 1.0 / ep.n as f32;
+            for v in flat.iter_mut() {
+                *v *= inv;
+            }
+        }
+        broadcast(ep, 0, t, &mut flat);
+
+        let mut averaged: Vec<Vec<Tensor>> = rt.zero_like_params();
+        unflatten_into(&flat, &mut averaged);
+
+        // every replica applies the identical update (N optimizer copies)
+        let mut new_params = Vec::with_capacity(n);
+        let lr = rt.manifest.lr;
+        for j in 0..n {
+            let mut p = store.fresh(j).clone();
+            let (_c, moms) = store.stage_mut(j);
+            rt.sgd_update(j, &mut p, moms, &averaged[j], lr)?;
+            new_params.push(p);
+        }
+        store.commit_step(new_params);
+
+        // loss reporting: mean over micro-batches, gathered at worker 0
+        if ep.id == 0 {
+            let mut sum = loss as f64;
+            for from in 1..ep.n {
+                sum += ep.recv(from, tags::loss(t))[0] as f64;
+            }
+            logs.push(StepLog { step: t, loss: sum / ep.n as f64 });
+        } else {
+            ep.send(0, tags::loss(t), vec![loss]);
+        }
+    }
+    Ok(logs)
+}
+
+/// CDP worker: ring partial sums per stage, single optimizer owner
+/// (micro-batch N = worker n−1), param hand-off around the ring.
+fn worker_ring(
+    rt: &SharedRuntime,
+    rule: &Rule,
+    ep: &mut Endpoint,
+    w: usize,
+    steps: usize,
+) -> Result<Vec<StepLog>> {
+    let n = rt.manifest.n_stages;
+    let n_mb = ep.n;
+    let owner = n_mb - 1; // worker of micro-batch N: the only optimizer state
+    let init = rt.init_params()?;
+    let mut store = ParamStore::new(init);
+    let data = DataSource::from_manifest(&rt.manifest);
+    let mut logs = Vec::new();
+
+    for t in 0..steps as u64 {
+        let (loss, grads) = compute_grads(rt, &store, &data, rule, t, w + 1)?;
+
+        // --- balanced gradient reduction: partial sums travel the ring in
+        // micro-batch order (worker 0 = mb 1 starts; each adds its own and
+        // forwards), one stage at a time — the Fig 1c hand-off.  The owner
+        // ends up with Σ_i ∇f_i in exactly the reference sum order.
+        let mut full_sums: Vec<Vec<f32>> = Vec::new(); // owner only
+        for j in 0..n {
+            let own: Vec<f32> =
+                grads[j].iter().flat_map(|t| t.data.iter().copied()).collect();
+            if n_mb == 1 {
+                full_sums.push(own);
+            } else if w == 0 {
+                ep.send(1, tags::grad(t, j), own);
+            } else {
+                let mut part = ep.recv(w - 1, tags::grad(t, j));
+                for (p, v) in part.iter_mut().zip(&own) {
+                    *p += v;
+                }
+                if w < owner {
+                    ep.send(w + 1, tags::grad(t, j), part);
+                } else {
+                    full_sums.push(part);
+                }
+            }
+        }
+
+        // --- owner updates each stage and hands fresh params down the ring
+        let lr = rt.manifest.lr;
+        let mut new_params: Vec<Vec<Tensor>> = Vec::with_capacity(n);
+        if w == owner {
+            let inv = 1.0 / n_mb as f32;
+            for (j, mut flat) in full_sums.into_iter().enumerate() {
+                for v in flat.iter_mut() {
+                    *v *= inv;
+                }
+                let mut averaged = Vec::with_capacity(grads[j].len());
+                let mut off = 0;
+                for g in &grads[j] {
+                    let len = g.data.len();
+                    averaged.push(Tensor::new(g.shape.clone(), flat[off..off + len].to_vec()));
+                    off += len;
+                }
+                let mut p = store.fresh(j).clone();
+                let (_c, moms) = store.stage_mut(j);
+                rt.sgd_update(j, &mut p, moms, &averaged, lr)?;
+                if n_mb > 1 {
+                    let flat_p: Vec<f32> =
+                        p.iter().flat_map(|t| t.data.iter().copied()).collect();
+                    ep.send(ep.right(), tags::param(t, j), flat_p);
+                }
+                new_params.push(p);
+            }
+        } else {
+            // receive fresh stage params from the left, forward along the
+            // ring until the hop before the owner
+            for j in 0..n {
+                let flat = ep.recv(ep.left(), tags::param(t, j));
+                if ep.right() != owner {
+                    ep.send(ep.right(), tags::param(t, j), flat.clone());
+                }
+                let mut stage = store.fresh(j).clone();
+                let mut off = 0;
+                for p in stage.iter_mut() {
+                    let len = p.data.len();
+                    p.data.copy_from_slice(&flat[off..off + len]);
+                    off += len;
+                }
+                new_params.push(stage);
+            }
+        }
+        store.commit_step(new_params);
+
+        // loss gathering at worker 0 (mb order)
+        if ep.id == 0 {
+            let mut sum = loss as f64;
+            for from in 1..n_mb {
+                sum += ep.recv(from, tags::loss(t))[0] as f64;
+            }
+            logs.push(StepLog { step: t, loss: sum / n_mb as f64 });
+        } else {
+            ep.send(0, tags::loss(t), vec![loss]);
+        }
+    }
+    Ok(logs)
+}
+
+/// Convenience: comm stats snapshot type re-export.
+pub type Stats = Arc<CommStats>;

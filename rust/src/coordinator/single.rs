@@ -1,0 +1,251 @@
+//! Single-process reference trainer.
+//!
+//! Executes the update rules (paper Eq. DP / CDP-v1 / CDP-v2) exactly, in
+//! the canonical order: for training step t, micro-batches i = 1..N each
+//! run fwd through stages 1..N at their θ̂ versions, then bwd N..1; the
+//! gradients accumulate in micro-batch order; one averaged SGD-momentum
+//! update per stage commits the step.  This is both the numeric oracle for
+//! the threaded trainers and the paper's "Single-GPU" setting (§4.1): the
+//! activation-memory difference between DP and CDP on one device is
+//! measured by `memsim` over the same schedule this trainer realizes.
+
+use anyhow::Result;
+
+use super::StepLog;
+use crate::data::{DataSource, MicroBatch};
+use crate::metrics::Metrics;
+use crate::parallel::{GradBuffer, ParamStore, Rule};
+use crate::runtime::BundleRuntime;
+use crate::tensor::{HostTensor, Tensor};
+
+pub struct RefTrainer<'rt> {
+    pub rt: &'rt BundleRuntime,
+    pub store: ParamStore,
+    pub data: DataSource,
+    pub rule: Rule,
+    pub lr: f32,
+    pub metrics: Metrics,
+    grads: GradBuffer,
+}
+
+impl<'rt> RefTrainer<'rt> {
+    pub fn new(rt: &'rt BundleRuntime, rule: Rule) -> Result<Self> {
+        let init = rt.init_params()?;
+        let n_mb = rt.manifest.n_microbatches;
+        let grads = GradBuffer::from_params(&init, n_mb);
+        Ok(Self {
+            rt,
+            store: ParamStore::new(init),
+            data: DataSource::from_manifest(&rt.manifest),
+            rule,
+            lr: rt.manifest.lr,
+            metrics: Metrics::new(),
+            grads,
+        })
+    }
+
+    /// With explicit initial params (equivalence tests inject these).
+    pub fn with_params(
+        rt: &'rt BundleRuntime,
+        rule: Rule,
+        init: Vec<Vec<Tensor>>,
+    ) -> Self {
+        let n_mb = rt.manifest.n_microbatches;
+        let grads = GradBuffer::from_params(&init, n_mb);
+        Self {
+            rt,
+            store: ParamStore::new(init),
+            data: DataSource::from_manifest(&rt.manifest),
+            rule,
+            lr: rt.manifest.lr,
+            metrics: Metrics::new(),
+            grads,
+        }
+    }
+
+    /// One micro-batch's fwd+bwd at the rule-selected parameter versions.
+    /// `lits[stage]` are the pre-uploaded literals for *this* micro-batch's
+    /// θ̂ versions (DESIGN.md §Perf-L3: parameters are uploaded once per
+    /// (stage, version) per training step, not once per micro-batch).
+    fn run_microbatch(
+        &self,
+        t: u64,
+        i: usize,
+        lits: &[&Vec<xla::Literal>],
+    ) -> Result<(f32, Vec<Vec<Tensor>>)> {
+        let n = self.rt.manifest.n_stages;
+        let mb = self.data.microbatch(t, (i - 1) as u64);
+        let (x0, targets): (HostTensor, _) = match &mb {
+            MicroBatch::Lm { tokens, targets } => {
+                (HostTensor::I32(tokens.clone()), targets.clone())
+            }
+            MicroBatch::Class { x, labels } => {
+                (HostTensor::F32(x.clone()), labels.clone())
+            }
+        };
+
+        // forward chain, stashing stage inputs (the remat unit)
+        let mut inputs: Vec<HostTensor> = vec![x0];
+        for j in 0..n - 1 {
+            let y = self.rt.stage_fwd_lits(j, lits[j], &inputs[j])?;
+            inputs.push(HostTensor::F32(y));
+        }
+
+        // backward chain
+        let mut grads: Vec<Vec<Tensor>> = vec![Vec::new(); n];
+        let last = n - 1;
+        let x_last = inputs[last].as_f32().expect("loss stage input is f32");
+        let (loss, mut gx, gp) = self.rt.last_bwd_lits(lits[last], x_last, &targets)?;
+        grads[last] = gp;
+        for j in (1..last).rev() {
+            let x = inputs[j].as_f32().unwrap();
+            let (gx_new, gp) = self.rt.mid_bwd_lits(j, lits[j], x, &gx)?;
+            grads[j] = gp;
+            gx = gx_new;
+        }
+        if n > 1 {
+            grads[0] = self.rt.first_bwd_lits(lits[0], &inputs[0], &gx)?;
+        }
+        Ok((loss, grads))
+    }
+
+    /// Run one full training step (N micro-batches + update).
+    pub fn step(&mut self) -> Result<StepLog> {
+        let n = self.rt.manifest.n_stages;
+        let n_mb = self.rt.manifest.n_microbatches;
+        let t = self.store.step();
+
+        // Upload each needed (stage, version) exactly once for this step.
+        let mut fresh_lits: Vec<Option<Vec<xla::Literal>>> = (0..n).map(|_| None).collect();
+        let mut stale_lits: Vec<Option<Vec<xla::Literal>>> = (0..n).map(|_| None).collect();
+        for i in 1..=n_mb {
+            for j in 0..n {
+                use crate::parallel::update_rule::Version;
+                match self.rule.version(i, j + 1, n) {
+                    Version::Fresh if fresh_lits[j].is_none() => {
+                        fresh_lits[j] =
+                            Some(self.rt.param_literals(self.store.fresh(j))?);
+                    }
+                    Version::Stale if stale_lits[j].is_none() => {
+                        stale_lits[j] =
+                            Some(self.rt.param_literals(self.store.stale(j))?);
+                    }
+                    _ => {}
+                }
+            }
+        }
+
+        // CDP_NO_LITCACHE=1 disables the cache (per-micro-batch re-upload),
+        // used by the §Perf A/B measurement in EXPERIMENTS.md.
+        let no_cache = std::env::var_os("CDP_NO_LITCACHE").is_some();
+        let mut loss_sum = 0f64;
+        for i in 1..=n_mb {
+            use crate::parallel::update_rule::Version;
+            let rebuilt: Vec<Vec<xla::Literal>>;
+            let lits: Vec<&Vec<xla::Literal>> = if no_cache {
+                rebuilt = (0..n)
+                    .map(|j| {
+                        let p = match self.rule.version(i, j + 1, n) {
+                            Version::Fresh => self.store.fresh(j),
+                            Version::Stale => self.store.stale(j),
+                        };
+                        self.rt.param_literals(p)
+                    })
+                    .collect::<Result<_>>()?;
+                rebuilt.iter().collect()
+            } else {
+                (0..n)
+                    .map(|j| match self.rule.version(i, j + 1, n) {
+                        Version::Fresh => fresh_lits[j].as_ref().unwrap(),
+                        Version::Stale => stale_lits[j].as_ref().unwrap(),
+                    })
+                    .collect()
+            };
+            let (loss, grads) = self.run_microbatch(t, i, &lits)?;
+            loss_sum += loss as f64;
+            for (j, g) in grads.into_iter().enumerate() {
+                self.grads.add(j, i, &g);
+            }
+        }
+        let averaged = self.grads.take_averaged();
+
+        // SGD per stage on a copy of θ_t, then commit (θ_t → θ_{t−1}).
+        let mut new_params: Vec<Vec<Tensor>> = Vec::with_capacity(n);
+        for j in 0..n {
+            let mut p = self.store.fresh(j).clone();
+            let rt = self.rt;
+            let lr = self.lr;
+            let (_cur, moms) = self.store.stage_mut(j);
+            rt.sgd_update(j, &mut p, moms, &averaged[j], lr)?;
+            new_params.push(p);
+        }
+        self.store.commit_step(new_params);
+
+        let loss = loss_sum / n_mb as f64;
+        self.metrics.record("loss", t as f64, loss);
+        Ok(StepLog { step: t, loss })
+    }
+
+    pub fn train(&mut self, steps: usize) -> Result<Vec<StepLog>> {
+        (0..steps).map(|_| self.step()).collect()
+    }
+
+    /// Classification accuracy on the held-out split (eval micro-batches).
+    pub fn accuracy(&self, n_batches: u64) -> Result<f64> {
+        let n = self.rt.manifest.n_stages;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for k in 0..n_batches {
+            let mb = self.data.eval_microbatch(k);
+            let MicroBatch::Class { x, labels } = mb else {
+                anyhow::bail!("accuracy() needs a classification bundle")
+            };
+            let mut a = HostTensor::F32(x);
+            for j in 0..n - 1 {
+                let y = self.rt.stage_fwd(j, self.store.fresh(j), &a)?;
+                a = HostTensor::F32(y);
+            }
+            let logits =
+                self.rt.predict(self.store.fresh(n - 1), a.as_f32().unwrap())?;
+            let classes = logits.shape[1];
+            for (b, lbl) in labels.data.iter().enumerate() {
+                let row = &logits.data[b * classes..(b + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .unwrap()
+                    .0;
+                if pred as i32 == *lbl {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Evaluation loss on held-out LM data (fwd only, fresh params).
+    pub fn eval_loss(&self, n_batches: u64) -> Result<f64> {
+        let n = self.rt.manifest.n_stages;
+        let mut sum = 0f64;
+        for k in 0..n_batches {
+            let mb = self.data.eval_microbatch(k);
+            let MicroBatch::Lm { tokens, targets } = mb else {
+                anyhow::bail!("eval_loss() needs an LM bundle")
+            };
+            let mut a = HostTensor::I32(tokens);
+            for j in 0..n - 1 {
+                let y = self.rt.stage_fwd(j, self.store.fresh(j), &a)?;
+                a = HostTensor::F32(y);
+            }
+            let loss = self.rt.last_fwd_loss(
+                self.store.fresh(n - 1),
+                a.as_f32().unwrap(),
+                &targets,
+            )?;
+            sum += loss as f64;
+        }
+        Ok(sum / n_batches as f64)
+    }
+}

@@ -1,0 +1,211 @@
+//! Synthetic datasets, **bit-identical with `python/compile/datagen.py`**
+//! (DESIGN.md substitution #2).  The coordinator pulls micro-batch (t, i)
+//! by index; both languages derive the same per-micro-batch seed and the
+//! same sample bytes, which is what makes the cross-language golden test
+//! exact rather than statistical.
+
+use crate::model::{DataSpec, Manifest};
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::{microbatch_seed, splitmix64, XorShift64Star};
+
+/// One micro-batch as fed to stage 0 + the loss stage.
+#[derive(Clone, Debug)]
+pub enum MicroBatch {
+    Lm { tokens: IntTensor, targets: IntTensor },
+    Class { x: Tensor, labels: IntTensor },
+}
+
+impl MicroBatch {
+    pub fn input_bytes(&self) -> usize {
+        match self {
+            MicroBatch::Lm { tokens, .. } => tokens.data.len() * 4,
+            MicroBatch::Class { x, .. } => x.data.len() * 4,
+        }
+    }
+}
+
+/// Deterministic micro-batch source for a bundle's data distribution.
+pub struct DataSource {
+    spec: DataSpec,
+    /// Class prototypes ([C, dim] flattened) for classification tasks.
+    protos: Option<Vec<f32>>,
+}
+
+impl DataSource {
+    pub fn new(spec: DataSpec) -> Self {
+        let protos = match &spec {
+            DataSpec::Class { classes, input_dim, seed, .. } => {
+                Some(class_prototypes(*seed, *classes, *input_dim))
+            }
+            _ => None,
+        };
+        Self { spec, protos }
+    }
+
+    pub fn from_manifest(m: &Manifest) -> Self {
+        Self::new(m.data.clone())
+    }
+
+    /// Micro-batch `mb` (0-based) of training step `step`.
+    pub fn microbatch(&self, step: u64, mb: u64) -> MicroBatch {
+        match &self.spec {
+            DataSpec::Lm { vocab, seq, batch, seed } => {
+                let (tokens, targets) =
+                    lm_microbatch(*seed, step, mb, *batch, *seq, *vocab);
+                MicroBatch::Lm { tokens, targets }
+            }
+            DataSpec::Class { classes, input_dim, batch, noise, seed } => {
+                let (x, labels) = class_microbatch(
+                    *seed,
+                    step,
+                    mb,
+                    *batch,
+                    self.protos.as_ref().unwrap(),
+                    *classes,
+                    *input_dim,
+                    *noise,
+                );
+                MicroBatch::Class { x, labels }
+            }
+        }
+    }
+
+    /// Held-out micro-batch (classification eval): steps ≥ 1_000_000 are
+    /// never used for training, mirroring `MirrorTrainer.accuracy`.
+    pub fn eval_microbatch(&self, k: u64) -> MicroBatch {
+        self.microbatch(1_000_000 + k, 0)
+    }
+}
+
+/// Noisy affine Markov chain over the vocab (learnable bigram structure).
+pub fn lm_microbatch(
+    base_seed: u64,
+    step: u64,
+    mb: u64,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+) -> (IntTensor, IntTensor) {
+    let mut rng = XorShift64Star::new(microbatch_seed(base_seed, step, mb));
+    let noise = (vocab / 4).max(1) as u64;
+    let v = vocab as u64;
+    let mut inputs = vec![0i32; batch * seq];
+    let mut targets = vec![0i32; batch * seq];
+    for b in 0..batch {
+        let mut cur = rng.next_below(v);
+        for s in 0..seq {
+            let next = (5 * cur + 1 + rng.next_below(noise)) % v;
+            inputs[b * seq + s] = cur as i32;
+            targets[b * seq + s] = next as i32;
+            cur = next;
+        }
+    }
+    (
+        IntTensor::new(vec![batch, seq], inputs),
+        IntTensor::new(vec![batch, seq], targets),
+    )
+}
+
+/// [C, dim] prototypes, derived from base_seed ^ 0xC1A55 (as python).
+pub fn class_prototypes(base_seed: u64, classes: usize, dim: usize) -> Vec<f32> {
+    let mut rng = XorShift64Star::new(splitmix64(base_seed ^ 0xC1A55));
+    let mut out = vec![0f32; classes * dim];
+    for v in out.iter_mut() {
+        *v = rng.normal();
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn class_microbatch(
+    base_seed: u64,
+    step: u64,
+    mb: u64,
+    batch: usize,
+    protos: &[f32],
+    classes: usize,
+    dim: usize,
+    noise: f32,
+) -> (Tensor, IntTensor) {
+    let mut rng = XorShift64Star::new(microbatch_seed(base_seed, step, mb));
+    let mut x = vec![0f32; batch * dim];
+    let mut y = vec![0i32; batch];
+    for b in 0..batch {
+        let c = rng.next_below(classes as u64) as usize;
+        y[b] = c as i32;
+        for d in 0..dim {
+            x[b * dim + d] = protos[c * dim + d] + noise * rng.normal();
+        }
+    }
+    (Tensor::new(vec![batch, dim], x), IntTensor::new(vec![batch], y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DataSpec;
+
+    #[test]
+    fn lm_matches_python_structure() {
+        let (x, y) = lm_microbatch(42, 3, 1, 4, 16, 64);
+        assert_eq!(x.shape, vec![4, 16]);
+        // targets are inputs shifted by one
+        for b in 0..4 {
+            for s in 0..15 {
+                assert_eq!(x.data[b * 16 + s + 1], y.data[b * 16 + s]);
+            }
+        }
+        // markov band: (next - (5 cur + 1)) mod V in [0, V/4)
+        for (i, t) in x.data.iter().zip(&y.data) {
+            let delta = ((*t as i64) - (5 * (*i as i64) + 1)).rem_euclid(64);
+            assert!((0..16).contains(&delta), "delta={delta}");
+        }
+        // determinism + stream independence
+        let (x2, _) = lm_microbatch(42, 3, 1, 4, 16, 64);
+        assert_eq!(x.data, x2.data);
+        let (x3, _) = lm_microbatch(42, 3, 2, 4, 16, 64);
+        assert_ne!(x.data, x3.data);
+    }
+
+    #[test]
+    fn class_near_prototypes() {
+        let protos = class_prototypes(99, 10, 64);
+        let (x, y) = class_microbatch(99, 0, 0, 32, &protos, 10, 64, 0.3);
+        let mut correct = 0;
+        for b in 0..32 {
+            let xb = &x.data[b * 64..(b + 1) * 64];
+            let (mut best, mut best_d) = (0usize, f32::INFINITY);
+            for c in 0..10 {
+                let pc = &protos[c * 64..(c + 1) * 64];
+                let d: f32 = xb.iter().zip(pc).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if best as i32 == y.data[b] {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 30, "nearest-proto acc {correct}/32");
+    }
+
+    #[test]
+    fn datasource_eval_split_disjoint() {
+        let ds = DataSource::new(DataSpec::Class {
+            classes: 10,
+            input_dim: 8,
+            batch: 4,
+            noise: 0.3,
+            seed: 7,
+        });
+        let train = ds.microbatch(0, 0);
+        let eval = ds.eval_microbatch(0);
+        match (train, eval) {
+            (MicroBatch::Class { x: a, .. }, MicroBatch::Class { x: b, .. }) => {
+                assert_ne!(a.data, b.data);
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+}

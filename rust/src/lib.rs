@@ -1,0 +1,41 @@
+//! # cyclic-dp — Cyclic Data Parallelism
+//!
+//! Reproduction of *"Cyclic Data Parallelism for Efficient Parallelism of
+//! Deep Neural Networks"* (Fournier & Oyallon, 2024) as a three-layer
+//! Rust + JAX + Pallas stack.  This crate is the Layer-3 coordinator: it
+//! owns schedules, update rules, parameter versioning, the communication
+//! fabric, worker lifecycles and all measurement; the numeric compute runs
+//! through AOT-compiled HLO artifacts loaded via PJRT (see [`runtime`]).
+//!
+//! Module map (see DESIGN.md for the full system inventory):
+//!
+//! - [`util`]      — substrates: JSON, deterministic RNG, binary IO, stats.
+//! - [`tensor`]    — host-side tensors (parameter/gradient blobs).
+//! - [`cli`]       — argument parsing for the `cdp` binary and examples.
+//! - [`runtime`]   — PJRT client, artifact bundles, executable registry.
+//! - [`model`]     — bundle manifest model (stages, shapes, arities).
+//! - [`data`]      — synthetic datasets, bit-identical with python/compile/datagen.py.
+//! - [`parallel`]  — the paper's contribution: schedules + update rules +
+//!                   versioned parameter store + gradient buffers.
+//! - [`comm`]      — byte-counted channels, ring all-reduce, broadcast.
+//! - [`cluster`]   — simulated devices (memory model) and worker threads.
+//! - [`coordinator`] — trainers: reference, multi-worker, ZeRO-DP, pipeline.
+//! - [`sim`]       — discrete-time scheme simulator (Fig 1, Fig 2, Tab 1).
+//! - [`memsim`]    — activation-memory tracking + extrapolation (Fig 4).
+//! - [`metrics`]   — counters, CSV/JSON emission.
+//! - [`testing`]   — property-test mini-framework (no crates.io access).
+
+pub mod cli;
+pub mod cluster;
+pub mod comm;
+pub mod coordinator;
+pub mod data;
+pub mod memsim;
+pub mod metrics;
+pub mod model;
+pub mod parallel;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod testing;
+pub mod util;

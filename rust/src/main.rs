@@ -1,0 +1,229 @@
+//! `cdp` — the Cyclic Data Parallelism coordinator CLI.
+//!
+//! Subcommands:
+//!   train     --bundle tiny --rule cdp_v2 --steps 20 [--trainer single|multi|zero|pipeline]
+//!             [--pattern barrier|ring] [--flow broadcast|cyclic] [--sched gpipe|1f1b]
+//!   timeline  --n 3 --horizon 18            (Fig 1)
+//!   schemes   --n 3                         (Fig 2)
+//!   table1    --n 4                         (Tab 1)
+//!   memsim    --arch vit|resnet --n 4,8,32  (Fig 4)
+//!   golden    --bundle tiny                 (cross-language check)
+
+use anyhow::{Context, Result};
+use cyclic_dp::cli::Args;
+use cyclic_dp::coordinator::{multi, pipeline, single, zero, SharedRuntime};
+use cyclic_dp::memsim::{extrapolate, resnet50_profile, vit_b16_profile, MemoryCurve};
+use cyclic_dp::model::artifacts_root;
+use cyclic_dp::parallel::{rule_by_name, Schedule};
+use cyclic_dp::runtime::BundleRuntime;
+use cyclic_dp::sim::{analytic, schemes, Scheme, SymbolicCosts};
+use cyclic_dp::util::stats::fmt_bytes;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::parse_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "train" => cmd_train(&args),
+        "timeline" => cmd_timeline(&args),
+        "schemes" => cmd_schemes(&args),
+        "table1" => cmd_table1(&args),
+        "memsim" => cmd_memsim(&args),
+        "golden" => cmd_golden(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "cdp — Cyclic Data Parallelism coordinator\n\
+         subcommands: train | timeline | schemes | table1 | memsim | golden\n\
+         see rust/src/main.rs header for flags"
+    );
+}
+
+fn load_bundle(args: &Args) -> Result<BundleRuntime> {
+    let bundle = args.str_or("bundle", "tiny");
+    let dir = artifacts_root().join(bundle);
+    BundleRuntime::load(&dir)
+        .with_context(|| format!("load bundle {dir:?} (run `make artifacts`?)"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rule = rule_by_name(args.str_or("rule", "cdp_v2"))?;
+    let steps = args.usize_or("steps", 10);
+    let trainer = args.str_or("trainer", "single");
+    let rt = load_bundle(args)?;
+    println!(
+        "bundle={} family={} stages={} params={} rule={} trainer={trainer}",
+        rt.manifest.name,
+        rt.manifest.family,
+        rt.manifest.n_stages,
+        rt.manifest.total_param_elems,
+        rule.name()
+    );
+    match trainer {
+        "single" => {
+            let mut t = single::RefTrainer::new(&rt, rule)?;
+            for log in t.train(steps)? {
+                println!("step {:>4}  loss {:.5}", log.step, log.loss);
+            }
+            if args.bool_or("eval", false) {
+                if rt.manifest.family == "transformer" {
+                    println!("eval loss: {:.5}", t.eval_loss(8)?);
+                } else {
+                    println!("eval accuracy: {:.4}", t.accuracy(8)?);
+                }
+            }
+        }
+        "multi" => {
+            let pattern = match args.str_or("pattern", "ring") {
+                "barrier" => multi::CommPattern::Barrier,
+                _ => multi::CommPattern::Ring,
+            };
+            let rep = multi::train(SharedRuntime(Arc::new(rt)), rule, pattern, steps)?;
+            for log in &rep.logs {
+                println!("step {:>4}  loss {:.5}", log.step, log.loss);
+            }
+            println!(
+                "comm: {} in {} msgs; optimizer replicas: {}",
+                fmt_bytes(rep.comm_bytes),
+                rep.comm_messages,
+                rep.optimizer_replicas
+            );
+        }
+        "zero" => {
+            let flow = match args.str_or("flow", "cyclic") {
+                "broadcast" => zero::StateFlow::Broadcast,
+                _ => zero::StateFlow::Cyclic,
+            };
+            let rep = zero::train(SharedRuntime(Arc::new(rt)), rule, flow, steps)?;
+            for log in &rep.logs {
+                println!("step {:>4}  loss {:.5}", log.step, log.loss);
+            }
+            println!(
+                "comm: {} in {} msgs; max msgs/timestep: {}; peak state/worker: {}",
+                fmt_bytes(rep.comm_bytes),
+                rep.comm_messages,
+                rep.max_msgs_per_timestep,
+                fmt_bytes(rep.peak_state_bytes)
+            );
+        }
+        "pipeline" => {
+            let sched = match args.str_or("sched", "1f1b") {
+                "gpipe" => pipeline::PipeSchedule::GPipe,
+                _ => pipeline::PipeSchedule::OneFOneB,
+            };
+            let rep = pipeline::train(&rt, rule, sched, steps)?;
+            for log in &rep.logs {
+                println!("step {:>4}  loss {:.5}", log.step, log.loss);
+            }
+            println!(
+                "bubble: {:.1}%; peak stash/dev: {}; act traffic: {}; param versions: {}",
+                rep.bubble_fraction * 100.0,
+                fmt_bytes(rep.peak_stash_bytes),
+                fmt_bytes(rep.act_comm_bytes),
+                rep.param_versions
+            );
+        }
+        other => anyhow::bail!("unknown trainer `{other}`"),
+    }
+    Ok(())
+}
+
+fn cmd_timeline(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 3);
+    let horizon = args.usize_or("horizon", 6 * n);
+    println!("=== DP (Fig 1a): lockstep, barrier every 2N steps ===");
+    println!("{}", Schedule::dp(n, horizon).render(horizon));
+    let s = Schedule::cyclic(n, horizon);
+    println!("=== CDP (Fig 1b/c): delay 2(i-1), no barrier ===");
+    println!("{}", s.render(horizon));
+    let (dp_peak, _) = Schedule::dp(n, horizon).stash_stats();
+    let (peak, steady) = s.stash_stats();
+    println!("activation stashes: DP peak {dp_peak}, CDP peak {peak} (steady ≈ {steady:.1})");
+    Ok(())
+}
+
+fn cmd_schemes(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 3);
+    let c = SymbolicCosts {
+        psi_p: args.u64_or("psi-p", 4_000_000),
+        b_psi_a: args.u64_or("b-psi-a", 8_000_000),
+        b_psi_a_int: args.u64_or("b-psi-a-int", 400_000),
+    };
+    println!("Fig 2 schematic costs (N = {n}):");
+    for s in Scheme::all() {
+        println!("{}", schemes::render_scheme(s, n, c));
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 4);
+    print!("{}", analytic::render_table1(n));
+    Ok(())
+}
+
+fn cmd_memsim(args: &Args) -> Result<()> {
+    let arch = args.str_or("arch", "vit");
+    let batch = args.u64_or("batch", 64);
+    let ns: Vec<usize> = args
+        .str_or("n", "4,8,32")
+        .split(',')
+        .map(|s| s.parse().expect("bad --n"))
+        .collect();
+    let layers = match arch {
+        "resnet" => resnet50_profile(batch),
+        _ => vit_b16_profile(batch),
+    };
+    let curve = MemoryCurve::from_layers(&layers);
+    println!(
+        "{arch}: peak activation {} | mean {}",
+        fmt_bytes(curve.peak() as u64),
+        fmt_bytes(curve.mean() as u64)
+    );
+    for n in ns {
+        let e = extrapolate(&curve, n, 512);
+        println!(
+            "N={n:<3} DP peak/worker {} | CDP peak/worker {} | reduction {:.1}%",
+            fmt_bytes(e.dp_peak as u64),
+            fmt_bytes(e.cdp_peak as u64),
+            e.reduction * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<()> {
+    let rt = load_bundle(args)?;
+    let Some(golden) = rt.manifest.load_golden()? else {
+        anyhow::bail!("bundle has no golden.json");
+    };
+    let steps = rt.manifest.golden_steps;
+    let mut worst: f64 = 0.0;
+    for (rule_name, expect) in &golden {
+        let rule = rule_by_name(rule_name)?;
+        let mut t = single::RefTrainer::new(&rt, rule)?;
+        let logs = t.train(steps)?;
+        for (log, want) in logs.iter().zip(expect) {
+            let rel = (log.loss - want).abs() / want.abs().max(1e-9);
+            worst = worst.max(rel);
+            println!(
+                "{rule_name:>7} step {:>2}: rust {:.6} python {:.6} rel {:.2e}",
+                log.step, log.loss, want, rel
+            );
+        }
+    }
+    println!("worst relative deviation: {worst:.3e}");
+    anyhow::ensure!(worst < 5e-3, "golden mismatch");
+    println!("golden check PASSED");
+    Ok(())
+}

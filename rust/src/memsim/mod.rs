@@ -1,0 +1,188 @@
+//! Activation-memory tracking and the paper's Fig 4 extrapolation.
+//!
+//! Method (paper §5, "Activation memory tracking"): record the activation
+//! memory curve A(τ) of one forward-backward pass (parameter memory
+//! subtracted), then extrapolate to N workers:
+//!
+//! - DP: all workers execute in phase, so per-worker memory is A(τ)
+//!   itself — it peaks at the fwd/bwd turning point.
+//! - CDP: worker i is phase-shifted by 2T·(i−1)/N, so per-worker memory is
+//!   the *cyclic mean* (1/N)·Σ_i A((τ + offset_i) mod 2T), which flattens
+//!   toward mean(A) as N grows.
+//!
+//! The ratio 1 − mean(A)/max(A) is the CDP saving: ≈ 50% for homogeneous
+//! layer profiles (ViT — every layer same memory and time), less for
+//! heterogeneous ones (ResNet — early layers hold much larger activations
+//! for the same compute time).
+
+pub mod profiles;
+
+pub use profiles::{resnet50_profile, vit_b16_profile, LayerProfile};
+
+/// Activation memory curve over one fwd+bwd pass, sampled at layer
+/// boundaries with per-layer durations ∝ FLOPs.
+#[derive(Clone, Debug)]
+pub struct MemoryCurve {
+    /// (time, live activation bytes) — time normalized to [0, 1].
+    pub points: Vec<(f64, f64)>,
+}
+
+impl MemoryCurve {
+    /// Build from per-layer (act_bytes, flops): forward accumulates stashes
+    /// in layer order, backward releases in reverse; each layer occupies
+    /// wall-time ∝ its flops (fwd) and 2× that (bwd, standard cost model).
+    pub fn from_layers(layers: &[LayerProfile]) -> Self {
+        let total_fwd: f64 = layers.iter().map(|l| l.flops as f64).sum();
+        let total = 3.0 * total_fwd; // fwd + 2×bwd
+        let mut points = Vec::with_capacity(2 * layers.len() + 2);
+        let mut t = 0.0;
+        let mut live = 0.0;
+        points.push((0.0, 0.0));
+        for l in layers {
+            t += l.flops as f64 / total;
+            live += l.act_bytes as f64;
+            points.push((t, live));
+        }
+        for l in layers.iter().rev() {
+            t += 2.0 * l.flops as f64 / total;
+            live -= l.act_bytes as f64;
+            points.push((t, live.max(0.0)));
+        }
+        Self { points }
+    }
+
+    /// Piecewise-linear sample at time τ ∈ [0, 1].
+    pub fn at(&self, tau: f64) -> f64 {
+        let tau = tau.rem_euclid(1.0);
+        let pts = &self.points;
+        for w in pts.windows(2) {
+            let (t0, v0) = w[0];
+            let (t1, v1) = w[1];
+            if tau >= t0 && tau <= t1 {
+                if t1 - t0 < 1e-12 {
+                    return v1;
+                }
+                let f = (tau - t0) / (t1 - t0);
+                return v0 + f * (v1 - v0);
+            }
+        }
+        pts.last().map(|(_, v)| *v).unwrap_or(0.0)
+    }
+
+    pub fn peak(&self) -> f64 {
+        self.points.iter().map(|(_, v)| *v).fold(0.0, f64::max)
+    }
+
+    /// Time-weighted mean of the curve.
+    pub fn mean(&self) -> f64 {
+        let mut acc = 0.0;
+        for w in self.points.windows(2) {
+            let (t0, v0) = w[0];
+            let (t1, v1) = w[1];
+            acc += (t1 - t0) * (v0 + v1) / 2.0;
+        }
+        acc
+    }
+}
+
+/// Per-worker memory over time for DP and CDP with N workers (Fig 4).
+#[derive(Clone, Debug)]
+pub struct Extrapolation {
+    pub n: usize,
+    /// samples of (τ, dp_bytes, cdp_bytes)
+    pub samples: Vec<(f64, f64, f64)>,
+    pub dp_peak: f64,
+    pub cdp_peak: f64,
+    /// 1 − cdp_peak/dp_peak: the paper's reported reduction.
+    pub reduction: f64,
+}
+
+/// Extrapolate a single-pass curve to N workers (paper's Fig 4 method).
+pub fn extrapolate(curve: &MemoryCurve, n: usize, samples: usize) -> Extrapolation {
+    let mut out = Vec::with_capacity(samples);
+    let mut dp_peak = 0.0f64;
+    let mut cdp_peak = 0.0f64;
+    for s in 0..samples {
+        let tau = s as f64 / samples as f64;
+        // DP: every worker is at phase τ simultaneously.
+        let dp = curve.at(tau);
+        // CDP: workers at staggered phases; per-worker = mean over phases.
+        let cdp = (0..n)
+            .map(|i| curve.at(tau + i as f64 / n as f64))
+            .sum::<f64>()
+            / n as f64;
+        dp_peak = dp_peak.max(dp);
+        cdp_peak = cdp_peak.max(cdp);
+        out.push((tau, dp, cdp));
+    }
+    Extrapolation {
+        n,
+        samples: out,
+        dp_peak,
+        cdp_peak,
+        reduction: 1.0 - cdp_peak / dp_peak.max(1e-12),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn homogeneous(nl: usize) -> Vec<LayerProfile> {
+        (0..nl)
+            .map(|i| LayerProfile {
+                name: format!("l{i}"),
+                act_bytes: 1_000_000,
+                flops: 1_000_000_000,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn curve_shape_triangle_for_homogeneous() {
+        let c = MemoryCurve::from_layers(&homogeneous(10));
+        assert_eq!(c.peak(), 10.0e6);
+        // mean of a triangle ≈ half the peak
+        assert!((c.mean() / c.peak() - 0.5).abs() < 0.05);
+        // starts and ends at zero
+        assert_eq!(c.points.first().unwrap().1, 0.0);
+        assert!(c.points.last().unwrap().1.abs() < 1.0);
+    }
+
+    #[test]
+    fn extrapolation_flattens_with_n() {
+        let c = MemoryCurve::from_layers(&homogeneous(24));
+        let e4 = extrapolate(&c, 4, 512);
+        let e32 = extrapolate(&c, 32, 512);
+        assert!(e32.cdp_peak < e4.cdp_peak);
+        assert_eq!(e4.dp_peak, e32.dp_peak);
+        // homogeneous profile → approaches the ideal halving
+        assert!(e32.reduction > 0.40, "reduction {}", e32.reduction);
+        assert!(e32.reduction < 0.55);
+    }
+
+    #[test]
+    fn cdp_never_exceeds_dp_peak() {
+        let c = MemoryCurve::from_layers(&resnet50_profile(32));
+        for n in [2usize, 4, 8, 32] {
+            let e = extrapolate(&c, n, 256);
+            assert!(e.cdp_peak <= e.dp_peak * 1.0001, "n={n}");
+            for (_, _, cdp) in &e.samples {
+                assert!(*cdp <= e.dp_peak * 1.0001);
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_saves_less_than_homogeneous() {
+        // the paper's ResNet-vs-ViT observation (≈30% vs ≈42%)
+        let r = extrapolate(&MemoryCurve::from_layers(&resnet50_profile(32)), 32, 512);
+        let v = extrapolate(&MemoryCurve::from_layers(&vit_b16_profile(32)), 32, 512);
+        assert!(
+            v.reduction > r.reduction,
+            "vit {:.3} should beat resnet {:.3}",
+            v.reduction,
+            r.reduction
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Analytic activation/FLOP profiles for the two Fig-4 architectures
+//! (DESIGN.md substitution #3: we cannot train ResNet-50 / ViT-B/16 on
+//! ImageNet here, but Fig 4 only needs their per-layer activation-memory
+//! and compute-time profiles, which follow from the architectures).
+//!
+//! Conventions: ImageNet input 224×224×3, f32 activations, batch = B
+//! (per micro-batch).  `act_bytes` is the stash a layer holds awaiting its
+//! backward (≈ its output plus internal intermediates), `flops` its
+//! forward compute — what sets its share of wall-time in the memory curve.
+
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    pub name: String,
+    pub act_bytes: u64,
+    pub flops: u64,
+}
+
+/// ResNet-50: stem + 16 bottleneck blocks (3/4/6/3) + head.
+/// Heterogeneous: early blocks hold ~4× the activations of late blocks at
+/// similar FLOPs — the reason the paper measures only ~30% saving.
+pub fn resnet50_profile(batch: u64) -> Vec<LayerProfile> {
+    let mut out = Vec::new();
+    let f32b = 4u64;
+    // stem: conv7x7/2 → 112²×64 (+ pooled 56²×64)
+    let stem_out = 112 * 112 * 64 + 56 * 56 * 64;
+    out.push(LayerProfile {
+        name: "stem".into(),
+        act_bytes: batch * stem_out * f32b,
+        flops: batch * 2 * 7 * 7 * 3 * 64 * 112 * 112,
+    });
+    // (stage, blocks, hw, c_out) with bottleneck width c_out/4
+    let stages: [(usize, u64, u64); 4] =
+        [(3, 56, 256), (4, 28, 512), (6, 14, 1024), (3, 7, 2048)];
+    for (si, (blocks, hw, c)) in stages.iter().enumerate() {
+        let width = c / 4;
+        for b in 0..*blocks {
+            // intermediates: two width-sized maps + one c-sized output
+            let act = batch * (2 * hw * hw * width + hw * hw * c) * f32b;
+            // three convs: 1x1 c→w, 3x3 w→w, 1x1 w→c (input ch ≈ c)
+            let fl = batch
+                * 2
+                * hw
+                * hw
+                * (c * width + 9 * width * width + width * c);
+            out.push(LayerProfile {
+                name: format!("s{}b{}", si + 1, b),
+                act_bytes: act,
+                flops: fl,
+            });
+        }
+    }
+    // head: pool + fc
+    out.push(LayerProfile {
+        name: "head".into(),
+        act_bytes: batch * 2048 * f32b,
+        flops: batch * 2 * 2048 * 1000,
+    });
+    out
+}
+
+/// ViT-B/16: patch embed + 12 identical transformer layers + head.
+/// Homogeneous: every layer stashes the same bytes and costs the same
+/// FLOPs — CDP approaches the ideal halving (paper: 42%).
+pub fn vit_b16_profile(batch: u64) -> Vec<LayerProfile> {
+    let f32b = 4u64;
+    let s = 197u64; // 14×14 patches + CLS
+    let d = 768u64;
+    let ff = 3072u64;
+    let heads = 12u64;
+    let mut out = Vec::new();
+    out.push(LayerProfile {
+        name: "patch_embed".into(),
+        act_bytes: batch * s * d * f32b,
+        flops: batch * 2 * s * (16 * 16 * 3) * d,
+    });
+    for l in 0..12 {
+        // stash: ln, qkv, attn probs (h·s²), attn out, mlp hidden, out
+        let act = batch * (4 * s * d + heads * s * s + s * ff) * f32b;
+        let fl = batch * 2 * s * (4 * d * d + 2 * d * ff) + batch * 4 * heads * s * s * (d / heads);
+        out.push(LayerProfile {
+            name: format!("layer{l}"),
+            act_bytes: act,
+            flops: fl,
+        });
+    }
+    out.push(LayerProfile {
+        name: "head".into(),
+        act_bytes: batch * d * f32b,
+        flops: batch * 2 * d * 1000,
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet_is_heterogeneous() {
+        let p = resnet50_profile(1);
+        // first stage blocks hold much more activation than last stage
+        let early = p[1].act_bytes as f64;
+        let late = p[p.len() - 2].act_bytes as f64;
+        assert!(early / late > 2.0, "early {early} late {late}");
+    }
+
+    #[test]
+    fn vit_is_homogeneous() {
+        let p = vit_b16_profile(1);
+        let layers = &p[1..13];
+        let first = layers[0].act_bytes;
+        for l in layers {
+            assert_eq!(l.act_bytes, first);
+            assert_eq!(l.flops, layers[0].flops);
+        }
+    }
+
+    #[test]
+    fn magnitudes_are_plausible() {
+        // ViT-B/16 batch 64 activation total: paper tracks ~3.9 GB
+        let p = vit_b16_profile(64);
+        let total: u64 = p.iter().map(|l| l.act_bytes).sum();
+        let gb = total as f64 / (1024.0 * 1024.0 * 1024.0);
+        assert!(gb > 1.0 && gb < 12.0, "{gb} GB");
+        // ResNet-50 batch 64: a few GB too
+        let r = resnet50_profile(64);
+        let total_r: u64 = r.iter().map(|l| l.act_bytes).sum();
+        let gbr = total_r as f64 / (1024.0 * 1024.0 * 1024.0);
+        assert!(gbr > 0.5 && gbr < 12.0, "{gbr} GB");
+    }
+}

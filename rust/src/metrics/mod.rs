@@ -1,0 +1,221 @@
+//! Metrics: named counters + time series, CSV/JSON emission.
+//!
+//! The trainers and the simulator record everything through this module so
+//! benches and examples can print the paper's tables/figures from one
+//! place.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::{Json, JsonError};
+
+/// Append-only series of (step, value) — loss curves, memory curves.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn values(&self) -> Vec<f64> {
+        self.points.iter().map(|(_, y)| *y).collect()
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|(_, y)| *y)
+    }
+
+    /// Trailing-window mean (the paper smooths Fig 3 over 7 epochs).
+    pub fn smoothed(&self, window: usize) -> Vec<(f64, f64)> {
+        let w = window.max(1);
+        self.points
+            .iter()
+            .enumerate()
+            .map(|(i, (x, _))| {
+                let lo = i.saturating_sub(w - 1);
+                let mean = self.points[lo..=i].iter().map(|(_, y)| y).sum::<f64>()
+                    / (i - lo + 1) as f64;
+                (*x, mean)
+            })
+            .collect()
+    }
+}
+
+/// A run's metric sink: counters + series, dumpable as CSV or JSON.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub counters: BTreeMap<String, u64>,
+    pub series: BTreeMap<String, Series>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn record(&mut self, series: &str, x: f64, y: f64) {
+        self.series
+            .entry(series.to_string())
+            .or_insert_with(|| Series::new(series))
+            .push(x, y);
+    }
+
+    pub fn get_series(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+            .collect();
+        obj.insert("counters".to_string(), Json::Obj(counters));
+        let series: BTreeMap<String, Json> = self
+            .series
+            .iter()
+            .map(|(k, s)| {
+                (
+                    k.clone(),
+                    Json::Arr(
+                        s.points
+                            .iter()
+                            .map(|(x, y)| {
+                                Json::Arr(vec![Json::Num(*x), Json::Num(*y)])
+                            })
+                            .collect(),
+                    ),
+                )
+            })
+            .collect();
+        obj.insert("series".to_string(), Json::Obj(series));
+        Json::Obj(obj)
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// CSV with one column per series, aligned by index.
+    pub fn write_series_csv(&self, path: &Path, names: &[&str]) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        write!(f, "step")?;
+        for n in names {
+            write!(f, ",{n}")?;
+        }
+        writeln!(f)?;
+        let rows = names
+            .iter()
+            .filter_map(|n| self.series.get(*n))
+            .map(|s| s.points.len())
+            .max()
+            .unwrap_or(0);
+        for i in 0..rows {
+            write!(f, "{i}")?;
+            for n in names {
+                match self.series.get(*n).and_then(|s| s.points.get(i)) {
+                    Some((_, y)) => write!(f, ",{y}")?,
+                    None => write!(f, ",")?,
+                }
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse a metrics JSON back (round-trip for tooling/tests).
+pub fn parse_metrics(text: &str) -> Result<Metrics, JsonError> {
+    let j = Json::parse(text)?;
+    let mut m = Metrics::new();
+    if let Some(Json::Obj(cs)) = j.get("counters") {
+        for (k, v) in cs {
+            if let Some(n) = v.as_f64() {
+                m.counters.insert(k.clone(), n as u64);
+            }
+        }
+    }
+    if let Some(Json::Obj(ss)) = j.get("series") {
+        for (k, v) in ss {
+            let mut s = Series::new(k);
+            if let Some(points) = v.as_arr() {
+                for p in points {
+                    if let Some(pair) = p.as_arr() {
+                        if pair.len() == 2 {
+                            s.push(pair[0].as_f64().unwrap(), pair[1].as_f64().unwrap());
+                        }
+                    }
+                }
+            }
+            m.series.insert(k.clone(), s);
+        }
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_series() {
+        let mut m = Metrics::new();
+        m.inc("comm_bytes", 100);
+        m.inc("comm_bytes", 20);
+        m.record("loss", 0.0, 4.0);
+        m.record("loss", 1.0, 3.0);
+        assert_eq!(m.counter("comm_bytes"), 120);
+        assert_eq!(m.get_series("loss").unwrap().values(), vec![4.0, 3.0]);
+        assert_eq!(m.get_series("loss").unwrap().last(), Some(3.0));
+    }
+
+    #[test]
+    fn smoothing_window() {
+        let mut s = Series::new("x");
+        for i in 0..5 {
+            s.push(i as f64, (i as f64) * 2.0);
+        }
+        let sm = s.smoothed(2);
+        assert_eq!(sm[0].1, 0.0);
+        assert_eq!(sm[1].1, 1.0); // mean(0, 2)
+        assert_eq!(sm[4].1, 7.0); // mean(6, 8)
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut m = Metrics::new();
+        m.inc("a", 7);
+        m.record("s", 0.0, 1.5);
+        let text = m.to_json().to_string();
+        let back = parse_metrics(&text).unwrap();
+        assert_eq!(back.counter("a"), 7);
+        assert_eq!(back.get_series("s").unwrap().values(), vec![1.5]);
+    }
+}

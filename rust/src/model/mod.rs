@@ -1,0 +1,290 @@
+//! Bundle manifest model: the rust-side view of what `python/compile/aot.py`
+//! emitted — stage boundaries, parameter shapes, artifact file names, data
+//! distribution and optimizer hyper-parameters.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => anyhow::bail!("unknown dtype `{other}`"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .arr_field("shape")?
+            .iter()
+            .map(|v| v.as_usize().context("shape elem"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(j.str_field("dtype")?)?;
+        Ok(Self { shape, dtype })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * 4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct StageSpec {
+    pub index: usize,
+    pub params: Vec<ParamSpec>,
+    pub input: IoSpec,
+    /// `None` for the loss stage (its "output" is the scalar loss).
+    pub output: Option<IoSpec>,
+    pub act_bytes: u64,
+    pub flops: u64,
+    /// artifact kind → file name (fwd, fwdbwd, fwd_loss, predict, sgd)
+    pub artifacts: Vec<(String, String)>,
+}
+
+impl StageSpec {
+    pub fn artifact(&self, kind: &str) -> Option<&str> {
+        self.artifacts
+            .iter()
+            .find(|(k, _)| k == kind)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.elems()).sum()
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.param_elems() as u64 * 4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum DataSpec {
+    Lm { vocab: usize, seq: usize, batch: usize, seed: u64 },
+    Class { classes: usize, input_dim: usize, batch: usize, noise: f32, seed: u64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub family: String,
+    pub n_stages: usize,
+    pub n_microbatches: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub data: DataSpec,
+    pub target: IoSpec,
+    pub stages: Vec<StageSpec>,
+    pub total_param_elems: usize,
+    pub golden_steps: usize,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(bundle_dir: &Path) -> Result<Self> {
+        let path = bundle_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+
+        let data_j = j.get("data").context("missing `data`")?;
+        let kind = data_j.str_field("kind")?;
+        let data = match kind {
+            "lm" => DataSpec::Lm {
+                vocab: data_j.usize_field("vocab")?,
+                seq: data_j.usize_field("seq")?,
+                batch: data_j.usize_field("batch")?,
+                seed: data_j.f64_field("seed")? as u64,
+            },
+            "class" => DataSpec::Class {
+                classes: data_j.usize_field("classes")?,
+                input_dim: data_j.usize_field("input_dim")?,
+                batch: data_j.usize_field("batch")?,
+                noise: data_j.f64_field("noise")? as f32,
+                seed: data_j.f64_field("seed")? as u64,
+            },
+            other => anyhow::bail!("unknown data kind `{other}`"),
+        };
+
+        let mut stages = Vec::new();
+        for sj in j.arr_field("stages")? {
+            let params = sj
+                .arr_field("params")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.str_field("name")?.to_string(),
+                        shape: p
+                            .arr_field("shape")?
+                            .iter()
+                            .map(|v| v.as_usize().context("shape"))
+                            .collect::<Result<Vec<_>>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let output = match sj.get("output") {
+                Some(o) if !o.is_null() => Some(IoSpec::from_json(o)?),
+                _ => None,
+            };
+            let artifacts = match sj.get("artifacts") {
+                Some(Json::Obj(m)) => m
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+                    .collect(),
+                _ => anyhow::bail!("stage missing artifacts"),
+            };
+            stages.push(StageSpec {
+                index: sj.usize_field("index")?,
+                params,
+                input: IoSpec::from_json(sj.get("input").context("input")?)?,
+                output,
+                act_bytes: sj.f64_field("act_bytes")? as u64,
+                flops: sj.f64_field("flops")? as u64,
+                artifacts,
+            });
+        }
+
+        Ok(Manifest {
+            name: j.str_field("name")?.to_string(),
+            family: j.str_field("family")?.to_string(),
+            n_stages: j.usize_field("n_stages")?,
+            n_microbatches: j.usize_field("n_microbatches")?,
+            lr: j.f64_field("lr")? as f32,
+            momentum: j.f64_field("momentum")? as f32,
+            data,
+            target: IoSpec::from_json(j.get("target").context("target")?)?,
+            stages,
+            total_param_elems: j.usize_field("total_param_elems")?,
+            golden_steps: j.get("golden_steps").and_then(Json::as_usize).unwrap_or(0),
+            dir: bundle_dir.to_path_buf(),
+        })
+    }
+
+    pub fn params_bin(&self) -> PathBuf {
+        self.dir.join("params.bin")
+    }
+
+    pub fn artifact_path(&self, stage: usize, kind: &str) -> Result<PathBuf> {
+        let name = self.stages[stage]
+            .artifact(kind)
+            .with_context(|| format!("stage {stage} has no `{kind}` artifact"))?;
+        Ok(self.dir.join(name))
+    }
+
+    /// Golden losses per rule, if the bundle ships them.
+    pub fn load_golden(&self) -> Result<Option<Vec<(String, Vec<f64>)>>> {
+        let p = self.dir.join("golden.json");
+        if !p.exists() {
+            return Ok(None);
+        }
+        let j = Json::parse(&std::fs::read_to_string(&p)?)
+            .map_err(|e| anyhow::anyhow!("{p:?}: {e}"))?;
+        let rules = match j.get("rules") {
+            Some(Json::Obj(m)) => m,
+            _ => anyhow::bail!("golden.json missing rules"),
+        };
+        let mut out = Vec::new();
+        for (rule, losses) in rules {
+            let xs = losses
+                .as_arr()
+                .context("losses array")?
+                .iter()
+                .map(|v| v.as_f64().context("loss"))
+                .collect::<Result<Vec<_>>>()?;
+            out.push((rule.clone(), xs));
+        }
+        Ok(Some(out))
+    }
+
+    /// Paper notation Ψ_P: parameter bytes of the entire model.
+    pub fn psi_p_bytes(&self) -> u64 {
+        self.total_param_elems as u64 * 4
+    }
+
+    /// Paper notation B·Ψ_A: activation bytes of one micro-batch across
+    /// all stages.
+    pub fn b_psi_a_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.act_bytes).sum()
+    }
+}
+
+/// Default artifacts root: $CDP_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("CDP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dir() -> Option<PathBuf> {
+        let d = artifacts_root().join("tiny");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn load_tiny_manifest() {
+        let Some(dir) = tiny_dir() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n_stages, 4);
+        assert_eq!(m.n_microbatches, 4);
+        assert_eq!(m.stages.len(), 4);
+        assert_eq!(m.stages[0].input.dtype, DType::I32);
+        assert!(m.stages[3].output.is_none());
+        assert!(m.stages[3].artifact("fwdbwd").is_some());
+        assert!(m.stages[0].artifact("fwd").is_some());
+        assert!(m.artifact_path(0, "fwd").unwrap().exists());
+        assert_eq!(
+            m.total_param_elems,
+            m.stages.iter().map(|s| s.param_elems()).sum::<usize>()
+        );
+        assert!(m.psi_p_bytes() > 0 && m.b_psi_a_bytes() > 0);
+    }
+
+    #[test]
+    fn params_bin_matches_manifest_len() {
+        let Some(dir) = tiny_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let raw = crate::util::binio::read_f32_file(&m.params_bin()).unwrap();
+        assert_eq!(raw.len(), m.total_param_elems);
+    }
+}

@@ -1,0 +1,138 @@
+//! Gradient accumulation with a *fixed, deterministic* reduction order
+//! (micro-batch order 1..N).  This is the order the cyclic ring reduction
+//! produces naturally (micro-batch i finishes stage-j backward before
+//! micro-batch i+1), so the single-process reference, the threaded CDP
+//! ring and the python mirror all sum in the same order — bit-for-bit.
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct GradBuffer {
+    sums: Vec<Vec<Tensor>>,
+    /// Which micro-batch index is expected next per stage (1-based).
+    next_mb: Vec<usize>,
+    n_microbatches: usize,
+}
+
+impl GradBuffer {
+    pub fn new(shapes: &[Vec<Vec<usize>>], n_microbatches: usize) -> Self {
+        let sums = shapes
+            .iter()
+            .map(|st| st.iter().map(|s| Tensor::zeros(s.clone())).collect())
+            .collect();
+        Self { sums, next_mb: vec![1; shapes.len()], n_microbatches }
+    }
+
+    pub fn from_params(params: &[Vec<Tensor>], n_microbatches: usize) -> Self {
+        let shapes: Vec<Vec<Vec<usize>>> = params
+            .iter()
+            .map(|st| st.iter().map(|t| t.shape.clone()).collect())
+            .collect();
+        Self::new(&shapes, n_microbatches)
+    }
+
+    /// Accumulate micro-batch `mb`'s (1-based) gradients for `stage`.
+    /// Panics if called out of micro-batch order — the order *is* the
+    /// determinism contract.
+    pub fn add(&mut self, stage: usize, mb: usize, grads: &[Tensor]) {
+        assert_eq!(
+            mb, self.next_mb[stage],
+            "stage {stage}: gradient for mb {mb} arrived out of order (expected {})",
+            self.next_mb[stage]
+        );
+        assert_eq!(grads.len(), self.sums[stage].len());
+        for (s, g) in self.sums[stage].iter_mut().zip(grads) {
+            s.add_assign(g);
+        }
+        self.next_mb[stage] += 1;
+    }
+
+    pub fn stage_complete(&self, stage: usize) -> bool {
+        self.next_mb[stage] == self.n_microbatches + 1
+    }
+
+    pub fn all_complete(&self) -> bool {
+        (0..self.sums.len()).all(|s| self.stage_complete(s))
+    }
+
+    /// Average (divide by N) and take the per-stage sums; resets the buffer.
+    pub fn take_averaged(&mut self) -> Vec<Vec<Tensor>> {
+        assert!(self.all_complete(), "take_averaged before all micro-batches");
+        let inv = 1.0 / self.n_microbatches as f32;
+        let mut out: Vec<Vec<Tensor>> = self
+            .sums
+            .iter_mut()
+            .map(|st| {
+                st.iter_mut()
+                    .map(|t| {
+                        let mut g = std::mem::replace(t, Tensor::zeros(t.shape.clone()));
+                        g.scale(inv);
+                        g
+                    })
+                    .collect()
+            })
+            .collect();
+        self.next_mb.iter_mut().for_each(|x| *x = 1);
+        // keep shapes for reuse
+        out.iter_mut().for_each(|_| {});
+        out
+    }
+
+    /// Take the average for a single stage (used by trainers that update
+    /// stages independently, e.g. CDP-v2's per-stage hand-off).
+    pub fn take_stage_averaged(&mut self, stage: usize) -> Vec<Tensor> {
+        assert!(self.stage_complete(stage));
+        let inv = 1.0 / self.n_microbatches as f32;
+        self.next_mb[stage] = 1;
+        self.sums[stage]
+            .iter_mut()
+            .map(|t| {
+                let mut g = std::mem::replace(t, Tensor::zeros(t.shape.clone()));
+                g.scale(inv);
+                g
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf() -> GradBuffer {
+        GradBuffer::new(&[vec![vec![2]], vec![vec![1]]], 2)
+    }
+
+    #[test]
+    fn accumulates_in_order_and_averages() {
+        let mut b = buf();
+        b.add(0, 1, &[Tensor::new(vec![2], vec![1.0, 2.0])]);
+        b.add(0, 2, &[Tensor::new(vec![2], vec![3.0, 4.0])]);
+        b.add(1, 1, &[Tensor::new(vec![1], vec![10.0])]);
+        assert!(!b.all_complete());
+        b.add(1, 2, &[Tensor::new(vec![1], vec![30.0])]);
+        assert!(b.all_complete());
+        let avg = b.take_averaged();
+        assert_eq!(avg[0][0].data, vec![2.0, 3.0]);
+        assert_eq!(avg[1][0].data, vec![20.0]);
+        // reset: accepts mb 1 again
+        b.add(0, 1, &[Tensor::new(vec![2], vec![1.0, 1.0])]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of order")]
+    fn rejects_out_of_order() {
+        let mut b = buf();
+        b.add(0, 2, &[Tensor::new(vec![2], vec![1.0, 1.0])]);
+    }
+
+    #[test]
+    fn per_stage_take() {
+        let mut b = buf();
+        b.add(0, 1, &[Tensor::new(vec![2], vec![2.0, 2.0])]);
+        b.add(0, 2, &[Tensor::new(vec![2], vec![4.0, 4.0])]);
+        let avg = b.take_stage_averaged(0);
+        assert_eq!(avg[0].data, vec![3.0, 3.0]);
+        assert!(!b.stage_complete(1));
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's contribution (Sec. 3): Cyclic Data Parallelism.
+//!
+//! - [`update_rule`] — the u_{i,j} parameter-version rules defining DP,
+//!   CDP-v1, CDP-v2 (+ the randomized future-work extension).
+//! - [`param_store`] — versioned parameter state (θ_t, θ_{t-1}) with the
+//!   θ_{-1} := θ_0 bootstrap.
+//! - [`grad_buffer`] — deterministic-order gradient accumulation.
+//! - [`schedule`] — the time-step timelines of Fig 1 (DP lockstep vs the
+//!   cyclic pattern with per-worker delay 2(i−1)).
+
+pub mod grad_buffer;
+pub mod param_store;
+pub mod schedule;
+pub mod update_rule;
+
+pub use grad_buffer::GradBuffer;
+pub use param_store::ParamStore;
+pub use schedule::{Op, Schedule};
+pub use update_rule::{rule_by_name, Rule, Version};

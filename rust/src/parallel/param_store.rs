@@ -1,0 +1,142 @@
+//! Versioned parameter store: θ_t ("fresh") and θ_{t−1} ("stale") per
+//! stage, plus momentum.  The bootstrap convention θ_{−1} := θ_0 makes all
+//! rules coincide at step 0 (tested here and in the python mirror).
+//!
+//! `commit_step` is a buffer *swap*, not a copy (DESIGN.md §Perf-L3): the
+//! outgoing θ_t becomes θ_{t−1} by move.
+
+use crate::parallel::update_rule::{Rule, Version};
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    cur: Vec<Vec<Tensor>>,
+    prev: Vec<Vec<Tensor>>,
+    moms: Vec<Vec<Tensor>>,
+    step: u64,
+}
+
+impl ParamStore {
+    pub fn new(init: Vec<Vec<Tensor>>) -> Self {
+        let prev = init.clone(); // θ_{−1} := θ_0
+        let moms = init
+            .iter()
+            .map(|st| st.iter().map(|t| Tensor::zeros(t.shape.clone())).collect())
+            .collect();
+        Self { cur: init, prev, moms, step: 0 }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.cur.len()
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn fresh(&self, stage: usize) -> &Vec<Tensor> {
+        &self.cur[stage]
+    }
+
+    pub fn stale(&self, stage: usize) -> &Vec<Tensor> {
+        &self.prev[stage]
+    }
+
+    pub fn momentum(&self, stage: usize) -> &Vec<Tensor> {
+        &self.moms[stage]
+    }
+
+    /// θ̂_{i}^j for micro-batch `i` (1-based) under `rule`.
+    pub fn select(&self, rule: &Rule, i: usize, stage: usize) -> &Vec<Tensor> {
+        match rule.version(i, stage + 1, self.n_stages()) {
+            Version::Fresh => self.fresh(stage),
+            Version::Stale => self.stale(stage),
+        }
+    }
+
+    /// Mutable access for the optimizer (params + momentum of one stage).
+    /// Used by trainers that update in place before committing.
+    pub fn stage_mut(&mut self, stage: usize) -> (&mut Vec<Tensor>, &mut Vec<Tensor>) {
+        (&mut self.cur[stage], &mut self.moms[stage])
+    }
+
+    /// Finish training step t: the provided `new` parameters become θ_{t+1},
+    /// current θ_t becomes the stale version.  Momentum was already updated
+    /// in place by the optimizer.
+    pub fn commit_step(&mut self, new: Vec<Vec<Tensor>>) {
+        debug_assert_eq!(new.len(), self.cur.len());
+        self.prev = std::mem::replace(&mut self.cur, new);
+        self.step += 1;
+    }
+
+    /// Total parameter bytes held (both versions).
+    pub fn bytes(&self) -> u64 {
+        let one = |v: &Vec<Vec<Tensor>>| {
+            v.iter()
+                .flat_map(|st| st.iter().map(|t| t.bytes() as u64))
+                .sum::<u64>()
+        };
+        one(&self.cur) + one(&self.prev) + one(&self.moms)
+    }
+
+    /// Flatten θ_t for checkpointing / equivalence checks.
+    pub fn flat_params(&self) -> Vec<f32> {
+        self.cur
+            .iter()
+            .flat_map(|st| st.iter().flat_map(|t| t.data.iter().copied()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        ParamStore::new(vec![
+            vec![Tensor::new(vec![2], vec![1.0, 2.0])],
+            vec![Tensor::new(vec![1], vec![5.0])],
+        ])
+    }
+
+    #[test]
+    fn bootstrap_prev_equals_cur() {
+        let s = store();
+        assert_eq!(s.fresh(0), s.stale(0));
+        assert_eq!(s.step(), 0);
+    }
+
+    #[test]
+    fn commit_swaps_versions() {
+        let mut s = store();
+        let new = vec![
+            vec![Tensor::new(vec![2], vec![10.0, 20.0])],
+            vec![Tensor::new(vec![1], vec![50.0])],
+        ];
+        s.commit_step(new.clone());
+        assert_eq!(s.fresh(0)[0].data, vec![10.0, 20.0]);
+        assert_eq!(s.stale(0)[0].data, vec![1.0, 2.0]);
+        assert_eq!(s.step(), 1);
+    }
+
+    #[test]
+    fn select_follows_rule() {
+        let mut s = store();
+        s.commit_step(vec![
+            vec![Tensor::new(vec![2], vec![10.0, 20.0])],
+            vec![Tensor::new(vec![1], vec![50.0])],
+        ]);
+        // N=2 stages. CDP-v2: mb 1 → stale for stage 1 (j=1 < N-i+1=2),
+        // fresh for stage 2.
+        assert_eq!(s.select(&Rule::CdpV2, 1, 0)[0].data, vec![1.0, 2.0]);
+        assert_eq!(s.select(&Rule::CdpV2, 1, 1)[0].data, vec![50.0]);
+        assert_eq!(s.select(&Rule::Dp, 1, 0)[0].data, vec![10.0, 20.0]);
+        assert_eq!(s.select(&Rule::CdpV1, 2, 1)[0].data, vec![5.0]);
+    }
+
+    #[test]
+    fn bytes_counts_three_copies() {
+        let s = store();
+        assert_eq!(s.bytes(), 3 * (2 + 1) * 4);
+    }
+}

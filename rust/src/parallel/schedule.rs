@@ -1,0 +1,309 @@
+//! Time-step schedules (paper Fig. 1).
+//!
+//! One *time step* = one stage-granularity forward or backward.  A training
+//! step spans 2N time steps.  DP runs all N workers in lockstep; CDP delays
+//! worker i by 2·(i−1) time steps, producing the cyclic pattern in which,
+//! in steady state, each stage index is being computed by exactly one
+//! worker at every time step, and the total number of retained activation
+//! stashes is constant instead of peaking at N·N.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Forward of `stage` for micro-batch `mb` of training step `tstep`.
+    Fwd { mb: usize, stage: usize, tstep: u64 },
+    /// Backward of `stage` for micro-batch `mb` of training step `tstep`.
+    Bwd { mb: usize, stage: usize, tstep: u64 },
+    /// Worker has not started yet (cyclic warm-up) or waits on a barrier.
+    Idle,
+}
+
+impl Op {
+    pub fn is_idle(&self) -> bool {
+        matches!(self, Op::Idle)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Dp,
+    Cyclic,
+}
+
+/// A generated timeline: `grid[time][worker]` = op.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub kind: Kind,
+    pub n: usize,
+    pub grid: Vec<Vec<Op>>,
+}
+
+impl Schedule {
+    /// DP (Fig 1a): all workers in lockstep, barrier after each training
+    /// step (the barrier is *between* time steps and does not occupy a
+    /// slot; the all-reduce happens there).
+    pub fn dp(n: usize, horizon: usize) -> Self {
+        let mut grid = Vec::with_capacity(horizon);
+        for k in 0..horizon {
+            let tstep = (k / (2 * n)) as u64;
+            let phase = k % (2 * n);
+            let row: Vec<Op> = (0..n)
+                .map(|w| {
+                    if phase < n {
+                        Op::Fwd { mb: w + 1, stage: phase + 1, tstep }
+                    } else {
+                        Op::Bwd { mb: w + 1, stage: 2 * n - phase, tstep }
+                    }
+                })
+                .collect();
+            grid.push(row);
+        }
+        Self { kind: Kind::Dp, n, grid }
+    }
+
+    /// CDP (Fig 1b/1c): worker i delayed by 2·(i−1) time steps.
+    pub fn cyclic(n: usize, horizon: usize) -> Self {
+        let mut grid = Vec::with_capacity(horizon);
+        for k in 0..horizon {
+            let row: Vec<Op> = (0..n)
+                .map(|w| {
+                    let delay = 2 * w;
+                    if k < delay {
+                        return Op::Idle;
+                    }
+                    let local = k - delay;
+                    let tstep = (local / (2 * n)) as u64;
+                    let phase = local % (2 * n);
+                    if phase < n {
+                        Op::Fwd { mb: w + 1, stage: phase + 1, tstep }
+                    } else {
+                        Op::Bwd { mb: w + 1, stage: 2 * n - phase, tstep }
+                    }
+                })
+                .collect();
+            grid.push(row);
+        }
+        Self { kind: Kind::Cyclic, n, grid }
+    }
+
+    /// Number of activation stashes worker `w` holds *after* time step `k`
+    /// (stage inputs stored awaiting backward).
+    pub fn stashes_after(&self, k: usize, w: usize) -> usize {
+        match self.grid[k][w] {
+            Op::Idle => 0,
+            Op::Fwd { stage, .. } => stage,
+            Op::Bwd { stage, .. } => stage - 1,
+        }
+    }
+
+    /// Total stashes across workers after time step `k` — the quantity the
+    /// paper plots in Fig 4 (in units of per-stage activation memory).
+    pub fn total_stashes_after(&self, k: usize) -> usize {
+        (0..self.n).map(|w| self.stashes_after(k, w)).sum()
+    }
+
+    /// Peak and steady-state stash totals over the horizon.
+    pub fn stash_stats(&self) -> (usize, f64) {
+        let totals: Vec<usize> = (0..self.grid.len())
+            .map(|k| self.total_stashes_after(k))
+            .collect();
+        let peak = totals.iter().copied().max().unwrap_or(0);
+        // steady state: skip the first 2N warm-up steps
+        let skip = (2 * self.n).min(totals.len());
+        let steady = &totals[skip..];
+        let mean = if steady.is_empty() {
+            0.0
+        } else {
+            steady.iter().sum::<usize>() as f64 / steady.len() as f64
+        };
+        (peak, mean)
+    }
+
+    /// Time steps at which a *global barrier* exists (all workers must have
+    /// finished the same training step before any proceeds).  DP: after
+    /// every 2N steps.  Cyclic: none.
+    pub fn barrier_steps(&self, horizon: usize) -> Vec<usize> {
+        match self.kind {
+            Kind::Dp => (1..=horizon).filter(|k| k % (2 * self.n) == 0).collect(),
+            Kind::Cyclic => Vec::new(),
+        }
+    }
+
+    /// Gradient hand-off events after time step `k`: (from_worker,
+    /// to_worker, stage).  In the cyclic schedule, a worker that completed
+    /// `Bwd{stage}` sends its partial gradient fragment for that stage to
+    /// the next worker (ring, modulo N) — this is the balanced p2p pattern
+    /// of Fig 1c.  In DP all communication is deferred to the barrier.
+    pub fn handoffs_after(&self, k: usize) -> Vec<(usize, usize, usize)> {
+        if self.kind == Kind::Dp {
+            return Vec::new();
+        }
+        (0..self.n)
+            .filter_map(|w| match self.grid[k][w] {
+                Op::Bwd { stage, mb, .. } if mb < self.n => {
+                    Some((w, (w + 1) % self.n, stage))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Render the timeline like Fig 1 (rows = workers, cols = time steps).
+    pub fn render(&self, upto: usize) -> String {
+        let mut out = String::new();
+        let upto = upto.min(self.grid.len());
+        out.push_str("       ");
+        for k in 0..upto {
+            out.push_str(&format!("{k:>4}"));
+        }
+        out.push('\n');
+        for w in 0..self.n {
+            out.push_str(&format!("mb {:>2} |", w + 1));
+            for k in 0..upto {
+                let cell = match self.grid[k][w] {
+                    Op::Idle => "   .".to_string(),
+                    Op::Fwd { stage, .. } => format!("  F{stage}"),
+                    Op::Bwd { stage, .. } => format!("  B{stage}"),
+                };
+                out.push_str(&cell);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn dp_is_lockstep() {
+        let s = Schedule::dp(3, 12);
+        for k in 0..12 {
+            let first = s.grid[k][0];
+            for w in 1..3 {
+                match (first, s.grid[k][w]) {
+                    (Op::Fwd { stage: a, .. }, Op::Fwd { stage: b, .. }) => {
+                        assert_eq!(a, b)
+                    }
+                    (Op::Bwd { stage: a, .. }, Op::Bwd { stage: b, .. }) => {
+                        assert_eq!(a, b)
+                    }
+                    other => panic!("workers diverged: {other:?}"),
+                }
+            }
+        }
+        assert_eq!(s.barrier_steps(12), vec![6, 12]);
+    }
+
+    #[test]
+    fn dp_stash_peaks_at_n_times_n() {
+        let s = Schedule::dp(4, 8);
+        let (peak, _) = s.stash_stats();
+        assert_eq!(peak, 16); // N workers × N stages at the fwd/bwd turn
+    }
+
+    #[test]
+    fn cyclic_matches_fig1_pattern() {
+        // Fig 1b, N=3: worker 1 starts at 0, worker 2 at 2, worker 3 at 4.
+        let s = Schedule::cyclic(3, 10);
+        assert_eq!(s.grid[0][0], Op::Fwd { mb: 1, stage: 1, tstep: 0 });
+        assert_eq!(s.grid[0][1], Op::Idle);
+        assert_eq!(s.grid[2][1], Op::Fwd { mb: 2, stage: 1, tstep: 0 });
+        assert_eq!(s.grid[4][2], Op::Fwd { mb: 3, stage: 1, tstep: 0 });
+        assert!(s.barrier_steps(10).is_empty());
+    }
+
+    #[test]
+    fn cyclic_steady_state_stashes_near_half_dp() {
+        // Paper: CDP total ≈ (N+1)/2 · B·Ψ_A vs DP peak N · B·Ψ_A.  Our
+        // discrete count (a stash exists after a stage's fwd completes and
+        // is freed when its bwd completes) gives steady ≈ N²/2 stage-units
+        // vs the DP peak of N² — the same "half of DP" claim under a
+        // counting convention that excludes the stage currently computing.
+        for n in [3usize, 4, 8] {
+            let cyc = Schedule::cyclic(n, 8 * n);
+            let (peak, steady) = cyc.stash_stats();
+            let (dp_peak, _) = Schedule::dp(n, 8 * n).stash_stats();
+            assert_eq!(dp_peak, n * n);
+            let half = (n * n) as f64 / 2.0;
+            assert!(
+                (steady - half).abs() <= n as f64 / 2.0 + 1.0,
+                "n={n}: steady {steady}, expected ≈{half}"
+            );
+            // near-constant: peak within one stage-unit of the mean
+            assert!((peak as f64 - steady).abs() <= 1.0 + n as f64 * 0.2);
+            assert!(peak < dp_peak);
+        }
+    }
+
+    #[test]
+    fn cyclic_one_worker_per_stage_in_steady_state() {
+        // After warm-up, at every time step the busy workers compute
+        // pairwise-distinct (stage, direction) — the "pyramid sharing"
+        // property that lets MP+CDP use N(N+1)/2 devices.
+        let n = 4;
+        let s = Schedule::cyclic(n, 8 * n);
+        for k in (2 * n)..(8 * n) {
+            let mut seen = std::collections::HashSet::new();
+            for w in 0..n {
+                match s.grid[k][w] {
+                    Op::Fwd { stage, .. } => assert!(seen.insert((stage, 'f'))),
+                    Op::Bwd { stage, .. } => assert!(seen.insert((stage, 'b'))),
+                    Op::Idle => panic!("idle in steady state"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_cyclic_every_fwd_has_matching_bwd() {
+        check("fwd-bwd-pairing", 30, |g| {
+            let n = g.usize_in(1, 8);
+            let steps = g.usize_in(1, 4);
+            let horizon = 2 * n * steps + 2 * n;
+            let s = Schedule::cyclic(n, horizon);
+            // for every completed training step of every worker, each stage
+            // is forwarded exactly once and backwarded exactly once
+            for w in 0..n {
+                let mut fwd = vec![0usize; n + 1];
+                let mut bwd = vec![0usize; n + 1];
+                for k in 0..horizon {
+                    match s.grid[k][w] {
+                        Op::Fwd { stage, tstep: 0, .. } => fwd[stage] += 1,
+                        Op::Bwd { stage, tstep: 0, .. } => bwd[stage] += 1,
+                        _ => {}
+                    }
+                }
+                for stage in 1..=n {
+                    assert_eq!(fwd[stage], 1, "w={w} stage={stage}");
+                    assert_eq!(bwd[stage], 1);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_handoffs_are_ring_ordered() {
+        check("ring-handoffs", 20, |g| {
+            let n = g.usize_in(2, 8);
+            let s = Schedule::cyclic(n, 6 * n);
+            for k in 0..6 * n {
+                for (from, to, stage) in s.handoffs_after(k) {
+                    assert_eq!(to, (from + 1) % n);
+                    assert!((1..=n).contains(&stage));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn render_contains_expected_cells() {
+        let s = Schedule::cyclic(3, 8);
+        let r = s.render(8);
+        assert!(r.contains("F1"));
+        assert!(r.contains("B3"));
+        assert!(r.contains('.'));
+    }
+}

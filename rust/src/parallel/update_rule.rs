@@ -1,0 +1,199 @@
+//! Update rules u_{i,j} (paper Eq. CDP): for micro-batch i ∈ [1, N] and
+//! stage j ∈ [1, N], choose which parameter version θ̂_{i}^j the gradient
+//! is evaluated at: θ_t (Fresh) or θ_{t−1} (Stale).
+//!
+//! The rule may depend on (i, j) but not on the training step t — that is
+//! the paper's stationarity requirement, and what makes the rules
+//! realizable by the fixed cyclic timing of Fig 1.  The paper's two edge
+//! cases:
+//!
+//! - CDP-v1: u ≡ stale (max delay; equals PipeDream-2BW's rule under PP).
+//! - CDP-v2: u = fresh iff j ≥ N−i+1 (min delay; micro-batch i sees fresh
+//!   parameters for the last i stages).
+//!
+//! `Randomized` implements the future-work extension (random delays),
+//! stationary in t by hashing (i, j).
+
+use crate::util::rng::splitmix64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Version {
+    Fresh,
+    Stale,
+}
+
+/// A stationary parameter-version rule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Rule {
+    /// Synchronous data parallelism: every micro-batch sees θ_t.
+    Dp,
+    /// CDP-v1: every micro-batch sees θ_{t−1}.
+    CdpV1,
+    /// CDP-v2: micro-batch i sees θ_t for stages j ≥ N−i+1.
+    CdpV2,
+    /// Future-work extension: stage j of micro-batch i is fresh with
+    /// probability `p_fresh`, decided once per (i, j) from `seed`.
+    Randomized { p_fresh: f64, seed: u64 },
+}
+
+impl Rule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rule::Dp => "dp",
+            Rule::CdpV1 => "cdp_v1",
+            Rule::CdpV2 => "cdp_v2",
+            Rule::Randomized { .. } => "cdp_rand",
+        }
+    }
+
+    /// Version for micro-batch `i` (1-based), stage `j` (1-based), with
+    /// `n` stages == micro-batches.
+    pub fn version(&self, i: usize, j: usize, n: usize) -> Version {
+        debug_assert!((1..=n).contains(&i) && (1..=n).contains(&j));
+        match self {
+            Rule::Dp => Version::Fresh,
+            Rule::CdpV1 => Version::Stale,
+            Rule::CdpV2 => {
+                if j >= n - i + 1 {
+                    Version::Fresh
+                } else {
+                    Version::Stale
+                }
+            }
+            Rule::Randomized { p_fresh, seed } => {
+                let h = splitmix64(seed ^ ((i as u64) << 32 | j as u64));
+                // map to [0, 1)
+                let u = (h >> 40) as f64 / (1u64 << 24) as f64;
+                if u < *p_fresh {
+                    Version::Fresh
+                } else {
+                    Version::Stale
+                }
+            }
+        }
+    }
+
+    /// Number of stale (i, j) pairs — the rule's total delay mass.
+    pub fn staleness(&self, n: usize) -> usize {
+        (1..=n)
+            .flat_map(|i| (1..=n).map(move |j| (i, j)))
+            .filter(|&(i, j)| self.version(i, j, n) == Version::Stale)
+            .count()
+    }
+
+    /// Is this rule realizable by the cyclic timing?  DP is *not* (it
+    /// needs all micro-batches to see θ_t simultaneously, which the
+    /// staggered execution cannot provide); it is listed for reference.
+    pub fn cyclic_realizable(&self) -> bool {
+        !matches!(self, Rule::Dp)
+    }
+}
+
+pub fn rule_by_name(name: &str) -> anyhow::Result<Rule> {
+    match name {
+        "dp" => Ok(Rule::Dp),
+        "cdp_v1" | "v1" => Ok(Rule::CdpV1),
+        "cdp_v2" | "v2" => Ok(Rule::CdpV2),
+        "cdp_rand" | "rand" => Ok(Rule::Randomized { p_fresh: 0.5, seed: 0xDE1A7 }),
+        other => anyhow::bail!("unknown update rule `{other}` (dp|cdp_v1|cdp_v2|cdp_rand)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn dp_always_fresh_v1_always_stale() {
+        for n in 1..=8 {
+            assert_eq!(Rule::Dp.staleness(n), 0);
+            assert_eq!(Rule::CdpV1.staleness(n), n * n);
+        }
+    }
+
+    #[test]
+    fn v2_suffix_pattern_matches_paper() {
+        // N = 4, paper Sec 3.2: mb 1 fresh only at stage 4; mb 4 all fresh.
+        let n = 4;
+        let pat: Vec<Vec<bool>> = (1..=n)
+            .map(|i| {
+                (1..=n)
+                    .map(|j| Rule::CdpV2.version(i, j, n) == Version::Fresh)
+                    .collect()
+            })
+            .collect();
+        assert_eq!(pat[0], vec![false, false, false, true]);
+        assert_eq!(pat[1], vec![false, false, true, true]);
+        assert_eq!(pat[3], vec![true, true, true, true]);
+    }
+
+    #[test]
+    fn v2_staleness_is_triangular() {
+        // #stale = Σ_{i=1..N} (N − i) ... = N(N−1)/2
+        for n in 1..=10 {
+            assert_eq!(Rule::CdpV2.staleness(n), n * (n - 1) / 2);
+        }
+    }
+
+    #[test]
+    fn v2_monotone_in_microbatch_and_stage() {
+        check("v2-monotone", 100, |g| {
+            let n = g.usize_in(1, 12);
+            let i = g.usize_in(1, n);
+            let j = g.usize_in(1, n);
+            let v = Rule::CdpV2.version(i, j, n);
+            // fresh set grows with i (later micro-batches never lose freshness)
+            if v == Version::Fresh && i < n {
+                assert_eq!(Rule::CdpV2.version(i + 1, j, n), Version::Fresh);
+            }
+            // and with j (freshness is a suffix in stages)
+            if v == Version::Fresh && j < n {
+                assert_eq!(Rule::CdpV2.version(i, j + 1, n), Version::Fresh);
+            }
+        });
+    }
+
+    #[test]
+    fn n1_degenerate_all_rules_fresh_or_harmless() {
+        // With N=1 the only micro-batch is the last one: v2 is fresh;
+        // v1 is stale but θ_{t−1} bootstraps to θ_t at every step only
+        // at t=0 — staleness still exists for N=1 in v1 (paper's delayed
+        // SGD), the *trainer-level* N=1 equivalence is asserted in the
+        // coordinator tests where the full update is exercised.
+        assert_eq!(Rule::CdpV2.version(1, 1, 1), Version::Fresh);
+        assert_eq!(Rule::CdpV1.version(1, 1, 1), Version::Stale);
+    }
+
+    #[test]
+    fn randomized_is_stationary_and_seeded() {
+        let r = Rule::Randomized { p_fresh: 0.5, seed: 7 };
+        for i in 1..=6 {
+            for j in 1..=6 {
+                assert_eq!(r.version(i, j, 6), r.version(i, j, 6));
+            }
+        }
+        let r2 = Rule::Randomized { p_fresh: 0.5, seed: 8 };
+        let diff = (1..=6)
+            .flat_map(|i| (1..=6).map(move |j| (i, j)))
+            .filter(|&(i, j)| r.version(i, j, 6) != r2.version(i, j, 6))
+            .count();
+        assert!(diff > 0, "different seeds should differ somewhere");
+    }
+
+    #[test]
+    fn rand_extreme_probabilities() {
+        let all = Rule::Randomized { p_fresh: 1.0, seed: 3 };
+        let none = Rule::Randomized { p_fresh: 0.0, seed: 3 };
+        assert_eq!(all.staleness(8), 0);
+        assert_eq!(none.staleness(8), 64);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for n in ["dp", "cdp_v1", "cdp_v2", "cdp_rand"] {
+            assert_eq!(rule_by_name(n).unwrap().name(), n);
+        }
+        assert!(rule_by_name("bogus").is_err());
+    }
+}

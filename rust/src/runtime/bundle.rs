@@ -1,0 +1,310 @@
+//! BundleRuntime: one compiled executable per (stage, kind) of a bundle,
+//! plus typed execution helpers matching the artifact signatures emitted by
+//! `python/compile/aot.py`:
+//!
+//! - stage 0      fwd(*p, x) -> (y,)            fwdbwd(*p, x, gy) -> (*gp,)
+//! - stage mid    fwd(*p, x) -> (y,)            fwdbwd(*p, x, gy) -> (gx, *gp)
+//! - stage last   fwd_loss(*p, x, t) -> (loss,) fwdbwd(*p, x, t) -> (loss, gx, *gp)
+//!                predict(*p, x) -> (logits,)   [classifiers]
+//! - every stage  sgd(*p, *m, *g, lr) -> (*p', *m')
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::literal::{
+    host_to_literal, int_tensor_to_literal, literal_to_scalar, literal_to_tensor,
+    tensor_to_literal,
+};
+use super::{execute_tuple, Engine};
+use crate::model::Manifest;
+use crate::tensor::{HostTensor, IntTensor, Tensor};
+use crate::util::binio;
+
+pub struct BundleRuntime {
+    pub manifest: Manifest,
+    pub engine: Engine,
+    /// (stage, kind) → compiled executable
+    exes: HashMap<(usize, String), xla::PjRtLoadedExecutable>,
+}
+
+impl BundleRuntime {
+    /// Load a bundle directory and compile every artifact it declares.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let engine = Engine::cpu()?;
+        Self::load_with_engine(dir, engine)
+    }
+
+    pub fn load_with_engine(dir: &Path, engine: Engine) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let mut exes = HashMap::new();
+        for st in &manifest.stages {
+            for (kind, file) in &st.artifacts {
+                let path = manifest.dir.join(file);
+                let exe = engine
+                    .compile_hlo_file(&path)
+                    .with_context(|| format!("stage {} kind {kind}", st.index))?;
+                exes.insert((st.index, kind.clone()), exe);
+            }
+        }
+        Ok(Self { manifest, engine, exes })
+    }
+
+    fn exe(&self, stage: usize, kind: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(&(stage, kind.to_string()))
+            .with_context(|| format!("no executable for stage {stage} kind {kind}"))
+    }
+
+    /// Initial parameters from params.bin, split per stage/param.
+    pub fn init_params(&self) -> Result<Vec<Vec<Tensor>>> {
+        let raw = binio::read_f32_file(&self.manifest.params_bin())?;
+        anyhow::ensure!(
+            raw.len() == self.manifest.total_param_elems,
+            "params.bin has {} elems, manifest says {}",
+            raw.len(),
+            self.manifest.total_param_elems
+        );
+        let mut out = Vec::with_capacity(self.manifest.n_stages);
+        let mut off = 0usize;
+        for st in &self.manifest.stages {
+            let mut stage = Vec::with_capacity(st.params.len());
+            for p in &st.params {
+                let n = p.elems();
+                stage.push(Tensor::new(p.shape.clone(), raw[off..off + n].to_vec()));
+                off += n;
+            }
+            out.push(stage);
+        }
+        Ok(out)
+    }
+
+    /// Zero-initialized momentum buffers matching the parameter layout.
+    pub fn zero_like_params(&self) -> Vec<Vec<Tensor>> {
+        self.manifest
+            .stages
+            .iter()
+            .map(|st| {
+                st.params
+                    .iter()
+                    .map(|p| Tensor::zeros(p.shape.clone()))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Upload one stage's parameters once; reuse across micro-batches
+    /// (DESIGN.md §Perf-L3: within a training step the same θ̂ version is
+    /// executed N times — caching the literals removes N−1 of the N
+    /// host→device conversions per stage).
+    pub fn param_literals(&self, params: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        params.iter().map(tensor_to_literal).collect()
+    }
+
+    // ---- cached-literal execution variants -------------------------------
+    pub fn stage_fwd_lits(
+        &self,
+        stage: usize,
+        params: &[xla::Literal],
+        x: &HostTensor,
+    ) -> Result<Tensor> {
+        let x_lit = host_to_literal(x)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&x_lit);
+        let out = execute_tuple(self.exe(stage, "fwd")?, &args)?;
+        let spec = self.manifest.stages[stage].output.as_ref().unwrap();
+        literal_to_tensor(&out[0], &spec.shape)
+    }
+
+    pub fn first_bwd_lits(
+        &self,
+        params: &[xla::Literal],
+        x: &HostTensor,
+        gy: &Tensor,
+    ) -> Result<Vec<Tensor>> {
+        let x_lit = host_to_literal(x)?;
+        let gy_lit = tensor_to_literal(gy)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&x_lit);
+        args.push(&gy_lit);
+        let out = execute_tuple(self.exe(0, "fwdbwd")?, &args)?;
+        self.unpack_grads(0, &out, 0)
+    }
+
+    pub fn mid_bwd_lits(
+        &self,
+        stage: usize,
+        params: &[xla::Literal],
+        x: &Tensor,
+        gy: &Tensor,
+    ) -> Result<(Tensor, Vec<Tensor>)> {
+        let x_lit = tensor_to_literal(x)?;
+        let gy_lit = tensor_to_literal(gy)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&x_lit);
+        args.push(&gy_lit);
+        let out = execute_tuple(self.exe(stage, "fwdbwd")?, &args)?;
+        let gx = literal_to_tensor(&out[0], &self.manifest.stages[stage].input.shape)?;
+        Ok((gx, self.unpack_grads(stage, &out, 1)?))
+    }
+
+    pub fn last_bwd_lits(
+        &self,
+        params: &[xla::Literal],
+        x: &Tensor,
+        targets: &IntTensor,
+    ) -> Result<(f32, Tensor, Vec<Tensor>)> {
+        let last = self.manifest.n_stages - 1;
+        let x_lit = tensor_to_literal(x)?;
+        let t_lit = int_tensor_to_literal(targets)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&x_lit);
+        args.push(&t_lit);
+        let out = execute_tuple(self.exe(last, "fwdbwd")?, &args)?;
+        let loss = literal_to_scalar(&out[0])?;
+        let gx = literal_to_tensor(&out[1], &self.manifest.stages[last].input.shape)?;
+        Ok((loss, gx, self.unpack_grads(last, &out, 2)?))
+    }
+
+    // ---- forward ---------------------------------------------------------
+    /// Forward of a non-loss stage.
+    pub fn stage_fwd(
+        &self,
+        stage: usize,
+        params: &[Tensor],
+        x: &HostTensor,
+    ) -> Result<Tensor> {
+        let mut args = self.param_literals(params)?;
+        args.push(host_to_literal(x)?);
+        let out = execute_tuple(self.exe(stage, "fwd")?, &args)?;
+        let spec = self.manifest.stages[stage].output.as_ref().unwrap();
+        literal_to_tensor(&out[0], &spec.shape)
+    }
+
+    /// Loss-stage forward: returns the scalar loss.
+    pub fn last_fwd_loss(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        targets: &IntTensor,
+    ) -> Result<f32> {
+        let last = self.manifest.n_stages - 1;
+        let mut args = self.param_literals(params)?;
+        args.push(tensor_to_literal(x)?);
+        args.push(int_tensor_to_literal(targets)?);
+        let out = execute_tuple(self.exe(last, "fwd_loss")?, &args)?;
+        literal_to_scalar(&out[0])
+    }
+
+    /// Classifier logits (loss stage without the loss).
+    pub fn predict(&self, params: &[Tensor], x: &Tensor) -> Result<Tensor> {
+        let last = self.manifest.n_stages - 1;
+        let mut args = self.param_literals(params)?;
+        args.push(tensor_to_literal(x)?);
+        let out = execute_tuple(self.exe(last, "predict")?, &args)?;
+        let elems = out[0].element_count();
+        let batch = self.manifest.target.shape[0];
+        literal_to_tensor(&out[0], &[batch, elems / batch])
+    }
+
+    // ---- backward --------------------------------------------------------
+    /// Backward of stage 0: gradient w.r.t. params only.
+    pub fn first_bwd(
+        &self,
+        params: &[Tensor],
+        x: &HostTensor,
+        gy: &Tensor,
+    ) -> Result<Vec<Tensor>> {
+        let mut args = self.param_literals(params)?;
+        args.push(host_to_literal(x)?);
+        args.push(tensor_to_literal(gy)?);
+        let out = execute_tuple(self.exe(0, "fwdbwd")?, &args)?;
+        self.unpack_grads(0, &out, 0)
+    }
+
+    /// Backward of a middle stage: (gx, grads).
+    pub fn mid_bwd(
+        &self,
+        stage: usize,
+        params: &[Tensor],
+        x: &Tensor,
+        gy: &Tensor,
+    ) -> Result<(Tensor, Vec<Tensor>)> {
+        let mut args = self.param_literals(params)?;
+        args.push(tensor_to_literal(x)?);
+        args.push(tensor_to_literal(gy)?);
+        let out = execute_tuple(self.exe(stage, "fwdbwd")?, &args)?;
+        let gx = literal_to_tensor(&out[0], &self.manifest.stages[stage].input.shape)?;
+        Ok((gx, self.unpack_grads(stage, &out, 1)?))
+    }
+
+    /// Backward of the loss stage: (loss, gx, grads).
+    pub fn last_bwd(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        targets: &IntTensor,
+    ) -> Result<(f32, Tensor, Vec<Tensor>)> {
+        let last = self.manifest.n_stages - 1;
+        let mut args = self.param_literals(params)?;
+        args.push(tensor_to_literal(x)?);
+        args.push(int_tensor_to_literal(targets)?);
+        let out = execute_tuple(self.exe(last, "fwdbwd")?, &args)?;
+        let loss = literal_to_scalar(&out[0])?;
+        let gx = literal_to_tensor(&out[1], &self.manifest.stages[last].input.shape)?;
+        Ok((loss, gx, self.unpack_grads(last, &out, 2)?))
+    }
+
+    fn unpack_grads(
+        &self,
+        stage: usize,
+        out: &[xla::Literal],
+        skip: usize,
+    ) -> Result<Vec<Tensor>> {
+        let specs = &self.manifest.stages[stage].params;
+        anyhow::ensure!(
+            out.len() == skip + specs.len(),
+            "stage {stage}: expected {} outputs, got {}",
+            skip + specs.len(),
+            out.len()
+        );
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, p)| literal_to_tensor(&out[skip + i], &p.shape))
+            .collect()
+    }
+
+    // ---- optimizer -------------------------------------------------------
+    /// Fused SGD-momentum for one stage: updates params and moms in place.
+    pub fn sgd_update(
+        &self,
+        stage: usize,
+        params: &mut [Tensor],
+        moms: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f32,
+    ) -> Result<()> {
+        let k = params.len();
+        anyhow::ensure!(moms.len() == k && grads.len() == k);
+        let mut args = Vec::with_capacity(3 * k + 1);
+        for p in params.iter() {
+            args.push(tensor_to_literal(p)?);
+        }
+        for m in moms.iter() {
+            args.push(tensor_to_literal(m)?);
+        }
+        for g in grads.iter() {
+            args.push(tensor_to_literal(g)?);
+        }
+        args.push(tensor_to_literal(&Tensor::scalar(lr))?);
+        let out = execute_tuple(self.exe(stage, "sgd")?, &args)?;
+        anyhow::ensure!(out.len() == 2 * k, "sgd returned {} outputs", out.len());
+        for i in 0..k {
+            params[i] = literal_to_tensor(&out[i], &params[i].shape.clone())?;
+            moms[i] = literal_to_tensor(&out[k + i], &moms[i].shape.clone())?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,43 @@
+//! Host tensor ⇄ XLA literal conversion.
+
+use anyhow::Result;
+
+use super::anyhow_xla;
+use crate::tensor::{HostTensor, IntTensor, Tensor};
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+    xla::Literal::vec1(&t.data).reshape(&dims).map_err(anyhow_xla)
+}
+
+pub fn int_tensor_to_literal(t: &IntTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+    xla::Literal::vec1(&t.data).reshape(&dims).map_err(anyhow_xla)
+}
+
+pub fn host_to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    match t {
+        HostTensor::F32(t) => tensor_to_literal(t),
+        HostTensor::I32(t) => int_tensor_to_literal(t),
+    }
+}
+
+/// Convert an f32 literal back to a host tensor with the given shape
+/// (shape comes from the manifest; the literal's own shape must agree in
+/// element count).
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>().map_err(anyhow_xla)?;
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "literal has {} elems, manifest shape {shape:?}",
+        data.len()
+    );
+    Ok(Tensor::new(shape.to_vec(), data))
+}
+
+/// Scalar (rank-0 or single-element) f32 literal.
+pub fn literal_to_scalar(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>().map_err(anyhow_xla)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+    Ok(v[0])
+}

@@ -1,0 +1,66 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the coordinator's hot path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Interchange is HLO **text** because the
+//! crate's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos
+//! (64-bit instruction ids); the text parser reassigns ids.
+//!
+//! Python never runs here: after `make artifacts` the binary is
+//! self-contained.
+
+pub mod bundle;
+pub mod literal;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use bundle::BundleRuntime;
+pub use literal::{literal_to_tensor, tensor_to_literal};
+
+/// Shared PJRT client + compile cache keyed by artifact path.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(anyhow_xla)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(anyhow_xla)
+            .with_context(|| format!("compile {path:?}"))
+    }
+}
+
+/// The `xla` crate error type doesn't implement std::error::Error for
+/// anyhow conversion in all versions; normalize here.
+pub fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e:?}")
+}
+
+/// Execute and unpack the single-tuple result into literals.
+/// Accepts owned or borrowed literals (the param-literal cache passes refs).
+pub fn execute_tuple<L: std::borrow::Borrow<xla::Literal>>(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[L],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<L>(args).map_err(anyhow_xla)?;
+    let lit = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
+    lit.to_tuple().map_err(anyhow_xla)
+}

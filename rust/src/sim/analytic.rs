@@ -1,0 +1,200 @@
+//! Closed-form Table 1 (paper Sec. 4): memory per GPU, communication
+//! volume, max communication steps between two time steps, and device
+//! count, for every implementation ± CDP.
+//!
+//! Units are the paper's symbols: Ψ_P (parameter+optimizer bytes of the
+//! whole model), B·Ψ_A (activation bytes of one micro-batch through the
+//! whole model), B·Ψ_A^int (the stage-boundary subset communicated by MP).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Table1Row {
+    pub implementation: &'static str,
+    pub cyclic: bool,
+    /// Activation memory per GPU in units of B·Ψ_A.
+    pub act_mem: f64,
+    /// Parameter memory per GPU in units of Ψ_P.
+    pub param_mem: f64,
+    /// Communication volume per training step in units of Ψ_P …
+    pub comm_psi_p: f64,
+    /// … plus this many units of B·Ψ_A^int.
+    pub comm_psi_a_int: f64,
+    /// Max communication steps between two time steps (log N ≡ f64 for
+    /// display; O(1) = 1).
+    pub max_comm_steps: f64,
+    pub n_gpus: f64,
+    pub rule: &'static str,
+}
+
+/// All rows of Table 1 for a given N.
+pub fn table1_rows(n: usize) -> Vec<Table1Row> {
+    let nf = n as f64;
+    let logn = (nf).log2().max(1.0);
+    vec![
+        Table1Row {
+            implementation: "Single-GPU DP",
+            cyclic: false,
+            act_mem: nf, // N micro-batches' activations peak together
+            param_mem: 1.0,
+            comm_psi_p: 0.0,
+            comm_psi_a_int: 0.0,
+            max_comm_steps: 0.0,
+            n_gpus: 1.0,
+            rule: "DP",
+        },
+        Table1Row {
+            implementation: "Single-GPU + Cyclic",
+            cyclic: true,
+            act_mem: (nf + 1.0) / 2.0,
+            param_mem: 1.0,
+            comm_psi_p: 0.0,
+            comm_psi_a_int: 0.0,
+            max_comm_steps: 0.0,
+            n_gpus: 1.0,
+            rule: "CDP",
+        },
+        Table1Row {
+            implementation: "Multi-GPU DP",
+            cyclic: false,
+            act_mem: 1.0,
+            param_mem: 1.0,
+            comm_psi_p: 1.0,
+            comm_psi_a_int: 0.0,
+            max_comm_steps: logn,
+            n_gpus: nf,
+            rule: "DP",
+        },
+        Table1Row {
+            implementation: "Multi-GPU + Cyclic",
+            cyclic: true,
+            act_mem: 1.0,
+            param_mem: 1.0,
+            comm_psi_p: 1.0,
+            comm_psi_a_int: 0.0,
+            max_comm_steps: 1.0,
+            n_gpus: nf,
+            rule: "CDP",
+        },
+        Table1Row {
+            implementation: "DP with MP",
+            cyclic: false,
+            act_mem: 1.0 / nf,
+            param_mem: 1.0 / nf,
+            comm_psi_p: 1.0,
+            comm_psi_a_int: 1.0,
+            max_comm_steps: logn,
+            n_gpus: nf * nf,
+            rule: "DP",
+        },
+        Table1Row {
+            implementation: "DP with MP + Cyclic",
+            cyclic: true,
+            act_mem: 1.0 / nf,
+            param_mem: 1.0 / nf,
+            comm_psi_p: 0.5,
+            comm_psi_a_int: 1.0,
+            max_comm_steps: 1.0,
+            n_gpus: (nf + 1.0) * nf / 2.0,
+            rule: "CDP",
+        },
+        Table1Row {
+            implementation: "PP",
+            cyclic: true, // PP is the N-device specialization of CDP (§4.3)
+            act_mem: 1.0,
+            param_mem: 1.0 / nf,
+            comm_psi_p: 0.0,
+            comm_psi_a_int: 1.0,
+            max_comm_steps: 1.0,
+            n_gpus: nf,
+            rule: "CDP",
+        },
+        Table1Row {
+            implementation: "ZeRO-DP",
+            cyclic: false,
+            act_mem: 1.0,
+            param_mem: 1.0 / nf,
+            comm_psi_p: 1.0,
+            comm_psi_a_int: 0.0,
+            max_comm_steps: logn,
+            n_gpus: nf,
+            rule: "DP",
+        },
+        Table1Row {
+            implementation: "ZeRO-DP + Cyclic",
+            cyclic: true,
+            act_mem: 1.0,
+            param_mem: 1.0 / nf,
+            comm_psi_p: 1.0,
+            comm_psi_a_int: 0.0,
+            max_comm_steps: 1.0,
+            n_gpus: nf,
+            rule: "CDP",
+        },
+    ]
+}
+
+/// Render the table like the paper.
+pub fn render_table1(n: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("Table 1 (N = {n})\n"));
+    out.push_str(&format!(
+        "{:<22} {:>10} {:>9} {:>18} {:>10} {:>8}  {}\n",
+        "Implementation", "Act/GPU", "Par/GPU", "Volume", "MaxSteps", "#GPUs", "Rule"
+    ));
+    for r in table1_rows(n) {
+        let vol = match (r.comm_psi_p > 0.0, r.comm_psi_a_int > 0.0) {
+            (true, true) => format!("{:.1}ΨP+{:.0}BΨAint", r.comm_psi_p, r.comm_psi_a_int),
+            (true, false) => format!("{:.1}ΨP", r.comm_psi_p),
+            (false, true) => format!("{:.0}BΨAint", r.comm_psi_a_int),
+            (false, false) => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "{:<22} {:>8.2}BΨA {:>8.2}ΨP {:>18} {:>10.1} {:>8.1}  {}\n",
+            r.implementation, r.act_mem, r.param_mem, vol, r.max_comm_steps, r.n_gpus, r.rule
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_bold_improvements_hold() {
+        for n in [3usize, 4, 8, 16] {
+            let rows = table1_rows(n);
+            let get = |name: &str| rows.iter().find(|r| r.implementation == name).unwrap();
+            // single-GPU: CDP halves activation memory (asymptotically)
+            assert!(get("Single-GPU + Cyclic").act_mem < get("Single-GPU DP").act_mem);
+            // multi-GPU: comm steps collapse to O(1)
+            assert_eq!(get("Multi-GPU + Cyclic").max_comm_steps, 1.0);
+            assert!(get("Multi-GPU DP").max_comm_steps >= 1.0);
+            // MP: half the gradient volume, half(+) the GPUs
+            assert_eq!(get("DP with MP + Cyclic").comm_psi_p, 0.5);
+            assert!(
+                get("DP with MP + Cyclic").n_gpus
+                    <= (get("DP with MP").n_gpus + n as f64) / 2.0 + 1.0
+            );
+            // ZeRO: volume unchanged, steps collapse
+            assert_eq!(
+                get("ZeRO-DP + Cyclic").comm_psi_p,
+                get("ZeRO-DP").comm_psi_p
+            );
+            assert_eq!(get("ZeRO-DP + Cyclic").max_comm_steps, 1.0);
+        }
+    }
+
+    #[test]
+    fn mp_cyclic_gpu_count_is_triangular() {
+        assert_eq!(table1_rows(3)[5].n_gpus, 6.0);
+        assert_eq!(table1_rows(4)[5].n_gpus, 10.0);
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let s = render_table1(4);
+        for name in ["Single-GPU DP", "ZeRO-DP + Cyclic", "PP"] {
+            assert!(s.contains(name), "{name} missing:\n{s}");
+        }
+    }
+}

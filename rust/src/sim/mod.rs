@@ -1,0 +1,10 @@
+//! Discrete-time scheme simulator: reproduces the paper's *analytical*
+//! artifacts — Fig 1 (timelines), Fig 2 (per-scheme device/memory/comm
+//! schematics) and Table 1 (costs) — by walking the schedules rather than
+//! assuming the formulas, then cross-checking against the closed forms.
+
+pub mod analytic;
+pub mod schemes;
+
+pub use analytic::{table1_rows, Table1Row};
+pub use schemes::{simulate_scheme, Scheme, SchemeCost, SymbolicCosts};

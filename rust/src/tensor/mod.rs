@@ -1,0 +1,145 @@
+//! Host-side tensors: the coordinator's unit of parameter, gradient and
+//! activation state.  Deliberately simple — contiguous f32 (or i32) with a
+//! shape — because everything numeric runs in HLO; the host side only
+//! stores, versions, communicates and reduces.
+
+pub mod ops;
+
+/// Contiguous f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data len {}",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// In-place elementwise add (gradient accumulation hot path —
+    /// DESIGN.md §Perf-L3: no temporaries).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+/// Contiguous i32 tensor (token ids, class labels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+}
+
+/// A tensor of either dtype, as it crosses the HLO boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(t) => &t.shape,
+            HostTensor::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            HostTensor::F32(t) => t.data.len() * 4,
+            HostTensor::I32(t) => t.data.len() * 4,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&Tensor> {
+        match self {
+            HostTensor::F32(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accounting() {
+        let t = Tensor::zeros(vec![2, 3]);
+        assert_eq!(t.elems(), 6);
+        assert_eq!(t.bytes(), 24);
+        let h = HostTensor::F32(t);
+        assert_eq!(h.shape(), &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::new(vec![3], vec![0.5, 0.5, 0.5]);
+        a.add_assign(&b);
+        a.scale(2.0);
+        assert_eq!(a.data, vec![3.0, 5.0, 7.0]);
+        assert!(a.is_finite());
+        assert_eq!(a.max_abs(), 7.0);
+    }
+}

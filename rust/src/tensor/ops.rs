@@ -1,0 +1,70 @@
+//! Flat-slice reductions used by the communication fabric.
+//!
+//! These implement the *reduce* in all-reduce.  The fixed, deterministic
+//! reduction order is a correctness feature: it is what lets the
+//! multi-worker trainers be bit-identical to the single-process reference
+//! (DESIGN.md invariants).
+
+/// dst += src, elementwise.
+pub fn add_into(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += *s;
+    }
+}
+
+/// dst = sum of all rows, reduced in row order (deterministic).
+pub fn reduce_rows(rows: &[&[f32]]) -> Vec<f32> {
+    assert!(!rows.is_empty());
+    let mut out = rows[0].to_vec();
+    for r in &rows[1..] {
+        add_into(&mut out, r);
+    }
+    out
+}
+
+/// dst *= s.
+pub fn scale(dst: &mut [f32], s: f32) {
+    for d in dst.iter_mut() {
+        *d *= s;
+    }
+}
+
+/// Mean absolute difference — used by equivalence tests.
+pub fn mean_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32
+}
+
+/// Relative L2 distance ‖a−b‖ / max(‖a‖, ε).
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    let den: f32 = a.iter().map(|x| x * x).sum();
+    (num / den.max(1e-12)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_is_ordered_sum() {
+        let a = [1.0f32, 2.0];
+        let b = [10.0f32, 20.0];
+        let c = [100.0f32, 200.0];
+        assert_eq!(reduce_rows(&[&a, &b, &c]), vec![111.0, 222.0]);
+    }
+
+    #[test]
+    fn distances() {
+        let a = [1.0f32, 0.0];
+        let b = [1.0f32, 1.0];
+        assert_eq!(mean_abs_diff(&a, &b), 0.5);
+        assert!((rel_l2(&a, &b) - 1.0).abs() < 1e-6);
+        assert_eq!(rel_l2(&a, &a), 0.0);
+    }
+}

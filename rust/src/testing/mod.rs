@@ -1,0 +1,123 @@
+//! Property-test mini-framework (proptest is unavailable offline).
+//!
+//! `check(name, cases, |g| { ... })` runs a closure over `cases` random
+//! inputs drawn through the [`Gen`] handle.  On failure it re-raises with
+//! the offending case index and seed so the case can be replayed with
+//! `Gen::replay`.  No shrinking — cases are kept small instead.
+
+use crate::util::rng::XorShift64Star;
+
+pub struct Gen {
+    rng: XorShift64Star,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: XorShift64Star::new(seed), seed }
+    }
+
+    /// Replay a failing case printed by `check`.
+    pub fn replay(seed: u64) -> Self {
+        Self::new(seed)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + (self.rng.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// Random permutation of 0..n (Fisher-Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.usize_in(0, i);
+            v.swap(i, j);
+        }
+        v
+    }
+}
+
+/// Run `f` over `cases` generated inputs.  Panics with seed info on the
+/// first failing case (assert inside the closure).
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut f: F) {
+    // Base seed is fixed for reproducibility; per-case seeds derive from it.
+    let base = crate::util::rng::splitmix64(0xC0FFEE ^ name.len() as u64);
+    for case in 0..cases {
+        let seed = crate::util::rng::splitmix64(base ^ case as u64);
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut g)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (replay with Gen::replay({seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_in_range() {
+        check("gen-ranges", 50, |g| {
+            let n = g.usize_in(3, 9);
+            assert!((3..=9).contains(&n));
+            let x = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..=2.0).contains(&x));
+            let v = g.vec_f32(n, 0.0, 1.0);
+            assert_eq!(v.len(), n);
+            let p = g.permutation(n);
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn failures_report_seed() {
+        check("always-fails", 3, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x > 100, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Vec::new();
+        check("det", 5, |g| a.push(g.u64()));
+        let mut b = Vec::new();
+        check("det", 5, |g| b.push(g.u64()));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,62 @@
+//! Binary IO for parameter blobs: `params.bin` is little-endian f32,
+//! stage-major, manifest order (written by `python/compile/aot.py`).
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Read a whole file of little-endian f32 values.
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let mut f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "{path:?}: length {} not a multiple of 4",
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write little-endian f32 values (checkpointing).
+pub fn write_f32_file(path: &Path, data: &[f32]) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    for v in data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("cdp_binio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let data = vec![0.0f32, -1.5, 3.25, f32::MIN_POSITIVE, 1e30];
+        write_f32_file(&p, &data).unwrap();
+        let back = read_f32_file(&p).unwrap();
+        assert_eq!(back, data);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn rejects_misaligned() {
+        let dir = std::env::temp_dir().join("cdp_binio_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [1u8, 2, 3]).unwrap();
+        assert!(read_f32_file(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,7 @@
+//! Substrate utilities built from scratch (no crates.io access — DESIGN.md
+//! substitution #4): JSON, deterministic RNG, binary IO, summary stats.
+
+pub mod binio;
+pub mod json;
+pub mod rng;
+pub mod stats;
