@@ -10,6 +10,16 @@ pub struct Bench {
     name: String,
 }
 
+/// One timed measurement, machine-readable (see [`write_json`]).
+#[derive(Clone, Debug)]
+pub struct Stat {
+    pub label: String,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub iters: usize,
+}
+
 impl Bench {
     pub fn new(name: &str) -> Self {
         println!("\n════════ bench: {name} ════════");
@@ -17,7 +27,18 @@ impl Bench {
     }
 
     /// Time `f` with warmup and report mean ± std / min.
-    pub fn time<F: FnMut()>(&self, label: &str, warmup: usize, iters: usize, mut f: F) {
+    pub fn time<F: FnMut()>(&self, label: &str, warmup: usize, iters: usize, f: F) {
+        let _ = self.time_stat(label, warmup, iters, f);
+    }
+
+    /// Like [`Self::time`], but also returns the measurement for reports.
+    pub fn time_stat<F: FnMut()>(
+        &self,
+        label: &str,
+        warmup: usize,
+        iters: usize,
+        mut f: F,
+    ) -> Stat {
         for _ in 0..warmup {
             f();
         }
@@ -36,10 +57,54 @@ impl Bench {
             fmt(min),
             fmt(max)
         );
+        Stat {
+            label: label.to_string(),
+            mean_ns: mean.as_nanos() as f64,
+            min_ns: min.as_nanos() as f64,
+            max_ns: max.as_nanos() as f64,
+            iters,
+        }
     }
 
     pub fn section(&self, label: &str) {
         println!("---- {label} ----");
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Write a machine-readable bench report: a list of timings plus named
+/// scalar counters (allocation counts, pool hit rates, ...).
+pub fn write_json(path: &str, bench: &str, stats: &[Stat], counters: &[(String, f64)]) {
+    let mut out = String::new();
+    out.push_str(&format!("{{\n  \"bench\": \"{}\",\n", json_escape(bench)));
+    out.push_str("  \"timings\": [\n");
+    for (i, s) in stats.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"label\": \"{}\", \"mean_ns\": {:.0}, \"min_ns\": {:.0}, \"max_ns\": {:.0}, \"iters\": {}}}{}\n",
+            json_escape(&s.label),
+            s.mean_ns,
+            s.min_ns,
+            s.max_ns,
+            s.iters,
+            if i + 1 < stats.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n  \"counters\": {\n");
+    for (i, (k, v)) in counters.iter().enumerate() {
+        out.push_str(&format!(
+            "    \"{}\": {}{}\n",
+            json_escape(k),
+            v,
+            if i + 1 < counters.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  }\n}\n");
+    match std::fs::write(path, out) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }
 

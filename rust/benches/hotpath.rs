@@ -1,70 +1,262 @@
-//! Hot-path microbenchmarks (DESIGN.md §Perf-L3): the per-step cost
-//! decomposition of the coordinator — execution, literal conversion,
-//! gradient reduction, SGD — plus fabric primitives.  This is the bench
-//! the §Perf iteration log in EXPERIMENTS.md is measured with.
+//! Hot-path microbenchmarks (DESIGN.md §Perf-L3 / DESIGN-PERF.md): the
+//! per-step cost decomposition of the coordinator — execution, literal
+//! conversion, gradient reduction, SGD — plus fabric primitives, and the
+//! arena-vs-seed comparisons for the flat-state refactor:
+//!
+//! - gradient reduction: per-tensor `Vec<Tensor>` accumulation + flatten
+//!   (the seed representation) vs one fused pass over a flat arena, with
+//!   a steady-state allocation count (must be zero for the arena path);
+//! - collectives: pooled zero-copy payloads vs per-send `Vec` clones;
+//! - ring parameter hand-off: per-hop buffer clone vs `Arc` handle clone.
+//!
+//! Results are printed and written to `BENCH_hotpath.json` (artifact-free
+//! portions always run; bundle sections require `make artifacts`).
 
 mod harness;
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use cyclic_dp::comm::collectives::{allreduce_mean, ring_allreduce};
-use cyclic_dp::comm::Fabric;
+use cyclic_dp::comm::{tags, Endpoint, Fabric};
 use cyclic_dp::coordinator::single::RefTrainer;
 use cyclic_dp::coordinator::{multi, SharedRuntime};
 use cyclic_dp::data::DataSource;
 use cyclic_dp::model::artifacts_root;
-use cyclic_dp::parallel::Rule;
+use cyclic_dp::parallel::arena::ArenaLayout;
+use cyclic_dp::parallel::{GradBuffer, Rule};
 use cyclic_dp::runtime::{tensor_to_literal, BundleRuntime};
-use cyclic_dp::tensor::ops::{add_into, reduce_rows};
+use cyclic_dp::tensor::ops::{add_into, axpy, reduce_rows};
 use cyclic_dp::tensor::Tensor;
+
+// ---- allocation accounting ------------------------------------------------
+// Counts every heap allocation so the bench can prove the arena reduction
+// loop is allocation-free in steady state.
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Synthetic model used by the artifact-free comparisons: 8 stages × 8
+/// tensors × 16384 elems ≈ 1M params.
+const N_STAGES: usize = 8;
+const T_PER_STAGE: usize = 8;
+const T_ELEMS: usize = 16_384;
+const N_MB: usize = 4;
+
+fn synth_shapes() -> Vec<Vec<Vec<usize>>> {
+    (0..N_STAGES)
+        .map(|_| (0..T_PER_STAGE).map(|_| vec![T_ELEMS]).collect())
+        .collect()
+}
 
 fn main() {
     let b = harness::Bench::new("hotpath");
+    let mut stats: Vec<harness::Stat> = Vec::new();
+    let mut counters: Vec<(String, f64)> = Vec::new();
 
     b.section("host reduction primitives (1M f32)");
     let x: Vec<f32> = (0..1_000_000).map(|i| i as f32 * 1e-6).collect();
     let mut acc = x.clone();
-    b.time("add_into 1M f32", 3, 50, || {
+    stats.push(b.time_stat("add_into 1M f32", 3, 50, || {
         add_into(&mut acc, &x);
-    });
+    }));
+    stats.push(b.time_stat("axpy 1M f32", 3, 50, || {
+        axpy(&mut acc, 0.5, &x);
+    }));
     let rows: Vec<&[f32]> = vec![&x, &x, &x, &x];
-    b.time("reduce_rows 4×1M f32", 3, 20, || {
+    stats.push(b.time_stat("reduce_rows 4×1M f32 (chunked)", 3, 20, || {
         std::hint::black_box(reduce_rows(&rows));
-    });
+    }));
 
-    b.section("fabric collectives (4 workers, 1M f32)");
-    for (label, ring) in [("flat allreduce", false), ("ring allreduce", true)] {
-        b.time(label, 1, 5, || {
+    // ---- arena vs seed: gradient reduction --------------------------------
+    b.section("gradient reduction: seed per-tensor vs flat arena (~1M params)");
+    let shapes = synth_shapes();
+    let layout = ArenaLayout::from_stage_shapes(&shapes);
+    let grad_row: Vec<f32> = (0..layout.total_len).map(|i| (i as f32).sin()).collect();
+
+    // seed representation: nested Vec<Vec<Tensor>> sums, per-tensor
+    // accumulation, then a flatten (fresh Vec) per stage as the seed's ring
+    // send path did
+    let grad_tensors: Vec<Vec<Tensor>> = layout.unflatten(&grad_row);
+    let mut seed_sums: Vec<Vec<Tensor>> = shapes
+        .iter()
+        .map(|st| st.iter().map(|s| Tensor::zeros(s.clone())).collect())
+        .collect();
+    stats.push(b.time_stat("reduce seed: per-tensor + flatten", 2, 20, || {
+        for st in seed_sums.iter_mut() {
+            for t in st.iter_mut() {
+                t.fill(0.0);
+            }
+        }
+        for _mb in 0..N_MB {
+            for (ss, gs) in seed_sums.iter_mut().zip(&grad_tensors) {
+                for (s, g) in ss.iter_mut().zip(gs) {
+                    s.add_assign(g);
+                }
+            }
+        }
+        // the seed's hand-off: flatten each stage into a fresh Vec
+        for st in &seed_sums {
+            let flat: Vec<f32> =
+                st.iter().flat_map(|t| t.data.iter().copied()).collect();
+            std::hint::black_box(flat);
+        }
+    }));
+
+    // arena representation: fused flat accumulation, zero allocations
+    let mut gbuf = GradBuffer::new(layout.clone(), N_MB);
+    let arena_step = |gbuf: &mut GradBuffer| {
+        for mb in 1..=N_MB {
+            gbuf.add_all_flat(mb, &grad_row);
+        }
+        gbuf.average();
+        for j in 0..N_STAGES {
+            std::hint::black_box(gbuf.stage(j));
+        }
+        gbuf.reset();
+    };
+    stats.push(b.time_stat("reduce arena: fused flat", 2, 20, || {
+        arena_step(&mut gbuf);
+    }));
+    // steady-state allocation proof: after warmup, N full reduction loops
+    // must not allocate at all
+    arena_step(&mut gbuf);
+    let a0 = allocs();
+    for _ in 0..10 {
+        arena_step(&mut gbuf);
+    }
+    let steady_allocs = allocs() - a0;
+    println!("  grad-reduction steady-state allocations      {steady_allocs} (want 0)");
+    counters.push(("grad_reduction_steady_state_allocs".into(), steady_allocs as f64));
+
+    // ---- fabric collectives ----------------------------------------------
+    b.section("fabric collectives (4 workers, 1M f32, pooled)");
+    for (label, ring) in [
+        ("flat allreduce (pooled)", false),
+        ("ring allreduce (pooled)", true),
+    ] {
+        stats.push(b.time_stat(label, 1, 5, || {
             let (eps, _) = Fabric::new(4);
             let handles: Vec<_> = eps
                 .into_iter()
                 .map(|mut ep| {
                     std::thread::spawn(move || {
                         let mut data = vec![1.0f32; 1_000_000];
-                        if ring {
-                            ring_allreduce(&mut ep, 0, &mut data);
-                        } else {
-                            allreduce_mean(&mut ep, 0, &mut data);
+                        for step in 0..4u64 {
+                            if ring {
+                                ring_allreduce(&mut ep, step, &mut data);
+                            } else {
+                                allreduce_mean(&mut ep, step, &mut data);
+                            }
                         }
                     })
                 })
                 .collect();
             handles.into_iter().for_each(|h| h.join().unwrap());
-        });
+        }));
+    }
+    // seed-style comparison: every send clones into a fresh Vec
+    stats.push(b.time_stat("ring allreduce (seed: clone per send)", 1, 5, || {
+        let (eps, _) = Fabric::new(4);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                std::thread::spawn(move || {
+                    let mut data = vec![1.0f32; 1_000_000];
+                    for step in 0..4u64 {
+                        ring_allreduce_unpooled(&mut ep, step, &mut data);
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().for_each(|h| h.join().unwrap());
+    }));
+    // pool effectiveness over a long-lived fabric
+    {
+        let (eps, _) = Fabric::new(4);
+        let pool = eps[0].pool().clone();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                std::thread::spawn(move || {
+                    let mut data = vec![1.0f32; 100_000];
+                    for step in 0..16u64 {
+                        ring_allreduce(&mut ep, step, &mut data);
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().for_each(|h| h.join().unwrap());
+        println!(
+            "  buffer pool over 16 ring rounds               recycled {} | allocated {}",
+            pool.recycled(),
+            pool.allocated()
+        );
+        counters.push(("ring16_pool_recycled".into(), pool.recycled() as f64));
+        counters.push(("ring16_pool_allocated".into(), pool.allocated() as f64));
     }
 
-    if !harness::have_bundle("mlp") {
+    // ---- arena vs seed: ring parameter hand-off ---------------------------
+    b.section("ring param hand-off (4 hops, 1M f32)");
+    let params_row: Vec<f32> = vec![0.5f32; 1_000_000];
+    stats.push(b.time_stat("hand-off seed: clone per hop", 1, 10, || {
+        run_handoff(&params_row, false);
+    }));
+    stats.push(b.time_stat("hand-off arena: payload handle", 1, 10, || {
+        run_handoff(&params_row, true);
+    }));
+
+    let have_mlp = harness::have_bundle("mlp");
+    if !have_mlp {
+        harness::write_json("BENCH_hotpath.json", "hotpath", &stats, &counters);
         return;
     }
     let rt = BundleRuntime::load(&artifacts_root().join("mlp")).unwrap();
 
     b.section("literal conversion (mlp stage-1 params)");
     let params = rt.init_params().unwrap();
-    b.time("tensor_to_literal stage 1 (4 tensors)", 3, 100, || {
+    stats.push(b.time_stat("tensor_to_literal stage 1 (4 tensors)", 3, 100, || {
         for t in &params[1] {
             std::hint::black_box(tensor_to_literal(t).unwrap());
         }
-    });
+    }));
+    let flat = rt.init_params_flat().unwrap();
+    let mlp_layout = ArenaLayout::from_manifest(&rt.manifest);
+    stats.push(b.time_stat("param_literals_flat stage 1", 3, 100, || {
+        std::hint::black_box(
+            rt.param_literals_flat(1, &flat[mlp_layout.stage_range(1)]).unwrap(),
+        );
+    }));
 
     b.section("executable dispatch (mlp bundle)");
     let data = DataSource::from_manifest(&rt.manifest);
@@ -74,41 +266,132 @@ fn main() {
         _ => unreachable!(),
     };
     let hx = cyclic_dp::tensor::HostTensor::F32(x);
-    b.time("stage_fwd(1)", 3, 50, || {
+    stats.push(b.time_stat("stage_fwd(1)", 3, 50, || {
         let y = rt.stage_fwd(0, &params[0], &hx).unwrap();
         std::hint::black_box(y);
-    });
+    }));
 
     b.section("end-to-end training step");
     let mut t = RefTrainer::new(&rt, Rule::CdpV2).unwrap();
-    b.time("RefTrainer::step (cdp_v2, mlp)", 2, 10, || {
+    stats.push(b.time_stat("RefTrainer::step (cdp_v2, mlp)", 2, 10, || {
         t.step().unwrap();
-    });
+    }));
 
     b.section("multi-worker step (4 threads)");
     let shared = SharedRuntime(Arc::new(rt));
-    b.time("multi ring 2 steps (cdp_v2)", 1, 3, || {
+    stats.push(b.time_stat("multi ring 2 steps (cdp_v2)", 1, 3, || {
         std::hint::black_box(
             multi::train(shared.clone(), Rule::CdpV2, multi::CommPattern::Ring, 2)
                 .unwrap(),
         );
-    });
-    b.time("multi barrier 2 steps (dp)", 1, 3, || {
+    }));
+    stats.push(b.time_stat("multi barrier 2 steps (dp)", 1, 3, || {
         std::hint::black_box(
             multi::train(shared.clone(), Rule::Dp, multi::CommPattern::Barrier, 2)
                 .unwrap(),
         );
-    });
+    }));
 
     let mut sgd_params = shared.init_params().unwrap();
     let mut moms = shared.zero_like_params();
     let grads = shared.zero_like_params();
     b.section("optimizer");
-    b.time("sgd_update all stages", 2, 20, || {
+    stats.push(b.time_stat("sgd_update all stages (per-tensor)", 2, 20, || {
         for j in 0..shared.manifest.n_stages {
             shared
                 .sgd_update(j, &mut sgd_params[j], &mut moms[j], &grads[j], 0.01)
                 .unwrap();
         }
-    });
+    }));
+    let mut flat_p = shared.init_params_flat().unwrap();
+    let mut flat_m = mlp_layout.zeros();
+    let mut flat_o = mlp_layout.zeros();
+    let flat_g = mlp_layout.zeros();
+    stats.push(b.time_stat("sgd_update_flat all stages (arena)", 2, 20, || {
+        for j in 0..shared.manifest.n_stages {
+            let r = mlp_layout.stage_range(j);
+            shared
+                .sgd_update_flat(
+                    j,
+                    &flat_p[r.clone()],
+                    &mut flat_m[r.clone()],
+                    &flat_g[r.clone()],
+                    0.01,
+                    &mut flat_o[r],
+                )
+                .unwrap();
+        }
+        std::mem::swap(&mut flat_p, &mut flat_o);
+    }));
+
+    harness::write_json("BENCH_hotpath.json", "hotpath", &stats, &counters);
+}
+
+/// The seed fabric's ring all-reduce: identical schedule, but every send
+/// clones the chunk into a fresh `Vec` (what `Endpoint::send` did before
+/// payloads were pooled).  Kept here as the A/B baseline.
+fn ring_allreduce_unpooled(ep: &mut Endpoint, step: u64, data: &mut [f32]) {
+    let n = ep.n;
+    if n == 1 {
+        return;
+    }
+    let len = data.len();
+    let chunk = |c: usize| -> std::ops::Range<usize> {
+        let base = len / n;
+        let rem = len % n;
+        let start = c * base + c.min(rem);
+        let size = base + usize::from(c < rem);
+        start..start + size
+    };
+    let me = ep.id;
+    for p in 0..n - 1 {
+        let send_c = (me + n - p) % n;
+        let recv_c = (me + n - p - 1) % n;
+        ep.send(ep.right(), tags::ring(step, p), data[chunk(send_c)].to_vec());
+        let part = ep.recv(ep.left(), tags::ring(step, p));
+        add_into(&mut data[chunk(recv_c)], &part);
+    }
+    for p in 0..n - 1 {
+        let send_c = (me + 1 + n - p) % n;
+        let recv_c = (me + n - p) % n;
+        ep.send(
+            ep.right(),
+            tags::ring(step, n + p),
+            data[chunk(send_c)].to_vec(),
+        );
+        let part = ep.recv(ep.left(), tags::ring(step, n + p));
+        data[chunk(recv_c)].copy_from_slice(&part);
+    }
+}
+
+/// Parameter hand-off around a 4-ring: rank 0 produces the fresh
+/// parameters, every other rank forwards them on.  `zero_copy` forwards
+/// the received payload handle; otherwise each hop clones into a fresh
+/// `Vec` (the seed behavior).
+fn run_handoff(params: &[f32], zero_copy: bool) {
+    let (eps, _) = Fabric::new(4);
+    let src = params.to_vec();
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|mut ep| {
+            let src = src.clone();
+            std::thread::spawn(move || {
+                let n = ep.n;
+                if ep.id == 0 {
+                    ep.send_copy(1, tags::param(0, 0), &src);
+                } else {
+                    let got = ep.recv(ep.left(), tags::param(0, 0));
+                    if ep.id + 1 < n {
+                        if zero_copy {
+                            ep.send(ep.id + 1, tags::param(0, 0), got.clone());
+                        } else {
+                            ep.send(ep.id + 1, tags::param(0, 0), got.to_vec());
+                        }
+                    }
+                    std::hint::black_box(got[0]);
+                }
+            })
+        })
+        .collect();
+    handles.into_iter().for_each(|h| h.join().unwrap());
 }

@@ -8,6 +8,10 @@
 //! - [`ring_allreduce`] — the bandwidth-optimal ring [Patarasuk & Yuan]:
 //!   2(N−1) phases of point-to-point chunk exchange.  This is the pattern
 //!   CDP amortizes across the whole training step.
+//!
+//! All sends stage through the fabric's buffer pool ([`Endpoint::send_copy`])
+//! and the broadcast fans one pooled payload out to every peer by handle
+//! clone, so in steady state the collectives allocate nothing per step.
 
 use super::{tags, Endpoint};
 use crate::tensor::ops::add_into;
@@ -25,25 +29,28 @@ pub fn reduce_to_root(ep: &mut Endpoint, root: usize, step: u64, data: &mut [f32
             add_into(data, &part);
         }
     } else {
-        ep.send(root, tags::ring(step, 1000 + ep.id), data.to_vec());
+        ep.send_copy(root, tags::ring(step, 1000 + ep.id), data);
     }
 }
 
-/// Broadcast root's `data` to everyone.
-pub fn broadcast(ep: &mut Endpoint, root: usize, step: u64, data: &mut Vec<f32>) {
+/// Broadcast root's `data` to everyone.  The root copies `data` into one
+/// pooled payload and fans the *handle* out — N−1 sends, one copy.
+pub fn broadcast(ep: &mut Endpoint, root: usize, step: u64, data: &mut [f32]) {
     if ep.id == root {
+        let payload = ep.pool().payload_from_slice(data);
         for to in 0..ep.n {
             if to != root {
-                ep.send(to, tags::ring(step, 2000), data.clone());
+                ep.send(to, tags::ring(step, 2000), payload.clone());
             }
         }
     } else {
-        *data = ep.recv(root, tags::ring(step, 2000));
+        let got = ep.recv(root, tags::ring(step, 2000));
+        data.copy_from_slice(&got);
     }
 }
 
-/// Flat all-reduce (reduce to root then broadcast), averaging by `scale`.
-pub fn allreduce_mean(ep: &mut Endpoint, step: u64, data: &mut Vec<f32>) {
+/// Flat all-reduce (reduce to root then broadcast), averaging by 1/n.
+pub fn allreduce_mean(ep: &mut Endpoint, step: u64, data: &mut [f32]) {
     reduce_to_root(ep, 0, step, data);
     if ep.id == 0 {
         let inv = 1.0 / ep.n as f32;
@@ -77,7 +84,7 @@ pub fn ring_allreduce(ep: &mut Endpoint, step: u64, data: &mut [f32]) {
     for p in 0..n - 1 {
         let send_c = (me + n - p) % n;
         let recv_c = (me + n - p - 1) % n;
-        ep.send(ep.right(), tags::ring(step, p), data[chunk(send_c)].to_vec());
+        ep.send_copy(ep.right(), tags::ring(step, p), &data[chunk(send_c)]);
         let part = ep.recv(ep.left(), tags::ring(step, p));
         add_into(&mut data[chunk(recv_c)], &part);
     }
@@ -85,11 +92,7 @@ pub fn ring_allreduce(ep: &mut Endpoint, step: u64, data: &mut [f32]) {
     for p in 0..n - 1 {
         let send_c = (me + 1 + n - p) % n;
         let recv_c = (me + n - p) % n;
-        ep.send(
-            ep.right(),
-            tags::ring(step, n + p),
-            data[chunk(send_c)].to_vec(),
-        );
+        ep.send_copy(ep.right(), tags::ring(step, n + p), &data[chunk(send_c)]);
         let part = ep.recv(ep.left(), tags::ring(step, n + p));
         data[chunk(recv_c)].copy_from_slice(&part);
     }
@@ -168,5 +171,29 @@ mod tests {
             data
         });
         assert_eq!(out[0][0].to_bits(), expect);
+    }
+
+    #[test]
+    fn repeated_allreduce_recycles_buffers() {
+        // After warmup, further allreduce rounds should be served almost
+        // entirely from the pool.
+        let (eps, _) = Fabric::new(3);
+        let pool = eps[0].pool().clone();
+        let mut handles = Vec::new();
+        for mut ep in eps {
+            handles.push(thread::spawn(move || {
+                let mut data = vec![ep.id as f32; 256];
+                for step in 0..20u64 {
+                    allreduce_mean(&mut ep, step, &mut data);
+                }
+            }));
+        }
+        handles.into_iter().for_each(|h| h.join().unwrap());
+        assert!(
+            pool.recycled() > pool.allocated(),
+            "pool should serve steady-state rounds: recycled {} vs allocated {}",
+            pool.recycled(),
+            pool.allocated()
+        );
     }
 }

@@ -8,13 +8,23 @@
 //! Determinism: `reduce_to_root` adds contributions in rank order, and the
 //! cyclic ring accumulates in micro-batch order — both match the
 //! single-process reference trainer bit-for-bit (DESIGN.md invariants).
+//!
+//! ## Zero-copy payloads and the buffer pool (DESIGN-PERF.md)
+//!
+//! Messages carry a [`Payload`] — a cheaply clonable (`Arc`) handle to an
+//! immutable `f32` buffer.  Forwarding a received payload along a ring or
+//! fanning one buffer out to N peers clones the handle, not the data.
+//! Buffers obtained from the fabric's shared [`BufferPool`] return to the
+//! pool when the last handle drops, so steady-state traffic recycles the
+//! same allocations step after step.
 
 pub mod collectives;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::ops::Deref;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, Weak};
 
 /// Global transfer accounting, shared by all endpoints of a fabric.
 #[derive(Debug, Default)]
@@ -33,11 +43,163 @@ impl CommStats {
     }
 }
 
+// ---------------------------------------------------------------- pool ----
+
+#[derive(Debug, Default)]
+struct PoolInner {
+    free: Mutex<Vec<Vec<f32>>>,
+    /// Buffers served from the free list (steady-state hits).
+    recycled: AtomicU64,
+    /// Buffers that had to be freshly allocated (cold-start misses).
+    allocated: AtomicU64,
+}
+
+/// Fabric-wide recycle bin for message buffers.  `Clone` shares the pool.
+#[derive(Clone, Debug, Default)]
+pub struct BufferPool {
+    inner: Arc<PoolInner>,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An empty buffer with capacity ≥ `len`, recycled when possible.
+    /// Prefers a free buffer whose capacity already fits (no regrow); a
+    /// recycled-but-undersized buffer counts as an allocation, so the
+    /// `recycled`/`allocated` counters honestly track heap traffic.
+    fn take(&self, len: usize) -> Vec<f32> {
+        let mut free = self.inner.free.lock().expect("pool poisoned");
+        if let Some(pos) = free.iter().position(|b| b.capacity() >= len) {
+            let mut buf = free.swap_remove(pos);
+            drop(free);
+            self.inner.recycled.fetch_add(1, Ordering::Relaxed);
+            buf.clear();
+            return buf;
+        }
+        let undersized = free.pop();
+        drop(free);
+        self.inner.allocated.fetch_add(1, Ordering::Relaxed);
+        match undersized {
+            Some(mut buf) => {
+                buf.clear();
+                buf.reserve(len);
+                buf
+            }
+            None => Vec::with_capacity(len),
+        }
+    }
+
+    /// Copy `src` into a pooled buffer and wrap it as a [`Payload`]
+    /// (the buffer returns here when the payload's last handle drops).
+    pub fn payload_from_slice(&self, src: &[f32]) -> Payload {
+        let mut buf = self.take(src.len());
+        buf.extend_from_slice(src);
+        Payload(Arc::new(PayloadBuf {
+            data: buf,
+            pool: Arc::downgrade(&self.inner),
+        }))
+    }
+
+    /// Buffers served from the free list so far.
+    pub fn recycled(&self) -> u64 {
+        self.inner.recycled.load(Ordering::Relaxed)
+    }
+
+    /// Buffers freshly allocated so far.
+    pub fn allocated(&self) -> u64 {
+        self.inner.allocated.load(Ordering::Relaxed)
+    }
+}
+
+// ------------------------------------------------------------- payload ----
+
+#[derive(Debug)]
+struct PayloadBuf {
+    data: Vec<f32>,
+    /// Owning pool, if any; `Weak` so dropping the fabric frees buffers.
+    pool: Weak<PoolInner>,
+}
+
+impl Drop for PayloadBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.upgrade() {
+            let buf = std::mem::take(&mut self.data);
+            pool.free.lock().expect("pool poisoned").push(buf);
+        }
+    }
+}
+
+/// A message body: shared, immutable `f32` data.  `clone` copies the
+/// handle, not the data — that is what makes ring forwarding and broadcast
+/// fan-out zero-copy.
+#[derive(Clone, Debug)]
+pub struct Payload(Arc<PayloadBuf>);
+
+impl Payload {
+    /// Wrap an owned vector (not pooled — it is freed on last drop).
+    pub fn from_vec(v: Vec<f32>) -> Self {
+        Payload(Arc::new(PayloadBuf { data: v, pool: Weak::new() }))
+    }
+
+    /// Mutable access.  Free when this handle is unique (the common case:
+    /// a received message has exactly one owner); falls back to one copy
+    /// when the buffer is shared (e.g. a broadcast payload someone kept).
+    pub fn make_mut(&mut self) -> &mut [f32] {
+        if Arc::get_mut(&mut self.0).is_none() {
+            let copied = self.0.data.clone();
+            self.0 = Arc::new(PayloadBuf { data: copied, pool: Weak::new() });
+        }
+        &mut Arc::get_mut(&mut self.0).expect("unique after copy").data
+    }
+
+    /// Extract the underlying vector: moves when unique, copies otherwise.
+    /// The buffer is detached from its pool either way.
+    pub fn into_vec(self) -> Vec<f32> {
+        match Arc::try_unwrap(self.0) {
+            Ok(mut buf) => {
+                buf.pool = Weak::new(); // don't recycle — caller owns it now
+                std::mem::take(&mut buf.data)
+            }
+            Err(shared) => shared.data.clone(),
+        }
+    }
+}
+
+impl Deref for Payload {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.0.data
+    }
+}
+
+impl From<Vec<f32>> for Payload {
+    fn from(v: Vec<f32>) -> Self {
+        Payload::from_vec(v)
+    }
+}
+
+impl PartialEq<[f32]> for Payload {
+    fn eq(&self, other: &[f32]) -> bool {
+        **self == *other
+    }
+}
+
+impl PartialEq<Vec<f32>> for Payload {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        **self == other[..]
+    }
+}
+
+// ------------------------------------------------------------ endpoint ----
+
 #[derive(Debug)]
 struct Msg {
     from: usize,
     tag: u64,
-    data: Vec<f32>,
+    data: Payload,
 }
 
 /// One worker's endpoint: send to any peer, tagged blocking receive.
@@ -47,14 +209,17 @@ pub struct Endpoint {
     txs: Vec<Sender<Msg>>,
     rx: Receiver<Msg>,
     /// Out-of-order arrivals parked until someone asks for them.
-    parked: HashMap<(usize, u64), Vec<Vec<f32>>>,
+    parked: HashMap<(usize, u64), VecDeque<Payload>>,
     stats: Arc<CommStats>,
+    pool: BufferPool,
 }
 
 impl Endpoint {
     /// Send `data` to `to` under `tag`.  f32 payloads only (params, grads,
-    /// activations — everything the paper communicates).
-    pub fn send(&self, to: usize, tag: u64, data: Vec<f32>) {
+    /// activations — everything the paper communicates).  Accepts a
+    /// [`Payload`] (zero-copy hand-off / forward) or a plain `Vec<f32>`.
+    pub fn send(&self, to: usize, tag: u64, data: impl Into<Payload>) {
+        let data = data.into();
         assert_ne!(to, self.id, "self-send");
         self.stats
             .bytes
@@ -65,11 +230,18 @@ impl Endpoint {
             .expect("peer endpoint dropped");
     }
 
+    /// Send a copy of `data`, staged through the fabric's buffer pool so
+    /// steady-state sends allocate nothing.
+    pub fn send_copy(&self, to: usize, tag: u64, data: &[f32]) {
+        let payload = self.pool.payload_from_slice(data);
+        self.send(to, tag, payload);
+    }
+
     /// Blocking receive of the message sent by `from` under `tag`.
-    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
+    pub fn recv(&mut self, from: usize, tag: u64) -> Payload {
         if let Some(q) = self.parked.get_mut(&(from, tag)) {
-            if !q.is_empty() {
-                return q.remove(0);
+            if let Some(p) = q.pop_front() {
+                return p;
             }
         }
         loop {
@@ -80,12 +252,17 @@ impl Endpoint {
             self.parked
                 .entry((msg.from, msg.tag))
                 .or_default()
-                .push(msg.data);
+                .push_back(msg.data);
         }
     }
 
     pub fn stats(&self) -> &Arc<CommStats> {
         &self.stats
+    }
+
+    /// The fabric-wide buffer pool this endpoint stages copies through.
+    pub fn pool(&self) -> &BufferPool {
+        &self.pool
     }
 
     pub fn right(&self) -> usize {
@@ -103,6 +280,7 @@ pub struct Fabric;
 impl Fabric {
     pub fn new(n: usize) -> (Vec<Endpoint>, Arc<CommStats>) {
         let stats = Arc::new(CommStats::default());
+        let pool = BufferPool::new();
         let mut txs_all = Vec::with_capacity(n);
         let mut rxs = Vec::with_capacity(n);
         for _ in 0..n {
@@ -120,6 +298,7 @@ impl Fabric {
                 rx,
                 parked: HashMap::new(),
                 stats: stats.clone(),
+                pool: pool.clone(),
             })
             .collect();
         (endpoints, stats)
@@ -127,31 +306,57 @@ impl Fabric {
 }
 
 /// Tag namespaces so concurrent protocols on one fabric can't collide.
+///
+/// Layout (64 bits): `namespace(8) | step(32) | sub(24)`.  Steps are
+/// masked to 32 bits — beyond any training run — and the sub field holds
+/// protocol-specific addressing (stage, phase, micro-batch).  Nothing can
+/// bleed across namespaces for any step < 2³² (tested below, including
+/// steps ≥ 2²⁴ that overflowed the previous packing).
 pub mod tags {
+    const NS_SHIFT: u32 = 56;
+    const STEP_SHIFT: u32 = 24;
+    const STEP_MASK: u64 = (1 << 32) - 1;
+    const SUB_MASK: u64 = (1 << 24) - 1;
+
+    fn pack(ns: u64, step: u64, sub: u64) -> u64 {
+        debug_assert!(step <= STEP_MASK, "step {step} exceeds 32-bit tag field");
+        debug_assert!(sub <= SUB_MASK, "sub {sub:#x} exceeds 24-bit tag field");
+        (ns << NS_SHIFT) | ((step & STEP_MASK) << STEP_SHIFT) | (sub & SUB_MASK)
+    }
+
     /// grad fragment for (step, stage)
     pub fn grad(step: u64, stage: usize) -> u64 {
-        0x1_0000_0000 | (step << 8) | stage as u64
+        pack(1, step, stage as u64)
+    }
+
+    /// per-micro-batch grad fragment for (step, stage, mb) — used by
+    /// sharded reductions where partial sums from distinct micro-batches
+    /// must stay distinguishable.
+    pub fn grad_part(step: u64, stage: usize, mb: usize) -> u64 {
+        debug_assert!(stage < 1 << 8 && mb < 1 << 16);
+        pack(2, step, ((mb as u64) << 8) | stage as u64)
     }
 
     /// updated params for (step, stage)
     pub fn param(step: u64, stage: usize) -> u64 {
-        0x2_0000_0000 | (step << 8) | stage as u64
+        pack(3, step, stage as u64)
     }
 
     /// scalar loss report for step
     pub fn loss(step: u64) -> u64 {
-        0x3_0000_0000 | step
+        pack(4, step, 0)
     }
 
     /// ring all-reduce phase p of step
     pub fn ring(step: u64, phase: usize) -> u64 {
-        0x4_0000_0000 | (step << 8) | phase as u64
+        pack(5, step, phase as u64)
     }
 
     /// activation / activation-grad between pipeline stages
     pub fn act(step: u64, mb: usize, fwd: bool) -> u64 {
-        let dir = if fwd { 0x10 } else { 0x20 };
-        0x5_0000_0000 | (step << 16) | ((mb as u64) << 8) | dir
+        let dir: u64 = if fwd { 0x1 } else { 0x2 };
+        debug_assert!(mb < 1 << 16);
+        pack(6, step, ((mb as u64) << 8) | dir)
     }
 }
 
@@ -191,6 +396,22 @@ mod tests {
     }
 
     #[test]
+    fn parked_queue_is_fifo() {
+        let (mut eps, _) = Fabric::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        // same (from, tag) three times, parked behind a different tag
+        e0.send(1, 9, vec![1.0]);
+        e0.send(1, 9, vec![2.0]);
+        e0.send(1, 9, vec![3.0]);
+        e0.send(1, 10, vec![99.0]);
+        assert_eq!(e1.recv(0, 10), vec![99.0]); // parks all three tag-9 msgs
+        assert_eq!(e1.recv(0, 9), vec![1.0]);
+        assert_eq!(e1.recv(0, 9), vec![2.0]);
+        assert_eq!(e1.recv(0, 9), vec![3.0]);
+    }
+
+    #[test]
     fn neighbors_modulo_n() {
         let (eps, _) = Fabric::new(3);
         assert_eq!(eps[0].right(), 1);
@@ -199,16 +420,58 @@ mod tests {
     }
 
     #[test]
+    fn payload_clone_shares_and_make_mut_copies_only_when_shared() {
+        let mut a = Payload::from_vec(vec![1.0, 2.0]);
+        let b = a.clone();
+        // shared → make_mut must copy, leaving the clone untouched
+        a.make_mut()[0] = 9.0;
+        assert_eq!(a, vec![9.0, 2.0]);
+        assert_eq!(b, vec![1.0, 2.0]);
+        // unique → make_mut mutates in place (no way to observe the
+        // non-copy directly here; pool stats cover it below)
+        let mut c = Payload::from_vec(vec![5.0]);
+        c.make_mut()[0] = 6.0;
+        assert_eq!(c.into_vec(), vec![6.0]);
+    }
+
+    #[test]
+    fn pool_recycles_buffers_across_messages() {
+        let (mut eps, _) = Fabric::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let data = vec![1.0f32; 128];
+        for i in 0..10u64 {
+            e0.send_copy(1, i, &data);
+            let got = e1.recv(0, i);
+            assert_eq!(got, data);
+            drop(got); // last handle → buffer returns to the shared pool
+        }
+        let pool = e0.pool();
+        assert_eq!(pool.allocated(), 1, "one cold-start allocation");
+        assert_eq!(pool.recycled(), 9, "steady state recycles");
+    }
+
+    #[test]
     fn tags_disjoint() {
         let mut seen = std::collections::HashSet::new();
-        for step in 0..4u64 {
+        // includes steps past 2^24 (the old packing collided there) and
+        // up to the 32-bit step-field limit
+        let steps = [0u64, 1, 2, 3, (1 << 24) - 1, 1 << 24, (1 << 24) + 5, (1 << 31), u32::MAX as u64];
+        for &step in &steps {
             for stage in 0..4usize {
                 assert!(seen.insert(tags::grad(step, stage)));
                 assert!(seen.insert(tags::param(step, stage)));
                 assert!(seen.insert(tags::ring(step, stage)));
                 assert!(seen.insert(tags::act(step, stage, true)));
                 assert!(seen.insert(tags::act(step, stage, false)));
+                for mb in 1..=4usize {
+                    assert!(seen.insert(tags::grad_part(step, stage, mb)));
+                }
             }
+            // ring phases used by the collectives (reduce 1000+rank,
+            // broadcast 2000) stay clear of plain stage phases
+            assert!(seen.insert(tags::ring(step, 1000)));
+            assert!(seen.insert(tags::ring(step, 2000)));
             assert!(seen.insert(tags::loss(step)));
         }
     }

@@ -17,6 +17,12 @@
 //!   highlights: max communications *between two time steps* is O(1) here
 //!   vs a collective in DP.
 //!
+//! Hot-path layout (DESIGN-PERF.md): every worker's parameters, momentum
+//! and gradients are flat arenas; the ring forwards received payloads by
+//! handle (zero-copy) and mutates partial sums in place, and the DP
+//! all-reduce runs over the model-wide gradient run with pooled buffers.
+//! Steady-state steps perform no host-side allocation for model state.
+//!
 //! Loss sequences are bit-identical to [`super::single::RefTrainer`] under
 //! the same rule (tested in rust/tests/trainer_equivalence.rs).
 
@@ -24,11 +30,12 @@ use anyhow::Result;
 
 use super::{SharedRuntime, StepLog};
 use crate::cluster::run_workers;
-use crate::comm::collectives::{broadcast, reduce_to_root};
+use crate::comm::collectives::allreduce_mean;
 use crate::comm::{tags, CommStats, Endpoint, Fabric};
 use crate::data::{DataSource, MicroBatch};
+use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{ParamStore, Rule};
-use crate::tensor::{HostTensor, Tensor};
+use crate::tensor::{ops, HostTensor};
 use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -87,27 +94,8 @@ pub fn train(
     })
 }
 
-/// Flatten per-stage grads (stage-major, manifest order).
-fn flatten(grads: &[Vec<Tensor>]) -> Vec<f32> {
-    grads
-        .iter()
-        .flat_map(|st| st.iter().flat_map(|t| t.data.iter().copied()))
-        .collect()
-}
-
-fn unflatten_into(flat: &[f32], dst: &mut [Vec<Tensor>]) {
-    let mut off = 0;
-    for st in dst.iter_mut() {
-        for t in st.iter_mut() {
-            let len = t.data.len();
-            t.data.copy_from_slice(&flat[off..off + len]);
-            off += len;
-        }
-    }
-    assert_eq!(off, flat.len());
-}
-
-/// One micro-batch fwd+bwd at θ̂ (shared by both worker bodies).
+/// One micro-batch fwd+bwd at θ̂, gradients written into the model-wide
+/// flat scratch `gmb` (shared by both worker bodies).
 fn compute_grads(
     rt: &SharedRuntime,
     store: &ParamStore,
@@ -115,8 +103,10 @@ fn compute_grads(
     rule: &Rule,
     t: u64,
     i: usize,
-) -> Result<(f32, Vec<Vec<Tensor>>)> {
+    gmb: &mut [f32],
+) -> Result<f32> {
     let n = rt.manifest.n_stages;
+    let layout = store.layout();
     let mb = data.microbatch(t, (i - 1) as u64);
     let (x0, targets) = match &mb {
         MicroBatch::Lm { tokens, targets } => {
@@ -128,25 +118,34 @@ fn compute_grads(
     };
     let mut inputs: Vec<HostTensor> = vec![x0];
     for j in 0..n - 1 {
-        let y = rt.stage_fwd(j, store.select(rule, i, j), &inputs[j])?;
+        let y = rt.stage_fwd_flat(j, store.select(rule, i, j), &inputs[j])?;
         inputs.push(HostTensor::F32(y));
     }
-    let mut grads: Vec<Vec<Tensor>> = vec![Vec::new(); n];
     let last = n - 1;
-    let (loss, mut gx, gp) = rt.last_bwd(
+    let (loss, mut gx) = rt.last_bwd_flat(
         store.select(rule, i, last),
         inputs[last].as_f32().unwrap(),
         &targets,
+        &mut gmb[layout.stage_range(last)],
     )?;
-    grads[last] = gp;
     for j in (1..last).rev() {
-        let (gx_new, gp) =
-            rt.mid_bwd(j, store.select(rule, i, j), inputs[j].as_f32().unwrap(), &gx)?;
-        grads[j] = gp;
-        gx = gx_new;
+        gx = rt.mid_bwd_flat(
+            j,
+            store.select(rule, i, j),
+            inputs[j].as_f32().unwrap(),
+            &gx,
+            &mut gmb[layout.stage_range(j)],
+        )?;
     }
-    grads[0] = rt.first_bwd(store.select(rule, i, 0), &inputs[0], &gx)?;
-    Ok((loss, grads))
+    if n > 1 {
+        rt.first_bwd_flat(
+            store.select(rule, i, 0),
+            &inputs[0],
+            &gx,
+            &mut gmb[layout.stage_range(0)],
+        )?;
+    }
+    Ok(loss)
 }
 
 /// DP worker: compute → barrier all-reduce → identical local update.
@@ -158,38 +157,26 @@ fn worker_dp(
     steps: usize,
 ) -> Result<Vec<StepLog>> {
     let n = rt.manifest.n_stages;
-    let init = rt.init_params()?;
-    let mut store = ParamStore::new(init);
+    let layout = ArenaLayout::from_manifest(&rt.manifest);
+    let mut store = ParamStore::from_flat(layout.clone(), rt.init_params_flat()?);
     let data = DataSource::from_manifest(&rt.manifest);
+    let mut gmb = layout.zeros();
     let mut logs = Vec::new();
 
     for t in 0..steps as u64 {
-        let (loss, grads) = compute_grads(rt, &store, &data, rule, t, w + 1)?;
+        let loss = compute_grads(rt, &store, &data, rule, t, w + 1, &mut gmb)?;
 
-        // synchronous all-reduce (the paper's waiting barrier)
-        let mut flat = flatten(&grads);
-        reduce_to_root(ep, 0, t, &mut flat);
-        if ep.id == 0 {
-            let inv = 1.0 / ep.n as f32;
-            for v in flat.iter_mut() {
-                *v *= inv;
-            }
-        }
-        broadcast(ep, 0, t, &mut flat);
-
-        let mut averaged: Vec<Vec<Tensor>> = rt.zero_like_params();
-        unflatten_into(&flat, &mut averaged);
+        // synchronous all-reduce over the model-wide gradient run (the
+        // paper's waiting barrier); rank-ordered sum + 1/N at the root
+        allreduce_mean(ep, t, &mut gmb);
 
         // every replica applies the identical update (N optimizer copies)
-        let mut new_params = Vec::with_capacity(n);
         let lr = rt.manifest.lr;
         for j in 0..n {
-            let mut p = store.fresh(j).clone();
-            let (_c, moms) = store.stage_mut(j);
-            rt.sgd_update(j, &mut p, moms, &averaged[j], lr)?;
-            new_params.push(p);
+            let (cur, moms, next) = store.update_parts(j);
+            rt.sgd_update_flat(j, cur, moms, &gmb[layout.stage_range(j)], lr, next)?;
         }
-        store.commit_step(new_params);
+        store.commit_step();
 
         // loss reporting: mean over micro-batches, gathered at worker 0
         if ep.id == 0 {
@@ -217,84 +204,62 @@ fn worker_ring(
     let n = rt.manifest.n_stages;
     let n_mb = ep.n;
     let owner = n_mb - 1; // worker of micro-batch N: the only optimizer state
-    let init = rt.init_params()?;
-    let mut store = ParamStore::new(init);
+    let layout = ArenaLayout::from_manifest(&rt.manifest);
+    let mut store = ParamStore::from_flat(layout.clone(), rt.init_params_flat()?);
     let data = DataSource::from_manifest(&rt.manifest);
+    let mut gmb = layout.zeros();
     let mut logs = Vec::new();
+    let lr = rt.manifest.lr;
+    let inv = 1.0 / n_mb as f32;
 
     for t in 0..steps as u64 {
-        let (loss, grads) = compute_grads(rt, &store, &data, rule, t, w + 1)?;
+        let loss = compute_grads(rt, &store, &data, rule, t, w + 1, &mut gmb)?;
 
         // --- balanced gradient reduction: partial sums travel the ring in
         // micro-batch order (worker 0 = mb 1 starts; each adds its own and
-        // forwards), one stage at a time — the Fig 1c hand-off.  The owner
-        // ends up with Σ_i ∇f_i in exactly the reference sum order.
-        let mut full_sums: Vec<Vec<f32>> = Vec::new(); // owner only
+        // forwards), one stage at a time — the Fig 1c hand-off.  Received
+        // payloads are mutated in place (unique handles) and re-sent, so a
+        // hop neither copies nor allocates.  The owner ends up with
+        // Σ_i ∇f_i in exactly the reference sum order, averages while
+        // adding its own contribution (fused), updates the stage and hands
+        // the fresh parameters down the ring.
         for j in 0..n {
-            let own: Vec<f32> =
-                grads[j].iter().flat_map(|t| t.data.iter().copied()).collect();
+            let range = layout.stage_range(j);
             if n_mb == 1 {
-                full_sums.push(own);
+                // single worker: own grads are the full sum
+                let g = &mut gmb[range];
+                ops::scale(g, inv);
+                let (cur, moms, next) = store.update_parts(j);
+                rt.sgd_update_flat(j, cur, moms, g, lr, next)?;
             } else if w == 0 {
-                ep.send(1, tags::grad(t, j), own);
+                ep.send_copy(1, tags::grad(t, j), &gmb[range]);
             } else {
                 let mut part = ep.recv(w - 1, tags::grad(t, j));
-                for (p, v) in part.iter_mut().zip(&own) {
-                    *p += v;
-                }
                 if w < owner {
+                    ops::add_into(part.make_mut(), &gmb[range]);
                     ep.send(w + 1, tags::grad(t, j), part);
                 } else {
-                    full_sums.push(part);
+                    // owner: add own contribution and average in one pass
+                    ops::add_scale(part.make_mut(), &gmb[range], inv);
+                    let (cur, moms, next) = store.update_parts(j);
+                    rt.sgd_update_flat(j, cur, moms, &part, lr, next)?;
+                    ep.send_copy(ep.right(), tags::param(t, j), store.next_stage(j));
                 }
             }
         }
 
-        // --- owner updates each stage and hands fresh params down the ring
-        let lr = rt.manifest.lr;
-        let mut new_params: Vec<Vec<Tensor>> = Vec::with_capacity(n);
-        if w == owner {
-            let inv = 1.0 / n_mb as f32;
-            for (j, mut flat) in full_sums.into_iter().enumerate() {
-                for v in flat.iter_mut() {
-                    *v *= inv;
-                }
-                let mut averaged = Vec::with_capacity(grads[j].len());
-                let mut off = 0;
-                for g in &grads[j] {
-                    let len = g.data.len();
-                    averaged.push(Tensor::new(g.shape.clone(), flat[off..off + len].to_vec()));
-                    off += len;
-                }
-                let mut p = store.fresh(j).clone();
-                let (_c, moms) = store.stage_mut(j);
-                rt.sgd_update(j, &mut p, moms, &averaged, lr)?;
-                if n_mb > 1 {
-                    let flat_p: Vec<f32> =
-                        p.iter().flat_map(|t| t.data.iter().copied()).collect();
-                    ep.send(ep.right(), tags::param(t, j), flat_p);
-                }
-                new_params.push(p);
-            }
-        } else {
-            // receive fresh stage params from the left, forward along the
-            // ring until the hop before the owner
+        // --- non-owners: fresh stage params hop the ring from the owner;
+        // forward the payload by handle, then write it into the next slot
+        if w != owner && n_mb > 1 {
             for j in 0..n {
                 let flat = ep.recv(ep.left(), tags::param(t, j));
                 if ep.right() != owner {
                     ep.send(ep.right(), tags::param(t, j), flat.clone());
                 }
-                let mut stage = store.fresh(j).clone();
-                let mut off = 0;
-                for p in stage.iter_mut() {
-                    let len = p.data.len();
-                    p.data.copy_from_slice(&flat[off..off + len]);
-                    off += len;
-                }
-                new_params.push(stage);
+                store.write_next(j, &flat);
             }
         }
-        store.commit_step(new_params);
+        store.commit_step();
 
         // loss gathering at worker 0 (mb order)
         if ep.id == 0 {

@@ -25,6 +25,7 @@ use super::StepLog;
 use crate::cluster::DeviceMem;
 use crate::data::{DataSource, MicroBatch};
 use crate::metrics::Metrics;
+use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{GradBuffer, ParamStore, Rule};
 use crate::runtime::BundleRuntime;
 use crate::tensor::{HostTensor, Tensor};
@@ -139,9 +140,11 @@ pub fn train(
 ) -> Result<PipelineReport> {
     let n = rt.manifest.n_stages;
     let m = rt.manifest.n_microbatches;
-    let init = rt.init_params()?;
-    let mut store = ParamStore::new(init);
-    let mut grads = GradBuffer::from_params(&rt.zero_like_params(), m);
+    let layout = ArenaLayout::from_manifest(&rt.manifest);
+    let mut store = ParamStore::from_flat(layout.clone(), rt.init_params_flat()?);
+    let mut grads = GradBuffer::new(layout.clone(), m);
+    // per-op gradient scratch: one stage run at a time, reused
+    let mut gop = layout.zeros();
     let data = DataSource::from_manifest(&rt.manifest);
     let mut metrics = Metrics::new();
     let mut devices: Vec<DeviceMem> = (0..n).map(|_| DeviceMem::unbounded()).collect();
@@ -184,7 +187,7 @@ pub fn train(
                         .unwrap();
                     if stage < n - 1 {
                         let params = store.select(&rule, mb + 1, stage);
-                        let y = rt.stage_fwd(stage, params, &x)?;
+                        let y = rt.stage_fwd_flat(stage, params, &x)?;
                         act_comm += (y.data.len() * 4) as u64; // → next device
                         inputs.insert((mb, stage + 1), HostTensor::F32(y));
                     }
@@ -192,32 +195,39 @@ pub fn train(
                 }
                 PipeOp::Bwd { mb, stage } => {
                     let params = store.select(&rule, mb + 1, stage);
+                    let grange = layout.stage_range(stage);
                     if stage == n - 1 {
                         let x = inputs.get(&(mb, stage)).unwrap();
-                        let (loss, gx, gp) = rt.last_bwd(
+                        let (loss, gx) = rt.last_bwd_flat(
                             params,
                             x.as_f32().unwrap(),
                             &targets_of[&mb],
+                            &mut gop[grange.clone()],
                         )?;
                         losses[mb] = loss as f64;
                         if n > 1 {
                             act_comm += (gx.data.len() * 4) as u64;
                             gxs.insert(mb, gx);
                         }
-                        grads.add(stage, mb + 1, &gp);
+                        grads.add_flat(stage, mb + 1, &gop[grange]);
                     } else if stage > 0 {
                         let x = inputs.get(&(mb, stage)).unwrap();
                         let gy = gxs.remove(&mb).unwrap();
-                        let (gx, gp) =
-                            rt.mid_bwd(stage, params, x.as_f32().unwrap(), &gy)?;
+                        let gx = rt.mid_bwd_flat(
+                            stage,
+                            params,
+                            x.as_f32().unwrap(),
+                            &gy,
+                            &mut gop[grange.clone()],
+                        )?;
                         act_comm += (gx.data.len() * 4) as u64;
                         gxs.insert(mb, gx);
-                        grads.add(stage, mb + 1, &gp);
+                        grads.add_flat(stage, mb + 1, &gop[grange]);
                     } else {
                         let x = inputs.get(&(mb, 0)).unwrap();
                         let gy = gxs.remove(&mb).unwrap();
-                        let gp = rt.first_bwd(params, x, &gy)?;
-                        grads.add(0, mb + 1, &gp);
+                        rt.first_bwd_flat(params, x, &gy, &mut gop[grange.clone()])?;
+                        grads.add_flat(0, mb + 1, &gop[grange]);
                     }
                     inputs.remove(&(mb, stage));
                     devices[dev].free("stash").unwrap();
@@ -226,16 +236,15 @@ pub fn train(
         }
 
         // update (per-stage averaged grads, same order as reference)
-        let averaged = grads.take_averaged();
-        let mut new_params = Vec::with_capacity(n);
+        grads.average();
         let lr = rt.manifest.lr;
         for j in 0..n {
-            let mut p = store.fresh(j).clone();
-            let (_c, moms) = store.stage_mut(j);
-            rt.sgd_update(j, &mut p, moms, &averaged[j], lr)?;
-            new_params.push(p);
+            let g = grads.stage(j);
+            let (cur, moms, next) = store.update_parts(j);
+            rt.sgd_update_flat(j, cur, moms, g, lr, next)?;
         }
-        store.commit_step(new_params);
+        grads.reset();
+        store.commit_step();
 
         let loss = losses.iter().sum::<f64>() / m as f64;
         metrics.record("loss", step as f64, loss);

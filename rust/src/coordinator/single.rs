@@ -8,12 +8,19 @@
 //! the threaded trainers and the paper's "Single-GPU" setting (§4.1): the
 //! activation-memory difference between DP and CDP on one device is
 //! measured by `memsim` over the same schedule this trainer realizes.
+//!
+//! Hot-path layout (DESIGN-PERF.md): parameters, momentum and gradient
+//! sums live in flat arenas; each micro-batch's backward writes into one
+//! persistent model-wide scratch run that the grad buffer accumulates
+//! from.  After warm-up a training step performs no host-side allocation
+//! for parameter or gradient state.
 
 use anyhow::Result;
 
 use super::StepLog;
 use crate::data::{DataSource, MicroBatch};
 use crate::metrics::Metrics;
+use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{GradBuffer, ParamStore, Rule};
 use crate::runtime::BundleRuntime;
 use crate::tensor::{HostTensor, Tensor};
@@ -26,22 +33,16 @@ pub struct RefTrainer<'rt> {
     pub lr: f32,
     pub metrics: Metrics,
     grads: GradBuffer,
+    /// Per-micro-batch gradient scratch (model-wide flat run, reused).
+    gmb: Vec<f32>,
 }
 
 impl<'rt> RefTrainer<'rt> {
     pub fn new(rt: &'rt BundleRuntime, rule: Rule) -> Result<Self> {
-        let init = rt.init_params()?;
-        let n_mb = rt.manifest.n_microbatches;
-        let grads = GradBuffer::from_params(&init, n_mb);
-        Ok(Self {
-            rt,
-            store: ParamStore::new(init),
-            data: DataSource::from_manifest(&rt.manifest),
-            rule,
-            lr: rt.manifest.lr,
-            metrics: Metrics::new(),
-            grads,
-        })
+        let layout = ArenaLayout::from_manifest(&rt.manifest);
+        let flat = rt.init_params_flat()?;
+        let store = ParamStore::from_flat(layout.clone(), flat);
+        Ok(Self::assemble(rt, rule, store))
     }
 
     /// With explicit initial params (equivalence tests inject these).
@@ -50,30 +51,38 @@ impl<'rt> RefTrainer<'rt> {
         rule: Rule,
         init: Vec<Vec<Tensor>>,
     ) -> Self {
+        Self::assemble(rt, rule, ParamStore::new(init))
+    }
+
+    fn assemble(rt: &'rt BundleRuntime, rule: Rule, store: ParamStore) -> Self {
         let n_mb = rt.manifest.n_microbatches;
-        let grads = GradBuffer::from_params(&init, n_mb);
+        let layout = store.layout().clone();
         Self {
             rt,
-            store: ParamStore::new(init),
+            store,
             data: DataSource::from_manifest(&rt.manifest),
             rule,
             lr: rt.manifest.lr,
             metrics: Metrics::new(),
-            grads,
+            grads: GradBuffer::new(layout.clone(), n_mb),
+            gmb: layout.zeros(),
         }
     }
 
-    /// One micro-batch's fwd+bwd at the rule-selected parameter versions.
-    /// `lits[stage]` are the pre-uploaded literals for *this* micro-batch's
-    /// θ̂ versions (DESIGN.md §Perf-L3: parameters are uploaded once per
+    /// One micro-batch's fwd+bwd at the rule-selected parameter versions,
+    /// gradients written into `gmb` (model-wide flat run).  `lits[stage]`
+    /// are the pre-uploaded literals for *this* micro-batch's θ̂ versions
+    /// (DESIGN.md §Perf-L3: parameters are uploaded once per
     /// (stage, version) per training step, not once per micro-batch).
     fn run_microbatch(
         &self,
         t: u64,
         i: usize,
         lits: &[&Vec<xla::Literal>],
-    ) -> Result<(f32, Vec<Vec<Tensor>>)> {
+        gmb: &mut [f32],
+    ) -> Result<f32> {
         let n = self.rt.manifest.n_stages;
+        let layout = self.store.layout();
         let mb = self.data.microbatch(t, (i - 1) as u64);
         let (x0, targets): (HostTensor, _) = match &mb {
             MicroBatch::Lm { tokens, targets } => {
@@ -91,22 +100,34 @@ impl<'rt> RefTrainer<'rt> {
             inputs.push(HostTensor::F32(y));
         }
 
-        // backward chain
-        let mut grads: Vec<Vec<Tensor>> = vec![Vec::new(); n];
+        // backward chain, straight into the arena scratch
         let last = n - 1;
         let x_last = inputs[last].as_f32().expect("loss stage input is f32");
-        let (loss, mut gx, gp) = self.rt.last_bwd_lits(lits[last], x_last, &targets)?;
-        grads[last] = gp;
+        let (loss, mut gx) = self.rt.last_bwd_lits_into(
+            lits[last],
+            x_last,
+            &targets,
+            &mut gmb[layout.stage_range(last)],
+        )?;
         for j in (1..last).rev() {
             let x = inputs[j].as_f32().unwrap();
-            let (gx_new, gp) = self.rt.mid_bwd_lits(j, lits[j], x, &gx)?;
-            grads[j] = gp;
-            gx = gx_new;
+            gx = self.rt.mid_bwd_lits_into(
+                j,
+                lits[j],
+                x,
+                &gx,
+                &mut gmb[layout.stage_range(j)],
+            )?;
         }
         if n > 1 {
-            grads[0] = self.rt.first_bwd_lits(lits[0], &inputs[0], &gx)?;
+            self.rt.first_bwd_lits_into(
+                lits[0],
+                &inputs[0],
+                &gx,
+                &mut gmb[layout.stage_range(0)],
+            )?;
         }
-        Ok((loss, grads))
+        Ok(loss)
     }
 
     /// Run one full training step (N micro-batches + update).
@@ -124,11 +145,11 @@ impl<'rt> RefTrainer<'rt> {
                 match self.rule.version(i, j + 1, n) {
                     Version::Fresh if fresh_lits[j].is_none() => {
                         fresh_lits[j] =
-                            Some(self.rt.param_literals(self.store.fresh(j))?);
+                            Some(self.rt.param_literals_flat(j, self.store.fresh(j))?);
                     }
                     Version::Stale if stale_lits[j].is_none() => {
                         stale_lits[j] =
-                            Some(self.rt.param_literals(self.store.stale(j))?);
+                            Some(self.rt.param_literals_flat(j, self.store.stale(j))?);
                     }
                     _ => {}
                 }
@@ -139,6 +160,7 @@ impl<'rt> RefTrainer<'rt> {
         // used by the §Perf A/B measurement in EXPERIMENTS.md.
         let no_cache = std::env::var_os("CDP_NO_LITCACHE").is_some();
         let mut loss_sum = 0f64;
+        let mut gmb = std::mem::take(&mut self.gmb);
         for i in 1..=n_mb {
             use crate::parallel::update_rule::Version;
             let rebuilt: Vec<Vec<xla::Literal>>;
@@ -149,7 +171,7 @@ impl<'rt> RefTrainer<'rt> {
                             Version::Fresh => self.store.fresh(j),
                             Version::Stale => self.store.stale(j),
                         };
-                        self.rt.param_literals(p)
+                        self.rt.param_literals_flat(j, p)
                     })
                     .collect::<Result<_>>()?;
                 rebuilt.iter().collect()
@@ -161,25 +183,29 @@ impl<'rt> RefTrainer<'rt> {
                     })
                     .collect()
             };
-            let (loss, grads) = self.run_microbatch(t, i, &lits)?;
+            let loss = match self.run_microbatch(t, i, &lits, &mut gmb) {
+                Ok(l) => l,
+                Err(e) => {
+                    self.gmb = gmb; // restore scratch before bailing
+                    return Err(e);
+                }
+            };
             loss_sum += loss as f64;
-            for (j, g) in grads.into_iter().enumerate() {
-                self.grads.add(j, i, &g);
-            }
+            self.grads.add_all_flat(i, &gmb);
         }
-        let averaged = self.grads.take_averaged();
+        self.gmb = gmb;
+        self.grads.average();
 
-        // SGD per stage on a copy of θ_t, then commit (θ_t → θ_{t−1}).
-        let mut new_params: Vec<Vec<Tensor>> = Vec::with_capacity(n);
+        // SGD per stage: θ_t (cur) → θ_{t+1} (next slot), then rotate.
         for j in 0..n {
-            let mut p = self.store.fresh(j).clone();
             let rt = self.rt;
             let lr = self.lr;
-            let (_cur, moms) = self.store.stage_mut(j);
-            rt.sgd_update(j, &mut p, moms, &averaged[j], lr)?;
-            new_params.push(p);
+            let g = self.grads.stage(j);
+            let (cur, moms, next) = self.store.update_parts(j);
+            rt.sgd_update_flat(j, cur, moms, g, lr, next)?;
         }
-        self.store.commit_step(new_params);
+        self.grads.reset();
+        self.store.commit_step();
 
         let loss = loss_sum / n_mb as f64;
         self.metrics.record("loss", t as f64, loss);
@@ -202,11 +228,11 @@ impl<'rt> RefTrainer<'rt> {
             };
             let mut a = HostTensor::F32(x);
             for j in 0..n - 1 {
-                let y = self.rt.stage_fwd(j, self.store.fresh(j), &a)?;
+                let y = self.rt.stage_fwd_flat(j, self.store.fresh(j), &a)?;
                 a = HostTensor::F32(y);
             }
             let logits =
-                self.rt.predict(self.store.fresh(n - 1), a.as_f32().unwrap())?;
+                self.rt.predict_flat(self.store.fresh(n - 1), a.as_f32().unwrap())?;
             let classes = logits.shape[1];
             for (b, lbl) in labels.data.iter().enumerate() {
                 let row = &logits.data[b * classes..(b + 1) * classes];
@@ -236,10 +262,10 @@ impl<'rt> RefTrainer<'rt> {
             };
             let mut a = HostTensor::I32(tokens);
             for j in 0..n - 1 {
-                let y = self.rt.stage_fwd(j, self.store.fresh(j), &a)?;
+                let y = self.rt.stage_fwd_flat(j, self.store.fresh(j), &a)?;
                 a = HostTensor::F32(y);
             }
-            let loss = self.rt.last_fwd_loss(
+            let loss = self.rt.last_fwd_loss_flat(
                 self.store.fresh(n - 1),
                 a.as_f32().unwrap(),
                 &targets,

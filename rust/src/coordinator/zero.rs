@@ -13,6 +13,12 @@
 //!   step per worker-visit) but the per-time-step message count drops from
 //!   N−1 to 1 — the paper's bold entry in Table 1.
 //!
+//! Hot-path layout (DESIGN-PERF.md): the owned shard is a flat stage
+//! arena (cur/prev/next/momentum runs); non-owned stage parameters are
+//! *received payloads* used directly as flat parameter runs — no
+//! per-tensor rebuild.  Serving peers builds at most one pooled payload
+//! per version and fans the handle out (zero-copy for the broadcast).
+//!
 //! Measured here: comm bytes, total messages, and `max_msgs_per_timestep`
 //! (the schedule-attributed concurrency that distinguishes the two modes).
 //! Loss sequences match the reference trainer bit-for-bit.
@@ -21,10 +27,11 @@ use anyhow::Result;
 
 use super::{SharedRuntime, StepLog};
 use crate::cluster::run_workers;
-use crate::comm::{tags, Endpoint, Fabric};
+use crate::comm::{tags, Endpoint, Fabric, Payload};
+use crate::parallel::arena::ArenaLayout;
 use crate::data::{DataSource, MicroBatch};
 use crate::parallel::{Rule, Version};
-use crate::tensor::{HostTensor, Tensor};
+use crate::tensor::{ops, HostTensor};
 use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -48,6 +55,30 @@ pub struct ZeroReport {
 /// Param version a worker must use for (mb i, stage j) under the rule.
 fn needed_version(rule: &Rule, i: usize, j: usize, n: usize) -> Version {
     rule.version(i, j + 1, n)
+}
+
+/// Flat parameter run for stage `j` as worker `w` (micro-batch `i`) must
+/// see it: the locally-owned version for its own stage, the received
+/// payload otherwise.
+#[allow(clippy::too_many_arguments)]
+fn stage_run<'a>(
+    j: usize,
+    w: usize,
+    i: usize,
+    n: usize,
+    rule: &Rule,
+    own_cur: &'a [f32],
+    own_prev: &'a [f32],
+    recv: &'a [Option<Payload>],
+) -> &'a [f32] {
+    if j == w {
+        match needed_version(rule, i, w, n) {
+            Version::Fresh => own_cur,
+            Version::Stale => own_prev,
+        }
+    } else {
+        recv[j].as_ref().expect("stage params received")
+    }
 }
 
 pub fn train(
@@ -101,7 +132,6 @@ pub fn train(
     })
 }
 
-#[allow(clippy::type_complexity)]
 fn worker(
     rt: &SharedRuntime,
     rule: &Rule,
@@ -112,14 +142,21 @@ fn worker(
 ) -> Result<(Vec<StepLog>, u64)> {
     let n = rt.manifest.n_stages;
     let n_mb = ep.n;
-    let init = rt.init_params()?;
-    // Owner state: stage `w` params (current + previous version) + momentum.
-    let mut own_cur: Vec<Tensor> = init[w].clone();
-    let mut own_prev: Vec<Tensor> = own_cur.clone();
-    let mut own_mom: Vec<Tensor> =
-        own_cur.iter().map(|t| Tensor::zeros(t.shape.clone())).collect();
-    let own_bytes: u64 = own_cur.iter().map(|t| t.bytes() as u64).sum();
-    let mut peak_state: u64 = 3 * own_bytes; // cur + prev + momentum
+    let layout = ArenaLayout::from_manifest(&rt.manifest);
+    let init = rt.init_params_flat()?;
+    // Owner state: stage `w` params (current + previous version), momentum
+    // and the next-step slot — flat stage runs, allocated once.
+    let mut own_cur: Vec<f32> = init[layout.stage_range(w)].to_vec();
+    let mut own_prev: Vec<f32> = own_cur.clone();
+    let mut own_next: Vec<f32> = vec![0.0; own_cur.len()];
+    let mut own_mom: Vec<f32> = vec![0.0; own_cur.len()];
+    let own_bytes: u64 = own_cur.len() as u64 * 4;
+    // cur + prev + next slot + momentum — all four are persistent
+    let mut peak_state: u64 = 4 * own_bytes;
+    // Owner-side reduction scratch, reused every step.
+    let mut gsum: Vec<f32> = vec![0.0; own_cur.len()];
+    // This worker's own micro-batch gradients, model-wide flat scratch.
+    let mut gmb: Vec<f32> = layout.zeros();
 
     let data = DataSource::from_manifest(&rt.manifest);
     let mut logs = Vec::new();
@@ -128,70 +165,53 @@ fn worker(
     for t in 0..steps as u64 {
         // ---- parameter distribution -----------------------------------
         // Worker w needs θ̂^j for every stage j.  Owners send; everyone
-        // receives what they don't own.  Tag encodes the version so stale
-        // and fresh requests are distinct (fresh = this step's params,
-        // stale = previous step's).
+        // receives what they don't own.
         //
         // Both flows move the same bytes; Cyclic attributes sends to
         // distinct time steps (one peer per step) while Broadcast sends
         // all N−1 at once.  The fabric counts bytes/messages; the
         // step-concurrency difference is scored in `train` above and in
-        // sim::schemes.
-        let mut stage_params: Vec<Option<(Vec<Tensor>, u64)>> = vec![None; n];
-
-        // As owner of stage w: serve both versions to each peer.
-        let flat = |ts: &Vec<Tensor>| -> Vec<f32> {
-            ts.iter().flat_map(|t| t.data.iter().copied()).collect()
-        };
+        // sim::schemes.  Each needed version is copied into *one* pooled
+        // payload whose handle fans out to every peer wanting it.
         let order: Vec<usize> = match flow {
             // broadcast: all peers at once (rank order)
             StateFlow::Broadcast => (0..n_mb).filter(|p| *p != w).collect(),
             // cyclic: peers in the order their mb reaches stage w —
             // mb i computes stage j at local time; the staggering means
             // peer order is ring order starting after the owner
-            StateFlow::Cyclic => {
-                (1..n_mb).map(|d| (w + d) % n_mb).collect()
-            }
+            StateFlow::Cyclic => (1..n_mb).map(|d| (w + d) % n_mb).collect(),
         };
+        let pool = ep.pool().clone();
+        let mut fresh_payload: Option<Payload> = None;
+        let mut stale_payload: Option<Payload> = None;
         for peer in order {
             let pi = peer + 1;
-            let v = needed_version(rule, pi, w, n);
-            let chosen = match v {
-                Version::Fresh => &own_cur,
-                Version::Stale => &own_prev,
+            let payload = match needed_version(rule, pi, w, n) {
+                Version::Fresh => fresh_payload
+                    .get_or_insert_with(|| pool.payload_from_slice(&own_cur))
+                    .clone(),
+                Version::Stale => stale_payload
+                    .get_or_insert_with(|| pool.payload_from_slice(&own_prev))
+                    .clone(),
             };
-            ep.send(peer, tags::param(t, w), flat(chosen));
+            ep.send(peer, tags::param(t, w), payload);
         }
-        // My own stage: select locally.
-        let v = needed_version(rule, i, w, n);
-        stage_params[w] = Some((
-            match v {
-                Version::Fresh => own_cur.clone(),
-                Version::Stale => own_prev.clone(),
-            },
-            0,
-        ));
 
-        // Receive the other stages' params from their owners.
+        // Receive the other stages' params from their owners; my own stage
+        // selects locally from the flat runs.
+        let mut recv_params: Vec<Option<Payload>> = vec![None; n];
         let mut recv_bytes: u64 = 0;
         for j in 0..n {
             if j == w {
                 continue;
             }
-            let flat = ep.recv(j, tags::param(t, j));
-            recv_bytes += flat.len() as u64 * 4;
-            let mut ts = Vec::with_capacity(rt.manifest.stages[j].params.len());
-            let mut off = 0;
-            for spec in &rt.manifest.stages[j].params {
-                let len = spec.elems();
-                ts.push(Tensor::new(spec.shape.clone(), flat[off..off + len].to_vec()));
-                off += len;
-            }
-            stage_params[j] = Some((ts, 0));
+            let payload = ep.recv(j, tags::param(t, j));
+            recv_bytes += payload.len() as u64 * 4;
+            recv_params[j] = Some(payload);
         }
         // ZeRO memory property: a worker transiently holds its own states
         // + the received stage params (released after use).
-        peak_state = peak_state.max(3 * own_bytes + recv_bytes);
+        peak_state = peak_state.max(4 * own_bytes + recv_bytes);
 
         // ---- compute: fwd chain + bwd chain for micro-batch i ----------
         let mb = data.microbatch(t, (i - 1) as u64);
@@ -205,73 +225,58 @@ fn worker(
         };
         let mut inputs: Vec<HostTensor> = vec![x0];
         for j in 0..n - 1 {
-            let p = &stage_params[j].as_ref().unwrap().0;
-            let y = rt.stage_fwd(j, p, &inputs[j])?;
+            let p = stage_run(j, w, i, n, rule, &own_cur, &own_prev, &recv_params);
+            let y = rt.stage_fwd_flat(j, p, &inputs[j])?;
             inputs.push(HostTensor::F32(y));
         }
-        let mut grads: Vec<Vec<Tensor>> = vec![Vec::new(); n];
         let last = n - 1;
-        let (loss, mut gx, gp) = rt.last_bwd(
-            &stage_params[last].as_ref().unwrap().0,
+        let (loss, mut gx) = rt.last_bwd_flat(
+            stage_run(last, w, i, n, rule, &own_cur, &own_prev, &recv_params),
             inputs[last].as_f32().unwrap(),
             &targets,
+            &mut gmb[layout.stage_range(last)],
         )?;
-        grads[last] = gp;
         for j in (1..last).rev() {
-            let (gx_new, gp) = rt.mid_bwd(
+            gx = rt.mid_bwd_flat(
                 j,
-                &stage_params[j].as_ref().unwrap().0,
+                stage_run(j, w, i, n, rule, &own_cur, &own_prev, &recv_params),
                 inputs[j].as_f32().unwrap(),
                 &gx,
+                &mut gmb[layout.stage_range(j)],
             )?;
-            grads[j] = gp;
-            gx = gx_new;
         }
-        grads[0] =
-            rt.first_bwd(&stage_params[0].as_ref().unwrap().0, &inputs[0], &gx)?;
+        if n > 1 {
+            rt.first_bwd_flat(
+                stage_run(0, w, i, n, rule, &own_cur, &own_prev, &recv_params),
+                &inputs[0],
+                &gx,
+                &mut gmb[layout.stage_range(0)],
+            )?;
+        }
+        drop(recv_params); // release received payloads back to the pool
 
         // ---- gradient reduction to owners (micro-batch order) ----------
         for j in 0..n {
             if j != w {
-                ep.send(
-                    j,
-                    tags::grad(t, j) ^ ((i as u64) << 40),
-                    flat(&grads[j]),
-                );
+                ep.send_copy(j, tags::grad_part(t, j, i), &gmb[layout.stage_range(j)]);
             }
         }
         // Owner: reduce in mb order 1..N (self contribution in its slot).
-        let mut sum: Vec<f32> = vec![0.0; own_bytes as usize / 4];
+        gsum.fill(0.0);
         for mb_i in 1..=n_mb {
             if mb_i == i {
-                let own = flat(&grads[w]);
-                for (s, v) in sum.iter_mut().zip(&own) {
-                    *s += v;
-                }
+                ops::add_into(&mut gsum, &gmb[layout.stage_range(w)]);
             } else {
-                let part =
-                    ep.recv(mb_i - 1, tags::grad(t, w) ^ ((mb_i as u64) << 40));
-                for (s, v) in sum.iter_mut().zip(&part) {
-                    *s += v;
-                }
+                let part = ep.recv(mb_i - 1, tags::grad_part(t, w, mb_i));
+                ops::add_into(&mut gsum, &part);
             }
         }
-        let inv = 1.0 / n_mb as f32;
-        for v in sum.iter_mut() {
-            *v *= inv;
-        }
-        let mut averaged = Vec::with_capacity(own_cur.len());
-        let mut off = 0;
-        for spec in &rt.manifest.stages[w].params {
-            let len = spec.elems();
-            averaged.push(Tensor::new(spec.shape.clone(), sum[off..off + len].to_vec()));
-            off += len;
-        }
+        ops::scale(&mut gsum, 1.0 / n_mb as f32);
 
         // ---- owner update ----------------------------------------------
-        let mut new_p = own_cur.clone();
-        rt.sgd_update(w, &mut new_p, &mut own_mom, &averaged, rt.manifest.lr)?;
-        own_prev = std::mem::replace(&mut own_cur, new_p);
+        rt.sgd_update_flat(w, &own_cur, &mut own_mom, &gsum, rt.manifest.lr, &mut own_next)?;
+        std::mem::swap(&mut own_prev, &mut own_cur); // prev ← θ_t
+        std::mem::swap(&mut own_cur, &mut own_next); // cur ← θ_{t+1}
 
         // ---- loss reporting (worker 0 logs the canonical mean) ---------
         if w == 0 {

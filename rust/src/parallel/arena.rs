@@ -1,0 +1,278 @@
+//! Flat parameter/gradient arenas (DESIGN-PERF.md): each stage's state is
+//! one contiguous `f32` run with precomputed `(offset, len, shape)` views,
+//! and the whole model is one stage-major flat vector.
+//!
+//! The layout is derived once — from the manifest or from an initial
+//! per-tensor parameter set — and shared (`Arc`) by every consumer:
+//! [`super::ParamStore`], [`super::GradBuffer`], the trainers' scratch
+//! buffers and the comm fabric all address the *same* offsets, so gradient
+//! reduction, collectives and parameter hand-off operate directly on arena
+//! slices with no per-tensor `Vec` churn, no `flatten`/`unflatten` copies,
+//! and no steady-state allocation.
+//!
+//! Tensors still exist at the edges (the XLA literal boundary, tests,
+//! checkpoints); [`ArenaLayout::read_stage`] / [`ArenaLayout::write_stage`]
+//! convert between the two representations and are property-tested to be
+//! exact round-trips.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::model::Manifest;
+use crate::tensor::Tensor;
+
+/// One tensor's view into its stage's contiguous run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ViewSpec {
+    /// Offset within the *stage* run (not the model-wide vector).
+    pub offset: usize,
+    pub len: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Per-stage layout: tensor views plus the stage's total length.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StageLayout {
+    pub views: Vec<ViewSpec>,
+    pub len: usize,
+}
+
+impl StageLayout {
+    pub fn from_shapes(shapes: &[Vec<usize>]) -> Self {
+        let mut views = Vec::with_capacity(shapes.len());
+        let mut off = 0usize;
+        for s in shapes {
+            let len = s.iter().product();
+            views.push(ViewSpec { offset: off, len, shape: s.clone() });
+            off += len;
+        }
+        Self { views, len: off }
+    }
+}
+
+/// Whole-model layout: per-stage layouts plus each stage's offset in the
+/// stage-major model-wide flat vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArenaLayout {
+    pub stages: Vec<StageLayout>,
+    /// Start of each stage's run in the model-wide vector.
+    pub stage_offsets: Vec<usize>,
+    pub total_len: usize,
+}
+
+impl ArenaLayout {
+    fn from_stage_layouts(stages: Vec<StageLayout>) -> Arc<Self> {
+        let mut stage_offsets = Vec::with_capacity(stages.len());
+        let mut off = 0usize;
+        for st in &stages {
+            stage_offsets.push(off);
+            off += st.len;
+        }
+        Arc::new(Self { stages, stage_offsets, total_len: off })
+    }
+
+    pub fn from_stage_shapes(shapes: &[Vec<Vec<usize>>]) -> Arc<Self> {
+        Self::from_stage_layouts(
+            shapes.iter().map(|st| StageLayout::from_shapes(st)).collect(),
+        )
+    }
+
+    /// Layout of the model the manifest describes (stage-major, params in
+    /// manifest order — the same order `params.bin` is serialized in).
+    pub fn from_manifest(m: &Manifest) -> Arc<Self> {
+        Self::from_stage_layouts(
+            m.stages
+                .iter()
+                .map(|st| {
+                    StageLayout::from_shapes(
+                        &st.params.iter().map(|p| p.shape.clone()).collect::<Vec<_>>(),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Layout matching an existing per-tensor parameter set.
+    pub fn from_params(params: &[Vec<Tensor>]) -> Arc<Self> {
+        Self::from_stage_layouts(
+            params
+                .iter()
+                .map(|st| {
+                    StageLayout::from_shapes(
+                        &st.iter().map(|t| t.shape.clone()).collect::<Vec<_>>(),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn stage_len(&self, stage: usize) -> usize {
+        self.stages[stage].len
+    }
+
+    /// Range of stage `stage` within the model-wide flat vector.
+    pub fn stage_range(&self, stage: usize) -> Range<usize> {
+        let start = self.stage_offsets[stage];
+        start..start + self.stages[stage].len
+    }
+
+    /// Fresh zero-filled model-wide buffer.
+    pub fn zeros(&self) -> Vec<f32> {
+        vec![0.0; self.total_len]
+    }
+
+    /// Fresh zero-filled buffer for one stage.
+    pub fn stage_zeros(&self, stage: usize) -> Vec<f32> {
+        vec![0.0; self.stages[stage].len]
+    }
+
+    /// Materialize a stage run as tensors (edge-of-system only: tests,
+    /// checkpoints, golden comparisons — never the training hot path).
+    pub fn read_stage(&self, stage: usize, run: &[f32]) -> Vec<Tensor> {
+        let st = &self.stages[stage];
+        assert_eq!(run.len(), st.len, "stage {stage}: run/layout mismatch");
+        st.views
+            .iter()
+            .map(|v| Tensor::new(v.shape.clone(), run[v.offset..v.offset + v.len].to_vec()))
+            .collect()
+    }
+
+    /// Write tensors into a stage run (inverse of [`Self::read_stage`]).
+    pub fn write_stage(&self, stage: usize, tensors: &[Tensor], run: &mut [f32]) {
+        let st = &self.stages[stage];
+        assert_eq!(run.len(), st.len, "stage {stage}: run/layout mismatch");
+        assert_eq!(tensors.len(), st.views.len(), "stage {stage}: tensor count");
+        for (t, v) in tensors.iter().zip(&st.views) {
+            assert_eq!(t.shape, v.shape, "stage {stage}: shape mismatch");
+            run[v.offset..v.offset + v.len].copy_from_slice(&t.data);
+        }
+    }
+
+    /// Flatten a whole per-tensor parameter set into a model-wide vector.
+    pub fn flatten(&self, params: &[Vec<Tensor>]) -> Vec<f32> {
+        assert_eq!(params.len(), self.n_stages());
+        let mut flat = self.zeros();
+        for (j, st) in params.iter().enumerate() {
+            self.write_stage(j, st, &mut flat[self.stage_range(j)]);
+        }
+        flat
+    }
+
+    /// Materialize every stage of a model-wide vector as tensors.
+    pub fn unflatten(&self, flat: &[f32]) -> Vec<Vec<Tensor>> {
+        assert_eq!(flat.len(), self.total_len);
+        (0..self.n_stages())
+            .map(|j| self.read_stage(j, &flat[self.stage_range(j)]))
+            .collect()
+    }
+
+    /// Total bytes of one model-wide buffer.
+    pub fn bytes(&self) -> u64 {
+        self.total_len as u64 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    fn layout3() -> Arc<ArenaLayout> {
+        ArenaLayout::from_stage_shapes(&[
+            vec![vec![2, 3], vec![3]],
+            vec![vec![4]],
+            vec![vec![1, 2], vec![2], vec![2]],
+        ])
+    }
+
+    #[test]
+    fn offsets_are_stage_major_and_contiguous() {
+        let l = layout3();
+        assert_eq!(l.n_stages(), 3);
+        assert_eq!(l.stage_len(0), 9);
+        assert_eq!(l.stage_len(1), 4);
+        assert_eq!(l.stage_len(2), 6);
+        assert_eq!(l.total_len, 19);
+        assert_eq!(l.stage_range(0), 0..9);
+        assert_eq!(l.stage_range(1), 9..13);
+        assert_eq!(l.stage_range(2), 13..19);
+        assert_eq!(l.stages[0].views[1].offset, 6);
+        assert_eq!(l.bytes(), 19 * 4);
+    }
+
+    #[test]
+    fn layout_from_params_matches_shapes() {
+        let params = vec![
+            vec![Tensor::zeros(vec![2, 3]), Tensor::zeros(vec![3])],
+            vec![Tensor::zeros(vec![4])],
+        ];
+        let l = ArenaLayout::from_params(&params);
+        assert_eq!(l.total_len, 13);
+        assert_eq!(l.stages[0].views[0].shape, vec![2, 3]);
+    }
+
+    /// Property: arena ↔ tensor conversion preserves every element, for
+    /// random stage counts, tensor counts, shapes and values.
+    #[test]
+    fn prop_roundtrip_preserves_every_element() {
+        check("arena-roundtrip", 50, |g| {
+            let n_stages = g.usize_in(1, 4);
+            let shapes: Vec<Vec<Vec<usize>>> = (0..n_stages)
+                .map(|_| {
+                    (0..g.usize_in(1, 4))
+                        .map(|_| {
+                            (0..g.usize_in(1, 3))
+                                .map(|_| g.usize_in(1, 5))
+                                .collect()
+                        })
+                        .collect()
+                })
+                .collect();
+            let l = ArenaLayout::from_stage_shapes(&shapes);
+            // random per-tensor params
+            let params: Vec<Vec<Tensor>> = shapes
+                .iter()
+                .map(|st| {
+                    st.iter()
+                        .map(|s| {
+                            let len = s.iter().product();
+                            Tensor::new(s.clone(), g.vec_f32(len, -10.0, 10.0))
+                        })
+                        .collect()
+                })
+                .collect();
+            // tensors → flat → tensors is the identity
+            let flat = l.flatten(&params);
+            assert_eq!(flat.len(), l.total_len);
+            let back = l.unflatten(&flat);
+            assert_eq!(back, params);
+            // flat → tensors → flat is the identity
+            let mut flat2 = l.zeros();
+            for j in 0..n_stages {
+                l.write_stage(j, &back[j], &mut flat2[l.stage_range(j)]);
+            }
+            assert_eq!(flat2, flat);
+            // element-exact view addressing: every tensor element appears
+            // at stage_offset + view offset + index
+            for (j, st) in params.iter().enumerate() {
+                for (t, v) in st.iter().zip(&l.stages[j].views) {
+                    for (k, x) in t.data.iter().enumerate() {
+                        assert_eq!(flat[l.stage_offsets[j] + v.offset + k], *x);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn write_stage_rejects_wrong_shape() {
+        let l = layout3();
+        let mut run = l.stage_zeros(1);
+        l.write_stage(1, &[Tensor::zeros(vec![2, 2])], &mut run);
+    }
+}

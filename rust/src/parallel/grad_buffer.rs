@@ -3,48 +3,92 @@
 //! produces naturally (micro-batch i finishes stage-j backward before
 //! micro-batch i+1), so the single-process reference, the threaded CDP
 //! ring and the python mirror all sum in the same order — bit-for-bit.
+//!
+//! The sums live in one model-wide flat arena (stage-major, see
+//! [`super::arena`]): accumulation is a single fused pass per stage run,
+//! averaging is an in-place scale, and consumers read the per-stage slices
+//! directly — no per-tensor `Vec` churn and no allocation after
+//! construction.
 
+use std::sync::Arc;
+
+use crate::parallel::arena::ArenaLayout;
+use crate::tensor::ops;
 use crate::tensor::Tensor;
+
+/// Sentinel for `next_mb`: stage sums are averaged and awaiting `reset`.
+const AVERAGED: usize = 0;
 
 #[derive(Clone, Debug)]
 pub struct GradBuffer {
-    sums: Vec<Vec<Tensor>>,
-    /// Which micro-batch index is expected next per stage (1-based).
+    layout: Arc<ArenaLayout>,
+    /// Model-wide stage-major running sums.
+    sums: Vec<f32>,
+    /// Which micro-batch index is expected next per stage (1-based;
+    /// [`AVERAGED`] after `average` until `reset`).
     next_mb: Vec<usize>,
     n_microbatches: usize,
 }
 
 impl GradBuffer {
-    pub fn new(shapes: &[Vec<Vec<usize>>], n_microbatches: usize) -> Self {
-        let sums = shapes
-            .iter()
-            .map(|st| st.iter().map(|s| Tensor::zeros(s.clone())).collect())
-            .collect();
-        Self { sums, next_mb: vec![1; shapes.len()], n_microbatches }
+    pub fn new(layout: Arc<ArenaLayout>, n_microbatches: usize) -> Self {
+        let sums = layout.zeros();
+        let next_mb = vec![1; layout.n_stages()];
+        Self { layout, sums, next_mb, n_microbatches }
     }
 
     pub fn from_params(params: &[Vec<Tensor>], n_microbatches: usize) -> Self {
-        let shapes: Vec<Vec<Vec<usize>>> = params
-            .iter()
-            .map(|st| st.iter().map(|t| t.shape.clone()).collect())
-            .collect();
-        Self::new(&shapes, n_microbatches)
+        Self::new(ArenaLayout::from_params(params), n_microbatches)
     }
 
-    /// Accumulate micro-batch `mb`'s (1-based) gradients for `stage`.
-    /// Panics if called out of micro-batch order — the order *is* the
-    /// determinism contract.
-    pub fn add(&mut self, stage: usize, mb: usize, grads: &[Tensor]) {
+    pub fn layout(&self) -> &Arc<ArenaLayout> {
+        &self.layout
+    }
+
+    fn bump(&mut self, stage: usize, mb: usize) {
+        assert_ne!(
+            self.next_mb[stage], AVERAGED,
+            "stage {stage}: add after average, before reset"
+        );
         assert_eq!(
             mb, self.next_mb[stage],
             "stage {stage}: gradient for mb {mb} arrived out of order (expected {})",
             self.next_mb[stage]
         );
-        assert_eq!(grads.len(), self.sums[stage].len());
-        for (s, g) in self.sums[stage].iter_mut().zip(grads) {
-            s.add_assign(g);
-        }
         self.next_mb[stage] += 1;
+    }
+
+    /// Accumulate micro-batch `mb`'s (1-based) flat gradients for `stage`.
+    /// Panics if called out of micro-batch order — the order *is* the
+    /// determinism contract.
+    pub fn add_flat(&mut self, stage: usize, mb: usize, grads: &[f32]) {
+        self.bump(stage, mb);
+        let r = self.layout.stage_range(stage);
+        assert_eq!(grads.len(), r.len(), "stage {stage}: grad run length");
+        ops::add_into(&mut self.sums[r], grads);
+    }
+
+    /// Accumulate micro-batch `mb`'s gradients for every stage at once
+    /// from a model-wide flat run.
+    pub fn add_all_flat(&mut self, mb: usize, grads: &[f32]) {
+        assert_eq!(grads.len(), self.layout.total_len);
+        for stage in 0..self.layout.n_stages() {
+            let r = self.layout.stage_range(stage);
+            self.add_flat(stage, mb, &grads[r]);
+        }
+    }
+
+    /// Accumulate per-tensor gradients (edge-of-system convenience).
+    pub fn add(&mut self, stage: usize, mb: usize, grads: &[Tensor]) {
+        self.bump(stage, mb);
+        let base = self.layout.stage_offsets[stage];
+        let views = &self.layout.stages[stage].views;
+        assert_eq!(grads.len(), views.len(), "stage {stage}: tensor count");
+        for (g, v) in grads.iter().zip(views) {
+            debug_assert_eq!(g.shape, v.shape);
+            let start = base + v.offset;
+            ops::add_into(&mut self.sums[start..start + v.len], &g.data);
+        }
     }
 
     pub fn stage_complete(&self, stage: usize) -> bool {
@@ -52,46 +96,48 @@ impl GradBuffer {
     }
 
     pub fn all_complete(&self) -> bool {
-        (0..self.sums.len()).all(|s| self.stage_complete(s))
+        (0..self.next_mb.len()).all(|s| self.stage_complete(s))
     }
 
-    /// Average (divide by N) and take the per-stage sums; resets the buffer.
-    pub fn take_averaged(&mut self) -> Vec<Vec<Tensor>> {
-        assert!(self.all_complete(), "take_averaged before all micro-batches");
+    /// Average all stages (divide by N) in place.  Read the result through
+    /// [`Self::stage`] / [`Self::flat`]; call [`Self::reset`] before the
+    /// next step's accumulation.
+    pub fn average(&mut self) {
+        assert!(self.all_complete(), "average before all micro-batches");
         let inv = 1.0 / self.n_microbatches as f32;
-        let mut out: Vec<Vec<Tensor>> = self
-            .sums
-            .iter_mut()
-            .map(|st| {
-                st.iter_mut()
-                    .map(|t| {
-                        let mut g = std::mem::replace(t, Tensor::zeros(t.shape.clone()));
-                        g.scale(inv);
-                        g
-                    })
-                    .collect()
-            })
-            .collect();
+        ops::scale(&mut self.sums, inv);
+        self.next_mb.iter_mut().for_each(|x| *x = AVERAGED);
+    }
+
+    /// Average a single stage in place (trainers that update stages
+    /// independently, e.g. CDP-v2's per-stage hand-off).
+    pub fn average_stage(&mut self, stage: usize) {
+        assert!(self.stage_complete(stage), "average_stage before complete");
+        let inv = 1.0 / self.n_microbatches as f32;
+        let r = self.layout.stage_range(stage);
+        ops::scale(&mut self.sums[r], inv);
+        self.next_mb[stage] = AVERAGED;
+    }
+
+    /// One stage's (possibly averaged) sums, contiguous.
+    pub fn stage(&self, stage: usize) -> &[f32] {
+        &self.sums[self.layout.stage_range(stage)]
+    }
+
+    /// The model-wide flat sums.
+    pub fn flat(&self) -> &[f32] {
+        &self.sums
+    }
+
+    /// Zero the sums and re-arm accumulation from micro-batch 1.
+    pub fn reset(&mut self) {
+        self.sums.fill(0.0);
         self.next_mb.iter_mut().for_each(|x| *x = 1);
-        // keep shapes for reuse
-        out.iter_mut().for_each(|_| {});
-        out
     }
 
-    /// Take the average for a single stage (used by trainers that update
-    /// stages independently, e.g. CDP-v2's per-stage hand-off).
-    pub fn take_stage_averaged(&mut self, stage: usize) -> Vec<Tensor> {
-        assert!(self.stage_complete(stage));
-        let inv = 1.0 / self.n_microbatches as f32;
-        self.next_mb[stage] = 1;
-        self.sums[stage]
-            .iter_mut()
-            .map(|t| {
-                let mut g = std::mem::replace(t, Tensor::zeros(t.shape.clone()));
-                g.scale(inv);
-                g
-            })
-            .collect()
+    /// Materialize one stage's current sums as tensors (tests/tools only).
+    pub fn stage_tensors(&self, stage: usize) -> Vec<Tensor> {
+        self.layout.read_stage(stage, self.stage(stage))
     }
 }
 
@@ -100,23 +146,29 @@ mod tests {
     use super::*;
 
     fn buf() -> GradBuffer {
-        GradBuffer::new(&[vec![vec![2]], vec![vec![1]]], 2)
+        GradBuffer::new(
+            ArenaLayout::from_stage_shapes(&[vec![vec![2]], vec![vec![1]]]),
+            2,
+        )
     }
 
     #[test]
     fn accumulates_in_order_and_averages() {
         let mut b = buf();
         b.add(0, 1, &[Tensor::new(vec![2], vec![1.0, 2.0])]);
-        b.add(0, 2, &[Tensor::new(vec![2], vec![3.0, 4.0])]);
+        b.add_flat(0, 2, &[3.0, 4.0]);
         b.add(1, 1, &[Tensor::new(vec![1], vec![10.0])]);
         assert!(!b.all_complete());
         b.add(1, 2, &[Tensor::new(vec![1], vec![30.0])]);
         assert!(b.all_complete());
-        let avg = b.take_averaged();
-        assert_eq!(avg[0][0].data, vec![2.0, 3.0]);
-        assert_eq!(avg[1][0].data, vec![20.0]);
-        // reset: accepts mb 1 again
+        b.average();
+        assert_eq!(b.stage(0), &[2.0, 3.0]);
+        assert_eq!(b.stage(1), &[20.0]);
+        assert_eq!(b.flat(), &[2.0, 3.0, 20.0]);
+        // reset: accepts mb 1 again, sums cleared
+        b.reset();
         b.add(0, 1, &[Tensor::new(vec![2], vec![1.0, 1.0])]);
+        assert_eq!(b.stage(0), &[1.0, 1.0]);
     }
 
     #[test]
@@ -127,12 +179,32 @@ mod tests {
     }
 
     #[test]
-    fn per_stage_take() {
+    #[should_panic(expected = "add after average")]
+    fn rejects_add_between_average_and_reset() {
+        let mut b = buf();
+        b.add_flat(0, 1, &[1.0, 1.0]);
+        b.add_flat(0, 2, &[1.0, 1.0]);
+        b.average_stage(0);
+        b.add_flat(0, 1, &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn per_stage_average() {
         let mut b = buf();
         b.add(0, 1, &[Tensor::new(vec![2], vec![2.0, 2.0])]);
         b.add(0, 2, &[Tensor::new(vec![2], vec![4.0, 4.0])]);
-        let avg = b.take_stage_averaged(0);
-        assert_eq!(avg[0].data, vec![3.0, 3.0]);
+        b.average_stage(0);
+        assert_eq!(b.stage(0), &[3.0, 3.0]);
         assert!(!b.stage_complete(1));
+    }
+
+    #[test]
+    fn add_all_flat_covers_every_stage() {
+        let mut b = buf();
+        b.add_all_flat(1, &[1.0, 2.0, 3.0]);
+        b.add_all_flat(2, &[1.0, 2.0, 3.0]);
+        b.average();
+        assert_eq!(b.flat(), &[1.0, 2.0, 3.0]);
+        assert_eq!(b.stage_tensors(1)[0].data, vec![3.0]);
     }
 }

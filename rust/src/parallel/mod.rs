@@ -2,17 +2,22 @@
 //!
 //! - [`update_rule`] — the u_{i,j} parameter-version rules defining DP,
 //!   CDP-v1, CDP-v2 (+ the randomized future-work extension).
+//! - [`arena`] — flat parameter/gradient arenas: contiguous per-stage
+//!   state with precomputed views (DESIGN-PERF.md).
 //! - [`param_store`] — versioned parameter state (θ_t, θ_{t-1}) with the
-//!   θ_{-1} := θ_0 bootstrap.
-//! - [`grad_buffer`] — deterministic-order gradient accumulation.
+//!   θ_{-1} := θ_0 bootstrap, arena-backed.
+//! - [`grad_buffer`] — deterministic-order gradient accumulation over a
+//!   model-wide flat arena.
 //! - [`schedule`] — the time-step timelines of Fig 1 (DP lockstep vs the
 //!   cyclic pattern with per-worker delay 2(i−1)).
 
+pub mod arena;
 pub mod grad_buffer;
 pub mod param_store;
 pub mod schedule;
 pub mod update_rule;
 
+pub use arena::ArenaLayout;
 pub use grad_buffer::GradBuffer;
 pub use param_store::ParamStore;
 pub use schedule::{Op, Schedule};

@@ -1,96 +1,144 @@
 //! Versioned parameter store: θ_t ("fresh") and θ_{t−1} ("stale") per
-//! stage, plus momentum.  The bootstrap convention θ_{−1} := θ_0 makes all
-//! rules coincide at step 0 (tested here and in the python mirror).
+//! stage, plus momentum — all held as flat arenas (one contiguous `f32`
+//! run per stage, stage-major; see [`super::arena`]).  The bootstrap
+//! convention θ_{−1} := θ_0 makes all rules coincide at step 0 (tested
+//! here and in the python mirror).
 //!
-//! `commit_step` is a buffer *swap*, not a copy (DESIGN.md §Perf-L3): the
-//! outgoing θ_t becomes θ_{t−1} by move.
+//! `commit_step` is a buffer *rotation*, not a copy (DESIGN-PERF.md): the
+//! optimizer writes θ_{t+1} into the store's `next` arena via
+//! [`ParamStore::update_parts`]; committing rotates next → cur → prev →
+//! next-scratch.  Steady-state training neither allocates nor copies
+//! parameter state.
 
+use std::sync::Arc;
+
+use crate::parallel::arena::ArenaLayout;
 use crate::parallel::update_rule::{Rule, Version};
 use crate::tensor::Tensor;
 
 #[derive(Clone, Debug)]
 pub struct ParamStore {
-    cur: Vec<Vec<Tensor>>,
-    prev: Vec<Vec<Tensor>>,
-    moms: Vec<Vec<Tensor>>,
+    layout: Arc<ArenaLayout>,
+    /// θ_t, model-wide stage-major flat.
+    cur: Vec<f32>,
+    /// θ_{t−1}.
+    prev: Vec<f32>,
+    /// Scratch the optimizer writes θ_{t+1} into before `commit_step`.
+    next: Vec<f32>,
+    /// Momentum, same layout.
+    moms: Vec<f32>,
     step: u64,
 }
 
 impl ParamStore {
     pub fn new(init: Vec<Vec<Tensor>>) -> Self {
-        let prev = init.clone(); // θ_{−1} := θ_0
-        let moms = init
-            .iter()
-            .map(|st| st.iter().map(|t| Tensor::zeros(t.shape.clone())).collect())
-            .collect();
-        Self { cur: init, prev, moms, step: 0 }
+        let layout = ArenaLayout::from_params(&init);
+        let cur = layout.flatten(&init);
+        Self::from_flat(layout, cur)
+    }
+
+    /// Build from an already-flat θ_0 (must match `layout`).
+    pub fn from_flat(layout: Arc<ArenaLayout>, cur: Vec<f32>) -> Self {
+        assert_eq!(cur.len(), layout.total_len, "init params/layout mismatch");
+        let prev = cur.clone(); // θ_{−1} := θ_0
+        let next = layout.zeros();
+        let moms = layout.zeros();
+        Self { layout, cur, prev, next, moms, step: 0 }
+    }
+
+    pub fn layout(&self) -> &Arc<ArenaLayout> {
+        &self.layout
     }
 
     pub fn n_stages(&self) -> usize {
-        self.cur.len()
+        self.layout.n_stages()
     }
 
     pub fn step(&self) -> u64 {
         self.step
     }
 
-    pub fn fresh(&self, stage: usize) -> &Vec<Tensor> {
-        &self.cur[stage]
+    /// θ_t of one stage, contiguous.
+    pub fn fresh(&self, stage: usize) -> &[f32] {
+        &self.cur[self.layout.stage_range(stage)]
     }
 
-    pub fn stale(&self, stage: usize) -> &Vec<Tensor> {
-        &self.prev[stage]
+    /// θ_{t−1} of one stage, contiguous.
+    pub fn stale(&self, stage: usize) -> &[f32] {
+        &self.prev[self.layout.stage_range(stage)]
     }
 
-    pub fn momentum(&self, stage: usize) -> &Vec<Tensor> {
-        &self.moms[stage]
+    pub fn momentum(&self, stage: usize) -> &[f32] {
+        &self.moms[self.layout.stage_range(stage)]
     }
 
     /// θ̂_{i}^j for micro-batch `i` (1-based) under `rule`.
-    pub fn select(&self, rule: &Rule, i: usize, stage: usize) -> &Vec<Tensor> {
+    pub fn select(&self, rule: &Rule, i: usize, stage: usize) -> &[f32] {
         match rule.version(i, stage + 1, self.n_stages()) {
             Version::Fresh => self.fresh(stage),
             Version::Stale => self.stale(stage),
         }
     }
 
-    /// Mutable access for the optimizer (params + momentum of one stage).
-    /// Used by trainers that update in place before committing.
-    pub fn stage_mut(&mut self, stage: usize) -> (&mut Vec<Tensor>, &mut Vec<Tensor>) {
-        (&mut self.cur[stage], &mut self.moms[stage])
+    /// Split borrows for the optimizer: (θ_t input, momentum in/out,
+    /// θ_{t+1} output slot) of one stage.  The optimizer reads `cur`,
+    /// updates `moms` in place and writes the new parameters into `next`;
+    /// [`Self::commit_step`] then makes them current — no clone of θ_t,
+    /// no allocation.
+    pub fn update_parts(&mut self, stage: usize) -> (&[f32], &mut [f32], &mut [f32]) {
+        let r = self.layout.stage_range(stage);
+        (
+            &self.cur[r.clone()],
+            &mut self.moms[r.clone()],
+            &mut self.next[r],
+        )
     }
 
-    /// Finish training step t: the provided `new` parameters become θ_{t+1},
-    /// current θ_t becomes the stale version.  Momentum was already updated
-    /// in place by the optimizer.
-    pub fn commit_step(&mut self, new: Vec<Vec<Tensor>>) {
-        debug_assert_eq!(new.len(), self.cur.len());
-        self.prev = std::mem::replace(&mut self.cur, new);
+    /// θ_{t+1} of one stage as already written into the `next` slot
+    /// (valid between `update_parts` and `commit_step` — e.g. to hand the
+    /// fresh parameters to a ring neighbour).
+    pub fn next_stage(&self, stage: usize) -> &[f32] {
+        &self.next[self.layout.stage_range(stage)]
+    }
+
+    /// Write externally received θ_{t+1} for one stage into the `next`
+    /// slot (ring hand-off receivers).
+    pub fn write_next(&mut self, stage: usize, src: &[f32]) {
+        let r = self.layout.stage_range(stage);
+        self.next[r].copy_from_slice(src);
+    }
+
+    /// Finish training step t: the parameters accumulated in the `next`
+    /// slot become θ_{t+1}, current θ_t becomes the stale version, and the
+    /// old stale buffer is recycled as the next scratch.  Pure pointer
+    /// rotation — zero copies, zero allocation.
+    pub fn commit_step(&mut self) {
+        std::mem::swap(&mut self.prev, &mut self.cur); // prev ← θ_t
+        std::mem::swap(&mut self.cur, &mut self.next); // cur ← θ_{t+1}
         self.step += 1;
     }
 
-    /// Total parameter bytes held (both versions).
+    /// Total parameter bytes held (cur + prev + next scratch + momentum).
     pub fn bytes(&self) -> u64 {
-        let one = |v: &Vec<Vec<Tensor>>| {
-            v.iter()
-                .flat_map(|st| st.iter().map(|t| t.bytes() as u64))
-                .sum::<u64>()
-        };
-        one(&self.cur) + one(&self.prev) + one(&self.moms)
+        4 * self.layout.bytes()
     }
 
-    /// Flatten θ_t for checkpointing / equivalence checks.
-    pub fn flat_params(&self) -> Vec<f32> {
-        self.cur
-            .iter()
-            .flat_map(|st| st.iter().flat_map(|t| t.data.iter().copied()))
-            .collect()
+    /// Flatten θ_t for checkpointing / equivalence checks (already flat —
+    /// this is a borrow, not a copy).
+    pub fn flat_params(&self) -> &[f32] {
+        &self.cur
+    }
+
+    /// Materialize θ_t of one stage as tensors (edge-of-system only).
+    pub fn fresh_tensors(&self, stage: usize) -> Vec<Tensor> {
+        self.layout.read_stage(stage, self.fresh(stage))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::check;
 
     fn store() -> ParamStore {
         ParamStore::new(vec![
@@ -99,44 +147,128 @@ mod tests {
         ])
     }
 
+    /// Emulate an optimizer writing `new` into the next slot.
+    fn write_all_next(s: &mut ParamStore, new: &[&[f32]]) {
+        for (j, st) in new.iter().enumerate() {
+            s.write_next(j, st);
+        }
+    }
+
     #[test]
     fn bootstrap_prev_equals_cur() {
         let s = store();
         assert_eq!(s.fresh(0), s.stale(0));
         assert_eq!(s.step(), 0);
+        assert_eq!(s.flat_params(), &[1.0, 2.0, 5.0]);
     }
 
     #[test]
-    fn commit_swaps_versions() {
+    fn commit_rotates_versions() {
         let mut s = store();
-        let new = vec![
-            vec![Tensor::new(vec![2], vec![10.0, 20.0])],
-            vec![Tensor::new(vec![1], vec![50.0])],
-        ];
-        s.commit_step(new.clone());
-        assert_eq!(s.fresh(0)[0].data, vec![10.0, 20.0]);
-        assert_eq!(s.stale(0)[0].data, vec![1.0, 2.0]);
+        write_all_next(&mut s, &[&[10.0, 20.0], &[50.0]]);
+        s.commit_step();
+        assert_eq!(s.fresh(0), &[10.0, 20.0]);
+        assert_eq!(s.stale(0), &[1.0, 2.0]);
+        assert_eq!(s.fresh(1), &[50.0]);
         assert_eq!(s.step(), 1);
+        // second step: the recycled scratch must not leak old values
+        write_all_next(&mut s, &[&[11.0, 21.0], &[51.0]]);
+        s.commit_step();
+        assert_eq!(s.fresh(0), &[11.0, 21.0]);
+        assert_eq!(s.stale(0), &[10.0, 20.0]);
     }
 
     #[test]
     fn select_follows_rule() {
         let mut s = store();
-        s.commit_step(vec![
-            vec![Tensor::new(vec![2], vec![10.0, 20.0])],
-            vec![Tensor::new(vec![1], vec![50.0])],
-        ]);
+        write_all_next(&mut s, &[&[10.0, 20.0], &[50.0]]);
+        s.commit_step();
         // N=2 stages. CDP-v2: mb 1 → stale for stage 1 (j=1 < N-i+1=2),
         // fresh for stage 2.
-        assert_eq!(s.select(&Rule::CdpV2, 1, 0)[0].data, vec![1.0, 2.0]);
-        assert_eq!(s.select(&Rule::CdpV2, 1, 1)[0].data, vec![50.0]);
-        assert_eq!(s.select(&Rule::Dp, 1, 0)[0].data, vec![10.0, 20.0]);
-        assert_eq!(s.select(&Rule::CdpV1, 2, 1)[0].data, vec![5.0]);
+        assert_eq!(s.select(&Rule::CdpV2, 1, 0), &[1.0, 2.0]);
+        assert_eq!(s.select(&Rule::CdpV2, 1, 1), &[50.0]);
+        assert_eq!(s.select(&Rule::Dp, 1, 0), &[10.0, 20.0]);
+        assert_eq!(s.select(&Rule::CdpV1, 2, 1), &[5.0]);
     }
 
     #[test]
-    fn bytes_counts_three_copies() {
+    fn update_parts_are_disjoint_stage_slices() {
+        let mut s = store();
+        {
+            let (cur, moms, next) = s.update_parts(0);
+            assert_eq!(cur, &[1.0, 2.0]);
+            moms.copy_from_slice(&[0.5, 0.5]);
+            next.copy_from_slice(&[7.0, 8.0]);
+        }
+        assert_eq!(s.momentum(0), &[0.5, 0.5]);
+        assert_eq!(s.next_stage(0), &[7.0, 8.0]);
+        assert_eq!(s.momentum(1), &[0.0]); // other stage untouched
+    }
+
+    #[test]
+    fn bytes_counts_four_buffers() {
         let s = store();
-        assert_eq!(s.bytes(), 3 * (2 + 1) * 4);
+        assert_eq!(s.bytes(), 4 * (2 + 1) * 4);
+    }
+
+    /// Property: select/commit semantics over random models match a naive
+    /// two-version per-tensor reference implementation.
+    #[test]
+    fn prop_select_commit_matches_naive_reference() {
+        check("store-vs-naive", 30, |g| {
+            let n = g.usize_in(1, 4);
+            let init: Vec<Vec<Tensor>> = (0..n)
+                .map(|_| {
+                    (0..g.usize_in(1, 3))
+                        .map(|_| {
+                            let len = g.usize_in(1, 6);
+                            Tensor::new(vec![len], g.vec_f32(len, -1.0, 1.0))
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut s = ParamStore::new(init.clone());
+            // naive model: per-step full copies
+            let flat = |p: &Vec<Vec<Tensor>>, j: usize| -> Vec<f32> {
+                p[j].iter().flat_map(|t| t.data.iter().copied()).collect()
+            };
+            let mut naive_cur = init;
+            let mut naive_prev: Vec<Vec<Tensor>>;
+            for _step in 0..3 {
+                // random "update": new = cur scaled per stage
+                let scale = g.f32_in(0.5, 1.5);
+                let new: Vec<Vec<Tensor>> = naive_cur
+                    .iter()
+                    .map(|st| {
+                        st.iter()
+                            .map(|t| {
+                                let mut c = t.clone();
+                                c.scale(scale);
+                                c
+                            })
+                            .collect()
+                    })
+                    .collect();
+                for j in 0..n {
+                    let flat_new: Vec<f32> =
+                        new[j].iter().flat_map(|t| t.data.iter().copied()).collect();
+                    s.write_next(j, &flat_new);
+                }
+                s.commit_step();
+                naive_prev = std::mem::replace(&mut naive_cur, new);
+                // all rules, all micro-batches, all stages agree
+                for rule in [Rule::Dp, Rule::CdpV1, Rule::CdpV2] {
+                    for i in 1..=n {
+                        for j in 0..n {
+                            let want = match rule.version(i, j + 1, n) {
+                                Version::Fresh => flat(&naive_cur, j),
+                                Version::Stale => flat(&naive_prev, j),
+                            };
+                            assert_eq!(s.select(&rule, i, j), &want[..]);
+                        }
+                    }
+                }
+            }
+        });
     }
 }

@@ -14,8 +14,8 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::literal::{
-    host_to_literal, int_tensor_to_literal, literal_to_scalar, literal_to_tensor,
-    tensor_to_literal,
+    host_to_literal, int_tensor_to_literal, literal_into_slice, literal_to_scalar,
+    literal_to_tensor, slice_to_literal, tensor_to_literal,
 };
 use super::{execute_tuple, Engine};
 use crate::model::Manifest;
@@ -94,12 +94,45 @@ impl BundleRuntime {
             .collect()
     }
 
+    /// Initial parameters as one model-wide flat vector (the arena fast
+    /// path of [`Self::init_params`] — `params.bin` already *is* the
+    /// stage-major flat layout).
+    pub fn init_params_flat(&self) -> Result<Vec<f32>> {
+        let raw = binio::read_f32_file(&self.manifest.params_bin())?;
+        anyhow::ensure!(
+            raw.len() == self.manifest.total_param_elems,
+            "params.bin has {} elems, manifest says {}",
+            raw.len(),
+            self.manifest.total_param_elems
+        );
+        Ok(raw)
+    }
+
     /// Upload one stage's parameters once; reuse across micro-batches
     /// (DESIGN.md §Perf-L3: within a training step the same θ̂ version is
     /// executed N times — caching the literals removes N−1 of the N
     /// host→device conversions per stage).
     pub fn param_literals(&self, params: &[Tensor]) -> Result<Vec<xla::Literal>> {
         params.iter().map(tensor_to_literal).collect()
+    }
+
+    /// Literals for one stage straight from its flat arena run: the run is
+    /// split by the manifest's parameter views, no `Tensor` materialized.
+    pub fn param_literals_flat(&self, stage: usize, flat: &[f32]) -> Result<Vec<xla::Literal>> {
+        let specs = &self.manifest.stages[stage].params;
+        let mut out = Vec::with_capacity(specs.len());
+        let mut off = 0usize;
+        for p in specs {
+            let n = p.elems();
+            out.push(slice_to_literal(&p.shape, &flat[off..off + n])?);
+            off += n;
+        }
+        anyhow::ensure!(
+            off == flat.len(),
+            "stage {stage}: flat run has {} elems, manifest says {off}",
+            flat.len()
+        );
+        Ok(out)
     }
 
     // ---- cached-literal execution variants -------------------------------
@@ -165,6 +198,218 @@ impl BundleRuntime {
         let loss = literal_to_scalar(&out[0])?;
         let gx = literal_to_tensor(&out[1], &self.manifest.stages[last].input.shape)?;
         Ok((loss, gx, self.unpack_grads(last, &out, 2)?))
+    }
+
+    // ---- flat-arena execution (DESIGN-PERF.md) ---------------------------
+    // Parameters arrive as one contiguous stage run; gradients leave by
+    // being written straight into the caller's arena slice.  These are the
+    // trainers' hot-path entry points — the per-tensor APIs below remain
+    // for edges (benches, tools, tests).
+
+    /// Forward of a non-loss stage from a flat parameter run.
+    pub fn stage_fwd_flat(
+        &self,
+        stage: usize,
+        flat: &[f32],
+        x: &HostTensor,
+    ) -> Result<Tensor> {
+        let lits = self.param_literals_flat(stage, flat)?;
+        self.stage_fwd_lits(stage, &lits, x)
+    }
+
+    /// Loss-stage forward from a flat parameter run: scalar loss.
+    pub fn last_fwd_loss_flat(
+        &self,
+        flat: &[f32],
+        x: &Tensor,
+        targets: &IntTensor,
+    ) -> Result<f32> {
+        let last = self.manifest.n_stages - 1;
+        let mut args = self.param_literals_flat(last, flat)?;
+        args.push(tensor_to_literal(x)?);
+        args.push(int_tensor_to_literal(targets)?);
+        let out = execute_tuple(self.exe(last, "fwd_loss")?, &args)?;
+        literal_to_scalar(&out[0])
+    }
+
+    /// Classifier logits from a flat parameter run.
+    pub fn predict_flat(&self, flat: &[f32], x: &Tensor) -> Result<Tensor> {
+        let last = self.manifest.n_stages - 1;
+        let mut args = self.param_literals_flat(last, flat)?;
+        args.push(tensor_to_literal(x)?);
+        let out = execute_tuple(self.exe(last, "predict")?, &args)?;
+        let elems = out[0].element_count();
+        let batch = self.manifest.target.shape[0];
+        literal_to_tensor(&out[0], &[batch, elems / batch])
+    }
+
+    /// Backward of stage 0: parameter grads written into `gdst`.
+    pub fn first_bwd_flat(
+        &self,
+        flat: &[f32],
+        x: &HostTensor,
+        gy: &Tensor,
+        gdst: &mut [f32],
+    ) -> Result<()> {
+        let lits = self.param_literals_flat(0, flat)?;
+        self.first_bwd_lits_into(&lits, x, gy, gdst)
+    }
+
+    /// Backward of a middle stage: grads into `gdst`, returns gx.
+    pub fn mid_bwd_flat(
+        &self,
+        stage: usize,
+        flat: &[f32],
+        x: &Tensor,
+        gy: &Tensor,
+        gdst: &mut [f32],
+    ) -> Result<Tensor> {
+        let lits = self.param_literals_flat(stage, flat)?;
+        self.mid_bwd_lits_into(stage, &lits, x, gy, gdst)
+    }
+
+    /// Backward of the loss stage: grads into `gdst`, returns (loss, gx).
+    pub fn last_bwd_flat(
+        &self,
+        flat: &[f32],
+        x: &Tensor,
+        targets: &IntTensor,
+        gdst: &mut [f32],
+    ) -> Result<(f32, Tensor)> {
+        let last = self.manifest.n_stages - 1;
+        let lits = self.param_literals_flat(last, flat)?;
+        self.last_bwd_lits_into(&lits, x, targets, gdst)
+    }
+
+    /// Cached-literal variant of [`Self::first_bwd_flat`].
+    pub fn first_bwd_lits_into(
+        &self,
+        params: &[xla::Literal],
+        x: &HostTensor,
+        gy: &Tensor,
+        gdst: &mut [f32],
+    ) -> Result<()> {
+        let x_lit = host_to_literal(x)?;
+        let gy_lit = tensor_to_literal(gy)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&x_lit);
+        args.push(&gy_lit);
+        let out = execute_tuple(self.exe(0, "fwdbwd")?, &args)?;
+        self.unpack_grads_into(0, &out, 0, gdst)
+    }
+
+    /// Cached-literal variant of [`Self::mid_bwd_flat`].
+    pub fn mid_bwd_lits_into(
+        &self,
+        stage: usize,
+        params: &[xla::Literal],
+        x: &Tensor,
+        gy: &Tensor,
+        gdst: &mut [f32],
+    ) -> Result<Tensor> {
+        let x_lit = tensor_to_literal(x)?;
+        let gy_lit = tensor_to_literal(gy)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&x_lit);
+        args.push(&gy_lit);
+        let out = execute_tuple(self.exe(stage, "fwdbwd")?, &args)?;
+        let gx = literal_to_tensor(&out[0], &self.manifest.stages[stage].input.shape)?;
+        self.unpack_grads_into(stage, &out, 1, gdst)?;
+        Ok(gx)
+    }
+
+    /// Cached-literal variant of [`Self::last_bwd_flat`].
+    pub fn last_bwd_lits_into(
+        &self,
+        params: &[xla::Literal],
+        x: &Tensor,
+        targets: &IntTensor,
+        gdst: &mut [f32],
+    ) -> Result<(f32, Tensor)> {
+        let last = self.manifest.n_stages - 1;
+        let x_lit = tensor_to_literal(x)?;
+        let t_lit = int_tensor_to_literal(targets)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&x_lit);
+        args.push(&t_lit);
+        let out = execute_tuple(self.exe(last, "fwdbwd")?, &args)?;
+        let loss = literal_to_scalar(&out[0])?;
+        let gx = literal_to_tensor(&out[1], &self.manifest.stages[last].input.shape)?;
+        self.unpack_grads_into(last, &out, 2, gdst)?;
+        Ok((loss, gx))
+    }
+
+    /// Fused SGD-momentum over flat stage runs: reads θ_t from `params`,
+    /// updates `moms` in place, writes θ_{t+1} into `out` (which may be a
+    /// [`crate::parallel::ParamStore`] next-slot — see `update_parts`).
+    pub fn sgd_update_flat(
+        &self,
+        stage: usize,
+        params: &[f32],
+        moms: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let specs = &self.manifest.stages[stage].params;
+        let k = specs.len();
+        anyhow::ensure!(
+            params.len() == moms.len()
+                && params.len() == grads.len()
+                && params.len() == out.len(),
+            "stage {stage}: flat run length mismatch"
+        );
+        let mut args = Vec::with_capacity(3 * k + 1);
+        for src in [params, &*moms, grads] {
+            let mut off = 0usize;
+            for p in specs {
+                let n = p.elems();
+                args.push(slice_to_literal(&p.shape, &src[off..off + n])?);
+                off += n;
+            }
+            anyhow::ensure!(off == src.len(), "stage {stage}: run/manifest mismatch");
+        }
+        args.push(tensor_to_literal(&Tensor::scalar(lr))?);
+        let res = execute_tuple(self.exe(stage, "sgd")?, &args)?;
+        anyhow::ensure!(res.len() == 2 * k, "sgd returned {} outputs", res.len());
+        let mut off = 0usize;
+        for (i, p) in specs.iter().enumerate() {
+            let n = p.elems();
+            literal_into_slice(&res[i], &mut out[off..off + n])?;
+            literal_into_slice(&res[k + i], &mut moms[off..off + n])?;
+            off += n;
+        }
+        Ok(())
+    }
+
+    /// Unpack per-parameter gradient literals straight into a contiguous
+    /// stage run (skipping `skip` leading non-grad outputs).
+    fn unpack_grads_into(
+        &self,
+        stage: usize,
+        out: &[xla::Literal],
+        skip: usize,
+        dst: &mut [f32],
+    ) -> Result<()> {
+        let specs = &self.manifest.stages[stage].params;
+        anyhow::ensure!(
+            out.len() == skip + specs.len(),
+            "stage {stage}: expected {} outputs, got {}",
+            skip + specs.len(),
+            out.len()
+        );
+        let mut off = 0usize;
+        for (i, p) in specs.iter().enumerate() {
+            let n = p.elems();
+            literal_into_slice(&out[skip + i], &mut dst[off..off + n])?;
+            off += n;
+        }
+        anyhow::ensure!(
+            off == dst.len(),
+            "stage {stage}: grad run has {} elems, manifest says {off}",
+            dst.len()
+        );
+        Ok(())
     }
 
     // ---- forward ---------------------------------------------------------

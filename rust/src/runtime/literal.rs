@@ -5,9 +5,16 @@ use anyhow::Result;
 use super::anyhow_xla;
 use crate::tensor::{HostTensor, IntTensor, Tensor};
 
+/// Literal straight from a flat slice + shape — the arena fast path: no
+/// intermediate [`Tensor`] is materialized.
+pub fn slice_to_literal(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(anyhow_xla)
+}
+
 pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
-    xla::Literal::vec1(&t.data).reshape(&dims).map_err(anyhow_xla)
+    slice_to_literal(&t.shape, &t.data)
 }
 
 pub fn int_tensor_to_literal(t: &IntTensor) -> Result<xla::Literal> {
@@ -33,6 +40,20 @@ pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> 
         data.len()
     );
     Ok(Tensor::new(shape.to_vec(), data))
+}
+
+/// Copy an f32 literal into an existing arena slice (no `Tensor`
+/// round-trip; the literal's element count must match the slice).
+pub fn literal_into_slice(lit: &xla::Literal, dst: &mut [f32]) -> Result<()> {
+    let data = lit.to_vec::<f32>().map_err(anyhow_xla)?;
+    anyhow::ensure!(
+        data.len() == dst.len(),
+        "literal has {} elems, destination slice {}",
+        data.len(),
+        dst.len()
+    );
+    dst.copy_from_slice(&data);
+    Ok(())
 }
 
 /// Scalar (rank-0 or single-element) f32 literal.

@@ -18,7 +18,9 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 pub use bundle::BundleRuntime;
-pub use literal::{literal_to_tensor, tensor_to_literal};
+pub use literal::{
+    literal_into_slice, literal_to_tensor, slice_to_literal, tensor_to_literal,
+};
 
 /// Shared PJRT client + compile cache keyed by artifact path.
 pub struct Engine {

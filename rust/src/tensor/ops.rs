@@ -13,13 +13,54 @@ pub fn add_into(dst: &mut [f32], src: &[f32]) {
     }
 }
 
+/// y += a·x, fused (gradient accumulation / weighted reduction hot path).
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (d, s) in y.iter_mut().zip(x) {
+        *d += a * *s;
+    }
+}
+
+/// dst = (dst + src) · s, fused — the "add last contribution and average"
+/// step of a ring reduction in one pass over the data.  Element-for-element
+/// this computes exactly `dst += src; dst *= s`, so it preserves the
+/// bit-identical reduction contract.
+pub fn add_scale(dst: &mut [f32], src: &[f32], s: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, x) in dst.iter_mut().zip(src) {
+        *d = (*d + *x) * s;
+    }
+}
+
+/// Cache-block size for multi-row reductions: 16 KiB of f32 per row chunk
+/// keeps the accumulator chunk plus one source chunk resident in L1/L2
+/// while streaming over many rows.
+const REDUCE_CHUNK: usize = 4096;
+
+/// dst += Σ rows, chunked: all rows are consumed chunk-by-chunk so the
+/// accumulator chunk stays hot instead of being re-streamed from memory
+/// once per row.  Per-element the sum order is still row order, so the
+/// result is bit-identical to repeated [`add_into`].
+pub fn chunked_sum_into(dst: &mut [f32], rows: &[&[f32]]) {
+    for r in rows {
+        debug_assert_eq!(dst.len(), r.len());
+    }
+    let mut start = 0;
+    while start < dst.len() {
+        let end = (start + REDUCE_CHUNK).min(dst.len());
+        let d = &mut dst[start..end];
+        for r in rows {
+            add_into(d, &r[start..end]);
+        }
+        start = end;
+    }
+}
+
 /// dst = sum of all rows, reduced in row order (deterministic).
 pub fn reduce_rows(rows: &[&[f32]]) -> Vec<f32> {
     assert!(!rows.is_empty());
     let mut out = rows[0].to_vec();
-    for r in &rows[1..] {
-        add_into(&mut out, r);
-    }
+    chunked_sum_into(&mut out, &rows[1..]);
     out
 }
 
@@ -57,6 +98,37 @@ mod tests {
         let b = [10.0f32, 20.0];
         let c = [100.0f32, 200.0];
         assert_eq!(reduce_rows(&[&a, &b, &c]), vec![111.0, 222.0]);
+    }
+
+    #[test]
+    fn fused_kernels_match_two_pass_forms() {
+        let x = [1.0f32, -2.0, 3.0];
+        let mut y = [10.0f32, 10.0, 10.0];
+        axpy(&mut y, 2.0, &x);
+        assert_eq!(y, [12.0, 6.0, 16.0]);
+
+        let mut d = [4.0f32, 8.0];
+        add_scale(&mut d, &[2.0, 2.0], 0.5);
+        assert_eq!(d, [3.0, 5.0]);
+    }
+
+    #[test]
+    fn chunked_sum_is_bit_identical_to_naive() {
+        // longer than one chunk so the blocking path is exercised
+        let len = REDUCE_CHUNK + 37;
+        let rows: Vec<Vec<f32>> = (0..5)
+            .map(|r| (0..len).map(|i| ((r * len + i) as f32).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut naive = vec![0.0f32; len];
+        for r in &refs {
+            add_into(&mut naive, r);
+        }
+        let mut chunked = vec![0.0f32; len];
+        chunked_sum_into(&mut chunked, &refs);
+        for (a, b) in naive.iter().zip(&chunked) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]
