@@ -18,16 +18,17 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use cyclic_dp::comm::bucketed::BucketedReducer;
 use cyclic_dp::comm::collectives::{allreduce_mean, ring_allreduce};
-use cyclic_dp::comm::{tags, Endpoint, Fabric};
+use cyclic_dp::comm::{tags, CommStats, Endpoint, EventKind, Fabric};
 use cyclic_dp::coordinator::single::RefTrainer;
-use cyclic_dp::coordinator::{multi, SharedRuntime};
+use cyclic_dp::coordinator::{multi, ExecMode, SharedRuntime};
 use cyclic_dp::data::DataSource;
 use cyclic_dp::model::artifacts_root;
 use cyclic_dp::parallel::arena::ArenaLayout;
 use cyclic_dp::parallel::{GradBuffer, Rule};
 use cyclic_dp::runtime::{tensor_to_literal, BundleRuntime};
-use cyclic_dp::tensor::ops::{add_into, axpy, reduce_rows};
+use cyclic_dp::tensor::ops::{add_into, add_scale_into, axpy, reduce_rows, scale};
 use cyclic_dp::tensor::Tensor;
 
 // ---- allocation accounting ------------------------------------------------
@@ -158,6 +159,45 @@ fn main() {
     let steady_allocs = allocs() - a0;
     println!("  grad-reduction steady-state allocations      {steady_allocs} (want 0)");
     counters.push(("grad_reduction_steady_state_allocs".into(), steady_allocs as f64));
+    assert_eq!(steady_allocs, 0, "arena reduction loop must not allocate");
+
+    // ...extended to the full multi-trainer owner step machinery: the
+    // bucketed-ring owner's per-stage work — bucket iteration, fused
+    // assemble-and-average per bucket (`add_scale_into`), mb-ordered
+    // GradBuffer accumulation, average, per-stage reads, reset.  The
+    // only per-step heap traffic a real multi step adds beyond this is
+    // the fabric's channel nodes (pooled payload buffers recycle, see
+    // the plateau check below) and the XLA FFI itself.
+    let mut avg_run = layout.zeros();
+    let owner_step = |gbuf: &mut GradBuffer, avg: &mut [f32]| {
+        for mb in 1..=N_MB {
+            gbuf.add_all_flat(mb, &grad_row);
+        }
+        gbuf.average();
+        for j in (0..N_STAGES).rev() {
+            let base = layout.stage_range(j).start;
+            for bk in layout.stage_buckets(j, 4096) {
+                let r = base + bk.start..base + bk.end;
+                add_scale_into(
+                    &mut avg[r.clone()],
+                    &grad_row[r.clone()],
+                    &grad_row[r],
+                    1.0 / N_MB as f32,
+                );
+            }
+            std::hint::black_box(gbuf.stage(j));
+        }
+        gbuf.reset();
+    };
+    owner_step(&mut gbuf, &mut avg_run[..]);
+    let a0 = allocs();
+    for _ in 0..10 {
+        owner_step(&mut gbuf, &mut avg_run[..]);
+    }
+    let owner_allocs = allocs() - a0;
+    println!("  bucketed owner-step steady-state allocations {owner_allocs} (want 0)");
+    counters.push(("bucketed_owner_step_steady_state_allocs".into(), owner_allocs as f64));
+    assert_eq!(owner_allocs, 0, "bucketed owner step must not allocate");
 
     // ---- fabric collectives ----------------------------------------------
     b.section("fabric collectives (4 workers, 1M f32, pooled)");
@@ -236,9 +276,63 @@ fn main() {
         run_handoff(&params_row, true);
     }));
 
+    // ---- eager bucketed reduction: overlap with backprop ------------------
+    // Synthetic multi-worker step (artifact-free): each worker "computes"
+    // a backward pass stage by stage (deterministic streaming passes over
+    // the stage run) and either (a) eagerly launches each stage's bucket
+    // ring the moment the stage lands, or (b) waits for the whole
+    // backward before reducing — the step-boundary baseline.  The comm
+    // timeline proves (a) starts reducing while backprop still runs.
+    b.section("eager bucketed ring vs step-boundary ring (4 workers, synthetic bwd)");
+    let mut ts_stats: Vec<harness::Stat> = Vec::new();
+    let mut ts_counters: Vec<(String, f64)> = Vec::new();
+    for (label, eager) in [
+        ("step-boundary ring (reduce after bwd)", false),
+        ("eager bucketed ring (overlapped)", true),
+    ] {
+        let st = b.time_stat(label, 1, 5, || {
+            std::hint::black_box(run_synthetic_step(&layout, 4, 4, eager, false));
+        });
+        ts_stats.push(st.clone());
+        stats.push(st);
+    }
+    // timeline proof: first grad-bucket send precedes the last backward
+    // (a single step, so the overlap cannot come from step interleaving)
+    let (tl_stats, _, _) = run_synthetic_step(&layout, 4, 1, true, true);
+    let first_send = tl_stats
+        .first_ns(EventKind::GradSend)
+        .expect("grad sends recorded");
+    let last_bwd = tl_stats
+        .last_ns(EventKind::BwdStageDone)
+        .expect("bwd marks recorded");
+    assert!(
+        first_send < last_bwd,
+        "eager reduction must start before the last backward completes \
+         (first send {first_send} ns vs last bwd {last_bwd} ns)"
+    );
+    println!(
+        "  overlap: first grad send at {first_send} ns, last bwd done at {last_bwd} ns"
+    );
+    ts_counters.push(("overlap_first_grad_send_ns".into(), first_send as f64));
+    ts_counters.push(("overlap_last_bwd_done_ns".into(), last_bwd as f64));
+    ts_counters.push(("eager_starts_before_last_bwd".into(), 1.0));
+    // pooled buffers: steady-state eager steps recycle, they don't allocate
+    let (_, pool_alloc, pool_rec) = run_synthetic_step(&layout, 4, 12, true, false);
+    println!(
+        "  eager ring pool over 12 steps                 recycled {pool_rec} | allocated {pool_alloc}"
+    );
+    assert!(
+        pool_rec > pool_alloc,
+        "steady-state eager steps must be served by the pool \
+         (recycled {pool_rec} vs allocated {pool_alloc})"
+    );
+    ts_counters.push(("eager_pool_recycled".into(), pool_rec as f64));
+    ts_counters.push(("eager_pool_allocated".into(), pool_alloc as f64));
+
     let have_mlp = harness::have_bundle("mlp");
     if !have_mlp {
         harness::write_json("BENCH_hotpath.json", "hotpath", &stats, &counters);
+        harness::write_json("BENCH_trainstep.json", "trainstep", &ts_stats, &ts_counters);
         return;
     }
     let rt = BundleRuntime::load(&artifacts_root().join("mlp")).unwrap();
@@ -277,8 +371,118 @@ fn main() {
         t.step().unwrap();
     }));
 
+    // ---- trainstep: literal vs device-resident ----------------------------
+    // Per-step wall time and host↔device traffic for the two execution
+    // paths, plus the device-residency contract: ≤ 1 stage-level
+    // parameter upload per committed θ-version (the literal path pays
+    // one per used version per step, forever).
+    b.section("trainstep: literal vs device-resident (cdp_v2, mlp)");
+    let n_stages = rt.manifest.n_stages;
+    const TS_STEPS: usize = 5;
+
+    let mut lit = RefTrainer::new(&rt, Rule::CdpV2).unwrap();
+    lit.step().unwrap(); // warm
+    rt.transfers.reset();
+    let st = b.time_stat("step literal (host path)", 0, TS_STEPS, || {
+        lit.step().unwrap();
+    });
+    let lit_h2d = rt.transfers.h2d_bytes() as f64 / TS_STEPS as f64;
+    let lit_d2h = rt.transfers.d2h_bytes() as f64 / TS_STEPS as f64;
+    let lit_uploads = rt.transfers.param_uploads() as f64 / TS_STEPS as f64;
+    ts_stats.push(st.clone());
+    stats.push(st);
+
+    let mut dev =
+        RefTrainer::new_with_mode(&rt, Rule::CdpV2, ExecMode::DeviceResident).unwrap();
+    dev.step().unwrap(); // warm (pays the θ-version-0 uploads)
+    rt.transfers.reset();
+    let up0 = dev.device_param_uploads().unwrap();
+    let a0 = allocs();
+    let st = b.time_stat("step device-resident", 0, TS_STEPS, || {
+        dev.step().unwrap();
+    });
+    let dev_allocs = (allocs() - a0) as f64 / TS_STEPS as f64;
+    let dev_h2d = rt.transfers.h2d_bytes() as f64 / TS_STEPS as f64;
+    let dev_d2h = rt.transfers.d2h_bytes() as f64 / TS_STEPS as f64;
+    let dev_uploads = (dev.device_param_uploads().unwrap() - up0) as f64 / TS_STEPS as f64;
+    ts_stats.push(st.clone());
+    stats.push(st);
+
+    println!(
+        "  literal: {lit_uploads:.1} param uploads/step, h2d {lit_h2d:.0} B/step, d2h {lit_d2h:.0} B/step"
+    );
+    println!(
+        "  device:  {dev_uploads:.1} param uploads/step, h2d {dev_h2d:.0} B/step, d2h {dev_d2h:.0} B/step, {dev_allocs:.0} allocs/step"
+    );
+    // contract: one committed θ-version per step ⇒ ≤ n_stages uploads/step
+    assert!(
+        dev_uploads <= n_stages as f64 + 1e-9,
+        "device path exceeded 1 upload per stage per θ-version: {dev_uploads}/step over {n_stages} stages"
+    );
+    assert!(
+        dev_uploads < lit_uploads,
+        "device path must upload less often than the literal path \
+         ({dev_uploads} vs {lit_uploads} per step)"
+    );
+    ts_counters.push(("trainstep_steps".into(), TS_STEPS as f64));
+    ts_counters.push(("literal_param_uploads_per_step".into(), lit_uploads));
+    ts_counters.push(("literal_h2d_bytes_per_step".into(), lit_h2d));
+    ts_counters.push(("literal_d2h_bytes_per_step".into(), lit_d2h));
+    ts_counters.push(("device_param_uploads_per_step".into(), dev_uploads));
+    ts_counters.push(("device_h2d_bytes_per_step".into(), dev_h2d));
+    ts_counters.push(("device_d2h_bytes_per_step".into(), dev_d2h));
+    ts_counters.push(("device_allocs_per_step".into(), dev_allocs));
+    ts_counters.push(("n_stages".into(), n_stages as f64));
+    // drop the trainers (and the device store's resident buffers) before
+    // `rt` moves into the shared Arc below — device buffers must never
+    // outlive the PJRT client that created them
+    drop(t);
+    drop(lit);
+    drop(dev);
+
     b.section("multi-worker step (4 threads)");
     let shared = SharedRuntime(Arc::new(rt));
+
+    // real-trainer overlap: the eager ring starts reducing before the
+    // cluster's last backward stage completes (comm-stats timeline)
+    {
+        // a single step, so overlap cannot come from step interleaving
+        let rep = multi::train_with(
+            shared.clone(),
+            Rule::CdpV2,
+            multi::CommPattern::Ring,
+            1,
+            multi::MultiOpts {
+                mode: ExecMode::DeviceResident,
+                bucket_elems: 64,
+                record_timeline: true,
+            },
+        )
+        .unwrap();
+        let first_send = rep
+            .timeline
+            .iter()
+            .filter(|e| e.kind == EventKind::GradSend)
+            .map(|e| e.ns)
+            .min()
+            .expect("grad sends");
+        let last_bwd = rep
+            .timeline
+            .iter()
+            .filter(|e| e.kind == EventKind::BwdStageDone)
+            .map(|e| e.ns)
+            .max()
+            .expect("bwd marks");
+        assert!(
+            first_send < last_bwd,
+            "trainer reduction must start before the last backward completes"
+        );
+        println!(
+            "  multi ring overlap: first grad send {first_send} ns < last bwd {last_bwd} ns"
+        );
+        ts_counters.push(("multi_overlap_first_send_ns".into(), first_send as f64));
+        ts_counters.push(("multi_overlap_last_bwd_ns".into(), last_bwd as f64));
+    }
     stats.push(b.time_stat("multi ring 2 steps (cdp_v2)", 1, 3, || {
         std::hint::black_box(
             multi::train(shared.clone(), Rule::CdpV2, multi::CommPattern::Ring, 2)
@@ -325,6 +529,83 @@ fn main() {
     }));
 
     harness::write_json("BENCH_hotpath.json", "hotpath", &stats, &counters);
+    harness::write_json("BENCH_trainstep.json", "trainstep", &ts_stats, &ts_counters);
+}
+
+/// Deterministic streaming passes standing in for one stage's backward
+/// compute in the synthetic step.
+fn synthetic_bwd(run: &mut [f32]) {
+    for _ in 0..6 {
+        scale(run, 1.000_001);
+    }
+}
+
+/// Synthetic multi-worker training step over the bench's 8-stage layout:
+/// per stage (backward order), every worker streams passes over its
+/// stage run ("backward compute"), then reduces that stage over the ring
+/// — eagerly (bucketed hop per stage, interleaved with the remaining
+/// backward) or at the step boundary (all compute, then all reduction).
+/// Returns (fabric stats, pool allocated, pool recycled).
+fn run_synthetic_step(
+    layout: &Arc<ArenaLayout>,
+    n: usize,
+    steps: u64,
+    eager: bool,
+    timeline: bool,
+) -> (Arc<CommStats>, u64, u64) {
+    let (eps, stats) = Fabric::new(n);
+    if timeline {
+        stats.enable_timeline();
+    }
+    let pool = eps[0].pool().clone();
+    let reducer = BucketedReducer::new(8 * 1024);
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|mut ep| {
+            let layout = layout.clone();
+            std::thread::spawn(move || {
+                let owner = ep.n - 1;
+                let w = ep.id;
+                let mut gmb: Vec<f32> = (0..layout.total_len)
+                    .map(|k| ((w + k) as f32 * 1e-3).sin())
+                    .collect();
+                let mut avg = layout.zeros();
+                for t in 0..steps {
+                    if eager {
+                        for j in (0..layout.n_stages()).rev() {
+                            let r = layout.stage_range(j);
+                            synthetic_bwd(&mut gmb[r.clone()]);
+                            ep.stats().mark(EventKind::BwdStageDone, w, j, 0);
+                            let out = if w == owner {
+                                Some(&mut avg[r.clone()])
+                            } else {
+                                None
+                            };
+                            reducer.ring_stage(&mut ep, &layout, t, j, &gmb[r], out);
+                        }
+                    } else {
+                        for j in (0..layout.n_stages()).rev() {
+                            let r = layout.stage_range(j);
+                            synthetic_bwd(&mut gmb[r]);
+                            ep.stats().mark(EventKind::BwdStageDone, w, j, 0);
+                        }
+                        for j in (0..layout.n_stages()).rev() {
+                            let r = layout.stage_range(j);
+                            let out = if w == owner {
+                                Some(&mut avg[r.clone()])
+                            } else {
+                                None
+                            };
+                            reducer.ring_stage(&mut ep, &layout, t, j, &gmb[r], out);
+                        }
+                    }
+                }
+                std::hint::black_box(avg.first().copied());
+            })
+        })
+        .collect();
+    handles.into_iter().for_each(|h| h.join().unwrap());
+    (stats, pool.allocated(), pool.recycled())
 }
 
 /// The seed fabric's ring all-reduce: identical schedule, but every send

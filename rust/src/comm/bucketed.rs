@@ -1,0 +1,349 @@
+//! Eager bucketed gradient reduction (DESIGN-PERF.md §Bucket overlap).
+//!
+//! The step-boundary reductions the trainers shipped with serialize
+//! compute and communication: a worker finishes its *entire* backward
+//! pass, then the gradient ring (or the ZeRO shard sends) start.  The
+//! paper's point (§3, Fig 1c) — echoed by PipeDream's weight stashing and
+//! ZeRO/OSDP bucketing — is that gradient communication can be *balanced
+//! across the step*: stage `s`'s gradients are final the moment stage
+//! `s`'s backward lands, while stages `s−1..0` still have backprop left
+//! to run.
+//!
+//! [`BucketedReducer`] realizes that: each stage's flat gradient run is
+//! partitioned into fixed-size buckets ([`ArenaLayout::stage_buckets`]),
+//! and the ring hop / shard send for bucket `b` of stage `s` launches as
+//! soon as the trainer's backward callback reaches stage `s` — the comm
+//! for stage `s` overlaps the backward of stage `s−1`.
+//!
+//! Determinism: within every bucket the partial sums still accumulate in
+//! micro-batch order 1..N (worker 0 starts the ring, each worker adds its
+//! own contribution, the owner folds the last add and the 1/N average
+//! into one fused pass).  Per element this is exactly the sum order of
+//! the step-boundary reduction, so loss sequences remain bit-identical to
+//! the reference trainer — asserted in rust/tests/.
+
+use crate::comm::{tags, Endpoint, EventKind};
+use crate::parallel::arena::ArenaLayout;
+use crate::tensor::ops;
+
+/// Default bucket granularity: 16 Ki f32 (64 KiB) — small enough that a
+/// wide stage yields several overlappable launches, large enough that
+/// per-bucket tag/queue overhead stays negligible.
+pub const DEFAULT_BUCKET_ELEMS: usize = 16 * 1024;
+
+/// Bucket size override for experiments: `CDP_BUCKET_ELEMS=<n>`.
+pub fn bucket_elems_from_env() -> usize {
+    std::env::var("CDP_BUCKET_ELEMS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|n| *n > 0)
+        .unwrap_or(DEFAULT_BUCKET_ELEMS)
+}
+
+/// Hard cap on buckets per stage — the tag sub-field budget
+/// ([`tags::grad_shard`] carries 14 bucket bits, the tighter of the two
+/// grad-bucket namespaces).  Exceeding it would alias tags, so bucket
+/// sizes are clamped to respect it rather than trusted.
+pub const MAX_BUCKETS_PER_STAGE: usize = 1 << 14;
+
+/// The bucket size actually used for a stage: the configured size,
+/// raised just enough that the stage tiles into ≤
+/// [`MAX_BUCKETS_PER_STAGE`] buckets.  Pure function of (configured
+/// size, stage length), so every worker — sender and receiver — derives
+/// the identical partition from the shared layout.
+pub fn effective_bucket_elems(bucket_elems: usize, stage_len: usize) -> usize {
+    bucket_elems.max(stage_len.div_ceil(MAX_BUCKETS_PER_STAGE))
+}
+
+/// Fixed-size bucket partitioner + the eager reduction protocols built on
+/// it.  Stateless apart from the bucket size, so every worker constructs
+/// its own (the *layout* is the shared contract).
+#[derive(Clone, Copy, Debug)]
+pub struct BucketedReducer {
+    pub bucket_elems: usize,
+}
+
+impl BucketedReducer {
+    pub fn new(bucket_elems: usize) -> Self {
+        assert!(bucket_elems > 0, "bucket_elems must be positive");
+        Self { bucket_elems }
+    }
+
+    pub fn from_env() -> Self {
+        Self::new(bucket_elems_from_env())
+    }
+
+    /// Clamped bucket size for one stage (see [`effective_bucket_elems`]).
+    fn stage_elems(&self, layout: &ArenaLayout, stage: usize) -> usize {
+        effective_bucket_elems(self.bucket_elems, layout.stage_len(stage))
+    }
+
+    /// Eager ring hop for one stage of the multi-trainer CDP ring, called
+    /// by worker `ep.id` the moment stage `stage`'s backward output lands
+    /// in `own` (the worker's flat stage-run gradients).  Worker 0 (micro-
+    /// batch 1) launches each bucket immediately; middle workers add their
+    /// contribution to the received partial in place and forward the
+    /// handle; the owner (worker N−1, the only optimizer state) folds its
+    /// own contribution and the 1/N average into one fused pass per
+    /// bucket, assembling the averaged stage sums into `avg_out`.
+    ///
+    /// `avg_out` must be `Some` exactly on the owner.  Per-element sum
+    /// order is micro-batch order 1..N — bit-identical to the step-
+    /// boundary ring it replaces.
+    pub fn ring_stage(
+        &self,
+        ep: &mut Endpoint,
+        layout: &ArenaLayout,
+        step: u64,
+        stage: usize,
+        own: &[f32],
+        mut avg_out: Option<&mut [f32]>,
+    ) {
+        let n = ep.n;
+        let w = ep.id;
+        let owner = n - 1;
+        let inv = 1.0 / n as f32;
+        debug_assert_eq!(own.len(), layout.stage_len(stage));
+        debug_assert_eq!(avg_out.is_some(), w == owner, "avg_out ⇔ owner");
+        if n == 1 {
+            // single worker: own grads are the full sum (inv == 1.0, the
+            // scale still runs so the averaged contract is uniform)
+            let out = avg_out.expect("single worker is the owner");
+            out.copy_from_slice(own);
+            ops::scale(out, inv);
+            return;
+        }
+        for b in layout.stage_buckets(stage, self.stage_elems(layout, stage)) {
+            let tag = tags::grad_bucket(step, stage, b.index);
+            let nbytes = b.len() as u64 * 4;
+            if w == 0 {
+                ep.stats().mark(EventKind::GradSend, w, stage, nbytes);
+                ep.send_copy(1, tag, &own[b.range()]);
+            } else {
+                let mut part = ep.recv(w - 1, tag);
+                if w < owner {
+                    ops::add_into(part.make_mut(), &own[b.range()]);
+                    ep.stats().mark(EventKind::GradSend, w, stage, nbytes);
+                    ep.send(w + 1, tag, part);
+                } else {
+                    let out = avg_out.as_deref_mut().expect("owner has avg_out");
+                    ops::add_scale_into(&mut out[b.range()], &part, &own[b.range()], inv);
+                }
+            }
+        }
+    }
+
+    /// Eager ZeRO shard send: push stage `stage`'s gradients for micro-
+    /// batch `mb` (1-based) to the stage owner, bucket by bucket, the
+    /// moment they land.  Pure sends — never blocks, so the caller's
+    /// remaining backward keeps running while the fabric carries these.
+    #[allow(clippy::too_many_arguments)]
+    pub fn shard_send(
+        &self,
+        ep: &Endpoint,
+        layout: &ArenaLayout,
+        step: u64,
+        stage: usize,
+        mb: usize,
+        owner: usize,
+        own: &[f32],
+    ) {
+        debug_assert_ne!(owner, ep.id, "own shard never travels");
+        debug_assert_eq!(own.len(), layout.stage_len(stage));
+        for b in layout.stage_buckets(stage, self.stage_elems(layout, stage)) {
+            ep.stats().mark(EventKind::GradSend, ep.id, stage, b.len() as u64 * 4);
+            ep.send_copy(owner, tags::grad_shard(step, stage, mb, b.index), &own[b.range()]);
+        }
+    }
+
+    /// Owner-side ZeRO reduction for its stage: accumulate every micro-
+    /// batch's shard in order 1..N (its own contribution, `own`, in its
+    /// slot), then average — landing in `gsum`.  Bucket arrivals may be
+    /// out of order on the wire; the (from, tag) parking in [`Endpoint`]
+    /// restores them, so the per-element sum order is unchanged.
+    #[allow(clippy::too_many_arguments)]
+    pub fn shard_reduce(
+        &self,
+        ep: &mut Endpoint,
+        layout: &ArenaLayout,
+        step: u64,
+        stage: usize,
+        my_mb: usize,
+        n_mb: usize,
+        own: &[f32],
+        gsum: &mut [f32],
+    ) {
+        debug_assert_eq!(gsum.len(), layout.stage_len(stage));
+        gsum.fill(0.0);
+        for mb in 1..=n_mb {
+            if mb == my_mb {
+                ops::add_into(gsum, own);
+            } else {
+                for b in layout.stage_buckets(stage, self.stage_elems(layout, stage)) {
+                    let part = ep.recv(mb - 1, tags::grad_shard(step, stage, mb, b.index));
+                    ops::add_into(&mut gsum[b.range()], &part);
+                }
+            }
+        }
+        ops::scale(gsum, 1.0 / n_mb as f32);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Fabric;
+    use crate::tensor::ops::add_into;
+    use std::thread;
+
+    fn layout() -> std::sync::Arc<ArenaLayout> {
+        // two stages, lens 10 and 5 — bucket size 4 forces short tails
+        ArenaLayout::from_stage_shapes(&[vec![vec![10]], vec![vec![5]]])
+    }
+
+    /// Reference: plain mb-order sum + average, per stage.
+    fn reference_avg(rows: &[Vec<f32>]) -> Vec<f32> {
+        let mut sum = vec![0.0f32; rows[0].len()];
+        for r in rows {
+            add_into(&mut sum, r);
+        }
+        let inv = 1.0 / rows.len() as f32;
+        for v in &mut sum {
+            *v *= inv;
+        }
+        sum
+    }
+
+    #[test]
+    fn ring_stage_matches_reference_bitwise() {
+        for n in [1usize, 2, 3, 4] {
+            let l = layout();
+            let (eps, _) = Fabric::new(n);
+            // values whose f32 sum order matters
+            let grads: Vec<Vec<f32>> = (0..n)
+                .map(|w| {
+                    (0..l.total_len)
+                        .map(|k| ((w * 31 + k) as f32).sin() * 1e4)
+                        .collect()
+                })
+                .collect();
+            let grads_c = grads.clone();
+            let l2 = l.clone();
+            let handles: Vec<_> = eps
+                .into_iter()
+                .map(|mut ep| {
+                    let l = l2.clone();
+                    let own_all = grads_c[ep.id].clone();
+                    thread::spawn(move || {
+                        let red = BucketedReducer::new(4);
+                        let owner = ep.n - 1;
+                        let mut avg = l.zeros();
+                        for stage in (0..l.n_stages()).rev() {
+                            let r = l.stage_range(stage);
+                            let own = &own_all[r.clone()];
+                            let out = if ep.id == owner {
+                                Some(&mut avg[r])
+                            } else {
+                                None
+                            };
+                            red.ring_stage(&mut ep, &l, 7, stage, own, out);
+                        }
+                        (ep.id == owner).then_some(avg)
+                    })
+                })
+                .collect();
+            let mut results: Vec<_> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            let avg = results.pop().flatten().expect("owner (last worker) returns the average");
+            for stage in 0..l.n_stages() {
+                let r = l.stage_range(stage);
+                let rows: Vec<Vec<f32>> =
+                    grads.iter().map(|g| g[r.clone()].to_vec()).collect();
+                let want = reference_avg(&rows);
+                let got = &avg[r];
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} stage={stage}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_protocol_matches_reference_bitwise() {
+        let n = 3usize;
+        let l =
+            ArenaLayout::from_stage_shapes(&[vec![vec![7]], vec![vec![9]], vec![vec![4]]]);
+        let (eps, _) = Fabric::new(n);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|w| (0..l.total_len).map(|k| ((w + 2 * k) as f32).cos() * 1e3).collect())
+            .collect();
+        let grads_c = grads.clone();
+        let l2 = l.clone();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                let l = l2.clone();
+                let own_all = grads_c[ep.id].clone();
+                thread::spawn(move || {
+                    let red = BucketedReducer::new(3);
+                    let w = ep.id;
+                    let mb = w + 1;
+                    // eager sends for non-owned stages (backward order)
+                    for stage in (0..l.n_stages()).rev() {
+                        if stage != w {
+                            red.shard_send(
+                                &ep,
+                                &l,
+                                9,
+                                stage,
+                                mb,
+                                stage, // worker j owns stage j
+                                &own_all[l.stage_range(stage)],
+                            );
+                        }
+                    }
+                    // owner-side reduction of my stage
+                    let mut gsum = l.stage_zeros(w);
+                    red.shard_reduce(
+                        &mut ep,
+                        &l,
+                        9,
+                        w,
+                        mb,
+                        n,
+                        &own_all[l.stage_range(w)],
+                        &mut gsum,
+                    );
+                    gsum
+                })
+            })
+            .collect();
+        let sums: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (stage, got) in sums.iter().enumerate() {
+            let r = l.stage_range(stage);
+            let rows: Vec<Vec<f32>> = grads.iter().map(|g| g[r.clone()].to_vec()).collect();
+            let want = reference_avg(&rows);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "stage {stage}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_bucket_size_is_sane() {
+        assert!(BucketedReducer::from_env().bucket_elems > 0);
+        assert_eq!(DEFAULT_BUCKET_ELEMS, 16 * 1024);
+    }
+
+    #[test]
+    fn bucket_count_clamped_to_tag_budget() {
+        // small stages keep the configured size
+        assert_eq!(effective_bucket_elems(16, 100), 16);
+        // 1-elem buckets over a huge stage would overflow the 14-bit
+        // bucket tag field; the clamp raises the size until it fits
+        let len = 50_000_000usize;
+        let e = effective_bucket_elems(1, len);
+        assert!(len.div_ceil(e) <= MAX_BUCKETS_PER_STAGE);
+    }
+}

@@ -16,21 +16,72 @@
 //! fanning one buffer out to N peers clones the handle, not the data.
 //! Buffers obtained from the fabric's shared [`BufferPool`] return to the
 //! pool when the last handle drops, so steady-state traffic recycles the
-//! same allocations step after step.
+//! same allocations step after step.  The free lists are segregated by
+//! power-of-two capacity class, so `take` is O(#classes) under the lock.
+//!
+//! [`bucketed`] adds the eager bucketed gradient reduction: per-stage
+//! grad runs split into fixed buckets whose ring hops launch while
+//! backprop is still running (the paper's balanced-communication claim,
+//! made measurable by the opt-in [`CommStats`] timeline).
 
+pub mod bucketed;
 pub mod collectives;
 
 use std::collections::{HashMap, VecDeque};
 use std::ops::Deref;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, Weak};
+use std::time::Instant;
 
-/// Global transfer accounting, shared by all endpoints of a fabric.
-#[derive(Debug, Default)]
+/// What a [`TimelineEvent`] records.  The set is deliberately small: just
+/// enough to prove (in benches/tests) that the bucketed gradient
+/// reduction *overlaps* backprop — a `GradSend` with a timestamp earlier
+/// than the last `BwdStageDone` is the overlap, made visible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A gradient bucket partial left a worker.
+    GradSend,
+    /// A worker finished one stage's backward pass.
+    BwdStageDone,
+    /// Updated parameters left the optimizer owner.
+    ParamSend,
+}
+
+/// One timestamped comm/compute event (`ns` is relative to the fabric's
+/// creation instant, so events from all workers share one clock).
+#[derive(Clone, Copy, Debug)]
+pub struct TimelineEvent {
+    pub ns: u64,
+    pub kind: EventKind,
+    pub worker: usize,
+    pub stage: usize,
+    pub bytes: u64,
+}
+
+/// Global transfer accounting, shared by all endpoints of a fabric, plus
+/// an opt-in event timeline (disabled by default — `mark` is a no-op
+/// until [`CommStats::enable_timeline`] runs, so the hot path pays one
+/// relaxed atomic load).
+#[derive(Debug)]
 pub struct CommStats {
     pub bytes: AtomicU64,
     pub messages: AtomicU64,
+    timeline_on: AtomicBool,
+    epoch: Instant,
+    timeline: Mutex<Vec<TimelineEvent>>,
+}
+
+impl Default for CommStats {
+    fn default() -> Self {
+        Self {
+            bytes: AtomicU64::new(0),
+            messages: AtomicU64::new(0),
+            timeline_on: AtomicBool::new(false),
+            epoch: Instant::now(),
+            timeline: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 impl CommStats {
@@ -41,17 +92,98 @@ impl CommStats {
     pub fn messages(&self) -> u64 {
         self.messages.load(Ordering::Relaxed)
     }
+
+    /// Start recording `mark` events (reserves capacity so steady-state
+    /// recording does not reallocate per event).
+    pub fn enable_timeline(&self) {
+        self.timeline.lock().expect("timeline poisoned").reserve(4096);
+        self.timeline_on.store(true, Ordering::Release);
+    }
+
+    /// Record one event; no-op unless the timeline is enabled.
+    pub fn mark(&self, kind: EventKind, worker: usize, stage: usize, bytes: u64) {
+        if !self.timeline_on.load(Ordering::Acquire) {
+            return;
+        }
+        let ns = self.epoch.elapsed().as_nanos() as u64;
+        self.timeline
+            .lock()
+            .expect("timeline poisoned")
+            .push(TimelineEvent { ns, kind, worker, stage, bytes });
+    }
+
+    /// Snapshot of all recorded events (unsorted — workers interleave).
+    pub fn timeline(&self) -> Vec<TimelineEvent> {
+        self.timeline.lock().expect("timeline poisoned").clone()
+    }
+
+    /// Earliest timestamp of `kind`, if any was recorded.
+    pub fn first_ns(&self, kind: EventKind) -> Option<u64> {
+        self.timeline
+            .lock()
+            .expect("timeline poisoned")
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.ns)
+            .min()
+    }
+
+    /// Latest timestamp of `kind`, if any was recorded.
+    pub fn last_ns(&self, kind: EventKind) -> Option<u64> {
+        self.timeline
+            .lock()
+            .expect("timeline poisoned")
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.ns)
+            .max()
+    }
 }
 
 // ---------------------------------------------------------------- pool ----
 
-#[derive(Debug, Default)]
+/// Free lists are segregated by power-of-two capacity class: class `c`
+/// holds buffers with capacity in `[2^c, 2^{c+1})`.  A request of `len`
+/// elements is served from the first non-empty class ≥ `⌈log2 len⌉`, so
+/// every hit fits without regrowing and `take` is O(#classes) instead of
+/// the old O(#free buffers) first-fit scan under the lock.
+const N_CLASSES: usize = usize::BITS as usize;
+
+/// Class a buffer of `cap` elements files under (⌊log2 cap⌋).
+fn class_of_capacity(cap: usize) -> usize {
+    debug_assert!(cap > 0);
+    usize::BITS as usize - 1 - cap.leading_zeros() as usize
+}
+
+/// Smallest class guaranteed to fit a request of `len` (⌈log2 len⌉).
+fn class_for_len(len: usize) -> usize {
+    if len <= 1 {
+        0
+    } else {
+        usize::BITS as usize - (len - 1).leading_zeros() as usize
+    }
+}
+
+/// Per-class free lists: index = capacity class, entries = idle buffers.
+type FreeLists = Vec<Vec<Vec<f32>>>;
+
+#[derive(Debug)]
 struct PoolInner {
-    free: Mutex<Vec<Vec<f32>>>,
-    /// Buffers served from the free list (steady-state hits).
+    free: Mutex<FreeLists>,
+    /// Buffers served from the free lists (steady-state hits).
     recycled: AtomicU64,
     /// Buffers that had to be freshly allocated (cold-start misses).
     allocated: AtomicU64,
+}
+
+impl Default for PoolInner {
+    fn default() -> Self {
+        Self {
+            free: Mutex::new((0..N_CLASSES).map(|_| Vec::new()).collect()),
+            recycled: AtomicU64::new(0),
+            allocated: AtomicU64::new(0),
+        }
+    }
 }
 
 /// Fabric-wide recycle bin for message buffers.  `Clone` shares the pool.
@@ -66,29 +198,27 @@ impl BufferPool {
     }
 
     /// An empty buffer with capacity ≥ `len`, recycled when possible.
-    /// Prefers a free buffer whose capacity already fits (no regrow); a
-    /// recycled-but-undersized buffer counts as an allocation, so the
-    /// `recycled`/`allocated` counters honestly track heap traffic.
+    /// Served from the size-classed free lists (first non-empty class
+    /// that guarantees a fit — O(#classes) under the lock); a miss
+    /// allocates at the class ceiling so the new buffer recycles for any
+    /// request of its class.  The `recycled`/`allocated` counters keep
+    /// honestly tracking heap traffic: a hit never regrows, a miss is
+    /// exactly one allocation.
     fn take(&self, len: usize) -> Vec<f32> {
-        let mut free = self.inner.free.lock().expect("pool poisoned");
-        if let Some(pos) = free.iter().position(|b| b.capacity() >= len) {
-            let mut buf = free.swap_remove(pos);
-            drop(free);
-            self.inner.recycled.fetch_add(1, Ordering::Relaxed);
-            buf.clear();
-            return buf;
-        }
-        let undersized = free.pop();
-        drop(free);
-        self.inner.allocated.fetch_add(1, Ordering::Relaxed);
-        match undersized {
-            Some(mut buf) => {
-                buf.clear();
-                buf.reserve(len);
-                buf
+        let c0 = class_for_len(len);
+        {
+            let mut free = self.inner.free.lock().expect("pool poisoned");
+            for class in free[c0..].iter_mut() {
+                if let Some(mut buf) = class.pop() {
+                    debug_assert!(buf.capacity() >= len);
+                    self.inner.recycled.fetch_add(1, Ordering::Relaxed);
+                    buf.clear();
+                    return buf;
+                }
             }
-            None => Vec::with_capacity(len),
         }
+        self.inner.allocated.fetch_add(1, Ordering::Relaxed);
+        Vec::with_capacity(len.next_power_of_two())
     }
 
     /// Copy `src` into a pooled buffer and wrap it as a [`Payload`]
@@ -126,7 +256,10 @@ impl Drop for PayloadBuf {
     fn drop(&mut self) {
         if let Some(pool) = self.pool.upgrade() {
             let buf = std::mem::take(&mut self.data);
-            pool.free.lock().expect("pool poisoned").push(buf);
+            if buf.capacity() > 0 {
+                let class = class_of_capacity(buf.capacity());
+                pool.free.lock().expect("pool poisoned")[class].push(buf);
+            }
         }
     }
 }
@@ -329,9 +462,9 @@ pub mod tags {
         pack(1, step, stage as u64)
     }
 
-    /// per-micro-batch grad fragment for (step, stage, mb) — used by
-    /// sharded reductions where partial sums from distinct micro-batches
-    /// must stay distinguishable.
+    /// per-micro-batch grad fragment for (step, stage, mb) — the
+    /// unbucketed form of [`grad_shard`], kept for whole-run sharded
+    /// sends (ZeRO's eager path uses `grad_shard`).
     pub fn grad_part(step: u64, stage: usize, mb: usize) -> u64 {
         debug_assert!(stage < 1 << 8 && mb < 1 << 16);
         pack(2, step, ((mb as u64) << 8) | stage as u64)
@@ -357,6 +490,28 @@ pub mod tags {
         let dir: u64 = if fwd { 0x1 } else { 0x2 };
         debug_assert!(mb < 1 << 16);
         pack(6, step, ((mb as u64) << 8) | dir)
+    }
+
+    /// gradient bucket partial for (step, stage, bucket) — the eager ring
+    /// reduction launches one of these per bucket as backward stage runs
+    /// complete (`comm::bucketed`).  Hard asserts (not debug): a field
+    /// overflow would silently alias logically distinct messages, so the
+    /// bound is enforced in release builds too — `comm::bucketed` clamps
+    /// its bucket count to stay inside it.
+    pub fn grad_bucket(step: u64, stage: usize, bucket: usize) -> u64 {
+        assert!(stage < 1 << 8 && bucket < 1 << 16, "grad_bucket field overflow");
+        pack(7, step, ((bucket as u64) << 8) | stage as u64)
+    }
+
+    /// per-micro-batch gradient bucket for (step, stage, mb, bucket) —
+    /// ZeRO's eager sharded sends to the stage owner.  Hard asserts, same
+    /// rationale as [`grad_bucket`].
+    pub fn grad_shard(step: u64, stage: usize, mb: usize, bucket: usize) -> u64 {
+        assert!(
+            stage < 1 << 5 && mb < 1 << 5 && bucket < 1 << 14,
+            "grad_shard field overflow"
+        );
+        pack(8, step, ((bucket as u64) << 10) | ((mb as u64) << 5) | stage as u64)
     }
 }
 
@@ -435,6 +590,50 @@ mod tests {
     }
 
     #[test]
+    fn pool_size_classes_serve_fitting_buffers_only() {
+        let pool = BufferPool::new();
+        let big = vec![1.0f32; 1000];
+        let small = vec![2.0f32; 10];
+        let huge = vec![3.0f32; 5000];
+        // cold start: one allocation, capacity rounded to the class
+        // ceiling (1024 for len 1000)
+        drop(pool.payload_from_slice(&big));
+        assert_eq!(pool.allocated(), 1);
+        // a smaller request is served from the larger buffer's class
+        drop(pool.payload_from_slice(&small));
+        assert_eq!(pool.recycled(), 1, "small request reuses the big buffer");
+        assert_eq!(pool.allocated(), 1);
+        // a request the pooled buffer cannot fit must allocate, never
+        // hand back an undersized buffer
+        drop(pool.payload_from_slice(&huge));
+        assert_eq!(pool.allocated(), 2, "oversized request is a fresh allocation");
+        // both buffers now pooled: each class serves its own size again
+        let a = pool.payload_from_slice(&big[..900]);
+        let b = pool.payload_from_slice(&huge[..4000]);
+        assert_eq!(pool.recycled(), 3);
+        assert_eq!(pool.allocated(), 2);
+        assert_eq!(a[0], 1.0);
+        assert_eq!(b[0], 3.0);
+    }
+
+    #[test]
+    fn timeline_is_opt_in_and_ordered_by_clock() {
+        let stats = CommStats::default();
+        stats.mark(EventKind::GradSend, 0, 0, 4); // disabled → dropped
+        assert!(stats.timeline().is_empty());
+        stats.enable_timeline();
+        stats.mark(EventKind::BwdStageDone, 1, 2, 0);
+        stats.mark(EventKind::GradSend, 1, 2, 64);
+        let tl = stats.timeline();
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[0].kind, EventKind::BwdStageDone);
+        assert_eq!(tl[0].worker, 1);
+        assert_eq!(tl[0].stage, 2);
+        assert!(stats.first_ns(EventKind::GradSend) >= stats.first_ns(EventKind::BwdStageDone));
+        assert_eq!(stats.first_ns(EventKind::ParamSend), None);
+    }
+
+    #[test]
     fn pool_recycles_buffers_across_messages() {
         let (mut eps, _) = Fabric::new(2);
         let mut e1 = eps.pop().unwrap();
@@ -466,6 +665,12 @@ mod tests {
                 assert!(seen.insert(tags::act(step, stage, false)));
                 for mb in 1..=4usize {
                     assert!(seen.insert(tags::grad_part(step, stage, mb)));
+                }
+                for bucket in 0..4usize {
+                    assert!(seen.insert(tags::grad_bucket(step, stage, bucket)));
+                    for mb in 1..=4usize {
+                        assert!(seen.insert(tags::grad_shard(step, stage, mb, bucket)));
+                    }
                 }
             }
             // ring phases used by the collectives (reduce 1000+rank,

@@ -23,6 +23,8 @@ use std::sync::Arc;
 
 use crate::runtime::BundleRuntime;
 
+pub use crate::runtime::ExecMode;
+
 /// Thread-shareable runtime handle.
 ///
 /// SAFETY: the `xla` crate's wrappers hold raw pointers without Send/Sync,
@@ -30,7 +32,11 @@ use crate::runtime::BundleRuntime;
 /// compilation-free use: `PjRtLoadedExecutable::Execute` may be called
 /// concurrently, and each call here constructs its own `Literal`s.  We
 /// never share a Literal across threads, never mutate an executable, and
-/// compile everything before spawning workers.
+/// compile everything before spawning workers.  The same contract covers
+/// the device-resident path: `PjRtClient` buffer creation and
+/// `execute_b` are thread-safe, and every `PjRtBuffer`/`DeviceTensor` is
+/// created, used and dropped by exactly one worker thread (each worker
+/// owns its `DeviceParamStore`; buffers never cross threads).
 pub struct SharedRuntime(pub Arc<BundleRuntime>);
 
 unsafe impl Send for SharedRuntime {}
@@ -56,4 +62,23 @@ pub struct StepLog {
     pub step: u64,
     /// Mean loss over the N micro-batches (at their θ̂ versions).
     pub loss: f64,
+}
+
+/// θ-version id the [`crate::runtime::DeviceParamStore`] caches under for
+/// (micro-batch `i`, `stage`) at training step `step`: the commit step
+/// that produced the selected θ.  Fresh ⇒ `step`, stale ⇒ `step − 1`;
+/// the saturation encodes the θ_{−1} := θ_0 bootstrap — at step 0 both
+/// versions resolve to id 0, i.e. the *same* resident buffers.
+pub(crate) fn version_id(
+    rule: &crate::parallel::Rule,
+    step: u64,
+    i: usize,
+    stage: usize,
+    n_stages: usize,
+) -> u64 {
+    use crate::parallel::Version;
+    match rule.version(i, stage + 1, n_stages) {
+        Version::Fresh => step,
+        Version::Stale => step.saturating_sub(1),
+    }
 }

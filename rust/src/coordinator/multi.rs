@@ -7,43 +7,65 @@
 //!   tree keeps the sum order bit-identical to the reference trainer).
 //!   Every replica applies the same averaged update locally — N copies of
 //!   optimizer state.
-//! - **CDP mode** — the cyclic pattern: gradients travel the ring as
-//!   partial sums in micro-batch order (worker i adds its contribution and
-//!   forwards), so the reduction is *balanced across the training step*
-//!   with only point-to-point transfers; the last worker (micro-batch N)
-//!   holds the only optimizer state, applies the update as each stage's sum
-//!   completes, and the fresh stage parameters hop the ring back — the
-//!   paper's Fig 1c communication scheme.  Note the asymmetry the paper
-//!   highlights: max communications *between two time steps* is O(1) here
-//!   vs a collective in DP.
+//! - **CDP mode** — the cyclic pattern, now *eager and bucketed*: the
+//!   moment stage j's backward output lands, its gradient run enters the
+//!   ring bucket by bucket (`comm::bucketed`) while stage j−1 backprop is
+//!   still executing — the balanced communication of Fig 1c, overlapped
+//!   with compute instead of paid at the step boundary.  The owner
+//!   (micro-batch N) holds the only optimizer state, updates each stage
+//!   as its averaged sum completes, and hands the fresh parameters down
+//!   the ring — also overlapping the remaining backward.
 //!
-//! Hot-path layout (DESIGN-PERF.md): every worker's parameters, momentum
-//! and gradients are flat arenas; the ring forwards received payloads by
-//! handle (zero-copy) and mutates partial sums in place, and the DP
-//! all-reduce runs over the model-wide gradient run with pooled buffers.
-//! Steady-state steps perform no host-side allocation for model state.
-//!
-//! Loss sequences are bit-identical to [`super::single::RefTrainer`] under
-//! the same rule (tested in rust/tests/trainer_equivalence.rs).
+//! Execution is device-resident by default (runtime::device_store):
+//! parameters/momentum live as persistent device buffers uploaded once
+//! per (stage, θ-version), activations hand off on device, and the fused
+//! SGD promotes its result to the next resident version.  `ExecMode`
+//! (or `CDP_EXEC_MODE`) selects the host/literal path instead — loss
+//! sequences are bit-identical either way, and bit-identical to
+//! [`super::single::RefTrainer`] under the same rule (rust/tests/).
 
 use anyhow::Result;
 
-use super::{SharedRuntime, StepLog};
+use super::{version_id, ExecMode, SharedRuntime, StepLog};
 use crate::cluster::run_workers;
+use crate::comm::bucketed::{bucket_elems_from_env, BucketedReducer};
 use crate::comm::collectives::allreduce_mean;
-use crate::comm::{tags, CommStats, Endpoint, Fabric};
+use crate::comm::{tags, CommStats, Endpoint, EventKind, Fabric, TimelineEvent};
 use crate::data::{DataSource, MicroBatch};
 use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{ParamStore, Rule};
-use crate::tensor::{ops, HostTensor};
+use crate::runtime::{Act, Executor};
+use crate::tensor::{HostTensor, IntTensor};
 use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommPattern {
     /// Barrier all-reduce at the end of each training step.
     Barrier,
-    /// Balanced ring: per-stage partial sums + param hand-off (CDP).
+    /// Eager bucketed ring: per-stage partial sums enter the ring as
+    /// backward runs, single optimizer owner, param hand-off (CDP).
     Ring,
+}
+
+/// Knobs for [`train_with`]; [`Default`] is the production configuration
+/// (device-resident, default bucket size, no timeline recording).
+#[derive(Clone, Copy, Debug)]
+pub struct MultiOpts {
+    pub mode: ExecMode,
+    /// Gradient bucket granularity for the eager ring (elements).
+    pub bucket_elems: usize,
+    /// Record the comm/compute timeline (benches assert overlap on it).
+    pub record_timeline: bool,
+}
+
+impl Default for MultiOpts {
+    fn default() -> Self {
+        Self {
+            mode: ExecMode::from_env(ExecMode::DeviceResident),
+            bucket_elems: bucket_elems_from_env(),
+            record_timeline: false,
+        }
+    }
 }
 
 pub struct MultiReport {
@@ -52,17 +74,32 @@ pub struct MultiReport {
     pub comm_messages: u64,
     /// Optimizer-state replicas across the cluster (DP: N, CDP ring: 1).
     pub optimizer_replicas: usize,
+    /// Recorded events when `record_timeline` was set (else empty).
+    pub timeline: Vec<TimelineEvent>,
 }
 
-/// Train `steps` steps on `n` worker threads.
+/// Train `steps` steps on `n` worker threads with default options.
 pub fn train(
     rt: SharedRuntime,
     rule: Rule,
     pattern: CommPattern,
     steps: usize,
 ) -> Result<MultiReport> {
+    train_with(rt, rule, pattern, steps, MultiOpts::default())
+}
+
+pub fn train_with(
+    rt: SharedRuntime,
+    rule: Rule,
+    pattern: CommPattern,
+    steps: usize,
+    opts: MultiOpts,
+) -> Result<MultiReport> {
     let n = rt.manifest.n_microbatches;
     let (endpoints, stats) = Fabric::new(n);
+    if opts.record_timeline {
+        stats.enable_timeline();
+    }
     let mut slots: Vec<Option<Endpoint>> = endpoints.into_iter().map(Some).collect();
     let eps: Arc<Vec<std::sync::Mutex<Option<Endpoint>>>> = Arc::new(
         slots.iter_mut().map(|e| std::sync::Mutex::new(e.take())).collect(),
@@ -73,10 +110,8 @@ pub fn train(
     let results = run_workers(n, move |w| {
         let mut ep = eps[w].lock().unwrap().take().expect("endpoint taken twice");
         let out = match pattern {
-            CommPattern::Barrier => {
-                worker_dp(&rt_arc, &rule_c, &mut ep, w, steps)
-            }
-            CommPattern::Ring => worker_ring(&rt_arc, &rule_c, &mut ep, w, steps),
+            CommPattern::Barrier => worker_dp(&rt_arc, &rule_c, &mut ep, w, steps, opts),
+            CommPattern::Ring => worker_ring(&rt_arc, &rule_c, &mut ep, w, steps, opts),
         };
         out.expect("worker failed")
     });
@@ -91,13 +126,44 @@ pub fn train(
             CommPattern::Barrier => n,
             CommPattern::Ring => 1,
         },
+        timeline: stats.timeline(),
     })
 }
 
+/// Forward chain for micro-batch `i` at the rule's θ̂ versions: stashes
+/// every stage input (the remat unit) plus the targets.
+fn forward_mb(
+    rt: &SharedRuntime,
+    exec: &mut Executor,
+    store: &ParamStore,
+    data: &DataSource,
+    rule: &Rule,
+    t: u64,
+    i: usize,
+) -> Result<(Vec<Act>, IntTensor)> {
+    let n = rt.manifest.n_stages;
+    let mb = data.microbatch(t, (i - 1) as u64);
+    let (x0, targets) = match mb {
+        MicroBatch::Lm { tokens, targets } => (HostTensor::I32(tokens), targets),
+        MicroBatch::Class { x, labels } => (HostTensor::F32(x), labels),
+    };
+    let mut acts: Vec<Act> = Vec::with_capacity(n);
+    acts.push(exec.input(rt, x0)?);
+    for j in 0..n - 1 {
+        let ver = version_id(rule, store.step(), i, j, n);
+        let y = exec.fwd(rt, j, ver, store.select(rule, i, j), &acts[j])?;
+        acts.push(y);
+    }
+    Ok((acts, targets))
+}
+
 /// One micro-batch fwd+bwd at θ̂, gradients written into the model-wide
-/// flat scratch `gmb` (shared by both worker bodies).
+/// flat scratch `gmb` (the DP worker's whole-chain form — the ring worker
+/// interleaves its backward with the eager reduction instead).
+#[allow(clippy::too_many_arguments)]
 fn compute_grads(
     rt: &SharedRuntime,
+    exec: &mut Executor,
     store: &ParamStore,
     data: &DataSource,
     rule: &Rule,
@@ -106,41 +172,37 @@ fn compute_grads(
     gmb: &mut [f32],
 ) -> Result<f32> {
     let n = rt.manifest.n_stages;
-    let layout = store.layout();
-    let mb = data.microbatch(t, (i - 1) as u64);
-    let (x0, targets) = match &mb {
-        MicroBatch::Lm { tokens, targets } => {
-            (HostTensor::I32(tokens.clone()), targets.clone())
-        }
-        MicroBatch::Class { x, labels } => {
-            (HostTensor::F32(x.clone()), labels.clone())
-        }
-    };
-    let mut inputs: Vec<HostTensor> = vec![x0];
-    for j in 0..n - 1 {
-        let y = rt.stage_fwd_flat(j, store.select(rule, i, j), &inputs[j])?;
-        inputs.push(HostTensor::F32(y));
-    }
+    let layout = store.layout().clone();
+    let (acts, targets) = forward_mb(rt, exec, store, data, rule, t, i)?;
     let last = n - 1;
-    let (loss, mut gx) = rt.last_bwd_flat(
+    let ver = version_id(rule, store.step(), i, last, n);
+    let (loss, mut gx) = exec.last_bwd(
+        rt,
+        ver,
         store.select(rule, i, last),
-        inputs[last].as_f32().unwrap(),
+        &acts[last],
         &targets,
         &mut gmb[layout.stage_range(last)],
     )?;
     for j in (1..last).rev() {
-        gx = rt.mid_bwd_flat(
+        let ver = version_id(rule, store.step(), i, j, n);
+        gx = exec.mid_bwd(
+            rt,
             j,
+            ver,
             store.select(rule, i, j),
-            inputs[j].as_f32().unwrap(),
+            &acts[j],
             &gx,
             &mut gmb[layout.stage_range(j)],
         )?;
     }
     if n > 1 {
-        rt.first_bwd_flat(
+        let ver = version_id(rule, store.step(), i, 0, n);
+        exec.first_bwd(
+            rt,
+            ver,
             store.select(rule, i, 0),
-            &inputs[0],
+            &acts[0],
             &gx,
             &mut gmb[layout.stage_range(0)],
         )?;
@@ -155,16 +217,19 @@ fn worker_dp(
     ep: &mut Endpoint,
     w: usize,
     steps: usize,
+    opts: MultiOpts,
 ) -> Result<Vec<StepLog>> {
     let n = rt.manifest.n_stages;
     let layout = ArenaLayout::from_manifest(&rt.manifest);
     let mut store = ParamStore::from_flat(layout.clone(), rt.init_params_flat()?);
+    let mut exec = Executor::new(opts.mode, n);
     let data = DataSource::from_manifest(&rt.manifest);
     let mut gmb = layout.zeros();
     let mut logs = Vec::new();
 
     for t in 0..steps as u64 {
-        let loss = compute_grads(rt, &store, &data, rule, t, w + 1, &mut gmb)?;
+        let loss =
+            compute_grads(rt, &mut exec, &store, &data, rule, t, w + 1, &mut gmb)?;
 
         // synchronous all-reduce over the model-wide gradient run (the
         // paper's waiting barrier); rank-ordered sum + 1/N at the root
@@ -174,7 +239,7 @@ fn worker_dp(
         let lr = rt.manifest.lr;
         for j in 0..n {
             let (cur, moms, next) = store.update_parts(j);
-            rt.sgd_update_flat(j, cur, moms, &gmb[layout.stage_range(j)], lr, next)?;
+            exec.sgd(rt, j, t, cur, moms, &gmb[layout.stage_range(j)], lr, next)?;
         }
         store.commit_step();
 
@@ -192,63 +257,115 @@ fn worker_dp(
     Ok(logs)
 }
 
-/// CDP worker: ring partial sums per stage, single optimizer owner
-/// (micro-batch N = worker n−1), param hand-off around the ring.
+/// CDP worker: eager bucketed ring — as each backward stage completes,
+/// its gradient buckets travel the ring in micro-batch order while the
+/// remaining backward keeps computing; the owner (micro-batch N, the
+/// only optimizer state) updates each stage the moment its averaged sum
+/// assembles and hands the fresh parameters down the ring.
 fn worker_ring(
     rt: &SharedRuntime,
     rule: &Rule,
     ep: &mut Endpoint,
     w: usize,
     steps: usize,
+    opts: MultiOpts,
 ) -> Result<Vec<StepLog>> {
     let n = rt.manifest.n_stages;
     let n_mb = ep.n;
     let owner = n_mb - 1; // worker of micro-batch N: the only optimizer state
     let layout = ArenaLayout::from_manifest(&rt.manifest);
     let mut store = ParamStore::from_flat(layout.clone(), rt.init_params_flat()?);
+    let mut exec = Executor::new(opts.mode, n);
     let data = DataSource::from_manifest(&rt.manifest);
+    let reducer = BucketedReducer::new(opts.bucket_elems);
     let mut gmb = layout.zeros();
+    // owner-side scratch the averaged sums assemble into, bucket by bucket
+    let mut avg = layout.zeros();
     let mut logs = Vec::new();
     let lr = rt.manifest.lr;
-    let inv = 1.0 / n_mb as f32;
+    let i = w + 1; // this worker's micro-batch index (1-based)
 
     for t in 0..steps as u64 {
-        let loss = compute_grads(rt, &store, &data, rule, t, w + 1, &mut gmb)?;
+        let (acts, targets) = forward_mb(rt, &mut exec, &store, &data, rule, t, i)?;
 
-        // --- balanced gradient reduction: partial sums travel the ring in
-        // micro-batch order (worker 0 = mb 1 starts; each adds its own and
-        // forwards), one stage at a time — the Fig 1c hand-off.  Received
-        // payloads are mutated in place (unique handles) and re-sent, so a
-        // hop neither copies nor allocates.  The owner ends up with
-        // Σ_i ∇f_i in exactly the reference sum order, averages while
-        // adding its own contribution (fused), updates the stage and hands
-        // the fresh parameters down the ring.
-        for j in 0..n {
-            let range = layout.stage_range(j);
-            if n_mb == 1 {
-                // single worker: own grads are the full sum
-                let g = &mut gmb[range];
-                ops::scale(g, inv);
-                let (cur, moms, next) = store.update_parts(j);
-                rt.sgd_update_flat(j, cur, moms, g, lr, next)?;
-            } else if w == 0 {
-                ep.send_copy(1, tags::grad(t, j), &gmb[range]);
+        // ---- backward chain interleaved with the eager ring ----------
+        // Stages run N−1 .. 0.  The moment stage j's grads land in the
+        // arena scratch, its buckets enter the ring (worker 0 launches,
+        // middles add+forward in micro-batch order, the owner folds the
+        // final add and the 1/N average — exactly the reference sum
+        // order, so losses stay bit-identical).  The owner then updates
+        // stage j and sends θ_{t+1}^j down the ring — all while stages
+        // j−1..0 are still backpropagating everywhere: the balanced
+        // communication of Fig 1c, overlapped with compute.
+        let mut loss = 0f32;
+        let mut gx: Option<Act> = None;
+        for j in (0..n).rev() {
+            let ver = version_id(rule, store.step(), i, j, n);
+            let grange = layout.stage_range(j);
+            if j == n - 1 {
+                let (l, g) = exec.last_bwd(
+                    rt,
+                    ver,
+                    store.select(rule, i, j),
+                    &acts[j],
+                    &targets,
+                    &mut gmb[grange.clone()],
+                )?;
+                loss = l;
+                if n > 1 {
+                    gx = Some(g);
+                }
+            } else if j > 0 {
+                let g = exec.mid_bwd(
+                    rt,
+                    j,
+                    ver,
+                    store.select(rule, i, j),
+                    &acts[j],
+                    gx.as_ref().expect("cotangent from stage above"),
+                    &mut gmb[grange.clone()],
+                )?;
+                gx = Some(g);
             } else {
-                let mut part = ep.recv(w - 1, tags::grad(t, j));
-                if w < owner {
-                    ops::add_into(part.make_mut(), &gmb[range]);
-                    ep.send(w + 1, tags::grad(t, j), part);
-                } else {
-                    // owner: add own contribution and average in one pass
-                    ops::add_scale(part.make_mut(), &gmb[range], inv);
-                    let (cur, moms, next) = store.update_parts(j);
-                    rt.sgd_update_flat(j, cur, moms, &part, lr, next)?;
-                    ep.send_copy(ep.right(), tags::param(t, j), store.next_stage(j));
+                exec.first_bwd(
+                    rt,
+                    ver,
+                    store.select(rule, i, j),
+                    &acts[j],
+                    gx.as_ref().expect("cotangent from stage above"),
+                    &mut gmb[grange.clone()],
+                )?;
+            }
+            ep.stats().mark(EventKind::BwdStageDone, w, j, 0);
+
+            // eager hop: stage j's buckets enter the ring now
+            let avg_out = if w == owner {
+                Some(&mut avg[grange.clone()])
+            } else {
+                None
+            };
+            reducer.ring_stage(ep, &layout, t, j, &gmb[grange.clone()], avg_out);
+
+            if w == owner {
+                // update stage j immediately; θ_{t+1}^j hops the ring
+                // while backward continues below stage j
+                let g = &avg[grange];
+                let (cur, moms, next) = store.update_parts(j);
+                exec.sgd(rt, j, t, cur, moms, g, lr, next)?;
+                if n_mb > 1 {
+                    let fresh = store.next_stage(j);
+                    ep.stats().mark(
+                        EventKind::ParamSend,
+                        w,
+                        j,
+                        fresh.len() as u64 * 4,
+                    );
+                    ep.send_copy(ep.right(), tags::param(t, j), fresh);
                 }
             }
         }
 
-        // --- non-owners: fresh stage params hop the ring from the owner;
+        // ---- non-owners: fresh stage params hop the ring from the owner;
         // forward the payload by handle, then write it into the next slot
         if w != owner && n_mb > 1 {
             for j in 0..n {

@@ -13,22 +13,29 @@
 //! The engine *executes* the timetable against the AOT artifacts (real
 //! numerics, single host thread — the devices are memory/comm ledgers, per
 //! DESIGN.md substitution #1) and measures: bubble fraction, per-device
-//! peak activation stash, inter-stage activation traffic, and parameter
-//! versions held.  Losses match the reference trainer bit-for-bit for the
-//! same rule.
+//! peak activation stash, inter-stage activation traffic, parameter
+//! versions held, and the eager-reduction overlap (which gradient buckets
+//! could launch before the step's final backward op — everything except
+//! the last-finishing stage's buckets, per the timetable).  Losses match
+//! the reference trainer bit-for-bit for the same rule.
+//!
+//! Execution is device-resident by default (runtime::device_store);
+//! `PipeOpts`/`CDP_EXEC_MODE` selects the host/literal path — losses are
+//! bit-identical either way.
 
 use std::collections::HashMap;
 
 use anyhow::Result;
 
-use super::StepLog;
+use super::{version_id, ExecMode, StepLog};
 use crate::cluster::DeviceMem;
+use crate::comm::bucketed::{bucket_elems_from_env, effective_bucket_elems};
 use crate::data::{DataSource, MicroBatch};
 use crate::metrics::Metrics;
 use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{GradBuffer, ParamStore, Rule};
-use crate::runtime::BundleRuntime;
-use crate::tensor::{HostTensor, Tensor};
+use crate::runtime::{Act, BundleRuntime, Executor};
+use crate::tensor::HostTensor;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PipeSchedule {
@@ -42,6 +49,23 @@ enum PipeOp {
     Bwd { mb: usize, stage: usize },
 }
 
+/// Knobs for [`train_with`]; [`Default`] is the production configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PipeOpts {
+    pub mode: ExecMode,
+    /// Gradient bucket granularity for the overlap accounting (elements).
+    pub bucket_elems: usize,
+}
+
+impl Default for PipeOpts {
+    fn default() -> Self {
+        Self {
+            mode: ExecMode::from_env(ExecMode::DeviceResident),
+            bucket_elems: bucket_elems_from_env(),
+        }
+    }
+}
+
 pub struct PipelineReport {
     pub logs: Vec<StepLog>,
     /// Fraction of device-time-slots idle during a steady training step.
@@ -52,6 +76,13 @@ pub struct PipelineReport {
     pub act_comm_bytes: u64,
     /// Parameter versions a device must retain (1 for GPipe/DP, 2 for CDP).
     pub param_versions: usize,
+    /// Gradient buckets per step across all stages.
+    pub grad_buckets: usize,
+    /// Fraction of those buckets whose reduction launches before the
+    /// step's final backward op completes (timetable-derived: a stage's
+    /// buckets are ready at its last backward; only the last-finishing
+    /// stage's buckets cannot overlap).
+    pub eager_bucket_fraction: f64,
     pub metrics: Metrics,
 }
 
@@ -138,11 +169,22 @@ pub fn train(
     sched: PipeSchedule,
     steps: usize,
 ) -> Result<PipelineReport> {
+    train_with(rt, rule, sched, steps, PipeOpts::default())
+}
+
+pub fn train_with(
+    rt: &BundleRuntime,
+    rule: Rule,
+    sched: PipeSchedule,
+    steps: usize,
+    opts: PipeOpts,
+) -> Result<PipelineReport> {
     let n = rt.manifest.n_stages;
     let m = rt.manifest.n_microbatches;
     let layout = ArenaLayout::from_manifest(&rt.manifest);
     let mut store = ParamStore::from_flat(layout.clone(), rt.init_params_flat()?);
     let mut grads = GradBuffer::new(layout.clone(), m);
+    let mut exec = Executor::new(opts.mode, n);
     // per-op gradient scratch: one stage run at a time, reused
     let mut gop = layout.zeros();
     let data = DataSource::from_manifest(&rt.manifest);
@@ -154,79 +196,112 @@ pub fn train(
     let makespan = timetable.iter().map(|(t, _, _)| t + 1).max().unwrap_or(0);
     let bubble = 1.0 - (2 * n * m) as f64 / (makespan * n) as f64;
 
+    // Eager-reduction overlap, derived from the timetable: stage s's
+    // gradient buckets are final at its last backward op; every bucket
+    // belonging to a stage that finishes before the step's overall last
+    // backward can have its reduction launched while backprop continues.
+    let mut last_bwd_of_stage = vec![0usize; n];
+    for &(t, _, op) in &timetable {
+        if let PipeOp::Bwd { stage, .. } = op {
+            last_bwd_of_stage[stage] = last_bwd_of_stage[stage].max(t + 1);
+        }
+    }
+    let overall_last_bwd = last_bwd_of_stage.iter().copied().max().unwrap_or(0);
+    let mut grad_buckets = 0usize;
+    let mut eager_buckets = 0usize;
+    for (s, last) in last_bwd_of_stage.iter().enumerate() {
+        let nb = layout
+            .n_buckets(s, effective_bucket_elems(opts.bucket_elems, layout.stage_len(s)));
+        grad_buckets += nb;
+        if *last < overall_last_bwd {
+            eager_buckets += nb;
+        }
+    }
+    let eager_bucket_fraction = if grad_buckets > 0 {
+        eager_buckets as f64 / grad_buckets as f64
+    } else {
+        0.0
+    };
+
     let mut act_comm: u64 = 0;
 
     for step in 0..steps as u64 {
         // per-(mb) in-flight state
-        let mut inputs: HashMap<(usize, usize), HostTensor> = HashMap::new(); // (mb, stage) → stashed input
-        let mut gxs: HashMap<usize, Tensor> = HashMap::new(); // mb → current cotangent
+        let mut inputs: HashMap<(usize, usize), Act> = HashMap::new(); // (mb, stage) → stashed input
+        let mut gxs: HashMap<usize, Act> = HashMap::new(); // mb → current cotangent
         let mut losses: Vec<f64> = vec![0.0; m];
         let mut targets_of: HashMap<usize, crate::tensor::IntTensor> = HashMap::new();
 
         // seed stage-0 inputs
         for mb in 0..m {
             let b = data.microbatch(step, mb as u64);
-            let (x0, tgt) = match &b {
-                MicroBatch::Lm { tokens, targets } => {
-                    (HostTensor::I32(tokens.clone()), targets.clone())
-                }
-                MicroBatch::Class { x, labels } => {
-                    (HostTensor::F32(x.clone()), labels.clone())
-                }
+            let (x0, tgt) = match b {
+                MicroBatch::Lm { tokens, targets } => (HostTensor::I32(tokens), targets),
+                MicroBatch::Class { x, labels } => (HostTensor::F32(x), labels),
             };
-            inputs.insert((mb, 0), x0);
+            inputs.insert((mb, 0), exec.input(rt, x0)?);
             targets_of.insert(mb, tgt);
         }
 
         for &(_t, dev, op) in &timetable {
             match op {
                 PipeOp::Fwd { mb, stage } => {
-                    let x = inputs.get(&(mb, stage)).unwrap().clone();
                     devices[dev]
                         .alloc("stash", rt.manifest.stages[stage].act_bytes)
                         .unwrap();
                     if stage < n - 1 {
-                        let params = store.select(&rule, mb + 1, stage);
-                        let y = rt.stage_fwd_flat(stage, params, &x)?;
-                        act_comm += (y.data.len() * 4) as u64; // → next device
-                        inputs.insert((mb, stage + 1), HostTensor::F32(y));
+                        let ver = version_id(&rule, step, mb + 1, stage, n);
+                        let y = {
+                            let x = inputs.get(&(mb, stage)).unwrap();
+                            let params = store.select(&rule, mb + 1, stage);
+                            exec.fwd(rt, stage, ver, params, x)?
+                        };
+                        act_comm += y.bytes() as u64; // → next device
+                        inputs.insert((mb, stage + 1), y);
                     }
                     // loss stage fwd is fused into its bwd (fwdbwd artifact)
                 }
                 PipeOp::Bwd { mb, stage } => {
-                    let params = store.select(&rule, mb + 1, stage);
+                    let ver = version_id(&rule, step, mb + 1, stage, n);
                     let grange = layout.stage_range(stage);
                     if stage == n - 1 {
                         let x = inputs.get(&(mb, stage)).unwrap();
-                        let (loss, gx) = rt.last_bwd_flat(
+                        let params = store.select(&rule, mb + 1, stage);
+                        let (loss, gx) = exec.last_bwd(
+                            rt,
+                            ver,
                             params,
-                            x.as_f32().unwrap(),
+                            x,
                             &targets_of[&mb],
                             &mut gop[grange.clone()],
                         )?;
                         losses[mb] = loss as f64;
                         if n > 1 {
-                            act_comm += (gx.data.len() * 4) as u64;
+                            act_comm += gx.bytes() as u64;
                             gxs.insert(mb, gx);
                         }
                         grads.add_flat(stage, mb + 1, &gop[grange]);
                     } else if stage > 0 {
                         let x = inputs.get(&(mb, stage)).unwrap();
                         let gy = gxs.remove(&mb).unwrap();
-                        let gx = rt.mid_bwd_flat(
+                        let params = store.select(&rule, mb + 1, stage);
+                        let gx = exec.mid_bwd(
+                            rt,
                             stage,
+                            ver,
                             params,
-                            x.as_f32().unwrap(),
+                            x,
                             &gy,
                             &mut gop[grange.clone()],
                         )?;
-                        act_comm += (gx.data.len() * 4) as u64;
+                        act_comm += gx.bytes() as u64;
                         gxs.insert(mb, gx);
                         grads.add_flat(stage, mb + 1, &gop[grange]);
                     } else {
                         let x = inputs.get(&(mb, 0)).unwrap();
                         let gy = gxs.remove(&mb).unwrap();
-                        rt.first_bwd_flat(params, x, &gy, &mut gop[grange.clone()])?;
+                        let params = store.select(&rule, mb + 1, 0);
+                        exec.first_bwd(rt, ver, params, x, &gy, &mut gop[grange.clone()])?;
                         grads.add_flat(0, mb + 1, &gop[grange]);
                     }
                     inputs.remove(&(mb, stage));
@@ -241,7 +316,7 @@ pub fn train(
         for j in 0..n {
             let g = grads.stage(j);
             let (cur, moms, next) = store.update_parts(j);
-            rt.sgd_update_flat(j, cur, moms, g, lr, next)?;
+            exec.sgd(rt, j, step, cur, moms, g, lr, next)?;
         }
         grads.reset();
         store.commit_step();
@@ -258,6 +333,8 @@ pub fn train(
         peak_stash_bytes: peak_stash,
         act_comm_bytes: act_comm,
         param_versions: if rule == Rule::Dp { 1 } else { 2 },
+        grad_buckets,
+        eager_bucket_fraction,
         metrics,
     })
 }

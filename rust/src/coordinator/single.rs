@@ -17,12 +17,12 @@
 
 use anyhow::Result;
 
-use super::StepLog;
+use super::{version_id, ExecMode, StepLog};
 use crate::data::{DataSource, MicroBatch};
 use crate::metrics::Metrics;
 use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{GradBuffer, ParamStore, Rule};
-use crate::runtime::BundleRuntime;
+use crate::runtime::{Act, BundleRuntime, Executor};
 use crate::tensor::{HostTensor, Tensor};
 
 pub struct RefTrainer<'rt> {
@@ -35,14 +35,28 @@ pub struct RefTrainer<'rt> {
     grads: GradBuffer,
     /// Per-micro-batch gradient scratch (model-wide flat run, reused).
     gmb: Vec<f32>,
+    /// Execution boundary.  Defaults to [`ExecMode::HostLiteral`]: this
+    /// trainer *is* the reference oracle, and the host/literal path is
+    /// the reference semantics.  [`Self::new_with_mode`] opts into the
+    /// device-resident path, which the equivalence tests hold
+    /// bit-identical to the oracle.
+    exec: Executor,
 }
 
 impl<'rt> RefTrainer<'rt> {
     pub fn new(rt: &'rt BundleRuntime, rule: Rule) -> Result<Self> {
+        Self::new_with_mode(rt, rule, ExecMode::HostLiteral)
+    }
+
+    pub fn new_with_mode(
+        rt: &'rt BundleRuntime,
+        rule: Rule,
+        mode: ExecMode,
+    ) -> Result<Self> {
         let layout = ArenaLayout::from_manifest(&rt.manifest);
         let flat = rt.init_params_flat()?;
         let store = ParamStore::from_flat(layout.clone(), flat);
-        Ok(Self::assemble(rt, rule, store))
+        Ok(Self::assemble(rt, rule, store, mode))
     }
 
     /// With explicit initial params (equivalence tests inject these).
@@ -51,10 +65,15 @@ impl<'rt> RefTrainer<'rt> {
         rule: Rule,
         init: Vec<Vec<Tensor>>,
     ) -> Self {
-        Self::assemble(rt, rule, ParamStore::new(init))
+        Self::assemble(rt, rule, ParamStore::new(init), ExecMode::HostLiteral)
     }
 
-    fn assemble(rt: &'rt BundleRuntime, rule: Rule, store: ParamStore) -> Self {
+    fn assemble(
+        rt: &'rt BundleRuntime,
+        rule: Rule,
+        store: ParamStore,
+        mode: ExecMode,
+    ) -> Self {
         let n_mb = rt.manifest.n_microbatches;
         let layout = store.layout().clone();
         Self {
@@ -66,7 +85,18 @@ impl<'rt> RefTrainer<'rt> {
             metrics: Metrics::new(),
             grads: GradBuffer::new(layout.clone(), n_mb),
             gmb: layout.zeros(),
+            exec: Executor::new(mode, rt.manifest.n_stages),
         }
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.exec.mode()
+    }
+
+    /// Stage-level parameter uploads performed by the device store
+    /// (`None` on the host path) — the bench's ≤1-per-θ-version metric.
+    pub fn device_param_uploads(&self) -> Option<u64> {
+        self.exec.device_store().map(|s| s.param_uploads())
     }
 
     /// One micro-batch's fwd+bwd at the rule-selected parameter versions,
@@ -132,6 +162,118 @@ impl<'rt> RefTrainer<'rt> {
 
     /// Run one full training step (N micro-batches + update).
     pub fn step(&mut self) -> Result<StepLog> {
+        match self.exec.mode() {
+            ExecMode::HostLiteral => self.step_host(),
+            ExecMode::DeviceResident => self.step_device(),
+        }
+    }
+
+    /// One micro-batch on the device path: resident parameter buffers,
+    /// device-side activation stash, grads into `gmb`.
+    fn run_microbatch_dev(&mut self, t: u64, i: usize, gmb: &mut [f32]) -> Result<f32> {
+        let n = self.rt.manifest.n_stages;
+        let rt = self.rt;
+        let layout = self.store.layout().clone();
+        let mb = self.data.microbatch(t, (i - 1) as u64);
+        let (x0, targets) = match mb {
+            MicroBatch::Lm { tokens, targets } => (HostTensor::I32(tokens), targets),
+            MicroBatch::Class { x, labels } => (HostTensor::F32(x), labels),
+        };
+
+        // forward chain; the stash holds device activations
+        let mut acts: Vec<Act> = Vec::with_capacity(n);
+        acts.push(self.exec.input(rt, x0)?);
+        for j in 0..n - 1 {
+            let ver = version_id(&self.rule, self.store.step(), i, j, n);
+            let flat = self.store.select(&self.rule, i, j);
+            let y = self.exec.fwd(rt, j, ver, flat, &acts[j])?;
+            acts.push(y);
+        }
+
+        // backward chain, grads straight into the arena scratch
+        let last = n - 1;
+        let ver = version_id(&self.rule, self.store.step(), i, last, n);
+        let flat = self.store.select(&self.rule, i, last);
+        let (loss, mut gx) = self.exec.last_bwd(
+            rt,
+            ver,
+            flat,
+            &acts[last],
+            &targets,
+            &mut gmb[layout.stage_range(last)],
+        )?;
+        for j in (1..last).rev() {
+            let ver = version_id(&self.rule, self.store.step(), i, j, n);
+            let flat = self.store.select(&self.rule, i, j);
+            gx = self.exec.mid_bwd(
+                rt,
+                j,
+                ver,
+                flat,
+                &acts[j],
+                &gx,
+                &mut gmb[layout.stage_range(j)],
+            )?;
+        }
+        if n > 1 {
+            let ver = version_id(&self.rule, self.store.step(), i, 0, n);
+            let flat = self.store.select(&self.rule, i, 0);
+            self.exec.first_bwd(
+                rt,
+                ver,
+                flat,
+                &acts[0],
+                &gx,
+                &mut gmb[layout.stage_range(0)],
+            )?;
+        }
+        Ok(loss)
+    }
+
+    /// Device-resident training step: identical schedule and numerics to
+    /// [`Self::step_host`] (the loss sequence is bit-identical — tested),
+    /// but parameters upload once per (stage, θ-version) instead of the
+    /// per-step literal rebuilds.
+    fn step_device(&mut self) -> Result<StepLog> {
+        let n = self.rt.manifest.n_stages;
+        let n_mb = self.rt.manifest.n_microbatches;
+        let t = self.store.step();
+        let lr = self.lr;
+
+        let mut loss_sum = 0f64;
+        let mut gmb = std::mem::take(&mut self.gmb);
+        for i in 1..=n_mb {
+            let loss = match self.run_microbatch_dev(t, i, &mut gmb) {
+                Ok(l) => l,
+                Err(e) => {
+                    self.gmb = gmb; // restore scratch before bailing
+                    return Err(e);
+                }
+            };
+            loss_sum += loss as f64;
+            self.grads.add_all_flat(i, &gmb);
+        }
+        self.gmb = gmb;
+        self.grads.average();
+
+        // fused device SGD per stage; the result installs as the
+        // resident θ_{t+1} and mirrors into the store's next slot
+        for j in 0..n {
+            let rt = self.rt;
+            let g = self.grads.stage(j);
+            let (cur, moms, next) = self.store.update_parts(j);
+            self.exec.sgd(rt, j, t, cur, moms, g, lr, next)?;
+        }
+        self.grads.reset();
+        self.store.commit_step();
+
+        let loss = loss_sum / n_mb as f64;
+        self.metrics.record("loss", t as f64, loss);
+        Ok(StepLog { step: t, loss })
+    }
+
+    /// Host/literal training step — the reference-oracle path.
+    fn step_host(&mut self) -> Result<StepLog> {
         let n = self.rt.manifest.n_stages;
         let n_mb = self.rt.manifest.n_microbatches;
         let t = self.store.step();

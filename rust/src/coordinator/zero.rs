@@ -13,25 +13,33 @@
 //!   step per worker-visit) but the per-time-step message count drops from
 //!   N−1 to 1 — the paper's bold entry in Table 1.
 //!
-//! Hot-path layout (DESIGN-PERF.md): the owned shard is a flat stage
-//! arena (cur/prev/next/momentum runs); non-owned stage parameters are
-//! *received payloads* used directly as flat parameter runs — no
-//! per-tensor rebuild.  Serving peers builds at most one pooled payload
-//! per version and fans the handle out (zero-copy for the broadcast).
+//! Gradient reduction to the owners is *eager and bucketed*
+//! (`comm::bucketed`): the moment stage j's backward output lands, its
+//! buckets fly to owner j while the remaining backward keeps computing —
+//! the shard communication is spread across the backward pass instead of
+//! bursting at the step boundary.  Owners still reduce in micro-batch
+//! order 1..N, so losses stay bit-identical to the reference trainer.
 //!
-//! Measured here: comm bytes, total messages, and `max_msgs_per_timestep`
-//! (the schedule-attributed concurrency that distinguishes the two modes).
-//! Loss sequences match the reference trainer bit-for-bit.
+//! Execution is device-resident by default: the owned shard and every
+//! *received* stage's parameters are cached as device buffers per
+//! θ-version (a received version uploads at most once per step, and a
+//! version still resident from the previous step re-uploads not at all);
+//! the owner's fused SGD promotes its result to the next resident
+//! version.  Host mirrors remain authoritative — the fabric serves and
+//! accounts the same bytes as before, so the paper's comm numbers are
+//! unchanged by the execution mode.
 
 use anyhow::Result;
 
-use super::{SharedRuntime, StepLog};
+use super::{version_id, ExecMode, SharedRuntime, StepLog};
 use crate::cluster::run_workers;
-use crate::comm::{tags, Endpoint, Fabric, Payload};
-use crate::parallel::arena::ArenaLayout;
+use crate::comm::bucketed::{bucket_elems_from_env, BucketedReducer};
+use crate::comm::{tags, Endpoint, EventKind, Fabric, Payload};
 use crate::data::{DataSource, MicroBatch};
+use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{Rule, Version};
-use crate::tensor::{ops, HostTensor};
+use crate::runtime::{Act, Executor};
+use crate::tensor::HostTensor;
 use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -40,6 +48,23 @@ pub enum StateFlow {
     Broadcast,
     /// Owner hands params to one worker per time step (ZeRO + CDP).
     Cyclic,
+}
+
+/// Knobs for [`train_with`]; [`Default`] is the production configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ZeroOpts {
+    pub mode: ExecMode,
+    /// Gradient bucket granularity for the eager shard sends (elements).
+    pub bucket_elems: usize,
+}
+
+impl Default for ZeroOpts {
+    fn default() -> Self {
+        Self {
+            mode: ExecMode::from_env(ExecMode::DeviceResident),
+            bucket_elems: bucket_elems_from_env(),
+        }
+    }
 }
 
 pub struct ZeroReport {
@@ -87,6 +112,16 @@ pub fn train(
     flow: StateFlow,
     steps: usize,
 ) -> Result<ZeroReport> {
+    train_with(rt, rule, flow, steps, ZeroOpts::default())
+}
+
+pub fn train_with(
+    rt: SharedRuntime,
+    rule: Rule,
+    flow: StateFlow,
+    steps: usize,
+    opts: ZeroOpts,
+) -> Result<ZeroReport> {
     let n = rt.manifest.n_stages;
     let n_mb = rt.manifest.n_microbatches;
     assert_eq!(n, n_mb, "ZeRO sharding assumes N stages == N workers");
@@ -99,7 +134,8 @@ pub fn train(
     let rule_c = rule.clone();
     let results = run_workers(n, move |w| {
         let mut ep = eps[w].lock().unwrap().take().unwrap();
-        worker(&rt_arc, &rule_c, flow, &mut ep, w, steps).expect("zero worker failed")
+        worker(&rt_arc, &rule_c, flow, &mut ep, w, steps, opts)
+            .expect("zero worker failed")
     });
 
     let (logs, peaks): (Vec<_>, Vec<u64>) = {
@@ -132,6 +168,7 @@ pub fn train(
     })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker(
     rt: &SharedRuntime,
     rule: &Rule,
@@ -139,6 +176,7 @@ fn worker(
     ep: &mut Endpoint,
     w: usize,
     steps: usize,
+    opts: ZeroOpts,
 ) -> Result<(Vec<StepLog>, u64)> {
     let n = rt.manifest.n_stages;
     let n_mb = ep.n;
@@ -157,6 +195,8 @@ fn worker(
     let mut gsum: Vec<f32> = vec![0.0; own_cur.len()];
     // This worker's own micro-batch gradients, model-wide flat scratch.
     let mut gmb: Vec<f32> = layout.zeros();
+    let mut exec = Executor::new(opts.mode, n);
+    let reducer = BucketedReducer::new(opts.bucket_elems);
 
     let data = DataSource::from_manifest(&rt.manifest);
     let mut logs = Vec::new();
@@ -213,68 +253,86 @@ fn worker(
         // + the received stage params (released after use).
         peak_state = peak_state.max(4 * own_bytes + recv_bytes);
 
-        // ---- compute: fwd chain + bwd chain for micro-batch i ----------
+        // ---- compute: fwd chain for micro-batch i ----------------------
         let mb = data.microbatch(t, (i - 1) as u64);
-        let (x0, targets) = match &mb {
-            MicroBatch::Lm { tokens, targets } => {
-                (HostTensor::I32(tokens.clone()), targets.clone())
-            }
-            MicroBatch::Class { x, labels } => {
-                (HostTensor::F32(x.clone()), labels.clone())
-            }
+        let (x0, targets) = match mb {
+            MicroBatch::Lm { tokens, targets } => (HostTensor::I32(tokens), targets),
+            MicroBatch::Class { x, labels } => (HostTensor::F32(x), labels),
         };
-        let mut inputs: Vec<HostTensor> = vec![x0];
+        let mut acts: Vec<Act> = Vec::with_capacity(n);
+        acts.push(exec.input(rt, x0)?);
         for j in 0..n - 1 {
+            let ver = version_id(rule, t, i, j, n);
             let p = stage_run(j, w, i, n, rule, &own_cur, &own_prev, &recv_params);
-            let y = rt.stage_fwd_flat(j, p, &inputs[j])?;
-            inputs.push(HostTensor::F32(y));
+            let y = exec.fwd(rt, j, ver, p, &acts[j])?;
+            acts.push(y);
         }
+
+        // ---- backward chain with eager bucketed shard sends ------------
+        // Stage j's gradients fly to owner j bucket by bucket the moment
+        // they land; stages below j keep backpropagating meanwhile.  The
+        // own-stage slice stays local for the in-order reduction below.
         let last = n - 1;
-        let (loss, mut gx) = rt.last_bwd_flat(
+        let ver = version_id(rule, t, i, last, n);
+        let (loss, mut gx) = exec.last_bwd(
+            rt,
+            ver,
             stage_run(last, w, i, n, rule, &own_cur, &own_prev, &recv_params),
-            inputs[last].as_f32().unwrap(),
+            &acts[last],
             &targets,
             &mut gmb[layout.stage_range(last)],
         )?;
+        ep.stats().mark(EventKind::BwdStageDone, w, last, 0);
+        if last != w {
+            reducer.shard_send(ep, &layout, t, last, i, last, &gmb[layout.stage_range(last)]);
+        }
         for j in (1..last).rev() {
-            gx = rt.mid_bwd_flat(
+            let ver = version_id(rule, t, i, j, n);
+            gx = exec.mid_bwd(
+                rt,
                 j,
+                ver,
                 stage_run(j, w, i, n, rule, &own_cur, &own_prev, &recv_params),
-                inputs[j].as_f32().unwrap(),
+                &acts[j],
                 &gx,
                 &mut gmb[layout.stage_range(j)],
             )?;
+            ep.stats().mark(EventKind::BwdStageDone, w, j, 0);
+            if j != w {
+                reducer.shard_send(ep, &layout, t, j, i, j, &gmb[layout.stage_range(j)]);
+            }
         }
         if n > 1 {
-            rt.first_bwd_flat(
+            let ver = version_id(rule, t, i, 0, n);
+            exec.first_bwd(
+                rt,
+                ver,
                 stage_run(0, w, i, n, rule, &own_cur, &own_prev, &recv_params),
-                &inputs[0],
+                &acts[0],
                 &gx,
                 &mut gmb[layout.stage_range(0)],
             )?;
+            ep.stats().mark(EventKind::BwdStageDone, w, 0, 0);
+            if w != 0 {
+                reducer.shard_send(ep, &layout, t, 0, i, 0, &gmb[layout.stage_range(0)]);
+            }
         }
         drop(recv_params); // release received payloads back to the pool
 
-        // ---- gradient reduction to owners (micro-batch order) ----------
-        for j in 0..n {
-            if j != w {
-                ep.send_copy(j, tags::grad_part(t, j, i), &gmb[layout.stage_range(j)]);
-            }
-        }
-        // Owner: reduce in mb order 1..N (self contribution in its slot).
-        gsum.fill(0.0);
-        for mb_i in 1..=n_mb {
-            if mb_i == i {
-                ops::add_into(&mut gsum, &gmb[layout.stage_range(w)]);
-            } else {
-                let part = ep.recv(mb_i - 1, tags::grad_part(t, w, mb_i));
-                ops::add_into(&mut gsum, &part);
-            }
-        }
-        ops::scale(&mut gsum, 1.0 / n_mb as f32);
+        // ---- owner-side reduction (micro-batch order 1..N) -------------
+        reducer.shard_reduce(
+            ep,
+            &layout,
+            t,
+            w,
+            i,
+            n_mb,
+            &gmb[layout.stage_range(w)],
+            &mut gsum,
+        );
 
         // ---- owner update ----------------------------------------------
-        rt.sgd_update_flat(w, &own_cur, &mut own_mom, &gsum, rt.manifest.lr, &mut own_next)?;
+        exec.sgd(rt, w, t, &own_cur, &mut own_mom, &gsum, rt.manifest.lr, &mut own_next)?;
         std::mem::swap(&mut own_prev, &mut own_cur); // prev ← θ_t
         std::mem::swap(&mut own_cur, &mut own_next); // cur ← θ_{t+1}
 

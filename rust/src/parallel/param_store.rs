@@ -27,6 +27,11 @@ pub struct ParamStore {
     next: Vec<f32>,
     /// Momentum, same layout.
     moms: Vec<f32>,
+    /// Which stages have had their `next` slot handed out/written this
+    /// step — commit_step asserts full coverage (debug), restoring the
+    /// old whole-set-commit API's "no stage silently recycles stale
+    /// scratch" invariant.
+    next_written: Vec<bool>,
     step: u64,
 }
 
@@ -43,7 +48,8 @@ impl ParamStore {
         let prev = cur.clone(); // θ_{−1} := θ_0
         let next = layout.zeros();
         let moms = layout.zeros();
-        Self { layout, cur, prev, next, moms, step: 0 }
+        let next_written = vec![false; layout.n_stages()];
+        Self { layout, cur, prev, next, moms, next_written, step: 0 }
     }
 
     pub fn layout(&self) -> &Arc<ArenaLayout> {
@@ -86,6 +92,7 @@ impl ParamStore {
     /// [`Self::commit_step`] then makes them current — no clone of θ_t,
     /// no allocation.
     pub fn update_parts(&mut self, stage: usize) -> (&[f32], &mut [f32], &mut [f32]) {
+        self.next_written[stage] = true;
         let r = self.layout.stage_range(stage);
         (
             &self.cur[r.clone()],
@@ -104,6 +111,7 @@ impl ParamStore {
     /// Write externally received θ_{t+1} for one stage into the `next`
     /// slot (ring hand-off receivers).
     pub fn write_next(&mut self, stage: usize, src: &[f32]) {
+        self.next_written[stage] = true;
         let r = self.layout.stage_range(stage);
         self.next[r].copy_from_slice(src);
     }
@@ -113,6 +121,18 @@ impl ParamStore {
     /// old stale buffer is recycled as the next scratch.  Pure pointer
     /// rotation — zero copies, zero allocation.
     pub fn commit_step(&mut self) {
+        debug_assert!(
+            self.next_written.iter().all(|w| *w),
+            "commit_step: stages {:?} never wrote their next slot — the \
+             rotation would promote recycled θ_{{t−1}} scratch as θ_{{t+1}}",
+            self.next_written
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| !**w)
+                .map(|(s, _)| s)
+                .collect::<Vec<_>>()
+        );
+        self.next_written.iter_mut().for_each(|w| *w = false);
         std::mem::swap(&mut self.prev, &mut self.cur); // prev ← θ_t
         std::mem::swap(&mut self.cur, &mut self.next); // cur ← θ_{t+1}
         self.step += 1;
@@ -203,6 +223,14 @@ mod tests {
         assert_eq!(s.momentum(0), &[0.5, 0.5]);
         assert_eq!(s.next_stage(0), &[7.0, 8.0]);
         assert_eq!(s.momentum(1), &[0.0]); // other stage untouched
+    }
+
+    #[test]
+    #[should_panic(expected = "never wrote their next slot")]
+    fn commit_without_full_coverage_panics() {
+        let mut s = store();
+        s.write_next(0, &[9.0, 9.0]); // stage 1 never written
+        s.commit_step();
     }
 
     #[test]

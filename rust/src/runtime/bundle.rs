@@ -8,25 +8,69 @@
 //!                predict(*p, x) -> (logits,)   [classifiers]
 //! - every stage  sgd(*p, *m, *g, lr) -> (*p', *m')
 
-use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use super::device_store::{DeviceParamStore, DeviceTensor};
 use super::literal::{
     host_to_literal, int_tensor_to_literal, literal_into_slice, literal_to_scalar,
     literal_to_tensor, slice_to_literal, tensor_to_literal,
 };
-use super::{execute_tuple, Engine};
+use super::{anyhow_xla, execute_buffers, execute_tuple, Engine, TransferStats};
 use crate::model::Manifest;
 use crate::tensor::{HostTensor, IntTensor, Tensor};
 use crate::util::binio;
 
+/// Artifact kinds a bundle can declare, as a closed enum so the per-call
+/// executable lookup is a pair of array indexes — the former
+/// `HashMap<(usize, String), _>` key allocated a `String` per lookup on
+/// the hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    Fwd,
+    FwdBwd,
+    FwdLoss,
+    Predict,
+    Sgd,
+}
+
+impl Kind {
+    pub const COUNT: usize = 5;
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fwd" => Some(Kind::Fwd),
+            "fwdbwd" => Some(Kind::FwdBwd),
+            "fwd_loss" => Some(Kind::FwdLoss),
+            "predict" => Some(Kind::Predict),
+            "sgd" => Some(Kind::Sgd),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kind::Fwd => "fwd",
+            Kind::FwdBwd => "fwdbwd",
+            Kind::FwdLoss => "fwd_loss",
+            Kind::Predict => "predict",
+            Kind::Sgd => "sgd",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
 pub struct BundleRuntime {
     pub manifest: Manifest,
     pub engine: Engine,
-    /// (stage, kind) → compiled executable
-    exes: HashMap<(usize, String), xla::PjRtLoadedExecutable>,
+    /// Host↔device transfer accounting across both execution paths.
+    pub transfers: TransferStats,
+    /// Per stage, per [`Kind`] — allocation-free lookup.
+    exes: Vec<[Option<xla::PjRtLoadedExecutable>; Kind::COUNT]>,
 }
 
 impl BundleRuntime {
@@ -38,23 +82,38 @@ impl BundleRuntime {
 
     pub fn load_with_engine(dir: &Path, engine: Engine) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
-        let mut exes = HashMap::new();
+        let mut exes: Vec<[Option<xla::PjRtLoadedExecutable>; Kind::COUNT]> =
+            (0..manifest.n_stages).map(|_| Default::default()).collect();
         for st in &manifest.stages {
             for (kind, file) in &st.artifacts {
+                // tolerate kinds this build does not know (a newer
+                // exporter may ship extra artifacts) — the seed behavior;
+                // only the five Kind entries are ever dispatched to
+                let Some(k) = Kind::parse(kind) else {
+                    eprintln!(
+                        "bundle {}: stage {} skipping unknown artifact kind `{kind}` \
+                         (known: fwd, fwdbwd, fwd_loss, predict, sgd)",
+                        manifest.name, st.index
+                    );
+                    continue;
+                };
                 let path = manifest.dir.join(file);
                 let exe = engine
                     .compile_hlo_file(&path)
                     .with_context(|| format!("stage {} kind {kind}", st.index))?;
-                exes.insert((st.index, kind.clone()), exe);
+                exes[st.index][k.index()] = Some(exe);
             }
         }
-        Ok(Self { manifest, engine, exes })
+        Ok(Self { manifest, engine, transfers: TransferStats::default(), exes })
     }
 
-    fn exe(&self, stage: usize, kind: &str) -> Result<&xla::PjRtLoadedExecutable> {
+    fn exe(&self, stage: usize, kind: Kind) -> Result<&xla::PjRtLoadedExecutable> {
         self.exes
-            .get(&(stage, kind.to_string()))
-            .with_context(|| format!("no executable for stage {stage} kind {kind}"))
+            .get(stage)
+            .and_then(|per_stage| per_stage[kind.index()].as_ref())
+            .with_context(|| {
+                format!("no executable for stage {stage} kind {}", kind.as_str())
+            })
     }
 
     /// Initial parameters from params.bin, split per stage/param.
@@ -113,12 +172,15 @@ impl BundleRuntime {
     /// executed N times — caching the literals removes N−1 of the N
     /// host→device conversions per stage).
     pub fn param_literals(&self, params: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        self.transfers
+            .add_param_upload(params.iter().map(|t| t.bytes() as u64).sum());
         params.iter().map(tensor_to_literal).collect()
     }
 
     /// Literals for one stage straight from its flat arena run: the run is
     /// split by the manifest's parameter views, no `Tensor` materialized.
     pub fn param_literals_flat(&self, stage: usize, flat: &[f32]) -> Result<Vec<xla::Literal>> {
+        self.transfers.add_param_upload(flat.len() as u64 * 4);
         let specs = &self.manifest.stages[stage].params;
         let mut out = Vec::with_capacity(specs.len());
         let mut off = 0usize;
@@ -143,10 +205,12 @@ impl BundleRuntime {
         x: &HostTensor,
     ) -> Result<Tensor> {
         let x_lit = host_to_literal(x)?;
+        self.transfers.add_h2d(x.bytes() as u64);
         let mut args: Vec<&xla::Literal> = params.iter().collect();
         args.push(&x_lit);
-        let out = execute_tuple(self.exe(stage, "fwd")?, &args)?;
+        let out = execute_tuple(self.exe(stage, Kind::Fwd)?, &args)?;
         let spec = self.manifest.stages[stage].output.as_ref().unwrap();
+        self.transfers.add_d2h(spec.bytes() as u64);
         literal_to_tensor(&out[0], &spec.shape)
     }
 
@@ -161,7 +225,7 @@ impl BundleRuntime {
         let mut args: Vec<&xla::Literal> = params.iter().collect();
         args.push(&x_lit);
         args.push(&gy_lit);
-        let out = execute_tuple(self.exe(0, "fwdbwd")?, &args)?;
+        let out = execute_tuple(self.exe(0, Kind::FwdBwd)?, &args)?;
         self.unpack_grads(0, &out, 0)
     }
 
@@ -177,7 +241,7 @@ impl BundleRuntime {
         let mut args: Vec<&xla::Literal> = params.iter().collect();
         args.push(&x_lit);
         args.push(&gy_lit);
-        let out = execute_tuple(self.exe(stage, "fwdbwd")?, &args)?;
+        let out = execute_tuple(self.exe(stage, Kind::FwdBwd)?, &args)?;
         let gx = literal_to_tensor(&out[0], &self.manifest.stages[stage].input.shape)?;
         Ok((gx, self.unpack_grads(stage, &out, 1)?))
     }
@@ -194,7 +258,7 @@ impl BundleRuntime {
         let mut args: Vec<&xla::Literal> = params.iter().collect();
         args.push(&x_lit);
         args.push(&t_lit);
-        let out = execute_tuple(self.exe(last, "fwdbwd")?, &args)?;
+        let out = execute_tuple(self.exe(last, Kind::FwdBwd)?, &args)?;
         let loss = literal_to_scalar(&out[0])?;
         let gx = literal_to_tensor(&out[1], &self.manifest.stages[last].input.shape)?;
         Ok((loss, gx, self.unpack_grads(last, &out, 2)?))
@@ -228,7 +292,7 @@ impl BundleRuntime {
         let mut args = self.param_literals_flat(last, flat)?;
         args.push(tensor_to_literal(x)?);
         args.push(int_tensor_to_literal(targets)?);
-        let out = execute_tuple(self.exe(last, "fwd_loss")?, &args)?;
+        let out = execute_tuple(self.exe(last, Kind::FwdLoss)?, &args)?;
         literal_to_scalar(&out[0])
     }
 
@@ -237,7 +301,7 @@ impl BundleRuntime {
         let last = self.manifest.n_stages - 1;
         let mut args = self.param_literals_flat(last, flat)?;
         args.push(tensor_to_literal(x)?);
-        let out = execute_tuple(self.exe(last, "predict")?, &args)?;
+        let out = execute_tuple(self.exe(last, Kind::Predict)?, &args)?;
         let elems = out[0].element_count();
         let batch = self.manifest.target.shape[0];
         literal_to_tensor(&out[0], &[batch, elems / batch])
@@ -291,10 +355,12 @@ impl BundleRuntime {
     ) -> Result<()> {
         let x_lit = host_to_literal(x)?;
         let gy_lit = tensor_to_literal(gy)?;
+        self.transfers.add_h2d((x.bytes() + gy.bytes()) as u64);
         let mut args: Vec<&xla::Literal> = params.iter().collect();
         args.push(&x_lit);
         args.push(&gy_lit);
-        let out = execute_tuple(self.exe(0, "fwdbwd")?, &args)?;
+        let out = execute_tuple(self.exe(0, Kind::FwdBwd)?, &args)?;
+        self.transfers.add_d2h(gdst.len() as u64 * 4);
         self.unpack_grads_into(0, &out, 0, gdst)
     }
 
@@ -309,11 +375,13 @@ impl BundleRuntime {
     ) -> Result<Tensor> {
         let x_lit = tensor_to_literal(x)?;
         let gy_lit = tensor_to_literal(gy)?;
+        self.transfers.add_h2d((x.bytes() + gy.bytes()) as u64);
         let mut args: Vec<&xla::Literal> = params.iter().collect();
         args.push(&x_lit);
         args.push(&gy_lit);
-        let out = execute_tuple(self.exe(stage, "fwdbwd")?, &args)?;
+        let out = execute_tuple(self.exe(stage, Kind::FwdBwd)?, &args)?;
         let gx = literal_to_tensor(&out[0], &self.manifest.stages[stage].input.shape)?;
+        self.transfers.add_d2h((gx.bytes() + gdst.len() * 4) as u64);
         self.unpack_grads_into(stage, &out, 1, gdst)?;
         Ok(gx)
     }
@@ -329,12 +397,16 @@ impl BundleRuntime {
         let last = self.manifest.n_stages - 1;
         let x_lit = tensor_to_literal(x)?;
         let t_lit = int_tensor_to_literal(targets)?;
+        self.transfers
+            .add_h2d((x.bytes() + targets.data.len() * 4) as u64);
         let mut args: Vec<&xla::Literal> = params.iter().collect();
         args.push(&x_lit);
         args.push(&t_lit);
-        let out = execute_tuple(self.exe(last, "fwdbwd")?, &args)?;
+        let out = execute_tuple(self.exe(last, Kind::FwdBwd)?, &args)?;
         let loss = literal_to_scalar(&out[0])?;
         let gx = literal_to_tensor(&out[1], &self.manifest.stages[last].input.shape)?;
+        self.transfers
+            .add_d2h((4 + gx.bytes() + gdst.len() * 4) as u64);
         self.unpack_grads_into(last, &out, 2, gdst)?;
         Ok((loss, gx))
     }
@@ -370,7 +442,9 @@ impl BundleRuntime {
             anyhow::ensure!(off == src.len(), "stage {stage}: run/manifest mismatch");
         }
         args.push(tensor_to_literal(&Tensor::scalar(lr))?);
-        let res = execute_tuple(self.exe(stage, "sgd")?, &args)?;
+        self.transfers.add_h2d(3 * params.len() as u64 * 4 + 4);
+        self.transfers.add_d2h(2 * params.len() as u64 * 4);
+        let res = execute_tuple(self.exe(stage, Kind::Sgd)?, &args)?;
         anyhow::ensure!(res.len() == 2 * k, "sgd returned {} outputs", res.len());
         let mut off = 0usize;
         for (i, p) in specs.iter().enumerate() {
@@ -422,7 +496,7 @@ impl BundleRuntime {
     ) -> Result<Tensor> {
         let mut args = self.param_literals(params)?;
         args.push(host_to_literal(x)?);
-        let out = execute_tuple(self.exe(stage, "fwd")?, &args)?;
+        let out = execute_tuple(self.exe(stage, Kind::Fwd)?, &args)?;
         let spec = self.manifest.stages[stage].output.as_ref().unwrap();
         literal_to_tensor(&out[0], &spec.shape)
     }
@@ -438,7 +512,7 @@ impl BundleRuntime {
         let mut args = self.param_literals(params)?;
         args.push(tensor_to_literal(x)?);
         args.push(int_tensor_to_literal(targets)?);
-        let out = execute_tuple(self.exe(last, "fwd_loss")?, &args)?;
+        let out = execute_tuple(self.exe(last, Kind::FwdLoss)?, &args)?;
         literal_to_scalar(&out[0])
     }
 
@@ -447,7 +521,7 @@ impl BundleRuntime {
         let last = self.manifest.n_stages - 1;
         let mut args = self.param_literals(params)?;
         args.push(tensor_to_literal(x)?);
-        let out = execute_tuple(self.exe(last, "predict")?, &args)?;
+        let out = execute_tuple(self.exe(last, Kind::Predict)?, &args)?;
         let elems = out[0].element_count();
         let batch = self.manifest.target.shape[0];
         literal_to_tensor(&out[0], &[batch, elems / batch])
@@ -464,7 +538,7 @@ impl BundleRuntime {
         let mut args = self.param_literals(params)?;
         args.push(host_to_literal(x)?);
         args.push(tensor_to_literal(gy)?);
-        let out = execute_tuple(self.exe(0, "fwdbwd")?, &args)?;
+        let out = execute_tuple(self.exe(0, Kind::FwdBwd)?, &args)?;
         self.unpack_grads(0, &out, 0)
     }
 
@@ -479,7 +553,7 @@ impl BundleRuntime {
         let mut args = self.param_literals(params)?;
         args.push(tensor_to_literal(x)?);
         args.push(tensor_to_literal(gy)?);
-        let out = execute_tuple(self.exe(stage, "fwdbwd")?, &args)?;
+        let out = execute_tuple(self.exe(stage, Kind::FwdBwd)?, &args)?;
         let gx = literal_to_tensor(&out[0], &self.manifest.stages[stage].input.shape)?;
         Ok((gx, self.unpack_grads(stage, &out, 1)?))
     }
@@ -495,7 +569,7 @@ impl BundleRuntime {
         let mut args = self.param_literals(params)?;
         args.push(tensor_to_literal(x)?);
         args.push(int_tensor_to_literal(targets)?);
-        let out = execute_tuple(self.exe(last, "fwdbwd")?, &args)?;
+        let out = execute_tuple(self.exe(last, Kind::FwdBwd)?, &args)?;
         let loss = literal_to_scalar(&out[0])?;
         let gx = literal_to_tensor(&out[1], &self.manifest.stages[last].input.shape)?;
         Ok((loss, gx, self.unpack_grads(last, &out, 2)?))
@@ -544,12 +618,246 @@ impl BundleRuntime {
             args.push(tensor_to_literal(g)?);
         }
         args.push(tensor_to_literal(&Tensor::scalar(lr))?);
-        let out = execute_tuple(self.exe(stage, "sgd")?, &args)?;
+        let out = execute_tuple(self.exe(stage, Kind::Sgd)?, &args)?;
         anyhow::ensure!(out.len() == 2 * k, "sgd returned {} outputs", out.len());
+        // write through the existing allocations — no shape clone, no
+        // fresh Tensor per parameter per call
         for i in 0..k {
-            params[i] = literal_to_tensor(&out[i], &params[i].shape.clone())?;
-            moms[i] = literal_to_tensor(&out[k + i], &moms[i].shape.clone())?;
+            literal_into_slice(&out[i], &mut params[i].data)?;
+            literal_into_slice(&out[k + i], &mut moms[i].data)?;
         }
         Ok(())
+    }
+
+    // ---- device-resident execution (DESIGN-PERF.md §Device residency) ----
+    // Parameters and momentum live as persistent `PjRtBuffer`s in a
+    // [`DeviceParamStore`]; inter-stage activations hand off as
+    // [`DeviceTensor`]s.  Micro-batches move no parameter bytes at all —
+    // buffers are passed by reference execution after execution, and a
+    // (stage, θ-version) uploads at most once.  Gradients still come
+    // back to the host each micro-batch (they feed the comm fabric and
+    // the `GradBuffer` determinism contract).
+
+    /// Upload a host input (stage-0 batch) to the device.
+    pub fn upload_host(&self, x: &HostTensor) -> Result<DeviceTensor> {
+        let buf = match x {
+            HostTensor::F32(t) => self
+                .engine
+                .client
+                .buffer_from_host_buffer(&t.data, &t.shape, None)
+                .map_err(anyhow_xla)?,
+            HostTensor::I32(t) => self
+                .engine
+                .client
+                .buffer_from_host_buffer(&t.data, &t.shape, None)
+                .map_err(anyhow_xla)?,
+        };
+        self.transfers.add_h2d(x.bytes() as u64);
+        Ok(DeviceTensor::new(buf, x.shape().to_vec()))
+    }
+
+    /// Upload loss-stage targets to the device.
+    pub fn upload_targets(&self, t: &IntTensor) -> Result<DeviceTensor> {
+        let buf = self
+            .engine
+            .client
+            .buffer_from_host_buffer(&t.data, &t.shape, None)
+            .map_err(anyhow_xla)?;
+        self.transfers.add_h2d(t.data.len() as u64 * 4);
+        Ok(DeviceTensor::new(buf, t.shape.clone()))
+    }
+
+    /// Re-stage a result-tuple element as a device buffer for the next
+    /// stage.  The crate's execute returns one tuple buffer (see
+    /// [`execute_buffers`]), so elements surface as literals; promoting
+    /// one back to a buffer is a single memcpy on the CPU PJRT backend
+    /// and materializes no host `Tensor`.
+    fn restage(&self, lit: &xla::Literal, shape: &[usize]) -> Result<DeviceTensor> {
+        let buf = self
+            .engine
+            .client
+            .buffer_from_host_literal(None, lit)
+            .map_err(anyhow_xla)?;
+        let bytes = shape.iter().product::<usize>() as u64 * 4;
+        self.transfers.add_d2h(bytes);
+        self.transfers.add_h2d(bytes);
+        Ok(DeviceTensor::new(buf, shape.to_vec()))
+    }
+
+    /// Forward of a non-loss stage, fully on device: resident parameter
+    /// buffers + device activation in, device activation out.
+    pub fn stage_fwd_dev(
+        &self,
+        stage: usize,
+        params: &[xla::PjRtBuffer],
+        x: &DeviceTensor,
+    ) -> Result<DeviceTensor> {
+        let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
+        args.push(x.buffer());
+        let out = execute_buffers(self.exe(stage, Kind::Fwd)?, &args)?;
+        let spec = self.manifest.stages[stage].output.as_ref().unwrap();
+        self.restage(&out[0], &spec.shape)
+    }
+
+    /// Backward of stage 0 on device: parameter grads land in `gdst`.
+    pub fn first_bwd_dev(
+        &self,
+        params: &[xla::PjRtBuffer],
+        x: &DeviceTensor,
+        gy: &DeviceTensor,
+        gdst: &mut [f32],
+    ) -> Result<()> {
+        let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
+        args.push(x.buffer());
+        args.push(gy.buffer());
+        let out = execute_buffers(self.exe(0, Kind::FwdBwd)?, &args)?;
+        self.transfers.add_d2h(gdst.len() as u64 * 4);
+        self.unpack_grads_into(0, &out, 0, gdst)
+    }
+
+    /// Backward of a middle stage on device: grads into `gdst`, the
+    /// input cotangent stays on device.
+    pub fn mid_bwd_dev(
+        &self,
+        stage: usize,
+        params: &[xla::PjRtBuffer],
+        x: &DeviceTensor,
+        gy: &DeviceTensor,
+        gdst: &mut [f32],
+    ) -> Result<DeviceTensor> {
+        let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
+        args.push(x.buffer());
+        args.push(gy.buffer());
+        let out = execute_buffers(self.exe(stage, Kind::FwdBwd)?, &args)?;
+        self.transfers.add_d2h(gdst.len() as u64 * 4);
+        let gx = self.restage(&out[0], &self.manifest.stages[stage].input.shape)?;
+        self.unpack_grads_into(stage, &out, 1, gdst)?;
+        Ok(gx)
+    }
+
+    /// Backward of the loss stage on device: grads into `gdst`, returns
+    /// (loss, device cotangent).
+    pub fn last_bwd_dev(
+        &self,
+        params: &[xla::PjRtBuffer],
+        x: &DeviceTensor,
+        targets: &DeviceTensor,
+        gdst: &mut [f32],
+    ) -> Result<(f32, DeviceTensor)> {
+        let last = self.manifest.n_stages - 1;
+        let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
+        args.push(x.buffer());
+        args.push(targets.buffer());
+        let out = execute_buffers(self.exe(last, Kind::FwdBwd)?, &args)?;
+        let loss = literal_to_scalar(&out[0])?;
+        self.transfers.add_d2h(4 + gdst.len() as u64 * 4);
+        let gx = self.restage(&out[1], &self.manifest.stages[last].input.shape)?;
+        self.unpack_grads_into(last, &out, 2, gdst)?;
+        Ok((loss, gx))
+    }
+
+    /// Fused SGD-momentum over resident device state, with version
+    /// hand-over ("donation", DESIGN-PERF.md): reads θ_t and momentum
+    /// from the store's buffers for `version`, uploads only the averaged
+    /// gradients + lr, and promotes the result to the resident
+    /// θ_{version+1} / momentum — exactly one parameter upload per stage
+    /// per committed θ-version.  Host mirrors stay authoritative:
+    /// θ_{t+1} is written into `out` (the `ParamStore` next slot, which
+    /// the comm fabric serves from) and momentum into `moms`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgd_update_dev(
+        &self,
+        stage: usize,
+        dstore: &mut DeviceParamStore,
+        version: u64,
+        cur: &[f32],
+        moms: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let specs = &self.manifest.stages[stage].params;
+        let k = specs.len();
+        anyhow::ensure!(
+            cur.len() == moms.len() && cur.len() == grads.len() && cur.len() == out.len(),
+            "stage {stage}: flat run length mismatch"
+        );
+        let mut gbufs = Vec::with_capacity(k);
+        let mut off = 0usize;
+        for p in specs {
+            let n = p.elems();
+            gbufs.push(
+                self.engine
+                    .client
+                    .buffer_from_host_buffer(&grads[off..off + n], &p.shape, None)
+                    .map_err(anyhow_xla)?,
+            );
+            off += n;
+        }
+        anyhow::ensure!(off == grads.len(), "stage {stage}: run/manifest mismatch");
+        let lr_buf = self
+            .engine
+            .client
+            .buffer_from_host_buffer(&[lr], &[1], None)
+            .map_err(anyhow_xla)?;
+        self.transfers.add_h2d(grads.len() as u64 * 4 + 4);
+
+        let res = {
+            let (pbufs, mbufs) =
+                dstore.params_and_momentum(self, stage, version, cur, moms)?;
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(3 * k + 1);
+            args.extend(pbufs.iter());
+            args.extend(mbufs.iter());
+            args.extend(gbufs.iter());
+            args.push(&lr_buf);
+            execute_buffers(self.exe(stage, Kind::Sgd)?, &args)?
+        };
+        anyhow::ensure!(res.len() == 2 * k, "sgd returned {} outputs", res.len());
+
+        // host mirrors: θ_{t+1} into the next slot, momentum in place
+        let mut off = 0usize;
+        for (i, p) in specs.iter().enumerate() {
+            let n = p.elems();
+            literal_into_slice(&res[i], &mut out[off..off + n])?;
+            literal_into_slice(&res[k + i], &mut moms[off..off + n])?;
+            off += n;
+        }
+        self.transfers.add_d2h(2 * cur.len() as u64 * 4);
+
+        // donation: the update's result becomes the resident
+        // θ_{version+1}/momentum; the θ_{version−1} buffers it displaces
+        // drop at the store's next eviction
+        dstore.install_params(self, stage, version + 1, &res[..k])?;
+        dstore.install_momentum(self, stage, &res[k..])?;
+        Ok(())
+    }
+
+    /// Upload one stage's parameter run as per-tensor device buffers
+    /// (split by the manifest views).  Used by [`DeviceParamStore`]; the
+    /// store does the per-version caching and upload accounting.
+    pub(crate) fn upload_stage_run(
+        &self,
+        stage: usize,
+        flat: &[f32],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let specs = &self.manifest.stages[stage].params;
+        let mut bufs = Vec::with_capacity(specs.len());
+        let mut off = 0usize;
+        for p in specs {
+            let n = p.elems();
+            bufs.push(
+                self.engine
+                    .client
+                    .buffer_from_host_buffer(&flat[off..off + n], &p.shape, None)
+                    .map_err(anyhow_xla)?,
+            );
+            off += n;
+        }
+        anyhow::ensure!(
+            off == flat.len(),
+            "stage {stage}: flat run has {} elems, manifest says {off}",
+            flat.len()
+        );
+        Ok(bufs)
     }
 }

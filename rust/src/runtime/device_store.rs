@@ -1,0 +1,433 @@
+//! Device-resident model state (DESIGN-PERF.md §Device residency).
+//!
+//! The literal path rebuilds every stage's parameter literals from arena
+//! slices once per *call* — N micro-batches × N stages of host→device
+//! parameter conversion per training step, even though within a step each
+//! stage runs the same one-or-two θ-versions.  [`DeviceParamStore`] keeps
+//! each stage's parameters (and momentum) as persistent `PjRtBuffer`s
+//! keyed by θ-version: a buffer is uploaded **once per (stage, committed
+//! θ-version)** and then passed by reference execution after execution.
+//! The versioning maps 1:1 onto [`crate::parallel::ParamStore`]'s
+//! fresh/stale semantics — version `t` is the θ committed at step `t`,
+//! and the θ_{−1} := θ_0 bootstrap means step 0's fresh and stale resolve
+//! to the *same* resident buffers.
+//!
+//! [`Executor`] puts the literal path and the device path behind one
+//! small surface, so each trainer's schedule logic is written once and
+//! the equivalence tests swap the executor: same bundle + same rule +
+//! either mode ⇒ bit-identical loss sequences (the device path feeds the
+//! exact same f32 payloads to the exact same executables).
+//!
+//! Crate-API constraint, stated honestly: the `xla` crate returns an
+//! execution's result as a *single tuple buffer* (see
+//! [`super::execute_buffers`]), with no buffer-level detupling.  Result
+//! elements therefore surface as literals; activations that continue to
+//! the next stage are re-staged with `buffer_from_host_literal` (one
+//! memcpy on the CPU PJRT backend, no host `Tensor` materialized), and
+//! the SGD result is promoted to the resident next-version buffers — the
+//! single upload that version pays.  What device residency eliminates is
+//! the dominant term: per-micro-batch parameter conversion and upload.
+
+use anyhow::Result;
+
+use super::{anyhow_xla, BundleRuntime};
+use crate::tensor::{HostTensor, IntTensor, Tensor};
+
+/// Which execution path a trainer drives (`CDP_EXEC_MODE=host|device`
+/// overrides the per-trainer default).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Host/literal boundary — the reference oracle path.
+    HostLiteral,
+    /// Persistent device buffers for parameters/momentum, device-side
+    /// activation hand-off.
+    DeviceResident,
+}
+
+impl ExecMode {
+    /// Resolve the mode, letting `CDP_EXEC_MODE` override the default
+    /// (case-insensitive; an unrecognized value warns loudly instead of
+    /// silently running the wrong path — these A/B measurements are the
+    /// point of the knob).
+    pub fn from_env(default: Self) -> Self {
+        match std::env::var("CDP_EXEC_MODE") {
+            Ok(v) => match v.to_ascii_lowercase().as_str() {
+                "host" | "literal" => ExecMode::HostLiteral,
+                "device" => ExecMode::DeviceResident,
+                other => {
+                    eprintln!(
+                        "CDP_EXEC_MODE=`{other}` not recognized \
+                         (use host|device); keeping {default:?}"
+                    );
+                    default
+                }
+            },
+            Err(_) => default,
+        }
+    }
+}
+
+/// A device-resident tensor: one `PjRtBuffer` plus its logical shape.
+/// The unit of inter-stage activation hand-off on the device path.
+pub struct DeviceTensor {
+    buf: xla::PjRtBuffer,
+    pub shape: Vec<usize>,
+}
+
+impl DeviceTensor {
+    pub fn new(buf: xla::PjRtBuffer, shape: Vec<usize>) -> Self {
+        Self { buf, shape }
+    }
+
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * 4
+    }
+}
+
+/// Per-stage, per-θ-version cache of resident parameter buffers plus the
+/// (unversioned — always current) momentum buffers.
+///
+/// Upload discipline: `params` uploads a version at most once and evicts
+/// versions older than `version − 1`, so at any moment a stage holds at
+/// most {stale, fresh, just-installed next} — the same window
+/// `ParamStore` rotates through.  `param_uploads()` counts stage-level
+/// upload events; the device-resident contract (asserted in the hotpath
+/// bench) is ≤ 1 per stage per committed θ-version.
+///
+/// Drop discipline: resident buffers must not outlive the PJRT client
+/// that created them — drop the store (or the trainer owning it) before
+/// the `BundleRuntime` whose engine produced the buffers.
+/// One resident θ-version: (version id, per-tensor buffers).
+type VersionedBufs = (u64, Vec<xla::PjRtBuffer>);
+
+pub struct DeviceParamStore {
+    /// stage → resident versions, newest last, ≤ 3 entries.
+    params: Vec<Vec<VersionedBufs>>,
+    /// stage → momentum buffers (installed by the fused SGD, uploaded
+    /// from the host mirror on first use).
+    moms: Vec<Option<Vec<xla::PjRtBuffer>>>,
+    param_uploads: u64,
+}
+
+impl DeviceParamStore {
+    pub fn new(n_stages: usize) -> Self {
+        Self {
+            params: (0..n_stages).map(|_| Vec::new()).collect(),
+            moms: (0..n_stages).map(|_| None).collect(),
+            param_uploads: 0,
+        }
+    }
+
+    /// Stage-level parameter upload events so far (the bench metric).
+    pub fn param_uploads(&self) -> u64 {
+        self.param_uploads
+    }
+
+    /// θ-versions currently resident for `stage` (tests/benches).
+    pub fn resident_versions(&self, stage: usize) -> Vec<u64> {
+        self.params[stage].iter().map(|(v, _)| *v).collect()
+    }
+
+    fn evict(&mut self, stage: usize, version: u64) {
+        self.params[stage].retain(|(v, _)| *v + 1 >= version);
+    }
+
+    /// Resident buffers for (stage, θ-version), uploading from the host
+    /// mirror `src` only when the version is not already resident.
+    pub fn params(
+        &mut self,
+        rt: &BundleRuntime,
+        stage: usize,
+        version: u64,
+        src: &[f32],
+    ) -> Result<&[xla::PjRtBuffer]> {
+        self.evict(stage, version);
+        if let Some(pos) =
+            self.params[stage].iter().position(|(v, _)| *v == version)
+        {
+            return Ok(&self.params[stage][pos].1);
+        }
+        let bufs = rt.upload_stage_run(stage, src)?;
+        self.param_uploads += 1;
+        rt.transfers.add_param_upload(src.len() as u64 * 4);
+        self.params[stage].push((version, bufs));
+        Ok(&self.params[stage].last().expect("just pushed").1)
+    }
+
+    /// Split borrow for the fused SGD: (θ-version buffers, momentum
+    /// buffers), each ensured resident first.
+    pub fn params_and_momentum(
+        &mut self,
+        rt: &BundleRuntime,
+        stage: usize,
+        version: u64,
+        psrc: &[f32],
+        msrc: &[f32],
+    ) -> Result<(&[xla::PjRtBuffer], &[xla::PjRtBuffer])> {
+        self.params(rt, stage, version, psrc)?;
+        if self.moms[stage].is_none() {
+            let bufs = rt.upload_stage_run(stage, msrc)?;
+            rt.transfers.add_h2d(msrc.len() as u64 * 4);
+            self.moms[stage] = Some(bufs);
+        }
+        let pos = self.params[stage]
+            .iter()
+            .position(|(v, _)| *v == version)
+            .expect("ensured above");
+        Ok((
+            &self.params[stage][pos].1,
+            self.moms[stage].as_deref().expect("ensured above"),
+        ))
+    }
+
+    /// Promote an SGD result to the resident θ_{version} ("donation"):
+    /// the displaced θ_{version−2} buffers are dropped, and `version`
+    /// pays its single upload here instead of on first use.
+    pub(crate) fn install_params(
+        &mut self,
+        rt: &BundleRuntime,
+        stage: usize,
+        version: u64,
+        lits: &[xla::Literal],
+    ) -> Result<()> {
+        let mut bufs = Vec::with_capacity(lits.len());
+        for lit in lits {
+            bufs.push(
+                rt.engine
+                    .client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(anyhow_xla)?,
+            );
+        }
+        self.param_uploads += 1;
+        rt.transfers
+            .add_param_upload(rt.manifest.stages[stage].param_bytes());
+        self.evict(stage, version);
+        self.params[stage].push((version, bufs));
+        Ok(())
+    }
+
+    /// Replace the resident momentum with the SGD result.
+    pub(crate) fn install_momentum(
+        &mut self,
+        rt: &BundleRuntime,
+        stage: usize,
+        lits: &[xla::Literal],
+    ) -> Result<()> {
+        let mut bufs = Vec::with_capacity(lits.len());
+        for lit in lits {
+            bufs.push(
+                rt.engine
+                    .client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(anyhow_xla)?,
+            );
+        }
+        rt.transfers
+            .add_h2d(rt.manifest.stages[stage].param_bytes());
+        self.moms[stage] = Some(bufs);
+        Ok(())
+    }
+}
+
+/// An activation as it hands off between stages: a host tensor on the
+/// literal path, a resident buffer on the device path.  The two never
+/// mix within one executor.
+pub enum Act {
+    Host(HostTensor),
+    Device(DeviceTensor),
+}
+
+impl Act {
+    /// Payload bytes (activation-traffic accounting in the pipeline).
+    pub fn bytes(&self) -> usize {
+        match self {
+            Act::Host(t) => t.bytes(),
+            Act::Device(t) => t.bytes(),
+        }
+    }
+
+    fn host(&self) -> &HostTensor {
+        match self {
+            Act::Host(t) => t,
+            Act::Device(_) => panic!("device activation on the host path"),
+        }
+    }
+
+    fn host_f32(&self) -> &Tensor {
+        self.host().as_f32().expect("activation must be f32 past stage 0")
+    }
+
+    fn device(&self) -> &DeviceTensor {
+        match self {
+            Act::Device(t) => t,
+            Act::Host(_) => panic!("host activation on the device path"),
+        }
+    }
+}
+
+/// One execution boundary for trainer schedule logic: the literal (host)
+/// path or the device-resident path, selected once per trainer.  Every
+/// method takes the stage's host flat run + θ-version id — the host path
+/// ignores the version (it rebuilds literals from the run), the device
+/// path ignores the run unless the version needs its one upload.
+pub enum Executor {
+    Host,
+    Device(DeviceParamStore),
+}
+
+impl Executor {
+    pub fn new(mode: ExecMode, n_stages: usize) -> Self {
+        match mode {
+            ExecMode::HostLiteral => Executor::Host,
+            ExecMode::DeviceResident => Executor::Device(DeviceParamStore::new(n_stages)),
+        }
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        match self {
+            Executor::Host => ExecMode::HostLiteral,
+            Executor::Device(_) => ExecMode::DeviceResident,
+        }
+    }
+
+    /// The device store, when on the device path (benches/tests).
+    pub fn device_store(&self) -> Option<&DeviceParamStore> {
+        match self {
+            Executor::Host => None,
+            Executor::Device(s) => Some(s),
+        }
+    }
+
+    /// Stage-0 input enters the pipeline (consumes the host tensor; the
+    /// device path uploads it once per micro-batch — the batch itself is
+    /// the irreducible host→device traffic).
+    pub fn input(&self, rt: &BundleRuntime, x: HostTensor) -> Result<Act> {
+        match self {
+            Executor::Host => Ok(Act::Host(x)),
+            Executor::Device(_) => Ok(Act::Device(rt.upload_host(&x)?)),
+        }
+    }
+
+    /// Forward of a non-loss stage.
+    pub fn fwd(
+        &mut self,
+        rt: &BundleRuntime,
+        stage: usize,
+        version: u64,
+        flat: &[f32],
+        x: &Act,
+    ) -> Result<Act> {
+        match self {
+            Executor::Host => {
+                Ok(Act::Host(HostTensor::F32(rt.stage_fwd_flat(stage, flat, x.host())?)))
+            }
+            Executor::Device(store) => {
+                let p = store.params(rt, stage, version, flat)?;
+                Ok(Act::Device(rt.stage_fwd_dev(stage, p, x.device())?))
+            }
+        }
+    }
+
+    /// Backward of the loss stage: grads into `gdst`, returns (loss, gx).
+    #[allow(clippy::too_many_arguments)]
+    pub fn last_bwd(
+        &mut self,
+        rt: &BundleRuntime,
+        version: u64,
+        flat: &[f32],
+        x: &Act,
+        targets: &IntTensor,
+        gdst: &mut [f32],
+    ) -> Result<(f32, Act)> {
+        let last = rt.manifest.n_stages - 1;
+        match self {
+            Executor::Host => {
+                let (loss, gx) = rt.last_bwd_flat(flat, x.host_f32(), targets, gdst)?;
+                Ok((loss, Act::Host(HostTensor::F32(gx))))
+            }
+            Executor::Device(store) => {
+                let t_dev = rt.upload_targets(targets)?;
+                let p = store.params(rt, last, version, flat)?;
+                let (loss, gx) = rt.last_bwd_dev(p, x.device(), &t_dev, gdst)?;
+                Ok((loss, Act::Device(gx)))
+            }
+        }
+    }
+
+    /// Backward of a middle stage: grads into `gdst`, returns gx.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mid_bwd(
+        &mut self,
+        rt: &BundleRuntime,
+        stage: usize,
+        version: u64,
+        flat: &[f32],
+        x: &Act,
+        gy: &Act,
+        gdst: &mut [f32],
+    ) -> Result<Act> {
+        match self {
+            Executor::Host => {
+                let gx =
+                    rt.mid_bwd_flat(stage, flat, x.host_f32(), gy.host_f32(), gdst)?;
+                Ok(Act::Host(HostTensor::F32(gx)))
+            }
+            Executor::Device(store) => {
+                let p = store.params(rt, stage, version, flat)?;
+                Ok(Act::Device(rt.mid_bwd_dev(stage, p, x.device(), gy.device(), gdst)?))
+            }
+        }
+    }
+
+    /// Backward of stage 0: grads into `gdst`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn first_bwd(
+        &mut self,
+        rt: &BundleRuntime,
+        version: u64,
+        flat: &[f32],
+        x: &Act,
+        gy: &Act,
+        gdst: &mut [f32],
+    ) -> Result<()> {
+        match self {
+            Executor::Host => rt.first_bwd_flat(flat, x.host(), gy.host_f32(), gdst),
+            Executor::Device(store) => {
+                let p = store.params(rt, 0, version, flat)?;
+                rt.first_bwd_dev(p, x.device(), gy.device(), gdst)
+            }
+        }
+    }
+
+    /// Fused SGD-momentum for one stage (θ_t at `version` → θ_{version+1}
+    /// into `out`); the device path installs the result as the resident
+    /// next version.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgd(
+        &mut self,
+        rt: &BundleRuntime,
+        stage: usize,
+        version: u64,
+        cur: &[f32],
+        moms: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        match self {
+            Executor::Host => rt.sgd_update_flat(stage, cur, moms, grads, lr, out),
+            Executor::Device(store) => {
+                rt.sgd_update_dev(stage, store, version, cur, moms, grads, lr, out)
+            }
+        }
+    }
+}

@@ -1,5 +1,8 @@
 //! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
-//! the coordinator's hot path.
+//! the coordinator's hot path — through the literal boundary (the
+//! reference path) or the device-resident boundary ([`device_store`]:
+//! persistent parameter/momentum buffers, device-side activation
+//! hand-off, transfer accounting).
 //!
 //! Wraps the `xla` crate: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
@@ -11,16 +14,67 @@
 //! self-contained.
 
 pub mod bundle;
+pub mod device_store;
 pub mod literal;
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{Context, Result};
 
-pub use bundle::BundleRuntime;
+pub use bundle::{BundleRuntime, Kind};
+pub use device_store::{Act, DeviceParamStore, DeviceTensor, ExecMode, Executor};
 pub use literal::{
     literal_into_slice, literal_to_tensor, slice_to_literal, tensor_to_literal,
 };
+
+/// Host↔device transfer accounting at the runtime boundary (DESIGN-PERF.md
+/// §Device residency).  Counted where the data crosses: literal/buffer
+/// construction from host state is `h2d`, literal read-back is `d2h`.
+/// `param_uploads` counts *stage-level* parameter upload events — the
+/// quantity the device-resident contract bounds (≤ 1 per stage per
+/// committed θ-version, vs one per stage per micro-batch on the literal
+/// path).  Atomics so the shared runtime can account from worker threads.
+#[derive(Debug, Default)]
+pub struct TransferStats {
+    pub h2d_bytes: AtomicU64,
+    pub d2h_bytes: AtomicU64,
+    pub param_uploads: AtomicU64,
+}
+
+impl TransferStats {
+    pub fn add_h2d(&self, bytes: u64) {
+        self.h2d_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_d2h(&self, bytes: u64) {
+        self.d2h_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_param_upload(&self, bytes: u64) {
+        self.param_uploads.fetch_add(1, Ordering::Relaxed);
+        self.add_h2d(bytes);
+    }
+
+    pub fn h2d_bytes(&self) -> u64 {
+        self.h2d_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn d2h_bytes(&self) -> u64 {
+        self.d2h_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn param_uploads(&self) -> u64 {
+        self.param_uploads.load(Ordering::Relaxed)
+    }
+
+    /// Zero all counters (benches snapshot between phases).
+    pub fn reset(&self) {
+        self.h2d_bytes.store(0, Ordering::Relaxed);
+        self.d2h_bytes.store(0, Ordering::Relaxed);
+        self.param_uploads.store(0, Ordering::Relaxed);
+    }
+}
 
 /// Shared PJRT client + compile cache keyed by artifact path.
 pub struct Engine {
@@ -63,6 +117,24 @@ pub fn execute_tuple<L: std::borrow::Borrow<xla::Literal>>(
     args: &[L],
 ) -> Result<Vec<xla::Literal>> {
     let result = exe.execute::<L>(args).map_err(anyhow_xla)?;
+    let lit = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
+    lit.to_tuple().map_err(anyhow_xla)
+}
+
+/// Device-buffer variant of [`execute_tuple`]: arguments are resident
+/// `PjRtBuffer`s (`PjRtLoadedExecutable::execute_b`), so no host→device
+/// argument conversion happens per call — the parameter buffers in a
+/// [`DeviceParamStore`] are passed by reference micro-batch after
+/// micro-batch.  The crate returns the result as a single tuple buffer
+/// (same convention as [`execute_tuple`]); splitting it into elements
+/// happens at the literal layer, which on the CPU PJRT backend is one
+/// memcpy — see DESIGN-PERF.md §Device residency for what this does and
+/// does not avoid.
+pub fn execute_buffers<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[B],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute_b::<B>(args).map_err(anyhow_xla)?;
     let lit = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
     lit.to_tuple().map_err(anyhow_xla)
 }

