@@ -3,20 +3,45 @@
 //! "does the gradient delay hurt final quality?" experiment on the
 //! synthetic classification substitute (DESIGN.md substitution #2).
 //!
-//! Run: `cargo run --release --example classify -- --bundle convnet --steps 60 --seeds 5`
-//! The per-seed data stream differs via --seed-shift of the data seed.
+//! Runs on the native backend with no artifacts (synthetic mlp):
+//!
+//!   cargo run --release --example classify -- --steps 60 --seeds 5
+//!
+//! The convnet variant needs the `xla` feature + `make artifacts`:
+//!
+//!   cargo run --release --features xla --example classify -- \
+//!       --backend xla --bundle convnet --steps 60 --seeds 5
 
 use cyclic_dp::cli::Args;
 use cyclic_dp::coordinator::single::RefTrainer;
 use cyclic_dp::data::DataSource;
-use cyclic_dp::model::{artifacts_root, DataSpec};
+use cyclic_dp::model::DataSpec;
 use cyclic_dp::parallel::rule_by_name;
-use cyclic_dp::runtime::BundleRuntime;
+use cyclic_dp::runtime::{backend_choice, Backend, BackendChoice, NativeBackend};
 use cyclic_dp::util::stats::Summary;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env();
-    let bundle = args.str_or("bundle", "mlp");
+    match backend_choice(args.get("backend"))? {
+        BackendChoice::Native => {
+            run(NativeBackend::load_or_synthetic(args.str_or("bundle", "mlp"))?, &args)
+        }
+        BackendChoice::Xla => run_xla(&args),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn run_xla(args: &Args) -> anyhow::Result<()> {
+    let dir = cyclic_dp::model::artifacts_root().join(args.str_or("bundle", "mlp"));
+    run(cyclic_dp::runtime::BundleRuntime::load(&dir)?, args)
+}
+
+#[cfg(not(feature = "xla"))]
+fn run_xla(_args: &Args) -> anyhow::Result<()> {
+    unreachable!("backend_choice rejects xla without the feature")
+}
+
+fn run<B: Backend>(rt: B, args: &Args) -> anyhow::Result<()> {
     let steps = args.usize_or("steps", 60);
     let seeds = args.u64_or("seeds", 3);
     // Optional noise override: the bundle's default (0.3) makes the task
@@ -24,15 +49,15 @@ fn main() -> anyhow::Result<()> {
     // differences (if any) would be visible — the paper's Table-2 question.
     let noise_override = args.get("noise").map(|v| v.parse::<f32>().expect("--noise"));
 
-    let dir = artifacts_root().join(bundle);
-    let rt = BundleRuntime::load(&dir)?;
     anyhow::ensure!(
-        matches!(rt.manifest.data, DataSpec::Class { .. }),
+        matches!(rt.manifest().data, DataSpec::Class { .. }),
         "classify needs a classification bundle (mlp or convnet)"
     );
     println!(
-        "Table 2 analog — bundle {bundle}, {} params, {steps} steps × {seeds} seeds",
-        rt.manifest.total_param_elems
+        "Table 2 analog — bundle {} ({} backend), {} params, {steps} steps × {seeds} seeds",
+        rt.manifest().name,
+        rt.name(),
+        rt.manifest().total_param_elems
     );
     println!("{:<8} {:>10} {:>8}", "rule", "acc mean", "std");
 
@@ -43,7 +68,7 @@ fn main() -> anyhow::Result<()> {
             let mut t = RefTrainer::new(&rt, rule)?;
             // shift the data stream per seed (same distribution)
             if let DataSpec::Class { classes, input_dim, batch, noise, seed: s } =
-                rt.manifest.data.clone()
+                rt.manifest().data.clone()
             {
                 t.data = DataSource::new(DataSpec::Class {
                     classes,

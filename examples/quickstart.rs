@@ -1,24 +1,60 @@
-//! Quickstart: train the tiny transformer bundle under all three update
-//! rules and watch the losses coincide at step 0 (bootstrap) then track
-//! each other — the paper's core claim that the CDP delay is benign.
+//! Quickstart: train a bundle under all three update rules and watch the
+//! losses coincide at step 0 (bootstrap) then track each other — the
+//! paper's core claim that the CDP delay is benign.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Runs out of the box on the pure-Rust backend (synthetic mlp bundle,
+//! no artifacts, no XLA):
+//!
+//!   cargo run --release --example quickstart
+//!
+//! With the XLA feature + artifacts, the tiny transformer instead:
+//!
+//!   make artifacts && cargo run --release --features xla \
+//!       --example quickstart -- --backend xla --bundle tiny
 
+use cyclic_dp::cli::Args;
 use cyclic_dp::coordinator::single::RefTrainer;
-use cyclic_dp::model::artifacts_root;
 use cyclic_dp::parallel::Rule;
-use cyclic_dp::runtime::BundleRuntime;
+use cyclic_dp::runtime::{backend_choice, Backend, BackendChoice, NativeBackend};
 
 fn main() -> anyhow::Result<()> {
-    let dir = artifacts_root().join("tiny");
+    let args = Args::parse_env();
+    // this example defaults to the zero-setup native backend; `--backend`
+    // or CDP_BACKEND opt into xla explicitly
+    let cli = args.get("backend");
+    let choice = if cli.is_none() && std::env::var("CDP_BACKEND").is_err() {
+        BackendChoice::Native
+    } else {
+        backend_choice(cli)?
+    };
+    match choice {
+        BackendChoice::Native => {
+            run(NativeBackend::load_or_synthetic(args.str_or("bundle", "native_mlp"))?)
+        }
+        BackendChoice::Xla => run_xla(&args),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn run_xla(args: &Args) -> anyhow::Result<()> {
+    let dir = cyclic_dp::model::artifacts_root().join(args.str_or("bundle", "tiny"));
     println!("loading bundle {dir:?} (PJRT CPU, HLO-text artifacts)…");
-    let rt = BundleRuntime::load(&dir)?;
+    run(cyclic_dp::runtime::BundleRuntime::load(&dir)?)
+}
+
+#[cfg(not(feature = "xla"))]
+fn run_xla(_args: &Args) -> anyhow::Result<()> {
+    unreachable!("backend_choice rejects xla without the feature")
+}
+
+fn run<B: Backend>(rt: B) -> anyhow::Result<()> {
     println!(
-        "model: {} | {} stages | {} params | micro-batch {:?}",
-        rt.manifest.family,
-        rt.manifest.n_stages,
-        rt.manifest.total_param_elems,
-        rt.manifest.stages[0].input.shape,
+        "model: {} ({} backend) | {} stages | {} params | micro-batch {:?}",
+        rt.manifest().family,
+        rt.name(),
+        rt.manifest().n_stages,
+        rt.manifest().total_param_elems,
+        rt.manifest().stages[0].input.shape,
     );
 
     let steps = 12;

@@ -6,17 +6,37 @@
 //! Bundles: `lm_small` (default, ~7M params), `lm_gpt2s` (~110M, build with
 //! `cd python && python -m compile.aot --out-root ../artifacts --bundles lm_gpt2s`).
 //!
-//! Run: `cargo run --release --example train_lm -- --bundle lm_small --steps 300`
+//! Run: `cargo run --release --features xla --example train_lm -- --bundle lm_small --steps 300`
+//!
+//! Transformer bundles execute on the XLA backend only — without the
+//! `xla` feature this example prints a build hint and exits.
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    eprintln!(
+        "train_lm drives transformer bundles, which need the XLA backend: \
+         rebuild with `cargo run --release --features xla --example train_lm` \
+         (and `make artifacts` for the bundle)"
+    );
+}
+
+#[cfg(feature = "xla")]
 use std::time::Instant;
 
+#[cfg(feature = "xla")]
 use cyclic_dp::cli::Args;
+#[cfg(feature = "xla")]
 use cyclic_dp::coordinator::single::RefTrainer;
+#[cfg(feature = "xla")]
 use cyclic_dp::metrics::Metrics;
+#[cfg(feature = "xla")]
 use cyclic_dp::model::artifacts_root;
+#[cfg(feature = "xla")]
 use cyclic_dp::parallel::rule_by_name;
+#[cfg(feature = "xla")]
 use cyclic_dp::runtime::BundleRuntime;
 
+#[cfg(feature = "xla")]
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env();
     let bundle = args.str_or("bundle", "lm_small");

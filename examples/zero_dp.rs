@@ -3,32 +3,54 @@
 //! cyclic point-to-point hand-offs — while verifying the losses are
 //! identical to the reference trainer.
 //!
-//! Run: `cargo run --release --example zero_dp -- --bundle mlp --steps 8`
+//! Runs on the native backend with no artifacts (synthetic mlp):
+//!
+//!   cargo run --release --example zero_dp -- --steps 8
+//!
+//! Or against an XLA bundle: `--features xla` + `--backend xla --bundle mlp`.
 
 use std::sync::Arc;
 
 use cyclic_dp::cli::Args;
-use cyclic_dp::coordinator::{single, zero, SharedRuntime};
-use cyclic_dp::model::artifacts_root;
+use cyclic_dp::coordinator::{single, zero, SharedBackend};
 use cyclic_dp::parallel::Rule;
-use cyclic_dp::runtime::BundleRuntime;
+use cyclic_dp::runtime::{backend_choice, Backend, BackendChoice, NativeBackend};
 use cyclic_dp::util::stats::fmt_bytes;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env();
-    let bundle = args.str_or("bundle", "mlp");
-    let steps = args.usize_or("steps", 8);
+    match backend_choice(args.get("backend"))? {
+        BackendChoice::Native => {
+            run(NativeBackend::load_or_synthetic(args.str_or("bundle", "mlp"))?, &args)
+        }
+        BackendChoice::Xla => run_xla(&args),
+    }
+}
 
-    let dir = artifacts_root().join(bundle);
-    let rt = SharedRuntime(Arc::new(BundleRuntime::load(&dir)?));
-    let full_model = rt.manifest.psi_p_bytes();
+#[cfg(feature = "xla")]
+fn run_xla(args: &Args) -> anyhow::Result<()> {
+    let dir = cyclic_dp::model::artifacts_root().join(args.str_or("bundle", "mlp"));
+    run(cyclic_dp::runtime::BundleRuntime::load(&dir)?, args)
+}
+
+#[cfg(not(feature = "xla"))]
+fn run_xla(_args: &Args) -> anyhow::Result<()> {
+    unreachable!("backend_choice rejects xla without the feature")
+}
+
+fn run<B: Backend + Send + Sync + 'static>(backend: B, args: &Args) -> anyhow::Result<()> {
+    let steps = args.usize_or("steps", 8);
+    let rt = SharedBackend(Arc::new(backend));
+    let full_model = rt.manifest().psi_p_bytes();
     println!(
-        "bundle {bundle}: Ψ_P = {} across {} stage shards\n",
+        "bundle {} ({} backend): Ψ_P = {} across {} stage shards\n",
+        rt.manifest().name,
+        rt.name(),
         fmt_bytes(full_model),
-        rt.manifest.n_stages
+        rt.manifest().n_stages
     );
 
-    let mut reference = single::RefTrainer::new(&rt, Rule::Dp)?;
+    let mut reference = single::RefTrainer::new(&*rt.0, Rule::Dp)?;
     let ref_losses: Vec<f64> =
         reference.train(steps)?.iter().map(|l| l.loss).collect();
 

@@ -1,16 +1,28 @@
 //! Fig 3 (short form): training-loss curves of the three rules on the tiny
 //! LM bundle — checks the paper's shape (CDP-v1 higher early, all three
 //! converging together).  `examples/train_lm.rs` is the full-scale run.
+//! Needs the transformer family, i.e. the `xla` feature + `make
+//! artifacts`; the native build prints a skip note.
 
 mod harness;
 
-use cyclic_dp::coordinator::single::RefTrainer;
-use cyclic_dp::metrics::Series;
-use cyclic_dp::model::artifacts_root;
-use cyclic_dp::parallel::rule_by_name;
-use cyclic_dp::runtime::BundleRuntime;
-
+#[cfg(not(feature = "xla"))]
 fn main() {
+    let _b = harness::Bench::new("fig3_losscurve");
+    println!(
+        "SKIP: fig3 trains the tiny transformer bundle, which needs the \
+         `xla` feature (cargo bench --features xla) + `make artifacts`"
+    );
+}
+
+#[cfg(feature = "xla")]
+fn main() {
+    use cyclic_dp::coordinator::single::RefTrainer;
+    use cyclic_dp::metrics::Series;
+    use cyclic_dp::model::artifacts_root;
+    use cyclic_dp::parallel::rule_by_name;
+    use cyclic_dp::runtime::BundleRuntime;
+
     let b = harness::Bench::new("fig3_losscurve");
     if !harness::have_bundle("tiny") {
         return;

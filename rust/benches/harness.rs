@@ -75,11 +75,33 @@ fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
+/// The commit this report was measured at: `GITHUB_SHA` in CI, else the
+/// local `git rev-parse HEAD`, else "unknown" — embedded in every report
+/// so the uploaded BENCH_*.json artifacts form a commit-keyed trajectory.
+pub fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 /// Write a machine-readable bench report: a list of timings plus named
-/// scalar counters (allocation counts, pool hit rates, ...).
+/// scalar counters (allocation counts, pool hit rates, ...), stamped
+/// with the measured commit's git SHA.
 pub fn write_json(path: &str, bench: &str, stats: &[Stat], counters: &[(String, f64)]) {
     let mut out = String::new();
     out.push_str(&format!("{{\n  \"bench\": \"{}\",\n", json_escape(bench)));
+    out.push_str(&format!("  \"git_sha\": \"{}\",\n", json_escape(&git_sha())));
     out.push_str("  \"timings\": [\n");
     for (i, s) in stats.iter().enumerate() {
         out.push_str(&format!(

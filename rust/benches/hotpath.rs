@@ -22,12 +22,10 @@ use cyclic_dp::comm::bucketed::BucketedReducer;
 use cyclic_dp::comm::collectives::{allreduce_mean, ring_allreduce};
 use cyclic_dp::comm::{tags, CommStats, Endpoint, EventKind, Fabric};
 use cyclic_dp::coordinator::single::RefTrainer;
-use cyclic_dp::coordinator::{multi, ExecMode, SharedRuntime};
-use cyclic_dp::data::DataSource;
-use cyclic_dp::model::artifacts_root;
+use cyclic_dp::coordinator::{multi, SharedBackend};
 use cyclic_dp::parallel::arena::ArenaLayout;
 use cyclic_dp::parallel::{GradBuffer, Rule};
-use cyclic_dp::runtime::{tensor_to_literal, BundleRuntime};
+use cyclic_dp::runtime::{Backend, NativeBackend};
 use cyclic_dp::tensor::ops::{add_into, add_scale_into, axpy, reduce_rows, scale};
 use cyclic_dp::tensor::Tensor;
 
@@ -329,10 +327,105 @@ fn main() {
     ts_counters.push(("eager_pool_recycled".into(), pool_rec as f64));
     ts_counters.push(("eager_pool_allocated".into(), pool_alloc as f64));
 
-    let have_mlp = harness::have_bundle("mlp");
-    if !have_mlp {
-        harness::write_json("BENCH_hotpath.json", "hotpath", &stats, &counters);
-        harness::write_json("BENCH_trainstep.json", "trainstep", &ts_stats, &ts_counters);
+    // ---- native-backend training step (always runs, no artifacts) --------
+    native_sections(&b, &mut stats, &mut ts_stats, &mut ts_counters);
+
+    // ---- XLA bundle sections (feature `xla` + `make artifacts`) -----------
+    #[cfg(feature = "xla")]
+    xla_sections(&b, &mut stats, &mut ts_stats, &mut ts_counters);
+
+    harness::write_json("BENCH_hotpath.json", "hotpath", &stats, &counters);
+    harness::write_json("BENCH_trainstep.json", "trainstep", &ts_stats, &ts_counters);
+}
+
+/// Training-step measurements on the pure-Rust backend: these populate
+/// the BENCH_trainstep trajectory in the artifact-free (native) CI lane.
+fn native_sections(
+    b: &harness::Bench,
+    stats: &mut Vec<harness::Stat>,
+    ts_stats: &mut Vec<harness::Stat>,
+    ts_counters: &mut Vec<(String, f64)>,
+) {
+    b.section("native backend training step (synthetic mlp, no artifacts)");
+    let rt = NativeBackend::default_mlp();
+    let mut t = RefTrainer::new(&rt, Rule::CdpV2).unwrap();
+    t.step().unwrap(); // warm
+    let st = b.time_stat("native RefTrainer::step (cdp_v2)", 1, 10, || {
+        t.step().unwrap();
+    });
+    ts_stats.push(st.clone());
+    stats.push(st);
+    // the native step allocates activation scratch per kernel call (its
+    // hot-path contract covers parameter/gradient state, not activations)
+    // — count it honestly rather than asserting zero
+    let a0 = allocs();
+    t.step().unwrap();
+    let per_step = allocs() - a0;
+    println!("  native step heap allocations                  {per_step}");
+    ts_counters.push(("native_step_allocs".into(), per_step as f64));
+    drop(t);
+
+    let shared = SharedBackend(Arc::new(rt));
+    let st = b.time_stat("native multi ring 2 steps (cdp_v2)", 1, 3, || {
+        std::hint::black_box(
+            multi::train(shared.clone(), Rule::CdpV2, multi::CommPattern::Ring, 2)
+                .unwrap(),
+        );
+    });
+    ts_stats.push(st.clone());
+    stats.push(st);
+    let st = b.time_stat("native multi barrier 2 steps (dp)", 1, 3, || {
+        std::hint::black_box(
+            multi::train(shared.clone(), Rule::Dp, multi::CommPattern::Barrier, 2)
+                .unwrap(),
+        );
+    });
+    ts_stats.push(st.clone());
+    stats.push(st);
+
+    let layout = ArenaLayout::from_manifest(shared.manifest());
+    let mut flat_p = shared.init_params_flat().unwrap();
+    let mut flat_m = layout.zeros();
+    let mut flat_o = layout.zeros();
+    let flat_g = layout.zeros();
+    let st = b.time_stat("native sgd_update_flat all stages", 2, 20, || {
+        for j in 0..shared.manifest().n_stages {
+            let r = layout.stage_range(j);
+            shared
+                .sgd_update_flat(
+                    j,
+                    &flat_p[r.clone()],
+                    &mut flat_m[r.clone()],
+                    &flat_g[r.clone()],
+                    0.01,
+                    &mut flat_o[r],
+                )
+                .unwrap();
+        }
+        std::mem::swap(&mut flat_p, &mut flat_o);
+    });
+    ts_stats.push(st.clone());
+    stats.push(st);
+    ts_counters.push(("native_total_param_elems".into(), layout.total_len as f64));
+}
+
+/// The pre-split bundle measurements: literal conversion, executable
+/// dispatch, literal-vs-device trainstep contrast, multi-worker overlap
+/// and the per-tensor/arena optimizer comparison.  Needs the `xla`
+/// feature and `make artifacts`; self-skips without the bundle.
+#[cfg(feature = "xla")]
+fn xla_sections(
+    b: &harness::Bench,
+    stats: &mut Vec<harness::Stat>,
+    ts_stats: &mut Vec<harness::Stat>,
+    ts_counters: &mut Vec<(String, f64)>,
+) {
+    use cyclic_dp::coordinator::{ExecMode, SharedRuntime};
+    use cyclic_dp::data::DataSource;
+    use cyclic_dp::model::artifacts_root;
+    use cyclic_dp::runtime::{tensor_to_literal, BundleRuntime};
+
+    if !harness::have_bundle("mlp") {
         return;
     }
     let rt = BundleRuntime::load(&artifacts_root().join("mlp")).unwrap();
@@ -419,9 +512,13 @@ fn main() {
         dev_uploads <= n_stages as f64 + 1e-9,
         "device path exceeded 1 upload per stage per θ-version: {dev_uploads}/step over {n_stages} stages"
     );
+    // Since the host path's LitStore adopted the same ≤1-per-(stage,
+    // θ-version) prep discipline (backend split), upload *counts* match;
+    // the device path's remaining edge is avoiding the per-call literal
+    // construction + conversion, visible in the wall-time rows above.
     assert!(
-        dev_uploads < lit_uploads,
-        "device path must upload less often than the literal path \
+        dev_uploads <= lit_uploads + 1e-9,
+        "device path must not upload more often than the literal path \
          ({dev_uploads} vs {lit_uploads} per step)"
     );
     ts_counters.push(("trainstep_steps".into(), TS_STEPS as f64));
@@ -527,9 +624,6 @@ fn main() {
         }
         std::mem::swap(&mut flat_p, &mut flat_o);
     }));
-
-    harness::write_json("BENCH_hotpath.json", "hotpath", &stats, &counters);
-    harness::write_json("BENCH_trainstep.json", "trainstep", &ts_stats, &ts_counters);
 }
 
 /// Deterministic streaming passes standing in for one stage's backward

@@ -7,10 +7,9 @@ mod harness;
 
 use std::sync::Arc;
 
-use cyclic_dp::coordinator::{multi, zero, SharedRuntime};
-use cyclic_dp::model::artifacts_root;
+use cyclic_dp::coordinator::{multi, zero, SharedBackend};
 use cyclic_dp::parallel::Rule;
-use cyclic_dp::runtime::BundleRuntime;
+use cyclic_dp::runtime::{Backend, NativeBackend};
 use cyclic_dp::sim::{analytic, schemes, Scheme, SymbolicCosts};
 use cyclic_dp::util::stats::fmt_bytes;
 
@@ -32,14 +31,12 @@ fn main() {
         println!("{}", schemes::render_scheme(s, 4, c));
     }
 
-    if !harness::have_bundle("mlp") {
-        return;
-    }
-    b.section("measured comm from real trainers (mlp bundle, 4 steps)");
-    let rt = SharedRuntime(Arc::new(
-        BundleRuntime::load(&artifacts_root().join("mlp")).unwrap(),
-    ));
-    let psi_p = rt.manifest.psi_p_bytes();
+    // comm volume/message counts come from the fabric's host mirrors, so
+    // they are backend-independent — measure on the native backend (an
+    // on-disk mlp bundle when built, else the synthetic one)
+    b.section("measured comm from real trainers (native mlp bundle, 4 steps)");
+    let rt = SharedBackend(Arc::new(NativeBackend::load_or_synthetic("mlp").unwrap()));
+    let psi_p = rt.manifest().psi_p_bytes();
 
     let dp = multi::train(rt.clone(), Rule::Dp, multi::CommPattern::Barrier, 4).unwrap();
     println!(

@@ -7,19 +7,17 @@
 mod harness;
 
 use cyclic_dp::coordinator::single::RefTrainer;
-use cyclic_dp::model::artifacts_root;
 use cyclic_dp::parallel::rule_by_name;
-use cyclic_dp::runtime::BundleRuntime;
+use cyclic_dp::runtime::NativeBackend;
 
 fn main() {
     let b = harness::Bench::new("table2_accuracy");
-    if !harness::have_bundle("mlp") {
-        return;
-    }
-    let rt = BundleRuntime::load(&artifacts_root().join("mlp")).unwrap();
+    // native backend: an on-disk mlp bundle when `make artifacts` ran,
+    // else the synthetic in-memory one — either way no XLA needed
+    let rt = NativeBackend::load_or_synthetic("mlp").unwrap();
     let steps = 40;
 
-    b.section(&format!("mlp bundle, {steps} steps, 2 seeds (short)"));
+    b.section(&format!("mlp bundle ({}), {steps} steps (short)", rt.manifest.name));
     println!("{:<8} {:>8} {:>8}", "rule", "final", "acc");
     for rule_name in ["dp", "cdp_v1", "cdp_v2"] {
         let rule = rule_by_name(rule_name).unwrap();

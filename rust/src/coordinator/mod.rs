@@ -1,5 +1,5 @@
 //! Trainers: the paper's parallelism settings, each as a coordinator that
-//! drives the AOT artifacts through a schedule + update rule.
+//! drives an execution [`Backend`] through a schedule + update rule.
 //!
 //! - [`single`]   — single-process reference (exact update-rule numerics;
 //!                  also the "Single-GPU DP/CDP" setting of paper §4.1).
@@ -9,6 +9,10 @@
 //!                  hand-off of the model states (§4.4).
 //! - [`pipeline`] — pipeline engine over stages: GPipe and 1F1B schedules;
 //!                  CDP-v1 under PP reproduces PipeDream-2BW (§4.3).
+//!
+//! Every trainer is generic over [`Backend`] (DESIGN-PERF.md §Backend
+//! boundary): the schedule logic is written once and runs on the pure-
+//! Rust `NativeBackend` or (feature `xla`) the PJRT `BundleRuntime`.
 //!
 //! All trainers share the invariant: same bundle + same rule + same steps
 //! ⇒ same loss sequence as [`single::RefTrainer`] (bit-for-bit for
@@ -21,40 +25,185 @@ pub mod zero;
 
 use std::sync::Arc;
 
-use crate::runtime::BundleRuntime;
+use crate::runtime::Backend;
 
 pub use crate::runtime::ExecMode;
 
-/// Thread-shareable runtime handle.
+/// Thread-shareable backend handle.
 ///
-/// SAFETY: the `xla` crate's wrappers hold raw pointers without Send/Sync,
-/// but the underlying PJRT C++ objects are documented thread-safe for
-/// compilation-free use: `PjRtLoadedExecutable::Execute` may be called
-/// concurrently, and each call here constructs its own `Literal`s.  We
-/// never share a Literal across threads, never mutate an executable, and
-/// compile everything before spawning workers.  The same contract covers
-/// the device-resident path: `PjRtClient` buffer creation and
-/// `execute_b` are thread-safe, and every `PjRtBuffer`/`DeviceTensor` is
-/// created, used and dropped by exactly one worker thread (each worker
-/// owns its `DeviceParamStore`; buffers never cross threads).
-pub struct SharedRuntime(pub Arc<BundleRuntime>);
+/// Send/Sync derive from `B` (via the `Arc`), never from this wrapper:
+/// the multi-worker trainers bound `B: Send + Sync`, the native backend
+/// is plain-old-data and qualifies automatically, and the XLA
+/// `BundleRuntime` carries its own `unsafe impl` with the PJRT
+/// thread-safety justification next to the raw-pointer wrappers it
+/// vouches for (`runtime::bundle`).  A future backend holding
+/// genuinely thread-bound state is therefore rejected by the compiler
+/// instead of being silently shared across workers.
+pub struct SharedBackend<B: Backend>(pub Arc<B>);
 
-unsafe impl Send for SharedRuntime {}
-unsafe impl Sync for SharedRuntime {}
-
-impl Clone for SharedRuntime {
+impl<B: Backend> Clone for SharedBackend<B> {
     fn clone(&self) -> Self {
-        SharedRuntime(self.0.clone())
+        SharedBackend(self.0.clone())
     }
 }
 
-impl std::ops::Deref for SharedRuntime {
-    type Target = BundleRuntime;
+impl<B: Backend> std::ops::Deref for SharedBackend<B> {
+    type Target = B;
 
     fn deref(&self) -> &Self::Target {
         &self.0
     }
 }
+
+/// A shared handle is itself a [`Backend`] (delegating through the
+/// `Arc`), so call sites can hand `&SharedBackend<B>` anywhere a generic
+/// `&B: Backend` is expected — deref coercion does not fire in generic
+/// argument positions, this impl is what keeps the pre-split call shapes
+/// (`RefTrainer::new(&shared, …)`, `pipeline::train(&shared, …)`)
+/// compiling.
+#[allow(clippy::too_many_arguments)]
+impl<B: Backend> Backend for SharedBackend<B> {
+    type Act = B::Act;
+    type Exec = B::Exec;
+
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn manifest(&self) -> &crate::model::Manifest {
+        self.0.manifest()
+    }
+
+    fn init_params_flat(&self) -> anyhow::Result<Vec<f32>> {
+        self.0.init_params_flat()
+    }
+
+    fn executor(&self, mode: ExecMode) -> Self::Exec {
+        self.0.executor(mode)
+    }
+
+    fn exec_mode(&self, exec: &Self::Exec) -> ExecMode {
+        self.0.exec_mode(exec)
+    }
+
+    fn param_uploads(&self, exec: &Self::Exec) -> Option<u64> {
+        self.0.param_uploads(exec)
+    }
+
+    fn input(
+        &self,
+        exec: &mut Self::Exec,
+        x: crate::tensor::HostTensor,
+    ) -> anyhow::Result<Self::Act> {
+        self.0.input(exec, x)
+    }
+
+    fn fwd(
+        &self,
+        exec: &mut Self::Exec,
+        stage: usize,
+        version: u64,
+        flat: &[f32],
+        x: &Self::Act,
+    ) -> anyhow::Result<Self::Act> {
+        self.0.fwd(exec, stage, version, flat, x)
+    }
+
+    fn last_bwd(
+        &self,
+        exec: &mut Self::Exec,
+        version: u64,
+        flat: &[f32],
+        x: &Self::Act,
+        targets: &crate::tensor::IntTensor,
+        gdst: &mut [f32],
+    ) -> anyhow::Result<(f32, Self::Act)> {
+        self.0.last_bwd(exec, version, flat, x, targets, gdst)
+    }
+
+    fn mid_bwd(
+        &self,
+        exec: &mut Self::Exec,
+        stage: usize,
+        version: u64,
+        flat: &[f32],
+        x: &Self::Act,
+        gy: &Self::Act,
+        gdst: &mut [f32],
+    ) -> anyhow::Result<Self::Act> {
+        self.0.mid_bwd(exec, stage, version, flat, x, gy, gdst)
+    }
+
+    fn first_bwd(
+        &self,
+        exec: &mut Self::Exec,
+        version: u64,
+        flat: &[f32],
+        x: &Self::Act,
+        gy: &Self::Act,
+        gdst: &mut [f32],
+    ) -> anyhow::Result<()> {
+        self.0.first_bwd(exec, version, flat, x, gy, gdst)
+    }
+
+    fn sgd(
+        &self,
+        exec: &mut Self::Exec,
+        stage: usize,
+        version: u64,
+        cur: &[f32],
+        moms: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        self.0.sgd(exec, stage, version, cur, moms, grads, lr, out)
+    }
+
+    fn stage_fwd_flat(
+        &self,
+        stage: usize,
+        flat: &[f32],
+        x: &crate::tensor::HostTensor,
+    ) -> anyhow::Result<crate::tensor::Tensor> {
+        self.0.stage_fwd_flat(stage, flat, x)
+    }
+
+    fn last_fwd_loss_flat(
+        &self,
+        flat: &[f32],
+        x: &crate::tensor::Tensor,
+        targets: &crate::tensor::IntTensor,
+    ) -> anyhow::Result<f32> {
+        self.0.last_fwd_loss_flat(flat, x, targets)
+    }
+
+    fn predict_flat(
+        &self,
+        flat: &[f32],
+        x: &crate::tensor::Tensor,
+    ) -> anyhow::Result<crate::tensor::Tensor> {
+        self.0.predict_flat(flat, x)
+    }
+
+    fn sgd_update_flat(
+        &self,
+        stage: usize,
+        params: &[f32],
+        moms: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        self.0.sgd_update_flat(stage, params, moms, grads, lr, out)
+    }
+}
+
+/// The pre-split name for the shared XLA runtime handle (tests, benches
+/// and examples constructed `SharedRuntime(Arc::new(rt))`; the tuple
+/// constructor still works through the alias).
+#[cfg(feature = "xla")]
+pub type SharedRuntime = SharedBackend<crate::runtime::BundleRuntime>;
 
 /// Per-step training record common to all trainers.
 #[derive(Clone, Debug)]
@@ -64,11 +213,11 @@ pub struct StepLog {
     pub loss: f64,
 }
 
-/// θ-version id the [`crate::runtime::DeviceParamStore`] caches under for
+/// θ-version id a backend's per-version caches key under for
 /// (micro-batch `i`, `stage`) at training step `step`: the commit step
 /// that produced the selected θ.  Fresh ⇒ `step`, stale ⇒ `step − 1`;
 /// the saturation encodes the θ_{−1} := θ_0 bootstrap — at step 0 both
-/// versions resolve to id 0, i.e. the *same* resident buffers.
+/// versions resolve to id 0, i.e. the *same* cached entry.
 pub(crate) fn version_id(
     rule: &crate::parallel::Rule,
     step: u64,

@@ -16,17 +16,17 @@
 //!   as its averaged sum completes, and hands the fresh parameters down
 //!   the ring — also overlapping the remaining backward.
 //!
-//! Execution is device-resident by default (runtime::device_store):
-//! parameters/momentum live as persistent device buffers uploaded once
-//! per (stage, θ-version), activations hand off on device, and the fused
-//! SGD promotes its result to the next resident version.  `ExecMode`
-//! (or `CDP_EXEC_MODE`) selects the host/literal path instead — loss
-//! sequences are bit-identical either way, and bit-identical to
+//! Generic over [`Backend`].  On XLA, execution is device-resident by
+//! default (persistent parameter/momentum buffers uploaded once per
+//! (stage, θ-version), device-side activation hand-off, fused SGD
+//! promoting its result); the native backend runs its single host path.
+//! `ExecMode` (or `CDP_EXEC_MODE`) selects the host path on XLA instead —
+//! loss sequences are bit-identical either way, and bit-identical to
 //! [`super::single::RefTrainer`] under the same rule (rust/tests/).
 
 use anyhow::Result;
 
-use super::{version_id, ExecMode, SharedRuntime, StepLog};
+use super::{version_id, ExecMode, SharedBackend, StepLog};
 use crate::cluster::run_workers;
 use crate::comm::bucketed::{bucket_elems_from_env, BucketedReducer};
 use crate::comm::collectives::allreduce_mean;
@@ -34,7 +34,7 @@ use crate::comm::{tags, CommStats, Endpoint, EventKind, Fabric, TimelineEvent};
 use crate::data::{DataSource, MicroBatch};
 use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{ParamStore, Rule};
-use crate::runtime::{Act, Executor};
+use crate::runtime::Backend;
 use crate::tensor::{HostTensor, IntTensor};
 use std::sync::Arc;
 
@@ -48,7 +48,8 @@ pub enum CommPattern {
 }
 
 /// Knobs for [`train_with`]; [`Default`] is the production configuration
-/// (device-resident, default bucket size, no timeline recording).
+/// (device-resident where the backend has a device, default bucket size,
+/// no timeline recording).
 #[derive(Clone, Copy, Debug)]
 pub struct MultiOpts {
     pub mode: ExecMode,
@@ -79,8 +80,8 @@ pub struct MultiReport {
 }
 
 /// Train `steps` steps on `n` worker threads with default options.
-pub fn train(
-    rt: SharedRuntime,
+pub fn train<B: Backend + Send + Sync + 'static>(
+    rt: SharedBackend<B>,
     rule: Rule,
     pattern: CommPattern,
     steps: usize,
@@ -88,14 +89,14 @@ pub fn train(
     train_with(rt, rule, pattern, steps, MultiOpts::default())
 }
 
-pub fn train_with(
-    rt: SharedRuntime,
+pub fn train_with<B: Backend + Send + Sync + 'static>(
+    rt: SharedBackend<B>,
     rule: Rule,
     pattern: CommPattern,
     steps: usize,
     opts: MultiOpts,
 ) -> Result<MultiReport> {
-    let n = rt.manifest.n_microbatches;
+    let n = rt.manifest().n_microbatches;
     let (endpoints, stats) = Fabric::new(n);
     if opts.record_timeline {
         stats.enable_timeline();
@@ -132,26 +133,26 @@ pub fn train_with(
 
 /// Forward chain for micro-batch `i` at the rule's θ̂ versions: stashes
 /// every stage input (the remat unit) plus the targets.
-fn forward_mb(
-    rt: &SharedRuntime,
-    exec: &mut Executor,
+fn forward_mb<B: Backend>(
+    rt: &SharedBackend<B>,
+    exec: &mut B::Exec,
     store: &ParamStore,
     data: &DataSource,
     rule: &Rule,
     t: u64,
     i: usize,
-) -> Result<(Vec<Act>, IntTensor)> {
-    let n = rt.manifest.n_stages;
+) -> Result<(Vec<B::Act>, IntTensor)> {
+    let n = rt.manifest().n_stages;
     let mb = data.microbatch(t, (i - 1) as u64);
     let (x0, targets) = match mb {
         MicroBatch::Lm { tokens, targets } => (HostTensor::I32(tokens), targets),
         MicroBatch::Class { x, labels } => (HostTensor::F32(x), labels),
     };
-    let mut acts: Vec<Act> = Vec::with_capacity(n);
-    acts.push(exec.input(rt, x0)?);
+    let mut acts: Vec<B::Act> = Vec::with_capacity(n);
+    acts.push(rt.input(exec, x0)?);
     for j in 0..n - 1 {
         let ver = version_id(rule, store.step(), i, j, n);
-        let y = exec.fwd(rt, j, ver, store.select(rule, i, j), &acts[j])?;
+        let y = rt.fwd(exec, j, ver, store.select(rule, i, j), &acts[j])?;
         acts.push(y);
     }
     Ok((acts, targets))
@@ -161,9 +162,9 @@ fn forward_mb(
 /// flat scratch `gmb` (the DP worker's whole-chain form — the ring worker
 /// interleaves its backward with the eager reduction instead).
 #[allow(clippy::too_many_arguments)]
-fn compute_grads(
-    rt: &SharedRuntime,
-    exec: &mut Executor,
+fn compute_grads<B: Backend>(
+    rt: &SharedBackend<B>,
+    exec: &mut B::Exec,
     store: &ParamStore,
     data: &DataSource,
     rule: &Rule,
@@ -171,13 +172,13 @@ fn compute_grads(
     i: usize,
     gmb: &mut [f32],
 ) -> Result<f32> {
-    let n = rt.manifest.n_stages;
+    let n = rt.manifest().n_stages;
     let layout = store.layout().clone();
     let (acts, targets) = forward_mb(rt, exec, store, data, rule, t, i)?;
     let last = n - 1;
     let ver = version_id(rule, store.step(), i, last, n);
-    let (loss, mut gx) = exec.last_bwd(
-        rt,
+    let (loss, mut gx) = rt.last_bwd(
+        exec,
         ver,
         store.select(rule, i, last),
         &acts[last],
@@ -186,8 +187,8 @@ fn compute_grads(
     )?;
     for j in (1..last).rev() {
         let ver = version_id(rule, store.step(), i, j, n);
-        gx = exec.mid_bwd(
-            rt,
+        gx = rt.mid_bwd(
+            exec,
             j,
             ver,
             store.select(rule, i, j),
@@ -198,8 +199,8 @@ fn compute_grads(
     }
     if n > 1 {
         let ver = version_id(rule, store.step(), i, 0, n);
-        exec.first_bwd(
-            rt,
+        rt.first_bwd(
+            exec,
             ver,
             store.select(rule, i, 0),
             &acts[0],
@@ -211,19 +212,19 @@ fn compute_grads(
 }
 
 /// DP worker: compute → barrier all-reduce → identical local update.
-fn worker_dp(
-    rt: &SharedRuntime,
+fn worker_dp<B: Backend>(
+    rt: &SharedBackend<B>,
     rule: &Rule,
     ep: &mut Endpoint,
     w: usize,
     steps: usize,
     opts: MultiOpts,
 ) -> Result<Vec<StepLog>> {
-    let n = rt.manifest.n_stages;
-    let layout = ArenaLayout::from_manifest(&rt.manifest);
+    let n = rt.manifest().n_stages;
+    let layout = ArenaLayout::from_manifest(rt.manifest());
     let mut store = ParamStore::from_flat(layout.clone(), rt.init_params_flat()?);
-    let mut exec = Executor::new(opts.mode, n);
-    let data = DataSource::from_manifest(&rt.manifest);
+    let mut exec = rt.executor(opts.mode);
+    let data = DataSource::from_manifest(rt.manifest());
     let mut gmb = layout.zeros();
     let mut logs = Vec::new();
 
@@ -236,10 +237,10 @@ fn worker_dp(
         allreduce_mean(ep, t, &mut gmb);
 
         // every replica applies the identical update (N optimizer copies)
-        let lr = rt.manifest.lr;
+        let lr = rt.manifest().lr;
         for j in 0..n {
             let (cur, moms, next) = store.update_parts(j);
-            exec.sgd(rt, j, t, cur, moms, &gmb[layout.stage_range(j)], lr, next)?;
+            rt.sgd(&mut exec, j, t, cur, moms, &gmb[layout.stage_range(j)], lr, next)?;
         }
         store.commit_step();
 
@@ -262,27 +263,27 @@ fn worker_dp(
 /// remaining backward keeps computing; the owner (micro-batch N, the
 /// only optimizer state) updates each stage the moment its averaged sum
 /// assembles and hands the fresh parameters down the ring.
-fn worker_ring(
-    rt: &SharedRuntime,
+fn worker_ring<B: Backend>(
+    rt: &SharedBackend<B>,
     rule: &Rule,
     ep: &mut Endpoint,
     w: usize,
     steps: usize,
     opts: MultiOpts,
 ) -> Result<Vec<StepLog>> {
-    let n = rt.manifest.n_stages;
+    let n = rt.manifest().n_stages;
     let n_mb = ep.n;
     let owner = n_mb - 1; // worker of micro-batch N: the only optimizer state
-    let layout = ArenaLayout::from_manifest(&rt.manifest);
+    let layout = ArenaLayout::from_manifest(rt.manifest());
     let mut store = ParamStore::from_flat(layout.clone(), rt.init_params_flat()?);
-    let mut exec = Executor::new(opts.mode, n);
-    let data = DataSource::from_manifest(&rt.manifest);
+    let mut exec = rt.executor(opts.mode);
+    let data = DataSource::from_manifest(rt.manifest());
     let reducer = BucketedReducer::new(opts.bucket_elems);
     let mut gmb = layout.zeros();
     // owner-side scratch the averaged sums assemble into, bucket by bucket
     let mut avg = layout.zeros();
     let mut logs = Vec::new();
-    let lr = rt.manifest.lr;
+    let lr = rt.manifest().lr;
     let i = w + 1; // this worker's micro-batch index (1-based)
 
     for t in 0..steps as u64 {
@@ -298,13 +299,13 @@ fn worker_ring(
         // j−1..0 are still backpropagating everywhere: the balanced
         // communication of Fig 1c, overlapped with compute.
         let mut loss = 0f32;
-        let mut gx: Option<Act> = None;
+        let mut gx: Option<B::Act> = None;
         for j in (0..n).rev() {
             let ver = version_id(rule, store.step(), i, j, n);
             let grange = layout.stage_range(j);
             if j == n - 1 {
-                let (l, g) = exec.last_bwd(
-                    rt,
+                let (l, g) = rt.last_bwd(
+                    &mut exec,
                     ver,
                     store.select(rule, i, j),
                     &acts[j],
@@ -316,8 +317,8 @@ fn worker_ring(
                     gx = Some(g);
                 }
             } else if j > 0 {
-                let g = exec.mid_bwd(
-                    rt,
+                let g = rt.mid_bwd(
+                    &mut exec,
                     j,
                     ver,
                     store.select(rule, i, j),
@@ -327,8 +328,8 @@ fn worker_ring(
                 )?;
                 gx = Some(g);
             } else {
-                exec.first_bwd(
-                    rt,
+                rt.first_bwd(
+                    &mut exec,
                     ver,
                     store.select(rule, i, j),
                     &acts[j],
@@ -351,7 +352,7 @@ fn worker_ring(
                 // while backward continues below stage j
                 let g = &avg[grange];
                 let (cur, moms, next) = store.update_parts(j);
-                exec.sgd(rt, j, t, cur, moms, g, lr, next)?;
+                rt.sgd(&mut exec, j, t, cur, moms, g, lr, next)?;
                 if n_mb > 1 {
                     let fresh = store.next_stage(j);
                     ep.stats().mark(

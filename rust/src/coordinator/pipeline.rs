@@ -10,18 +10,19 @@
 //!   preferring backwards once available — smaller activation stash,
 //!   same bubble as GPipe for M = N but bounded memory.
 //!
-//! The engine *executes* the timetable against the AOT artifacts (real
-//! numerics, single host thread — the devices are memory/comm ledgers, per
-//! DESIGN.md substitution #1) and measures: bubble fraction, per-device
-//! peak activation stash, inter-stage activation traffic, parameter
-//! versions held, and the eager-reduction overlap (which gradient buckets
-//! could launch before the step's final backward op — everything except
-//! the last-finishing stage's buckets, per the timetable).  Losses match
-//! the reference trainer bit-for-bit for the same rule.
+//! The engine *executes* the timetable against an execution [`Backend`]
+//! (real numerics, single host thread — the devices are memory/comm
+//! ledgers, per DESIGN.md substitution #1) and measures: bubble fraction,
+//! per-device peak activation stash, inter-stage activation traffic,
+//! parameter versions held, and the eager-reduction overlap (which
+//! gradient buckets could launch before the step's final backward op —
+//! everything except the last-finishing stage's buckets, per the
+//! timetable).  Losses match the reference trainer bit-for-bit for the
+//! same rule.
 //!
-//! Execution is device-resident by default (runtime::device_store);
+//! On XLA, execution is device-resident by default;
 //! `PipeOpts`/`CDP_EXEC_MODE` selects the host/literal path — losses are
-//! bit-identical either way.
+//! bit-identical either way (the native backend has one path).
 
 use std::collections::HashMap;
 
@@ -34,7 +35,7 @@ use crate::data::{DataSource, MicroBatch};
 use crate::metrics::Metrics;
 use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{GradBuffer, ParamStore, Rule};
-use crate::runtime::{Act, BundleRuntime, Executor};
+use crate::runtime::{Activation, Backend};
 use crate::tensor::HostTensor;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -163,8 +164,8 @@ fn build_timetable(n: usize, m: usize, sched: PipeSchedule) -> Vec<(usize, usize
     out
 }
 
-pub fn train(
-    rt: &BundleRuntime,
+pub fn train<B: Backend>(
+    rt: &B,
     rule: Rule,
     sched: PipeSchedule,
     steps: usize,
@@ -172,22 +173,22 @@ pub fn train(
     train_with(rt, rule, sched, steps, PipeOpts::default())
 }
 
-pub fn train_with(
-    rt: &BundleRuntime,
+pub fn train_with<B: Backend>(
+    rt: &B,
     rule: Rule,
     sched: PipeSchedule,
     steps: usize,
     opts: PipeOpts,
 ) -> Result<PipelineReport> {
-    let n = rt.manifest.n_stages;
-    let m = rt.manifest.n_microbatches;
-    let layout = ArenaLayout::from_manifest(&rt.manifest);
+    let n = rt.manifest().n_stages;
+    let m = rt.manifest().n_microbatches;
+    let layout = ArenaLayout::from_manifest(rt.manifest());
     let mut store = ParamStore::from_flat(layout.clone(), rt.init_params_flat()?);
     let mut grads = GradBuffer::new(layout.clone(), m);
-    let mut exec = Executor::new(opts.mode, n);
+    let mut exec = rt.executor(opts.mode);
     // per-op gradient scratch: one stage run at a time, reused
     let mut gop = layout.zeros();
-    let data = DataSource::from_manifest(&rt.manifest);
+    let data = DataSource::from_manifest(rt.manifest());
     let mut metrics = Metrics::new();
     let mut devices: Vec<DeviceMem> = (0..n).map(|_| DeviceMem::unbounded()).collect();
     let mut logs = Vec::new();
@@ -227,8 +228,8 @@ pub fn train_with(
 
     for step in 0..steps as u64 {
         // per-(mb) in-flight state
-        let mut inputs: HashMap<(usize, usize), Act> = HashMap::new(); // (mb, stage) → stashed input
-        let mut gxs: HashMap<usize, Act> = HashMap::new(); // mb → current cotangent
+        let mut inputs: HashMap<(usize, usize), B::Act> = HashMap::new(); // (mb, stage) → stashed input
+        let mut gxs: HashMap<usize, B::Act> = HashMap::new(); // mb → current cotangent
         let mut losses: Vec<f64> = vec![0.0; m];
         let mut targets_of: HashMap<usize, crate::tensor::IntTensor> = HashMap::new();
 
@@ -239,7 +240,7 @@ pub fn train_with(
                 MicroBatch::Lm { tokens, targets } => (HostTensor::I32(tokens), targets),
                 MicroBatch::Class { x, labels } => (HostTensor::F32(x), labels),
             };
-            inputs.insert((mb, 0), exec.input(rt, x0)?);
+            inputs.insert((mb, 0), rt.input(&mut exec, x0)?);
             targets_of.insert(mb, tgt);
         }
 
@@ -247,14 +248,14 @@ pub fn train_with(
             match op {
                 PipeOp::Fwd { mb, stage } => {
                     devices[dev]
-                        .alloc("stash", rt.manifest.stages[stage].act_bytes)
+                        .alloc("stash", rt.manifest().stages[stage].act_bytes)
                         .unwrap();
                     if stage < n - 1 {
                         let ver = version_id(&rule, step, mb + 1, stage, n);
                         let y = {
                             let x = inputs.get(&(mb, stage)).unwrap();
                             let params = store.select(&rule, mb + 1, stage);
-                            exec.fwd(rt, stage, ver, params, x)?
+                            rt.fwd(&mut exec, stage, ver, params, x)?
                         };
                         act_comm += y.bytes() as u64; // → next device
                         inputs.insert((mb, stage + 1), y);
@@ -267,8 +268,8 @@ pub fn train_with(
                     if stage == n - 1 {
                         let x = inputs.get(&(mb, stage)).unwrap();
                         let params = store.select(&rule, mb + 1, stage);
-                        let (loss, gx) = exec.last_bwd(
-                            rt,
+                        let (loss, gx) = rt.last_bwd(
+                            &mut exec,
                             ver,
                             params,
                             x,
@@ -285,8 +286,8 @@ pub fn train_with(
                         let x = inputs.get(&(mb, stage)).unwrap();
                         let gy = gxs.remove(&mb).unwrap();
                         let params = store.select(&rule, mb + 1, stage);
-                        let gx = exec.mid_bwd(
-                            rt,
+                        let gx = rt.mid_bwd(
+                            &mut exec,
                             stage,
                             ver,
                             params,
@@ -301,7 +302,7 @@ pub fn train_with(
                         let x = inputs.get(&(mb, 0)).unwrap();
                         let gy = gxs.remove(&mb).unwrap();
                         let params = store.select(&rule, mb + 1, 0);
-                        exec.first_bwd(rt, ver, params, x, &gy, &mut gop[grange.clone()])?;
+                        rt.first_bwd(&mut exec, ver, params, x, &gy, &mut gop[grange.clone()])?;
                         grads.add_flat(0, mb + 1, &gop[grange]);
                     }
                     inputs.remove(&(mb, stage));
@@ -312,11 +313,11 @@ pub fn train_with(
 
         // update (per-stage averaged grads, same order as reference)
         grads.average();
-        let lr = rt.manifest.lr;
+        let lr = rt.manifest().lr;
         for j in 0..n {
             let g = grads.stage(j);
             let (cur, moms, next) = store.update_parts(j);
-            exec.sgd(rt, j, step, cur, moms, g, lr, next)?;
+            rt.sgd(&mut exec, j, step, cur, moms, g, lr, next)?;
         }
         grads.reset();
         store.commit_step();

@@ -9,6 +9,12 @@
 //! activation-memory difference between DP and CDP on one device is
 //! measured by `memsim` over the same schedule this trainer realizes.
 //!
+//! Generic over [`Backend`]: the same schedule drives the pure-Rust
+//! native kernels or the XLA bundle, through the one executor surface.
+//! Per-(stage, θ-version) parameter preparation (literal/buffer caching
+//! on XLA) lives behind that surface, keyed by the version ids this
+//! trainer annotates every call with.
+//!
 //! Hot-path layout (DESIGN-PERF.md): parameters, momentum and gradient
 //! sums live in flat arenas; each micro-batch's backward writes into one
 //! persistent model-wide scratch run that the grad buffer accumulates
@@ -22,11 +28,11 @@ use crate::data::{DataSource, MicroBatch};
 use crate::metrics::Metrics;
 use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{GradBuffer, ParamStore, Rule};
-use crate::runtime::{Act, BundleRuntime, Executor};
+use crate::runtime::Backend;
 use crate::tensor::{HostTensor, Tensor};
 
-pub struct RefTrainer<'rt> {
-    pub rt: &'rt BundleRuntime,
+pub struct RefTrainer<'rt, B: Backend> {
+    pub rt: &'rt B,
     pub store: ParamStore,
     pub data: DataSource,
     pub rule: Rule,
@@ -35,143 +41,64 @@ pub struct RefTrainer<'rt> {
     grads: GradBuffer,
     /// Per-micro-batch gradient scratch (model-wide flat run, reused).
     gmb: Vec<f32>,
-    /// Execution boundary.  Defaults to [`ExecMode::HostLiteral`]: this
-    /// trainer *is* the reference oracle, and the host/literal path is
-    /// the reference semantics.  [`Self::new_with_mode`] opts into the
-    /// device-resident path, which the equivalence tests hold
-    /// bit-identical to the oracle.
-    exec: Executor,
+    /// Execution state behind the backend boundary.  Defaults to
+    /// [`ExecMode::HostLiteral`]: this trainer *is* the reference oracle,
+    /// and the host path is the reference semantics.
+    /// [`Self::new_with_mode`] opts into the device-resident path (XLA),
+    /// which the equivalence tests hold bit-identical to the oracle.
+    exec: B::Exec,
 }
 
-impl<'rt> RefTrainer<'rt> {
-    pub fn new(rt: &'rt BundleRuntime, rule: Rule) -> Result<Self> {
+impl<'rt, B: Backend> RefTrainer<'rt, B> {
+    pub fn new(rt: &'rt B, rule: Rule) -> Result<Self> {
         Self::new_with_mode(rt, rule, ExecMode::HostLiteral)
     }
 
-    pub fn new_with_mode(
-        rt: &'rt BundleRuntime,
-        rule: Rule,
-        mode: ExecMode,
-    ) -> Result<Self> {
-        let layout = ArenaLayout::from_manifest(&rt.manifest);
+    pub fn new_with_mode(rt: &'rt B, rule: Rule, mode: ExecMode) -> Result<Self> {
+        let layout = ArenaLayout::from_manifest(rt.manifest());
         let flat = rt.init_params_flat()?;
         let store = ParamStore::from_flat(layout.clone(), flat);
         Ok(Self::assemble(rt, rule, store, mode))
     }
 
     /// With explicit initial params (equivalence tests inject these).
-    pub fn with_params(
-        rt: &'rt BundleRuntime,
-        rule: Rule,
-        init: Vec<Vec<Tensor>>,
-    ) -> Self {
+    pub fn with_params(rt: &'rt B, rule: Rule, init: Vec<Vec<Tensor>>) -> Self {
         Self::assemble(rt, rule, ParamStore::new(init), ExecMode::HostLiteral)
     }
 
-    fn assemble(
-        rt: &'rt BundleRuntime,
-        rule: Rule,
-        store: ParamStore,
-        mode: ExecMode,
-    ) -> Self {
-        let n_mb = rt.manifest.n_microbatches;
+    fn assemble(rt: &'rt B, rule: Rule, store: ParamStore, mode: ExecMode) -> Self {
+        let n_mb = rt.manifest().n_microbatches;
         let layout = store.layout().clone();
         Self {
             rt,
             store,
-            data: DataSource::from_manifest(&rt.manifest),
+            data: DataSource::from_manifest(rt.manifest()),
             rule,
-            lr: rt.manifest.lr,
+            lr: rt.manifest().lr,
             metrics: Metrics::new(),
             grads: GradBuffer::new(layout.clone(), n_mb),
             gmb: layout.zeros(),
-            exec: Executor::new(mode, rt.manifest.n_stages),
+            exec: rt.executor(mode),
         }
     }
 
     pub fn mode(&self) -> ExecMode {
-        self.exec.mode()
+        self.rt.exec_mode(&self.exec)
     }
 
-    /// Stage-level parameter uploads performed by the device store
-    /// (`None` on the host path) — the bench's ≤1-per-θ-version metric.
+    /// Stage-level parameter uploads performed by the backend's device
+    /// store (`None` on paths without one) — the bench's ≤1-per-θ-version
+    /// metric.
     pub fn device_param_uploads(&self) -> Option<u64> {
-        self.exec.device_store().map(|s| s.param_uploads())
+        self.rt.param_uploads(&self.exec)
     }
 
     /// One micro-batch's fwd+bwd at the rule-selected parameter versions,
-    /// gradients written into `gmb` (model-wide flat run).  `lits[stage]`
-    /// are the pre-uploaded literals for *this* micro-batch's θ̂ versions
-    /// (DESIGN.md §Perf-L3: parameters are uploaded once per
-    /// (stage, version) per training step, not once per micro-batch).
-    fn run_microbatch(
-        &self,
-        t: u64,
-        i: usize,
-        lits: &[&Vec<xla::Literal>],
-        gmb: &mut [f32],
-    ) -> Result<f32> {
-        let n = self.rt.manifest.n_stages;
-        let layout = self.store.layout();
-        let mb = self.data.microbatch(t, (i - 1) as u64);
-        let (x0, targets): (HostTensor, _) = match &mb {
-            MicroBatch::Lm { tokens, targets } => {
-                (HostTensor::I32(tokens.clone()), targets.clone())
-            }
-            MicroBatch::Class { x, labels } => {
-                (HostTensor::F32(x.clone()), labels.clone())
-            }
-        };
-
-        // forward chain, stashing stage inputs (the remat unit)
-        let mut inputs: Vec<HostTensor> = vec![x0];
-        for j in 0..n - 1 {
-            let y = self.rt.stage_fwd_lits(j, lits[j], &inputs[j])?;
-            inputs.push(HostTensor::F32(y));
-        }
-
-        // backward chain, straight into the arena scratch
-        let last = n - 1;
-        let x_last = inputs[last].as_f32().expect("loss stage input is f32");
-        let (loss, mut gx) = self.rt.last_bwd_lits_into(
-            lits[last],
-            x_last,
-            &targets,
-            &mut gmb[layout.stage_range(last)],
-        )?;
-        for j in (1..last).rev() {
-            let x = inputs[j].as_f32().unwrap();
-            gx = self.rt.mid_bwd_lits_into(
-                j,
-                lits[j],
-                x,
-                &gx,
-                &mut gmb[layout.stage_range(j)],
-            )?;
-        }
-        if n > 1 {
-            self.rt.first_bwd_lits_into(
-                lits[0],
-                &inputs[0],
-                &gx,
-                &mut gmb[layout.stage_range(0)],
-            )?;
-        }
-        Ok(loss)
-    }
-
-    /// Run one full training step (N micro-batches + update).
-    pub fn step(&mut self) -> Result<StepLog> {
-        match self.exec.mode() {
-            ExecMode::HostLiteral => self.step_host(),
-            ExecMode::DeviceResident => self.step_device(),
-        }
-    }
-
-    /// One micro-batch on the device path: resident parameter buffers,
-    /// device-side activation stash, grads into `gmb`.
-    fn run_microbatch_dev(&mut self, t: u64, i: usize, gmb: &mut [f32]) -> Result<f32> {
-        let n = self.rt.manifest.n_stages;
+    /// gradients written into `gmb` (model-wide flat run).  Every call is
+    /// annotated with its θ-version id, so the backend prepares each
+    /// (stage, version) at most once however many micro-batches share it.
+    fn run_microbatch(&mut self, t: u64, i: usize, gmb: &mut [f32]) -> Result<f32> {
+        let n = self.rt.manifest().n_stages;
         let rt = self.rt;
         let layout = self.store.layout().clone();
         let mb = self.data.microbatch(t, (i - 1) as u64);
@@ -180,13 +107,13 @@ impl<'rt> RefTrainer<'rt> {
             MicroBatch::Class { x, labels } => (HostTensor::F32(x), labels),
         };
 
-        // forward chain; the stash holds device activations
-        let mut acts: Vec<Act> = Vec::with_capacity(n);
-        acts.push(self.exec.input(rt, x0)?);
+        // forward chain, stashing stage inputs (the remat unit)
+        let mut acts: Vec<B::Act> = Vec::with_capacity(n);
+        acts.push(rt.input(&mut self.exec, x0)?);
         for j in 0..n - 1 {
             let ver = version_id(&self.rule, self.store.step(), i, j, n);
             let flat = self.store.select(&self.rule, i, j);
-            let y = self.exec.fwd(rt, j, ver, flat, &acts[j])?;
+            let y = rt.fwd(&mut self.exec, j, ver, flat, &acts[j])?;
             acts.push(y);
         }
 
@@ -194,8 +121,8 @@ impl<'rt> RefTrainer<'rt> {
         let last = n - 1;
         let ver = version_id(&self.rule, self.store.step(), i, last, n);
         let flat = self.store.select(&self.rule, i, last);
-        let (loss, mut gx) = self.exec.last_bwd(
-            rt,
+        let (loss, mut gx) = rt.last_bwd(
+            &mut self.exec,
             ver,
             flat,
             &acts[last],
@@ -205,8 +132,8 @@ impl<'rt> RefTrainer<'rt> {
         for j in (1..last).rev() {
             let ver = version_id(&self.rule, self.store.step(), i, j, n);
             let flat = self.store.select(&self.rule, i, j);
-            gx = self.exec.mid_bwd(
-                rt,
+            gx = rt.mid_bwd(
+                &mut self.exec,
                 j,
                 ver,
                 flat,
@@ -218,8 +145,8 @@ impl<'rt> RefTrainer<'rt> {
         if n > 1 {
             let ver = version_id(&self.rule, self.store.step(), i, 0, n);
             let flat = self.store.select(&self.rule, i, 0);
-            self.exec.first_bwd(
-                rt,
+            rt.first_bwd(
+                &mut self.exec,
                 ver,
                 flat,
                 &acts[0],
@@ -230,20 +157,17 @@ impl<'rt> RefTrainer<'rt> {
         Ok(loss)
     }
 
-    /// Device-resident training step: identical schedule and numerics to
-    /// [`Self::step_host`] (the loss sequence is bit-identical — tested),
-    /// but parameters upload once per (stage, θ-version) instead of the
-    /// per-step literal rebuilds.
-    fn step_device(&mut self) -> Result<StepLog> {
-        let n = self.rt.manifest.n_stages;
-        let n_mb = self.rt.manifest.n_microbatches;
+    /// Run one full training step (N micro-batches + update).
+    pub fn step(&mut self) -> Result<StepLog> {
+        let n = self.rt.manifest().n_stages;
+        let n_mb = self.rt.manifest().n_microbatches;
         let t = self.store.step();
         let lr = self.lr;
 
         let mut loss_sum = 0f64;
         let mut gmb = std::mem::take(&mut self.gmb);
         for i in 1..=n_mb {
-            let loss = match self.run_microbatch_dev(t, i, &mut gmb) {
+            let loss = match self.run_microbatch(t, i, &mut gmb) {
                 Ok(l) => l,
                 Err(e) => {
                     self.gmb = gmb; // restore scratch before bailing
@@ -256,95 +180,14 @@ impl<'rt> RefTrainer<'rt> {
         self.gmb = gmb;
         self.grads.average();
 
-        // fused device SGD per stage; the result installs as the
-        // resident θ_{t+1} and mirrors into the store's next slot
+        // fused SGD per stage: θ_t (cur) → θ_{t+1} (next slot), then
+        // rotate; the XLA device path additionally installs the result
+        // as the resident next version
         for j in 0..n {
             let rt = self.rt;
             let g = self.grads.stage(j);
             let (cur, moms, next) = self.store.update_parts(j);
-            self.exec.sgd(rt, j, t, cur, moms, g, lr, next)?;
-        }
-        self.grads.reset();
-        self.store.commit_step();
-
-        let loss = loss_sum / n_mb as f64;
-        self.metrics.record("loss", t as f64, loss);
-        Ok(StepLog { step: t, loss })
-    }
-
-    /// Host/literal training step — the reference-oracle path.
-    fn step_host(&mut self) -> Result<StepLog> {
-        let n = self.rt.manifest.n_stages;
-        let n_mb = self.rt.manifest.n_microbatches;
-        let t = self.store.step();
-
-        // Upload each needed (stage, version) exactly once for this step.
-        let mut fresh_lits: Vec<Option<Vec<xla::Literal>>> = (0..n).map(|_| None).collect();
-        let mut stale_lits: Vec<Option<Vec<xla::Literal>>> = (0..n).map(|_| None).collect();
-        for i in 1..=n_mb {
-            for j in 0..n {
-                use crate::parallel::update_rule::Version;
-                match self.rule.version(i, j + 1, n) {
-                    Version::Fresh if fresh_lits[j].is_none() => {
-                        fresh_lits[j] =
-                            Some(self.rt.param_literals_flat(j, self.store.fresh(j))?);
-                    }
-                    Version::Stale if stale_lits[j].is_none() => {
-                        stale_lits[j] =
-                            Some(self.rt.param_literals_flat(j, self.store.stale(j))?);
-                    }
-                    _ => {}
-                }
-            }
-        }
-
-        // CDP_NO_LITCACHE=1 disables the cache (per-micro-batch re-upload),
-        // used by the §Perf A/B measurement in EXPERIMENTS.md.
-        let no_cache = std::env::var_os("CDP_NO_LITCACHE").is_some();
-        let mut loss_sum = 0f64;
-        let mut gmb = std::mem::take(&mut self.gmb);
-        for i in 1..=n_mb {
-            use crate::parallel::update_rule::Version;
-            let rebuilt: Vec<Vec<xla::Literal>>;
-            let lits: Vec<&Vec<xla::Literal>> = if no_cache {
-                rebuilt = (0..n)
-                    .map(|j| {
-                        let p = match self.rule.version(i, j + 1, n) {
-                            Version::Fresh => self.store.fresh(j),
-                            Version::Stale => self.store.stale(j),
-                        };
-                        self.rt.param_literals_flat(j, p)
-                    })
-                    .collect::<Result<_>>()?;
-                rebuilt.iter().collect()
-            } else {
-                (0..n)
-                    .map(|j| match self.rule.version(i, j + 1, n) {
-                        Version::Fresh => fresh_lits[j].as_ref().unwrap(),
-                        Version::Stale => stale_lits[j].as_ref().unwrap(),
-                    })
-                    .collect()
-            };
-            let loss = match self.run_microbatch(t, i, &lits, &mut gmb) {
-                Ok(l) => l,
-                Err(e) => {
-                    self.gmb = gmb; // restore scratch before bailing
-                    return Err(e);
-                }
-            };
-            loss_sum += loss as f64;
-            self.grads.add_all_flat(i, &gmb);
-        }
-        self.gmb = gmb;
-        self.grads.average();
-
-        // SGD per stage: θ_t (cur) → θ_{t+1} (next slot), then rotate.
-        for j in 0..n {
-            let rt = self.rt;
-            let lr = self.lr;
-            let g = self.grads.stage(j);
-            let (cur, moms, next) = self.store.update_parts(j);
-            rt.sgd_update_flat(j, cur, moms, g, lr, next)?;
+            rt.sgd(&mut self.exec, j, t, cur, moms, g, lr, next)?;
         }
         self.grads.reset();
         self.store.commit_step();
@@ -360,7 +203,7 @@ impl<'rt> RefTrainer<'rt> {
 
     /// Classification accuracy on the held-out split (eval micro-batches).
     pub fn accuracy(&self, n_batches: u64) -> Result<f64> {
-        let n = self.rt.manifest.n_stages;
+        let n = self.rt.manifest().n_stages;
         let mut correct = 0usize;
         let mut total = 0usize;
         for k in 0..n_batches {
@@ -395,7 +238,7 @@ impl<'rt> RefTrainer<'rt> {
 
     /// Evaluation loss on held-out LM data (fwd only, fresh params).
     pub fn eval_loss(&self, n_batches: u64) -> Result<f64> {
-        let n = self.rt.manifest.n_stages;
+        let n = self.rt.manifest().n_stages;
         let mut sum = 0f64;
         for k in 0..n_batches {
             let mb = self.data.eval_microbatch(k);

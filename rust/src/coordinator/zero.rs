@@ -20,25 +20,26 @@
 //! bursting at the step boundary.  Owners still reduce in micro-batch
 //! order 1..N, so losses stay bit-identical to the reference trainer.
 //!
-//! Execution is device-resident by default: the owned shard and every
-//! *received* stage's parameters are cached as device buffers per
-//! θ-version (a received version uploads at most once per step, and a
-//! version still resident from the previous step re-uploads not at all);
-//! the owner's fused SGD promotes its result to the next resident
-//! version.  Host mirrors remain authoritative — the fabric serves and
-//! accounts the same bytes as before, so the paper's comm numbers are
-//! unchanged by the execution mode.
+//! Generic over [`Backend`].  On XLA, execution is device-resident by
+//! default: the owned shard and every *received* stage's parameters are
+//! cached as device buffers per θ-version (a received version uploads at
+//! most once per step, and a version still resident from the previous
+//! step re-uploads not at all); the owner's fused SGD promotes its
+//! result to the next resident version.  Host mirrors remain
+//! authoritative — the fabric serves and accounts the same bytes as
+//! before, so the paper's comm numbers are unchanged by the execution
+//! mode or backend.
 
 use anyhow::Result;
 
-use super::{version_id, ExecMode, SharedRuntime, StepLog};
+use super::{version_id, ExecMode, SharedBackend, StepLog};
 use crate::cluster::run_workers;
 use crate::comm::bucketed::{bucket_elems_from_env, BucketedReducer};
 use crate::comm::{tags, Endpoint, EventKind, Fabric, Payload};
 use crate::data::{DataSource, MicroBatch};
 use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{Rule, Version};
-use crate::runtime::{Act, Executor};
+use crate::runtime::Backend;
 use crate::tensor::HostTensor;
 use std::sync::Arc;
 
@@ -106,8 +107,8 @@ fn stage_run<'a>(
     }
 }
 
-pub fn train(
-    rt: SharedRuntime,
+pub fn train<B: Backend + Send + Sync + 'static>(
+    rt: SharedBackend<B>,
     rule: Rule,
     flow: StateFlow,
     steps: usize,
@@ -115,15 +116,15 @@ pub fn train(
     train_with(rt, rule, flow, steps, ZeroOpts::default())
 }
 
-pub fn train_with(
-    rt: SharedRuntime,
+pub fn train_with<B: Backend + Send + Sync + 'static>(
+    rt: SharedBackend<B>,
     rule: Rule,
     flow: StateFlow,
     steps: usize,
     opts: ZeroOpts,
 ) -> Result<ZeroReport> {
-    let n = rt.manifest.n_stages;
-    let n_mb = rt.manifest.n_microbatches;
+    let n = rt.manifest().n_stages;
+    let n_mb = rt.manifest().n_microbatches;
     assert_eq!(n, n_mb, "ZeRO sharding assumes N stages == N workers");
     let (endpoints, stats) = Fabric::new(n);
     let eps: Arc<Vec<std::sync::Mutex<Option<Endpoint>>>> = Arc::new(
@@ -169,8 +170,8 @@ pub fn train_with(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn worker(
-    rt: &SharedRuntime,
+fn worker<B: Backend>(
+    rt: &SharedBackend<B>,
     rule: &Rule,
     flow: StateFlow,
     ep: &mut Endpoint,
@@ -178,9 +179,9 @@ fn worker(
     steps: usize,
     opts: ZeroOpts,
 ) -> Result<(Vec<StepLog>, u64)> {
-    let n = rt.manifest.n_stages;
+    let n = rt.manifest().n_stages;
     let n_mb = ep.n;
-    let layout = ArenaLayout::from_manifest(&rt.manifest);
+    let layout = ArenaLayout::from_manifest(rt.manifest());
     let init = rt.init_params_flat()?;
     // Owner state: stage `w` params (current + previous version), momentum
     // and the next-step slot — flat stage runs, allocated once.
@@ -195,10 +196,10 @@ fn worker(
     let mut gsum: Vec<f32> = vec![0.0; own_cur.len()];
     // This worker's own micro-batch gradients, model-wide flat scratch.
     let mut gmb: Vec<f32> = layout.zeros();
-    let mut exec = Executor::new(opts.mode, n);
+    let mut exec = rt.executor(opts.mode);
     let reducer = BucketedReducer::new(opts.bucket_elems);
 
-    let data = DataSource::from_manifest(&rt.manifest);
+    let data = DataSource::from_manifest(rt.manifest());
     let mut logs = Vec::new();
     let i = w + 1; // this worker's micro-batch index (1-based)
 
@@ -259,12 +260,12 @@ fn worker(
             MicroBatch::Lm { tokens, targets } => (HostTensor::I32(tokens), targets),
             MicroBatch::Class { x, labels } => (HostTensor::F32(x), labels),
         };
-        let mut acts: Vec<Act> = Vec::with_capacity(n);
-        acts.push(exec.input(rt, x0)?);
+        let mut acts: Vec<B::Act> = Vec::with_capacity(n);
+        acts.push(rt.input(&mut exec, x0)?);
         for j in 0..n - 1 {
             let ver = version_id(rule, t, i, j, n);
             let p = stage_run(j, w, i, n, rule, &own_cur, &own_prev, &recv_params);
-            let y = exec.fwd(rt, j, ver, p, &acts[j])?;
+            let y = rt.fwd(&mut exec, j, ver, p, &acts[j])?;
             acts.push(y);
         }
 
@@ -274,8 +275,8 @@ fn worker(
         // own-stage slice stays local for the in-order reduction below.
         let last = n - 1;
         let ver = version_id(rule, t, i, last, n);
-        let (loss, mut gx) = exec.last_bwd(
-            rt,
+        let (loss, mut gx) = rt.last_bwd(
+            &mut exec,
             ver,
             stage_run(last, w, i, n, rule, &own_cur, &own_prev, &recv_params),
             &acts[last],
@@ -288,8 +289,8 @@ fn worker(
         }
         for j in (1..last).rev() {
             let ver = version_id(rule, t, i, j, n);
-            gx = exec.mid_bwd(
-                rt,
+            gx = rt.mid_bwd(
+                &mut exec,
                 j,
                 ver,
                 stage_run(j, w, i, n, rule, &own_cur, &own_prev, &recv_params),
@@ -304,8 +305,8 @@ fn worker(
         }
         if n > 1 {
             let ver = version_id(rule, t, i, 0, n);
-            exec.first_bwd(
-                rt,
+            rt.first_bwd(
+                &mut exec,
                 ver,
                 stage_run(0, w, i, n, rule, &own_cur, &own_prev, &recv_params),
                 &acts[0],
@@ -332,7 +333,16 @@ fn worker(
         );
 
         // ---- owner update ----------------------------------------------
-        exec.sgd(rt, w, t, &own_cur, &mut own_mom, &gsum, rt.manifest.lr, &mut own_next)?;
+        rt.sgd(
+            &mut exec,
+            w,
+            t,
+            &own_cur,
+            &mut own_mom,
+            &gsum,
+            rt.manifest().lr,
+            &mut own_next,
+        )?;
         std::mem::swap(&mut own_prev, &mut own_cur); // prev ← θ_t
         std::mem::swap(&mut own_cur, &mut own_next); // cur ← θ_{t+1}
 

@@ -3,19 +3,20 @@
 //! Subcommands:
 //!   train     --bundle tiny --rule cdp_v2 --steps 20 [--trainer single|multi|zero|pipeline]
 //!             [--pattern barrier|ring] [--flow broadcast|cyclic] [--sched gpipe|1f1b]
+//!             [--backend native|xla]   (also CDP_BACKEND; native needs no artifacts
+//!                                       for the mlp family — try --bundle native_mlp)
 //!   timeline  --n 3 --horizon 18            (Fig 1)
 //!   schemes   --n 3                         (Fig 2)
 //!   table1    --n 4                         (Tab 1)
 //!   memsim    --arch vit|resnet --n 4,8,32  (Fig 4)
 //!   golden    --bundle tiny                 (cross-language check)
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use cyclic_dp::cli::Args;
-use cyclic_dp::coordinator::{multi, pipeline, single, zero, SharedRuntime};
+use cyclic_dp::coordinator::{multi, pipeline, single, zero, SharedBackend};
 use cyclic_dp::memsim::{extrapolate, resnet50_profile, vit_b16_profile, MemoryCurve};
-use cyclic_dp::model::artifacts_root;
 use cyclic_dp::parallel::{rule_by_name, Schedule};
-use cyclic_dp::runtime::BundleRuntime;
+use cyclic_dp::runtime::{backend_choice, Backend, BackendChoice, NativeBackend};
 use cyclic_dp::sim::{analytic, schemes, Scheme, SymbolicCosts};
 use cyclic_dp::util::stats::fmt_bytes;
 use std::sync::Arc;
@@ -45,29 +46,59 @@ fn print_help() {
     println!(
         "cdp — Cyclic Data Parallelism coordinator\n\
          subcommands: train | timeline | schemes | table1 | memsim | golden\n\
-         see rust/src/main.rs header for flags"
+         backend: --backend native|xla (or CDP_BACKEND); this build has \
+         xla {}\n\
+         see rust/src/main.rs header for flags",
+        if cfg!(feature = "xla") { "enabled" } else { "disabled" }
     );
 }
 
-fn load_bundle(args: &Args) -> Result<BundleRuntime> {
+/// Load the XLA bundle named by `--bundle` (feature `xla` builds only).
+#[cfg(feature = "xla")]
+fn load_xla_bundle(args: &Args) -> Result<cyclic_dp::runtime::BundleRuntime> {
+    use anyhow::Context;
     let bundle = args.str_or("bundle", "tiny");
-    let dir = artifacts_root().join(bundle);
-    BundleRuntime::load(&dir)
+    let dir = cyclic_dp::model::artifacts_root().join(bundle);
+    cyclic_dp::runtime::BundleRuntime::load(&dir)
         .with_context(|| format!("load bundle {dir:?} (run `make artifacts`?)"))
 }
 
+/// Load the native bundle: an on-disk mlp bundle dir, or the synthetic
+/// in-memory `mlp`/`native_mlp` when no artifacts exist.
+fn load_native_bundle(args: &Args) -> Result<NativeBackend> {
+    let bundle = args.str_or("bundle", "native_mlp");
+    NativeBackend::load_or_synthetic(bundle)
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    match backend_choice(args.get("backend"))? {
+        BackendChoice::Native => run_train(load_native_bundle(args)?, args),
+        BackendChoice::Xla => train_xla(args),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn train_xla(args: &Args) -> Result<()> {
+    run_train(load_xla_bundle(args)?, args)
+}
+
+#[cfg(not(feature = "xla"))]
+fn train_xla(_args: &Args) -> Result<()> {
+    unreachable!("backend_choice rejects xla without the feature")
+}
+
+fn run_train<B: Backend + Send + Sync + 'static>(rt: B, args: &Args) -> Result<()> {
     let rule = rule_by_name(args.str_or("rule", "cdp_v2"))?;
     let steps = args.usize_or("steps", 10);
     let trainer = args.str_or("trainer", "single");
-    let rt = load_bundle(args)?;
     println!(
-        "bundle={} family={} stages={} params={} rule={} trainer={trainer}",
-        rt.manifest.name,
-        rt.manifest.family,
-        rt.manifest.n_stages,
-        rt.manifest.total_param_elems,
-        rule.name()
+        "bundle={} family={} stages={} params={} rule={} trainer={trainer} backend={}",
+        rt.manifest().name,
+        rt.manifest().family,
+        rt.manifest().n_stages,
+        rt.manifest().total_param_elems,
+        rule.name(),
+        rt.name()
     );
     match trainer {
         "single" => {
@@ -76,7 +107,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 println!("step {:>4}  loss {:.5}", log.step, log.loss);
             }
             if args.bool_or("eval", false) {
-                if rt.manifest.family == "transformer" {
+                if rt.manifest().family == "transformer" {
                     println!("eval loss: {:.5}", t.eval_loss(8)?);
                 } else {
                     println!("eval accuracy: {:.4}", t.accuracy(8)?);
@@ -88,7 +119,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 "barrier" => multi::CommPattern::Barrier,
                 _ => multi::CommPattern::Ring,
             };
-            let rep = multi::train(SharedRuntime(Arc::new(rt)), rule, pattern, steps)?;
+            let rep = multi::train(SharedBackend(Arc::new(rt)), rule, pattern, steps)?;
             for log in &rep.logs {
                 println!("step {:>4}  loss {:.5}", log.step, log.loss);
             }
@@ -104,7 +135,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 "broadcast" => zero::StateFlow::Broadcast,
                 _ => zero::StateFlow::Cyclic,
             };
-            let rep = zero::train(SharedRuntime(Arc::new(rt)), rule, flow, steps)?;
+            let rep = zero::train(SharedBackend(Arc::new(rt)), rule, flow, steps)?;
             for log in &rep.logs {
                 println!("step {:>4}  loss {:.5}", log.step, log.loss);
             }
@@ -203,11 +234,30 @@ fn cmd_memsim(args: &Args) -> Result<()> {
 }
 
 fn cmd_golden(args: &Args) -> Result<()> {
-    let rt = load_bundle(args)?;
-    let Some(golden) = rt.manifest.load_golden()? else {
-        anyhow::bail!("bundle has no golden.json");
+    match backend_choice(args.get("backend"))? {
+        BackendChoice::Native => run_golden(load_native_bundle(args)?),
+        BackendChoice::Xla => golden_xla(args),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn golden_xla(args: &Args) -> Result<()> {
+    run_golden(load_xla_bundle(args)?)
+}
+
+#[cfg(not(feature = "xla"))]
+fn golden_xla(_args: &Args) -> Result<()> {
+    unreachable!("backend_choice rejects xla without the feature")
+}
+
+fn run_golden<B: Backend>(rt: B) -> Result<()> {
+    let Some(golden) = rt.manifest().load_golden()? else {
+        anyhow::bail!(
+            "bundle has no golden.json (synthetic native bundles carry none — \
+             point --bundle at a `make artifacts` directory)"
+        );
     };
-    let steps = rt.manifest.golden_steps;
+    let steps = rt.manifest().golden_steps;
     let mut worst: f64 = 0.0;
     for (rule_name, expect) in &golden {
         let rule = rule_by_name(rule_name)?;

@@ -1,0 +1,290 @@
+//! The execution-backend boundary (DESIGN-PERF.md §Backend boundary).
+//!
+//! The paper's claims — constant activation memory, balanced
+//! point-to-point gradient communication, bit-identical losses under the
+//! cyclic delay — are properties of the *schedule*, not of XLA.  The
+//! [`Backend`] trait captures the narrow surface the four coordinators
+//! actually drive (stage forward, first/mid/last backward into arena
+//! slices, fused SGD, predict + loss), so the schedule logic in
+//! `coordinator/` is written once and executes against either:
+//!
+//! - [`crate::runtime::NativeBackend`] — pure Rust, the `tensor::ops`
+//!   dense kernels, zero external dependencies (the default build and the
+//!   required CI lane), or
+//! - `BundleRuntime` (the XLA/PJRT path, behind the `xla` cargo feature) —
+//!   AOT HLO artifacts, literal or device-resident execution.
+//!
+//! The determinism contract is backend-uniform: a backend's stage
+//! functions are pure deterministic functions of (parameters, inputs), so
+//! with the trainers' fixed micro-batch reduction order the loss
+//! sequences of all four trainers are bit-identical *within* a backend.
+//! Across backends the schedules agree exactly; the floating-point values
+//! agree to kernel-accumulation-order tolerance (tested when both
+//! backends are built).
+
+use anyhow::Result;
+
+use crate::model::Manifest;
+use crate::tensor::{HostTensor, IntTensor, Tensor};
+
+/// Which execution path a trainer drives (`CDP_EXEC_MODE=host|device`
+/// overrides the per-trainer default).  The native backend has a single
+/// (host) execution path and treats the two modes identically; on the
+/// XLA backend `DeviceResident` selects persistent parameter buffers and
+/// device-side activation hand-off.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Host boundary — the reference oracle path.
+    HostLiteral,
+    /// Persistent device buffers for parameters/momentum, device-side
+    /// activation hand-off (XLA backend only; native ignores it).
+    DeviceResident,
+}
+
+impl ExecMode {
+    /// Resolve the mode, letting `CDP_EXEC_MODE` override the default
+    /// (case-insensitive; an unrecognized value warns loudly instead of
+    /// silently running the wrong path — these A/B measurements are the
+    /// point of the knob).
+    pub fn from_env(default: Self) -> Self {
+        match std::env::var("CDP_EXEC_MODE") {
+            Ok(v) => match v.to_ascii_lowercase().as_str() {
+                "host" | "literal" => ExecMode::HostLiteral,
+                "device" => ExecMode::DeviceResident,
+                other => {
+                    eprintln!(
+                        "CDP_EXEC_MODE=`{other}` not recognized \
+                         (use host|device); keeping {default:?}"
+                    );
+                    default
+                }
+            },
+            Err(_) => default,
+        }
+    }
+}
+
+/// An activation as it hands off between stages: whatever representation
+/// the backend keeps it in (a host tensor natively, a host tensor *or* a
+/// resident device buffer on XLA).  The coordinators only ever move it
+/// and account its size.
+pub trait Activation {
+    /// Payload bytes (activation-traffic accounting in the pipeline).
+    fn bytes(&self) -> usize;
+}
+
+impl Activation for HostTensor {
+    fn bytes(&self) -> usize {
+        HostTensor::bytes(self)
+    }
+}
+
+/// One execution backend: the narrow compute surface the coordinators
+/// drive a bundle through.
+///
+/// Conventions shared by all implementations (they mirror the artifact
+/// signatures in `python/compile/aot.py`):
+///
+/// - parameters arrive as one contiguous flat stage run (arena order);
+/// - backward calls write the stage's parameter gradients straight into
+///   the caller's arena slice `gdst` (every element, exactly once);
+/// - `version` is the θ-version id of the run (commit step that produced
+///   it, see `coordinator::version_id`) — backends with per-version
+///   caches key on it, stateless backends ignore it;
+/// - `exec` is per-trainer execution state created by [`Self::executor`]
+///   (device-resident buffer caches on XLA; nothing natively).  It never
+///   crosses threads: each worker builds its own.
+pub trait Backend: Sized {
+    /// Inter-stage activation hand-off unit.
+    type Act: Activation;
+    /// Per-trainer execution state.
+    type Exec;
+
+    /// Short backend name for logs/reports ("native", "xla").
+    fn name(&self) -> &'static str;
+
+    /// The bundle manifest (stage shapes, data distribution, hyperparams).
+    fn manifest(&self) -> &Manifest;
+
+    /// θ_0 as one model-wide stage-major flat vector.
+    fn init_params_flat(&self) -> Result<Vec<f32>>;
+
+    /// Fresh per-trainer execution state.
+    fn executor(&self, mode: ExecMode) -> Self::Exec;
+
+    /// The mode `exec` actually runs (backends may coerce).
+    fn exec_mode(&self, exec: &Self::Exec) -> ExecMode;
+
+    /// Stage-level parameter uploads performed by `exec`'s device store
+    /// (`None` on paths without one) — the ≤1-per-θ-version bench metric.
+    fn param_uploads(&self, _exec: &Self::Exec) -> Option<u64> {
+        None
+    }
+
+    /// Stage-0 input enters the pipeline (consumes the host tensor).
+    fn input(&self, exec: &mut Self::Exec, x: HostTensor) -> Result<Self::Act>;
+
+    /// Forward of a non-loss stage.
+    fn fwd(
+        &self,
+        exec: &mut Self::Exec,
+        stage: usize,
+        version: u64,
+        flat: &[f32],
+        x: &Self::Act,
+    ) -> Result<Self::Act>;
+
+    /// Backward of the loss stage: grads into `gdst`, returns (loss, gx).
+    fn last_bwd(
+        &self,
+        exec: &mut Self::Exec,
+        version: u64,
+        flat: &[f32],
+        x: &Self::Act,
+        targets: &IntTensor,
+        gdst: &mut [f32],
+    ) -> Result<(f32, Self::Act)>;
+
+    /// Backward of a middle stage: grads into `gdst`, returns gx.
+    #[allow(clippy::too_many_arguments)]
+    fn mid_bwd(
+        &self,
+        exec: &mut Self::Exec,
+        stage: usize,
+        version: u64,
+        flat: &[f32],
+        x: &Self::Act,
+        gy: &Self::Act,
+        gdst: &mut [f32],
+    ) -> Result<Self::Act>;
+
+    /// Backward of stage 0: grads into `gdst` (no input cotangent).
+    fn first_bwd(
+        &self,
+        exec: &mut Self::Exec,
+        version: u64,
+        flat: &[f32],
+        x: &Self::Act,
+        gy: &Self::Act,
+        gdst: &mut [f32],
+    ) -> Result<()>;
+
+    /// Fused SGD-momentum for one stage: reads θ_t from `cur` (committed
+    /// as θ-version `version`), updates `moms` in place, writes θ_{t+1}
+    /// into `out`.
+    #[allow(clippy::too_many_arguments)]
+    fn sgd(
+        &self,
+        exec: &mut Self::Exec,
+        stage: usize,
+        version: u64,
+        cur: &[f32],
+        moms: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) -> Result<()>;
+
+    // ---- stateless inference surface (eval/accuracy/tools) ---------------
+
+    /// Forward of a non-loss stage from a flat run (no executor state).
+    fn stage_fwd_flat(&self, stage: usize, flat: &[f32], x: &HostTensor) -> Result<Tensor>;
+
+    /// Loss-stage forward from a flat run: scalar loss.
+    fn last_fwd_loss_flat(&self, flat: &[f32], x: &Tensor, targets: &IntTensor)
+        -> Result<f32>;
+
+    /// Classifier logits from a flat run.
+    fn predict_flat(&self, flat: &[f32], x: &Tensor) -> Result<Tensor>;
+
+    /// Fused SGD over flat runs without executor state (tools/benches).
+    fn sgd_update_flat(
+        &self,
+        stage: usize,
+        params: &[f32],
+        moms: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) -> Result<()>;
+}
+
+/// Which backend a binary should construct.  Resolution order: explicit
+/// CLI value, then `CDP_BACKEND`, then the build's default (xla when the
+/// feature is compiled in — preserving pre-split behavior — else native).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    Native,
+    Xla,
+}
+
+impl BackendChoice {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendChoice::Native => "native",
+            BackendChoice::Xla => "xla",
+        }
+    }
+}
+
+/// Resolve the backend choice from an optional CLI value + `CDP_BACKEND`.
+/// Selecting `xla` in a build without the feature is an error with a
+/// build hint, not a silent fallback.
+pub fn backend_choice(cli: Option<&str>) -> Result<BackendChoice> {
+    let env = std::env::var("CDP_BACKEND").ok();
+    let raw = cli.map(str::to_string).or(env);
+    let choice = match raw.as_deref().map(str::to_ascii_lowercase).as_deref() {
+        Some("native") => BackendChoice::Native,
+        Some("xla") | Some("pjrt") => BackendChoice::Xla,
+        Some(other) => anyhow::bail!("unknown backend `{other}` (native|xla)"),
+        None => {
+            if cfg!(feature = "xla") {
+                BackendChoice::Xla
+            } else {
+                BackendChoice::Native
+            }
+        }
+    };
+    if choice == BackendChoice::Xla && !cfg!(feature = "xla") {
+        anyhow::bail!(
+            "backend `xla` requested but this binary was built without the \
+             `xla` feature — rebuild with `cargo build --features xla` \
+             (needs the xla_extension toolchain, see DESIGN-PERF.md \
+             §Toolchain) or use `--backend native`"
+        );
+    }
+    Ok(choice)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_choice_explicit_values() {
+        assert_eq!(backend_choice(Some("native")).unwrap(), BackendChoice::Native);
+        assert!(backend_choice(Some("bogus")).is_err());
+        #[cfg(not(feature = "xla"))]
+        {
+            assert!(backend_choice(Some("xla")).is_err(), "xla without the feature");
+        }
+        #[cfg(feature = "xla")]
+        {
+            assert_eq!(backend_choice(Some("xla")).unwrap(), BackendChoice::Xla);
+        }
+    }
+
+    #[test]
+    fn backend_choice_default_matches_build() {
+        // unless the environment overrides it, the default follows the
+        // compiled feature set
+        if std::env::var("CDP_BACKEND").is_err() {
+            let want = if cfg!(feature = "xla") {
+                BackendChoice::Xla
+            } else {
+                BackendChoice::Native
+            };
+            assert_eq!(backend_choice(None).unwrap(), want);
+        }
+    }
+}

@@ -12,7 +12,8 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use super::device_store::{DeviceParamStore, DeviceTensor};
+use super::backend::{Backend, ExecMode};
+use super::device_store::{Act, DeviceParamStore, DeviceTensor, Executor};
 use super::literal::{
     host_to_literal, int_tensor_to_literal, literal_into_slice, literal_to_scalar,
     literal_to_tensor, slice_to_literal, tensor_to_literal,
@@ -861,3 +862,152 @@ impl BundleRuntime {
         Ok(bufs)
     }
 }
+
+/// The XLA execution path behind the coordinator-facing [`Backend`]
+/// boundary: per-trainer state is an [`Executor`] (literal cache on the
+/// host path, [`DeviceParamStore`] on the device path), activations hand
+/// off as [`Act`], and every call delegates to the typed entry points
+/// above.  `BundleRuntime` *is* the `xla` backend — the alias
+/// [`XlaBackend`] names it at selection sites.
+#[allow(clippy::too_many_arguments)]
+impl Backend for BundleRuntime {
+    type Act = Act;
+    type Exec = Executor;
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn init_params_flat(&self) -> Result<Vec<f32>> {
+        BundleRuntime::init_params_flat(self)
+    }
+
+    fn executor(&self, mode: ExecMode) -> Executor {
+        Executor::new(mode, self.manifest.n_stages)
+    }
+
+    fn exec_mode(&self, exec: &Executor) -> ExecMode {
+        exec.mode()
+    }
+
+    fn param_uploads(&self, exec: &Executor) -> Option<u64> {
+        exec.device_store().map(|s| s.param_uploads())
+    }
+
+    fn input(&self, exec: &mut Executor, x: HostTensor) -> Result<Act> {
+        exec.input(self, x)
+    }
+
+    fn fwd(
+        &self,
+        exec: &mut Executor,
+        stage: usize,
+        version: u64,
+        flat: &[f32],
+        x: &Act,
+    ) -> Result<Act> {
+        exec.fwd(self, stage, version, flat, x)
+    }
+
+    fn last_bwd(
+        &self,
+        exec: &mut Executor,
+        version: u64,
+        flat: &[f32],
+        x: &Act,
+        targets: &IntTensor,
+        gdst: &mut [f32],
+    ) -> Result<(f32, Act)> {
+        exec.last_bwd(self, version, flat, x, targets, gdst)
+    }
+
+    fn mid_bwd(
+        &self,
+        exec: &mut Executor,
+        stage: usize,
+        version: u64,
+        flat: &[f32],
+        x: &Act,
+        gy: &Act,
+        gdst: &mut [f32],
+    ) -> Result<Act> {
+        exec.mid_bwd(self, stage, version, flat, x, gy, gdst)
+    }
+
+    fn first_bwd(
+        &self,
+        exec: &mut Executor,
+        version: u64,
+        flat: &[f32],
+        x: &Act,
+        gy: &Act,
+        gdst: &mut [f32],
+    ) -> Result<()> {
+        exec.first_bwd(self, version, flat, x, gy, gdst)
+    }
+
+    fn sgd(
+        &self,
+        exec: &mut Executor,
+        stage: usize,
+        version: u64,
+        cur: &[f32],
+        moms: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        exec.sgd(self, stage, version, cur, moms, grads, lr, out)
+    }
+
+    fn stage_fwd_flat(&self, stage: usize, flat: &[f32], x: &HostTensor) -> Result<Tensor> {
+        BundleRuntime::stage_fwd_flat(self, stage, flat, x)
+    }
+
+    fn last_fwd_loss_flat(
+        &self,
+        flat: &[f32],
+        x: &Tensor,
+        targets: &IntTensor,
+    ) -> Result<f32> {
+        BundleRuntime::last_fwd_loss_flat(self, flat, x, targets)
+    }
+
+    fn predict_flat(&self, flat: &[f32], x: &Tensor) -> Result<Tensor> {
+        BundleRuntime::predict_flat(self, flat, x)
+    }
+
+    fn sgd_update_flat(
+        &self,
+        stage: usize,
+        params: &[f32],
+        moms: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        BundleRuntime::sgd_update_flat(self, stage, params, moms, grads, lr, out)
+    }
+}
+
+/// Name alias for backend-selection sites: the `xla` backend is the
+/// compiled-bundle runtime itself.
+pub type XlaBackend = BundleRuntime;
+
+// SAFETY: the `xla` crate's wrappers hold raw pointers without
+// Send/Sync, but the underlying PJRT C++ objects are documented
+// thread-safe for compilation-free use: `PjRtLoadedExecutable::Execute`
+// may be called concurrently, and each call here constructs its own
+// `Literal`s.  We never share a Literal across threads, never mutate an
+// executable, and compile everything before the trainers spawn workers.
+// The same contract covers the device-resident path: `PjRtClient`
+// buffer creation and `execute_b` are thread-safe, and every
+// `PjRtBuffer`/`DeviceTensor` is created, used and dropped by exactly
+// one worker thread (each worker owns its executor state; buffers never
+// cross threads).
+unsafe impl Send for BundleRuntime {}
+unsafe impl Sync for BundleRuntime {}

@@ -33,39 +33,7 @@ use anyhow::Result;
 use super::{anyhow_xla, BundleRuntime};
 use crate::tensor::{HostTensor, IntTensor, Tensor};
 
-/// Which execution path a trainer drives (`CDP_EXEC_MODE=host|device`
-/// overrides the per-trainer default).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ExecMode {
-    /// Host/literal boundary — the reference oracle path.
-    HostLiteral,
-    /// Persistent device buffers for parameters/momentum, device-side
-    /// activation hand-off.
-    DeviceResident,
-}
-
-impl ExecMode {
-    /// Resolve the mode, letting `CDP_EXEC_MODE` override the default
-    /// (case-insensitive; an unrecognized value warns loudly instead of
-    /// silently running the wrong path — these A/B measurements are the
-    /// point of the knob).
-    pub fn from_env(default: Self) -> Self {
-        match std::env::var("CDP_EXEC_MODE") {
-            Ok(v) => match v.to_ascii_lowercase().as_str() {
-                "host" | "literal" => ExecMode::HostLiteral,
-                "device" => ExecMode::DeviceResident,
-                other => {
-                    eprintln!(
-                        "CDP_EXEC_MODE=`{other}` not recognized \
-                         (use host|device); keeping {default:?}"
-                    );
-                    default
-                }
-            },
-            Err(_) => default,
-        }
-    }
-}
+pub use super::backend::ExecMode;
 
 /// A device-resident tensor: one `PjRtBuffer` plus its logical shape.
 /// The unit of inter-stage activation hand-off on the device path.
@@ -274,27 +242,67 @@ impl Act {
     }
 }
 
+impl super::backend::Activation for Act {
+    fn bytes(&self) -> usize {
+        Act::bytes(self)
+    }
+}
+
+/// Per-stage, per-θ-version cache of parameter *literals* for the host
+/// path — the literal-layer mirror of [`DeviceParamStore`]'s upload
+/// discipline: a (stage, θ-version) builds its literals at most once and
+/// evicts versions older than `version − 1`.  Before the backend split
+/// the reference trainer kept an equivalent cache per step by hand;
+/// keying on the θ-version id moves it behind the [`Executor`] surface so
+/// the schedule logic is version-annotated and cache-free.
+pub struct LitStore {
+    /// stage → resident versions, newest last, ≤ 3 entries.
+    params: Vec<Vec<(u64, Vec<xla::Literal>)>>,
+}
+
+impl LitStore {
+    fn new(n_stages: usize) -> Self {
+        Self { params: (0..n_stages).map(|_| Vec::new()).collect() }
+    }
+
+    fn params(
+        &mut self,
+        rt: &BundleRuntime,
+        stage: usize,
+        version: u64,
+        src: &[f32],
+    ) -> Result<&[xla::Literal]> {
+        self.params[stage].retain(|(v, _)| *v + 1 >= version);
+        if let Some(pos) = self.params[stage].iter().position(|(v, _)| *v == version) {
+            return Ok(&self.params[stage][pos].1);
+        }
+        let lits = rt.param_literals_flat(stage, src)?;
+        self.params[stage].push((version, lits));
+        Ok(&self.params[stage].last().expect("just pushed").1)
+    }
+}
+
 /// One execution boundary for trainer schedule logic: the literal (host)
 /// path or the device-resident path, selected once per trainer.  Every
-/// method takes the stage's host flat run + θ-version id — the host path
-/// ignores the version (it rebuilds literals from the run), the device
-/// path ignores the run unless the version needs its one upload.
+/// method takes the stage's host flat run + θ-version id — both paths
+/// key their per-version caches on the id and read the run only when the
+/// version pays its one conversion/upload.
 pub enum Executor {
-    Host,
+    Host(LitStore),
     Device(DeviceParamStore),
 }
 
 impl Executor {
     pub fn new(mode: ExecMode, n_stages: usize) -> Self {
         match mode {
-            ExecMode::HostLiteral => Executor::Host,
+            ExecMode::HostLiteral => Executor::Host(LitStore::new(n_stages)),
             ExecMode::DeviceResident => Executor::Device(DeviceParamStore::new(n_stages)),
         }
     }
 
     pub fn mode(&self) -> ExecMode {
         match self {
-            Executor::Host => ExecMode::HostLiteral,
+            Executor::Host(_) => ExecMode::HostLiteral,
             Executor::Device(_) => ExecMode::DeviceResident,
         }
     }
@@ -302,7 +310,7 @@ impl Executor {
     /// The device store, when on the device path (benches/tests).
     pub fn device_store(&self) -> Option<&DeviceParamStore> {
         match self {
-            Executor::Host => None,
+            Executor::Host(_) => None,
             Executor::Device(s) => Some(s),
         }
     }
@@ -312,7 +320,7 @@ impl Executor {
     /// the irreducible host→device traffic).
     pub fn input(&self, rt: &BundleRuntime, x: HostTensor) -> Result<Act> {
         match self {
-            Executor::Host => Ok(Act::Host(x)),
+            Executor::Host(_) => Ok(Act::Host(x)),
             Executor::Device(_) => Ok(Act::Device(rt.upload_host(&x)?)),
         }
     }
@@ -327,8 +335,9 @@ impl Executor {
         x: &Act,
     ) -> Result<Act> {
         match self {
-            Executor::Host => {
-                Ok(Act::Host(HostTensor::F32(rt.stage_fwd_flat(stage, flat, x.host())?)))
+            Executor::Host(cache) => {
+                let lits = cache.params(rt, stage, version, flat)?;
+                Ok(Act::Host(HostTensor::F32(rt.stage_fwd_lits(stage, lits, x.host())?)))
             }
             Executor::Device(store) => {
                 let p = store.params(rt, stage, version, flat)?;
@@ -350,8 +359,10 @@ impl Executor {
     ) -> Result<(f32, Act)> {
         let last = rt.manifest.n_stages - 1;
         match self {
-            Executor::Host => {
-                let (loss, gx) = rt.last_bwd_flat(flat, x.host_f32(), targets, gdst)?;
+            Executor::Host(cache) => {
+                let lits = cache.params(rt, last, version, flat)?;
+                let (loss, gx) =
+                    rt.last_bwd_lits_into(lits, x.host_f32(), targets, gdst)?;
                 Ok((loss, Act::Host(HostTensor::F32(gx))))
             }
             Executor::Device(store) => {
@@ -376,9 +387,10 @@ impl Executor {
         gdst: &mut [f32],
     ) -> Result<Act> {
         match self {
-            Executor::Host => {
+            Executor::Host(cache) => {
+                let lits = cache.params(rt, stage, version, flat)?;
                 let gx =
-                    rt.mid_bwd_flat(stage, flat, x.host_f32(), gy.host_f32(), gdst)?;
+                    rt.mid_bwd_lits_into(stage, lits, x.host_f32(), gy.host_f32(), gdst)?;
                 Ok(Act::Host(HostTensor::F32(gx)))
             }
             Executor::Device(store) => {
@@ -400,7 +412,10 @@ impl Executor {
         gdst: &mut [f32],
     ) -> Result<()> {
         match self {
-            Executor::Host => rt.first_bwd_flat(flat, x.host(), gy.host_f32(), gdst),
+            Executor::Host(cache) => {
+                let lits = cache.params(rt, 0, version, flat)?;
+                rt.first_bwd_lits_into(lits, x.host(), gy.host_f32(), gdst)
+            }
             Executor::Device(store) => {
                 let p = store.params(rt, 0, version, flat)?;
                 rt.first_bwd_dev(p, x.device(), gy.device(), gdst)
@@ -424,7 +439,7 @@ impl Executor {
         out: &mut [f32],
     ) -> Result<()> {
         match self {
-            Executor::Host => rt.sgd_update_flat(stage, cur, moms, grads, lr, out),
+            Executor::Host(_) => rt.sgd_update_flat(stage, cur, moms, grads, lr, out),
             Executor::Device(store) => {
                 rt.sgd_update_dev(stage, store, version, cur, moms, grads, lr, out)
             }

@@ -1,29 +1,47 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
-//! the coordinator's hot path — through the literal boundary (the
-//! reference path) or the device-resident boundary ([`device_store`]:
-//! persistent parameter/momentum buffers, device-side activation
-//! hand-off, transfer accounting).
+//! Execution runtimes behind one [`Backend`] boundary (DESIGN-PERF.md
+//! §Backend boundary):
 //!
-//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! - [`backend`] — the trait the coordinators drive: stage forward,
+//!   first/mid/last backward into arena slices, fused SGD, predict+loss,
+//!   plus [`ExecMode`] and backend selection (`CDP_BACKEND`).
+//! - [`native`]  — pure-Rust [`NativeBackend`]: the mlp stage graphs
+//!   executed with `tensor::ops` kernels.  The default build; zero
+//!   external dependencies.
+//! - [`bundle`] / [`device_store`] / [`literal`] (feature `xla`) — the
+//!   PJRT path: load AOT HLO-text artifacts, compile once, execute
+//!   through the literal boundary or the device-resident boundary
+//!   (persistent parameter/momentum buffers, device-side activation
+//!   hand-off, transfer accounting).
+//!
+//! The XLA path wraps the `xla` crate: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`.  Interchange is HLO **text** because the
 //! crate's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos
 //! (64-bit instruction ids); the text parser reassigns ids.
 //!
 //! Python never runs here: after `make artifacts` the binary is
-//! self-contained.
+//! self-contained — and without the `xla` feature, self-contained from
+//! `cargo build` alone.
 
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod bundle;
+#[cfg(feature = "xla")]
 pub mod device_store;
+#[cfg(feature = "xla")]
 pub mod literal;
+pub mod native;
 
-use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use anyhow::{Context, Result};
+pub use backend::{backend_choice, Activation, Backend, BackendChoice, ExecMode};
+pub use native::{NativeBackend, NativeExec, NativeMlpConfig};
 
-pub use bundle::{BundleRuntime, Kind};
-pub use device_store::{Act, DeviceParamStore, DeviceTensor, ExecMode, Executor};
+#[cfg(feature = "xla")]
+pub use bundle::{BundleRuntime, Kind, XlaBackend};
+#[cfg(feature = "xla")]
+pub use device_store::{Act, DeviceParamStore, DeviceTensor, Executor};
+#[cfg(feature = "xla")]
 pub use literal::{
     literal_into_slice, literal_to_tensor, slice_to_literal, tensor_to_literal,
 };
@@ -35,6 +53,7 @@ pub use literal::{
 /// quantity the device-resident contract bounds (≤ 1 per stage per
 /// committed θ-version, vs one per stage per micro-batch on the literal
 /// path).  Atomics so the shared runtime can account from worker threads.
+/// The native backend has no device and keeps these at zero.
 #[derive(Debug, Default)]
 pub struct TransferStats {
     pub h2d_bytes: AtomicU64,
@@ -77,12 +96,14 @@ impl TransferStats {
 }
 
 /// Shared PJRT client + compile cache keyed by artifact path.
+#[cfg(feature = "xla")]
 pub struct Engine {
     pub client: xla::PjRtClient,
 }
 
+#[cfg(feature = "xla")]
 impl Engine {
-    pub fn cpu() -> Result<Self> {
+    pub fn cpu() -> anyhow::Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
         Ok(Self { client })
     }
@@ -92,7 +113,11 @@ impl Engine {
     }
 
     /// Load + compile one HLO-text artifact.
-    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    pub fn compile_hlo_file(
+        &self,
+        path: &std::path::Path,
+    ) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        use anyhow::Context;
         let proto = xla::HloModuleProto::from_text_file(path)
             .map_err(anyhow_xla)
             .with_context(|| format!("parse HLO text {path:?}"))?;
@@ -106,16 +131,18 @@ impl Engine {
 
 /// The `xla` crate error type doesn't implement std::error::Error for
 /// anyhow conversion in all versions; normalize here.
+#[cfg(feature = "xla")]
 pub fn anyhow_xla(e: xla::Error) -> anyhow::Error {
     anyhow::anyhow!("xla: {e:?}")
 }
 
 /// Execute and unpack the single-tuple result into literals.
 /// Accepts owned or borrowed literals (the param-literal cache passes refs).
+#[cfg(feature = "xla")]
 pub fn execute_tuple<L: std::borrow::Borrow<xla::Literal>>(
     exe: &xla::PjRtLoadedExecutable,
     args: &[L],
-) -> Result<Vec<xla::Literal>> {
+) -> anyhow::Result<Vec<xla::Literal>> {
     let result = exe.execute::<L>(args).map_err(anyhow_xla)?;
     let lit = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
     lit.to_tuple().map_err(anyhow_xla)
@@ -130,10 +157,11 @@ pub fn execute_tuple<L: std::borrow::Borrow<xla::Literal>>(
 /// happens at the literal layer, which on the CPU PJRT backend is one
 /// memcpy — see DESIGN-PERF.md §Device residency for what this does and
 /// does not avoid.
+#[cfg(feature = "xla")]
 pub fn execute_buffers<B: std::borrow::Borrow<xla::PjRtBuffer>>(
     exe: &xla::PjRtLoadedExecutable,
     args: &[B],
-) -> Result<Vec<xla::Literal>> {
+) -> anyhow::Result<Vec<xla::Literal>> {
     let result = exe.execute_b::<B>(args).map_err(anyhow_xla)?;
     let lit = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
     lit.to_tuple().map_err(anyhow_xla)

@@ -1,0 +1,728 @@
+//! Pure-Rust execution backend: the mlp family's stage graphs (the fast
+//! numeric model of `python/compile/model.py`) executed with the
+//! [`crate::tensor::ops`] dense kernels — matmul, relu, bias, softmax-CE
+//! and the fused SGD — with no XLA, no artifacts, no network.
+//!
+//! This is the backend the required CI lane builds and tests: every
+//! schedule/update-rule/communication property of the paper is exercised
+//! end-to-end on it.  Two construction paths:
+//!
+//! - [`NativeBackend::load`] — a bundle directory's `manifest.json` +
+//!   `params.bin` (the same files the XLA path uses; HLO artifacts are
+//!   ignored), so a `make artifacts` mlp bundle runs on either backend
+//!   from identical θ_0;
+//! - [`NativeBackend::synthetic`] — a fully in-memory bundle (manifest +
+//!   deterministic θ_0 from the crate's own RNG), requiring zero files.
+//!
+//! Math, mirroring `Mlp.stage_apply` / `loss_apply`:
+//!
+//! ```text
+//! stage 0 prologue:  h ← relu(x·W_in + b_in)
+//! residual layer:    h ← h + 0.3·relu(h·W_l + b_l)      (×L per stage)
+//! loss head:         logits ← h·W_out + b_out;  CE = mean_b(logsumexp − logit_t)
+//! sgd:               m' ← µ·m + g;  p' ← p − lr·m'
+//! ```
+//!
+//! The backward recomputes the stage forward from the stage input
+//! (stage-granularity rematerialization — the same contract as the AOT
+//! `fwdbwd` artifacts), and writes parameter gradients straight into the
+//! caller's arena slice in manifest view order.  Everything is a pure
+//! deterministic function of its inputs, so the trainers' bit-identity
+//! invariants hold natively exactly as they do on XLA.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::backend::{Backend, ExecMode};
+use crate::model::{DataSpec, DType, IoSpec, Manifest, ParamSpec, StageSpec};
+use crate::parallel::arena::{ArenaLayout, ViewSpec};
+use crate::tensor::ops;
+use crate::tensor::{HostTensor, IntTensor, Tensor};
+use crate::util::binio;
+use crate::util::rng::{splitmix64, XorShift64Star};
+
+/// Residual-branch scale, fixed by the python model (`Mlp.RES_SCALE`).
+pub const RES_SCALE: f32 = 0.3;
+
+/// The mlp family's global dimensions, validated against the manifest.
+#[derive(Clone, Copy, Debug)]
+struct MlpShape {
+    input_dim: usize,
+    hidden: usize,
+    classes: usize,
+}
+
+/// Configuration for [`NativeBackend::synthetic`].  The default mirrors
+/// the `mlp` bundle of `python/compile/configs.py` (hidden 128, 4 stages
+/// × 2 residual layers, micro-batch 8, lr 0.01, µ 0.9) — θ_0 differs (the
+/// crate's deterministic RNG instead of numpy's), which is irrelevant to
+/// every schedule property and keeps the bundle self-consistent.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeMlpConfig {
+    pub classes: usize,
+    pub input_dim: usize,
+    pub hidden: usize,
+    pub layers_per_stage: usize,
+    pub microbatch: usize,
+    pub n_stages: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub noise: f32,
+    pub data_seed: u64,
+    pub param_seed: u64,
+}
+
+impl Default for NativeMlpConfig {
+    fn default() -> Self {
+        Self {
+            classes: 10,
+            input_dim: 64,
+            hidden: 128,
+            layers_per_stage: 2,
+            microbatch: 8,
+            n_stages: 4,
+            lr: 0.01,
+            momentum: 0.9,
+            noise: 0.3,
+            data_seed: 99,
+            param_seed: 7,
+        }
+    }
+}
+
+impl NativeMlpConfig {
+    /// A deliberately tiny model for property tests / gradient checks.
+    pub fn tiny() -> Self {
+        Self {
+            classes: 3,
+            input_dim: 5,
+            hidden: 6,
+            layers_per_stage: 1,
+            microbatch: 2,
+            n_stages: 2,
+            ..Self::default()
+        }
+    }
+}
+
+/// Per-trainer execution state of the native backend.  The native path
+/// has no device, so there is nothing to cache — the struct only records
+/// that a requested `DeviceResident` mode was coerced to the single
+/// (host) path.
+pub struct NativeExec {
+    _requested: ExecMode,
+}
+
+pub struct NativeBackend {
+    pub manifest: Manifest,
+    layout: Arc<ArenaLayout>,
+    shape: MlpShape,
+    /// θ_0, model-wide stage-major flat (arena order).
+    init: Vec<f32>,
+}
+
+impl NativeBackend {
+    /// Load a bundle directory (`manifest.json` + `params.bin`); the HLO
+    /// artifacts, if present, are ignored.  Only the mlp family executes
+    /// natively — other families need the `xla` feature.
+    pub fn load(dir: &std::path::Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let shape = validate_mlp(&manifest)?;
+        let layout = ArenaLayout::from_manifest(&manifest);
+        let init = binio::read_f32_file(&manifest.params_bin())
+            .with_context(|| format!("read {:?}", manifest.params_bin()))?;
+        anyhow::ensure!(
+            init.len() == manifest.total_param_elems,
+            "params.bin has {} elems, manifest says {}",
+            init.len(),
+            manifest.total_param_elems
+        );
+        Ok(Self { manifest, layout, shape, init })
+    }
+
+    /// Build a fully in-memory mlp bundle: manifest synthesized from
+    /// `cfg`, θ_0 drawn from the crate's deterministic RNG.  No files.
+    pub fn synthetic(cfg: NativeMlpConfig) -> Self {
+        let manifest = synthetic_manifest(&cfg);
+        let layout = ArenaLayout::from_manifest(&manifest);
+        let shape = MlpShape {
+            input_dim: cfg.input_dim,
+            hidden: cfg.hidden,
+            classes: cfg.classes,
+        };
+        let init = init_params(&manifest, cfg.param_seed);
+        Self { manifest, layout, shape, init }
+    }
+
+    /// The default synthetic bundle (`native_mlp`).
+    pub fn default_mlp() -> Self {
+        Self::synthetic(NativeMlpConfig::default())
+    }
+
+    /// Load `name` from the artifacts root when present, else fall back
+    /// to the synthetic bundle for the names that have one.
+    pub fn load_or_synthetic(name: &str) -> Result<Self> {
+        let dir = crate::model::artifacts_root().join(name);
+        if dir.join("manifest.json").exists() {
+            return Self::load(&dir);
+        }
+        match name {
+            "mlp" | "native_mlp" => Ok(Self::default_mlp()),
+            other => anyhow::bail!(
+                "bundle `{other}` not found under {:?} and has no synthetic \
+                 fallback — the native backend executes the mlp family only \
+                 (`mlp`, `native_mlp`); transformer/convnet bundles need \
+                 `--features xla` + `make artifacts`",
+                crate::model::artifacts_root()
+            ),
+        }
+    }
+
+    pub fn layout(&self) -> &Arc<ArenaLayout> {
+        &self.layout
+    }
+
+    /// (has input prologue, residual layer count, has loss head) of stage j.
+    fn stage_shape(&self, j: usize) -> (bool, usize, bool) {
+        let n = self.manifest.n_stages;
+        let views = self.layout.stages[j].views.len();
+        let extras = usize::from(j == 0) * 2 + usize::from(j == n - 1) * 2;
+        (j == 0, (views - extras) / 2, j == n - 1)
+    }
+
+    /// Stage-relative view slice of a flat run.
+    fn view<'a>(run: &'a [f32], v: &ViewSpec) -> &'a [f32] {
+        &run[v.offset..v.offset + v.len]
+    }
+
+    fn view_mut<'a>(run: &'a mut [f32], v: &ViewSpec) -> &'a mut [f32] {
+        &mut run[v.offset..v.offset + v.len]
+    }
+
+    /// Forward through stage j's prologue + residual body (everything
+    /// except the loss head), stashing pre-activations when `stash` asks
+    /// for them (the backward's rematerialization).  Returns h [b, H]
+    /// flat; stashes are (u_in, per-layer (h_l, u_l)).
+    #[allow(clippy::type_complexity)]
+    fn body_fwd(
+        &self,
+        j: usize,
+        flat: &[f32],
+        x: &Tensor,
+        stash: bool,
+    ) -> Result<(Vec<f32>, Option<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        let (has_input, n_layers, _) = self.stage_shape(j);
+        let views = &self.layout.stages[j].views;
+        let h_dim = self.shape.hidden;
+        anyhow::ensure!(x.shape.len() == 2, "stage {j}: input must be [b, d]");
+        let b = x.shape[0];
+        let d_in = x.shape[1];
+
+        let mut u_in = None;
+        let mut vi = 0usize;
+        let mut h: Vec<f32> = if has_input {
+            anyhow::ensure!(
+                d_in == self.shape.input_dim,
+                "stage 0: input dim {d_in} != manifest {}",
+                self.shape.input_dim
+            );
+            let w = Self::view(flat, &views[0]);
+            let bias = Self::view(flat, &views[1]);
+            vi = 2;
+            let mut u = vec![0.0f32; b * h_dim];
+            ops::matmul(&mut u, &x.data, w, b, d_in, h_dim);
+            ops::bias_add(&mut u, bias);
+            let mut h0 = u.clone();
+            ops::relu(&mut h0);
+            if stash {
+                u_in = Some(u);
+            }
+            h0
+        } else {
+            anyhow::ensure!(d_in == h_dim, "stage {j}: input dim {d_in} != hidden {h_dim}");
+            x.data.clone()
+        };
+
+        let mut hs: Vec<Vec<f32>> = Vec::new();
+        let mut us: Vec<Vec<f32>> = Vec::new();
+        for l in 0..n_layers {
+            let w = Self::view(flat, &views[vi + 2 * l]);
+            let bias = Self::view(flat, &views[vi + 2 * l + 1]);
+            let mut u = vec![0.0f32; b * h_dim];
+            ops::matmul(&mut u, &h, w, b, h_dim, h_dim);
+            ops::bias_add(&mut u, bias);
+            let mut r = u.clone();
+            ops::relu(&mut r);
+            if stash {
+                hs.push(h.clone());
+                us.push(u);
+            }
+            ops::axpy(&mut h, RES_SCALE, &r);
+        }
+        Ok((h, u_in, hs, us))
+    }
+
+    /// Logits of the loss stage: body forward + the head linear.
+    fn logits(&self, flat: &[f32], x: &Tensor) -> Result<Vec<f32>> {
+        let j = self.manifest.n_stages - 1;
+        let (h, _, _, _) = self.body_fwd(j, flat, x, false)?;
+        let views = &self.layout.stages[j].views;
+        let (out_wv, out_bv) = (&views[views.len() - 2], &views[views.len() - 1]);
+        let b = x.shape[0];
+        let (h_dim, c) = (self.shape.hidden, self.shape.classes);
+        let mut logits = vec![0.0f32; b * c];
+        ops::matmul(&mut logits, &h, Self::view(flat, out_wv), b, h_dim, c);
+        ops::bias_add(&mut logits, Self::view(flat, out_bv));
+        Ok(logits)
+    }
+
+    /// Unified backward of stage j: recompute the forward with stashes,
+    /// seed the gradient from the loss head (`targets`) or the upstream
+    /// cotangent (`gy`), and walk the body in reverse writing every
+    /// parameter-gradient view of `gdst` exactly once.  Returns (loss —
+    /// 0 for non-loss stages — and gx w.r.t. the stage input).
+    fn stage_bwd(
+        &self,
+        j: usize,
+        flat: &[f32],
+        x: &Tensor,
+        gy: Option<&Tensor>,
+        targets: Option<&IntTensor>,
+        gdst: &mut [f32],
+    ) -> Result<(f32, Tensor)> {
+        let (has_input, n_layers, has_head) = self.stage_shape(j);
+        let views = &self.layout.stages[j].views;
+        anyhow::ensure!(
+            gdst.len() == self.layout.stage_len(j),
+            "stage {j}: gdst len {} != stage run {}",
+            gdst.len(),
+            self.layout.stage_len(j)
+        );
+        let b = x.shape[0];
+        let (h_dim, c) = (self.shape.hidden, self.shape.classes);
+        let (h_last, u_in, hs, us) = self.body_fwd(j, flat, x, true)?;
+
+        // seed gradient: loss head or upstream cotangent
+        let mut loss = 0.0f32;
+        let mut g: Vec<f32> = if has_head {
+            let t = targets.context("loss stage needs targets")?;
+            anyhow::ensure!(t.data.len() == b, "targets len != batch");
+            let (out_wv, out_bv) = (&views[views.len() - 2], &views[views.len() - 1]);
+            let out_w = Self::view(flat, out_wv);
+            let mut logits = vec![0.0f32; b * c];
+            ops::matmul(&mut logits, &h_last, out_w, b, h_dim, c);
+            ops::bias_add(&mut logits, Self::view(flat, out_bv));
+            let mut dlogits = vec![0.0f32; b * c];
+            loss = ops::softmax_ce(&logits, &t.data, c, &mut dlogits);
+            ops::matmul_tn(Self::view_mut(gdst, out_wv), &h_last, &dlogits, b, h_dim, c);
+            ops::col_sums(Self::view_mut(gdst, out_bv), &dlogits);
+            let mut g = vec![0.0f32; b * h_dim];
+            ops::matmul_nt_acc(&mut g, &dlogits, out_w, b, c, h_dim);
+            g
+        } else {
+            let gy = gy.context("non-loss stage needs an upstream cotangent")?;
+            anyhow::ensure!(
+                gy.data.len() == b * h_dim,
+                "stage {j}: cotangent is {} elems, want {}",
+                gy.data.len(),
+                b * h_dim
+            );
+            gy.data.clone()
+        };
+
+        // residual layers, reverse order
+        let vi = if has_input { 2 } else { 0 };
+        let mut du = vec![0.0f32; b * h_dim];
+        for l in (0..n_layers).rev() {
+            let wv = &views[vi + 2 * l];
+            let bv = &views[vi + 2 * l + 1];
+            ops::relu_bwd_scaled(&mut du, &g, &us[l], RES_SCALE);
+            ops::matmul_tn(Self::view_mut(gdst, wv), &hs[l], &du, b, h_dim, h_dim);
+            ops::col_sums(Self::view_mut(gdst, bv), &du);
+            ops::matmul_nt_acc(&mut g, &du, Self::view(flat, wv), b, h_dim, h_dim);
+        }
+
+        // stage-0 prologue
+        let gx = if has_input {
+            let (wv, bv) = (&views[0], &views[1]);
+            let u = u_in.expect("stage 0 stashed its prologue pre-activation");
+            let mut du_in = vec![0.0f32; b * h_dim];
+            ops::relu_bwd_scaled(&mut du_in, &g, &u, 1.0);
+            let d = self.shape.input_dim;
+            ops::matmul_tn(Self::view_mut(gdst, wv), &x.data, &du_in, b, d, h_dim);
+            ops::col_sums(Self::view_mut(gdst, bv), &du_in);
+            let mut gx = vec![0.0f32; b * d];
+            ops::matmul_nt_acc(&mut gx, &du_in, Self::view(flat, wv), b, h_dim, d);
+            Tensor::new(vec![b, d], gx)
+        } else {
+            Tensor::new(vec![b, h_dim], g)
+        };
+        Ok((loss, gx))
+    }
+
+    fn act_f32<'a>(&self, j: usize, x: &'a HostTensor) -> Result<&'a Tensor> {
+        x.as_f32().with_context(|| {
+            format!("native backend: stage {j} input must be f32 (mlp family)")
+        })
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl Backend for NativeBackend {
+    type Act = HostTensor;
+    type Exec = NativeExec;
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn init_params_flat(&self) -> Result<Vec<f32>> {
+        Ok(self.init.clone())
+    }
+
+    fn executor(&self, mode: ExecMode) -> NativeExec {
+        NativeExec { _requested: mode }
+    }
+
+    fn exec_mode(&self, _exec: &NativeExec) -> ExecMode {
+        // single execution path: a requested DeviceResident coerces here
+        ExecMode::HostLiteral
+    }
+
+    fn input(&self, _exec: &mut NativeExec, x: HostTensor) -> Result<HostTensor> {
+        Ok(x)
+    }
+
+    fn fwd(
+        &self,
+        _exec: &mut NativeExec,
+        stage: usize,
+        _version: u64,
+        flat: &[f32],
+        x: &HostTensor,
+    ) -> Result<HostTensor> {
+        Ok(HostTensor::F32(Backend::stage_fwd_flat(self, stage, flat, x)?))
+    }
+
+    fn last_bwd(
+        &self,
+        _exec: &mut NativeExec,
+        _version: u64,
+        flat: &[f32],
+        x: &HostTensor,
+        targets: &IntTensor,
+        gdst: &mut [f32],
+    ) -> Result<(f32, HostTensor)> {
+        let last = self.manifest.n_stages - 1;
+        let x = self.act_f32(last, x)?;
+        let (loss, gx) = self.stage_bwd(last, flat, x, None, Some(targets), gdst)?;
+        Ok((loss, HostTensor::F32(gx)))
+    }
+
+    fn mid_bwd(
+        &self,
+        _exec: &mut NativeExec,
+        stage: usize,
+        _version: u64,
+        flat: &[f32],
+        x: &HostTensor,
+        gy: &HostTensor,
+        gdst: &mut [f32],
+    ) -> Result<HostTensor> {
+        let x = self.act_f32(stage, x)?;
+        let gy = self.act_f32(stage, gy)?;
+        let (_, gx) = self.stage_bwd(stage, flat, x, Some(gy), None, gdst)?;
+        Ok(HostTensor::F32(gx))
+    }
+
+    fn first_bwd(
+        &self,
+        _exec: &mut NativeExec,
+        _version: u64,
+        flat: &[f32],
+        x: &HostTensor,
+        gy: &HostTensor,
+        gdst: &mut [f32],
+    ) -> Result<()> {
+        let x = self.act_f32(0, x)?;
+        let gy = self.act_f32(0, gy)?;
+        self.stage_bwd(0, flat, x, Some(gy), None, gdst)?;
+        Ok(())
+    }
+
+    fn sgd(
+        &self,
+        _exec: &mut NativeExec,
+        stage: usize,
+        _version: u64,
+        cur: &[f32],
+        moms: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        Backend::sgd_update_flat(self, stage, cur, moms, grads, lr, out)
+    }
+
+    fn stage_fwd_flat(&self, stage: usize, flat: &[f32], x: &HostTensor) -> Result<Tensor> {
+        anyhow::ensure!(
+            stage + 1 < self.manifest.n_stages,
+            "stage_fwd_flat on the loss stage — use last_fwd_loss_flat/predict_flat"
+        );
+        let x = self.act_f32(stage, x)?;
+        let (h, _, _, _) = self.body_fwd(stage, flat, x, false)?;
+        let b = x.shape[0];
+        Ok(Tensor::new(vec![b, self.shape.hidden], h))
+    }
+
+    fn last_fwd_loss_flat(
+        &self,
+        flat: &[f32],
+        x: &Tensor,
+        targets: &IntTensor,
+    ) -> Result<f32> {
+        let logits = self.logits(flat, x)?;
+        Ok(ops::softmax_ce_loss(&logits, &targets.data, self.shape.classes))
+    }
+
+    fn predict_flat(&self, flat: &[f32], x: &Tensor) -> Result<Tensor> {
+        let logits = self.logits(flat, x)?;
+        let b = x.shape[0];
+        Ok(Tensor::new(vec![b, self.shape.classes], logits))
+    }
+
+    /// The python `sgd_momentum` kernel, elementwise over the flat run:
+    /// m' = µ·m + g; p' = p − lr·m' (µ from the manifest).
+    fn sgd_update_flat(
+        &self,
+        stage: usize,
+        params: &[f32],
+        moms: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == moms.len()
+                && params.len() == grads.len()
+                && params.len() == out.len()
+                && params.len() == self.layout.stage_len(stage),
+            "stage {stage}: flat run length mismatch"
+        );
+        let mu = self.manifest.momentum;
+        for i in 0..params.len() {
+            let m = mu * moms[i] + grads[i];
+            out[i] = params[i] - lr * m;
+            moms[i] = m;
+        }
+        Ok(())
+    }
+}
+
+/// Check the manifest describes an mlp-family model this backend can
+/// execute, and extract its dimensions.
+fn validate_mlp(m: &Manifest) -> Result<MlpShape> {
+    anyhow::ensure!(
+        m.family == "mlp",
+        "native backend executes the mlp family only, bundle `{}` is `{}` — \
+         build with `--features xla` for transformer/convnet",
+        m.name,
+        m.family
+    );
+    anyhow::ensure!(m.n_stages >= 1, "empty model");
+    let first = &m.stages[0];
+    anyhow::ensure!(
+        first.params.len() >= 2 && first.params[0].shape.len() == 2,
+        "stage 0 must start with the input projection"
+    );
+    let input_dim = first.params[0].shape[0];
+    let hidden = first.params[0].shape[1];
+    let last = &m.stages[m.n_stages - 1];
+    let head_w = &last.params[last.params.len() - 2];
+    anyhow::ensure!(
+        head_w.shape.len() == 2 && head_w.shape[0] == hidden,
+        "loss head shape mismatch"
+    );
+    let classes = head_w.shape[1];
+    // every stage: optional [D,H]+[H] prologue, pairs of [H,H]+[H]
+    // residual layers, optional [H,C]+[C] head — validated by elimination
+    for (j, st) in m.stages.iter().enumerate() {
+        let extras =
+            usize::from(j == 0) * 2 + usize::from(j == m.n_stages - 1) * 2;
+        anyhow::ensure!(
+            st.params.len() >= extras && (st.params.len() - extras) % 2 == 0,
+            "stage {j}: parameter count {} does not match the mlp pattern",
+            st.params.len()
+        );
+        let lo = usize::from(j == 0) * 2;
+        let hi = st.params.len() - usize::from(j == m.n_stages - 1) * 2;
+        for pair in st.params[lo..hi].chunks_exact(2) {
+            anyhow::ensure!(
+                pair[0].shape == [hidden, hidden] && pair[1].shape == [hidden],
+                "stage {j}: residual layer shape mismatch (want [{hidden},{hidden}]+[{hidden}])"
+            );
+        }
+    }
+    Ok(MlpShape { input_dim, hidden, classes })
+}
+
+/// Synthesize the manifest of an in-memory mlp bundle (mirrors the
+/// stage/spec construction of `python/compile/model.py::Mlp` +
+/// `aot.py`'s manifest emission).
+fn synthetic_manifest(cfg: &NativeMlpConfig) -> Manifest {
+    let (h, d, c, mb) = (cfg.hidden, cfg.input_dim, cfg.classes, cfg.microbatch);
+    let mut stages = Vec::with_capacity(cfg.n_stages);
+    for j in 0..cfg.n_stages {
+        let mut params = Vec::new();
+        if j == 0 {
+            params.push(ParamSpec { name: "in_w".into(), shape: vec![d, h] });
+            params.push(ParamSpec { name: "in_b".into(), shape: vec![h] });
+        }
+        for l in 0..cfg.layers_per_stage {
+            params.push(ParamSpec { name: format!("s{j}l{l}_w"), shape: vec![h, h] });
+            params.push(ParamSpec { name: format!("s{j}l{l}_b"), shape: vec![h] });
+        }
+        if j == cfg.n_stages - 1 {
+            params.push(ParamSpec { name: "out_w".into(), shape: vec![h, c] });
+            params.push(ParamSpec { name: "out_b".into(), shape: vec![c] });
+        }
+        let input = if j == 0 {
+            IoSpec { shape: vec![mb, d], dtype: DType::F32 }
+        } else {
+            IoSpec { shape: vec![mb, h], dtype: DType::F32 }
+        };
+        let output = (j != cfg.n_stages - 1)
+            .then(|| IoSpec { shape: vec![mb, h], dtype: DType::F32 });
+        // analytic accounting, following Mlp.stage_act_bytes / stage_flops
+        let act_bytes =
+            4 * mb as u64 * h as u64 * (2 * cfg.layers_per_stage as u64 + if j == 0 { 2 } else { 0 });
+        let mut flops = 2 * (mb * h * h * cfg.layers_per_stage) as u64;
+        if j == 0 {
+            flops += 2 * (mb * d * h) as u64;
+        }
+        if j == cfg.n_stages - 1 {
+            flops += 2 * (mb * h * c) as u64;
+        }
+        stages.push(StageSpec {
+            index: j,
+            params,
+            input,
+            output,
+            act_bytes,
+            flops,
+            artifacts: Vec::new(),
+        });
+    }
+    let total_param_elems = stages.iter().map(|s| s.param_elems()).sum();
+    Manifest {
+        name: "native_mlp".into(),
+        family: "mlp".into(),
+        n_stages: cfg.n_stages,
+        n_microbatches: cfg.n_stages,
+        lr: cfg.lr,
+        momentum: cfg.momentum,
+        data: DataSpec::Class {
+            classes: c,
+            input_dim: d,
+            batch: mb,
+            noise: cfg.noise,
+            seed: cfg.data_seed,
+        },
+        target: IoSpec { shape: vec![mb], dtype: DType::I32 },
+        stages,
+        total_param_elems,
+        golden_steps: 0,
+        dir: std::path::PathBuf::from("<native_mlp synthetic>"),
+    }
+}
+
+/// Deterministic θ_0 (one sequential RNG stream over tensors in arena
+/// order): weights ~ N(0, 1/√fan_in), the classifier head ~ N(0, 0.05)
+/// so the initial loss sits at ln(classes), biases zero — the same
+/// scheme as `Mlp.init_params`, realized with the crate's RNG.
+fn init_params(m: &Manifest, seed: u64) -> Vec<f32> {
+    let mut rng = XorShift64Star::new(splitmix64(seed ^ 0x1417));
+    let mut out = Vec::with_capacity(m.total_param_elems);
+    for st in &m.stages {
+        for p in &st.params {
+            let n = p.elems();
+            if p.name.ends_with("_b") {
+                out.extend(std::iter::repeat_n(0.0f32, n));
+            } else {
+                let std = if p.name == "out_w" {
+                    0.05
+                } else {
+                    (1.0 / p.shape[0] as f32).sqrt()
+                };
+                out.extend((0..n).map(|_| std * rng.normal()));
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), m.total_param_elems);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_manifest_is_self_consistent() {
+        let nb = NativeBackend::default_mlp();
+        let m = &nb.manifest;
+        assert_eq!(m.n_stages, 4);
+        assert_eq!(m.stages.len(), 4);
+        assert_eq!(
+            m.total_param_elems,
+            m.stages.iter().map(|s| s.param_elems()).sum::<usize>()
+        );
+        assert_eq!(nb.init.len(), m.total_param_elems);
+        assert!(validate_mlp(m).is_ok());
+        // stage shapes: 0 has prologue, last has head
+        assert_eq!(nb.stage_shape(0), (true, 2, false));
+        assert_eq!(nb.stage_shape(3), (false, 2, true));
+        assert!(m.psi_p_bytes() > 0 && m.b_psi_a_bytes() > 0);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_finite() {
+        let a = NativeBackend::default_mlp();
+        let b = NativeBackend::default_mlp();
+        assert_eq!(a.init, b.init);
+        assert!(a.init.iter().all(|x| x.is_finite()));
+        // biases zero, weights not all zero
+        assert!(a.init.iter().any(|x| *x != 0.0));
+    }
+
+    #[test]
+    fn forward_shapes_and_initial_loss_near_ln_classes() {
+        let nb = NativeBackend::default_mlp();
+        let data = crate::data::DataSource::from_manifest(&nb.manifest);
+        let crate::data::MicroBatch::Class { x, labels } = data.microbatch(0, 0) else {
+            panic!("mlp bundle is classification")
+        };
+        let flat = nb.init_params_flat().unwrap();
+        let l = nb.layout().clone();
+        let batch = nb.manifest.target.shape[0];
+        let mut a = HostTensor::F32(x);
+        for j in 0..nb.manifest.n_stages - 1 {
+            let y = Backend::stage_fwd_flat(&nb, j, &flat[l.stage_range(j)], &a).unwrap();
+            assert_eq!(y.shape, vec![batch, nb.shape.hidden]);
+            assert!(y.is_finite());
+            a = HostTensor::F32(y);
+        }
+        let last = nb.manifest.n_stages - 1;
+        let loss = nb
+            .last_fwd_loss_flat(&flat[l.stage_range(last)], a.as_f32().unwrap(), &labels)
+            .unwrap();
+        // small head init ⇒ logits near zero ⇒ loss near ln(10); the
+        // residual growth across 8 layers inflates it somewhat (≈ 2.69
+        // for the default seeds, vs ln 10 ≈ 2.30)
+        assert!((loss - 10.0f32.ln()).abs() < 0.6, "initial loss {loss}");
+    }
+}

@@ -1,9 +1,15 @@
-//! Flat-slice reductions used by the communication fabric.
+//! Flat-slice reductions used by the communication fabric, plus the dense
+//! kernels the pure-Rust [`crate::runtime::NativeBackend`] executes stage
+//! graphs with (matmul / relu / bias / softmax-CE and their backward
+//! forms).
 //!
-//! These implement the *reduce* in all-reduce.  The fixed, deterministic
-//! reduction order is a correctness feature: it is what lets the
+//! The reductions implement the *reduce* in all-reduce.  The fixed,
+//! deterministic accumulation order — of the reductions *and* of the
+//! dense kernels — is a correctness feature: it is what lets the
 //! multi-worker trainers be bit-identical to the single-process reference
-//! (DESIGN.md invariants).
+//! (DESIGN.md invariants).  Every kernel here walks its inputs in one
+//! fixed order, so the same f32 inputs always produce the same f32 bits,
+//! independent of which worker thread runs them.
 
 /// dst += src, elementwise.
 pub fn add_into(dst: &mut [f32], src: &[f32]) {
@@ -85,6 +91,170 @@ pub fn scale(dst: &mut [f32], s: f32) {
     }
 }
 
+// ---- dense kernels (NativeBackend stage graphs) ---------------------------
+
+/// dst[m,n] = a[m,k] @ b[k,n].  i-k-j loop order: the k-accumulation into
+/// each dst row is sequential (deterministic f32 sum order) and the inner
+/// loop streams b's rows — cache-friendly without tiling machinery.
+pub fn matmul(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(dst.len(), m * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    dst.fill(0.0);
+    for i in 0..m {
+        let drow = &mut dst[i * n..(i + 1) * n];
+        for (p, brow) in b.chunks_exact(n).enumerate() {
+            // skipping exact zeros (common after ReLU) is bit-neutral for
+            // finite accumulators: x + 0·y == x in f32 unless x is NaN
+            let aip = a[i * k + p];
+            if aip != 0.0 {
+                for (d, bv) in drow.iter_mut().zip(brow) {
+                    *d += aip * *bv;
+                }
+            }
+        }
+    }
+}
+
+/// dst[m,k] += a[m,n] @ b[k,n]ᵀ  (accumulating) — the `dx += dy @ Wᵀ`
+/// step of a linear layer's backward.
+pub fn matmul_nt_acc(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(dst.len(), m * k);
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let drow = &mut dst[i * k..(i + 1) * k];
+        for (d, brow) in drow.iter_mut().zip(b.chunks_exact(n)) {
+            let mut acc = 0.0f32;
+            for (av, bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *d += acc;
+        }
+    }
+}
+
+/// dst[k,n] = a[m,k]ᵀ @ b[m,n] — the `dW = xᵀ @ dy` step of a linear
+/// layer's backward.  Row-major accumulation over m in fixed order.
+pub fn matmul_tn(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(dst.len(), k * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    dst.fill(0.0);
+    for i in 0..m {
+        let brow = &b[i * n..(i + 1) * n];
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip != 0.0 {
+                let drow = &mut dst[p * n..(p + 1) * n];
+                for (d, bv) in drow.iter_mut().zip(brow) {
+                    *d += aip * *bv;
+                }
+            }
+        }
+    }
+}
+
+/// dst[m,n] += bias[n], broadcast over rows.
+pub fn bias_add(dst: &mut [f32], bias: &[f32]) {
+    debug_assert_eq!(dst.len() % bias.len(), 0);
+    for row in dst.chunks_exact_mut(bias.len()) {
+        for (d, b) in row.iter_mut().zip(bias) {
+            *d += *b;
+        }
+    }
+}
+
+/// dst[n] = Σ_rows a[m,n] — the `db = Σ dy` step (row order, deterministic).
+pub fn col_sums(dst: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(a.len() % dst.len(), 0);
+    dst.fill(0.0);
+    for row in a.chunks_exact(dst.len()) {
+        for (d, v) in dst.iter_mut().zip(row) {
+            *d += *v;
+        }
+    }
+}
+
+/// In-place ReLU.
+pub fn relu(dst: &mut [f32]) {
+    for d in dst.iter_mut() {
+        *d = d.max(0.0);
+    }
+}
+
+/// dst[i] = pre[i] > 0 ? s·g[i] : 0 — fused ReLU-mask + scale of the
+/// residual-branch backward (`pre` is the pre-activation).
+pub fn relu_bwd_scaled(dst: &mut [f32], g: &[f32], pre: &[f32], s: f32) {
+    debug_assert_eq!(dst.len(), g.len());
+    debug_assert_eq!(dst.len(), pre.len());
+    for ((d, gv), u) in dst.iter_mut().zip(g).zip(pre) {
+        *d = if *u > 0.0 { s * *gv } else { 0.0 };
+    }
+}
+
+/// Softmax cross-entropy over `logits[b, c]` with integer `targets[b]`:
+/// returns the batch-mean loss and writes d(loss)/d(logits) — already
+/// scaled by 1/b — into `dlogits`.  Row-stable (max-subtracted) and
+/// summed in fixed row/column order.
+pub fn softmax_ce(
+    logits: &[f32],
+    targets: &[i32],
+    classes: usize,
+    dlogits: &mut [f32],
+) -> f32 {
+    let b = targets.len();
+    debug_assert_eq!(logits.len(), b * classes);
+    debug_assert_eq!(dlogits.len(), b * classes);
+    let inv_b = 1.0 / b as f32;
+    let mut loss_sum = 0.0f32;
+    for (r, (row, drow)) in logits
+        .chunks_exact(classes)
+        .zip(dlogits.chunks_exact_mut(classes))
+        .enumerate()
+    {
+        let t = targets[r] as usize;
+        debug_assert!(t < classes, "target {t} out of range ({classes} classes)");
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, x| m.max(*x));
+        let mut z = 0.0f32;
+        for (d, x) in drow.iter_mut().zip(row) {
+            let e = (*x - mx).exp();
+            *d = e;
+            z += e;
+        }
+        let logz = mx + z.ln();
+        loss_sum += logz - row[t];
+        let inv_z = 1.0 / z;
+        for (c, d) in drow.iter_mut().enumerate() {
+            let p = *d * inv_z;
+            *d = (p - if c == t { 1.0 } else { 0.0 }) * inv_b;
+        }
+    }
+    loss_sum * inv_b
+}
+
+/// Loss-only form of [`softmax_ce`] for forward-only evaluation: same
+/// row-stable computation and summation order, no gradient buffer.
+pub fn softmax_ce_loss(logits: &[f32], targets: &[i32], classes: usize) -> f32 {
+    let b = targets.len();
+    debug_assert_eq!(logits.len(), b * classes);
+    let mut loss_sum = 0.0f32;
+    for (r, row) in logits.chunks_exact(classes).enumerate() {
+        let t = targets[r] as usize;
+        debug_assert!(t < classes, "target {t} out of range ({classes} classes)");
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, x| m.max(*x));
+        let mut z = 0.0f32;
+        for x in row {
+            z += (*x - mx).exp();
+        }
+        loss_sum += mx + z.ln() - row[t];
+    }
+    // same final scaling op as `softmax_ce` (multiply by the rounded
+    // reciprocal), so the two forms agree bit-for-bit
+    loss_sum * (1.0 / b as f32)
+}
+
 /// Mean absolute difference — used by equivalence tests.
 pub fn mean_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
@@ -146,6 +316,107 @@ mod tests {
         chunked_sum_into(&mut chunked, &refs);
         for (a, b) in naive.iter().zip(&chunked) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // [2,3] @ [3,2]
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0f32, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let mut c = [0.0f32; 4];
+        matmul(&mut c, &a, &b, 2, 3, 2);
+        assert_eq!(c, [58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_variants_agree_with_explicit_transposes() {
+        let m = 3;
+        let k = 4;
+        let n = 5;
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.7).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.3).cos()).collect();
+        let mut c = vec![0.0f32; m * n];
+        matmul(&mut c, &a, &b, m, k, n);
+        // dx = c @ bᵀ: compare against naive
+        let mut dx = vec![0.0f32; m * k];
+        matmul_nt_acc(&mut dx, &c, &b, m, n, k);
+        for i in 0..m {
+            for p in 0..k {
+                let want: f32 = (0..n).map(|j| c[i * n + j] * b[p * n + j]).sum();
+                assert!((dx[i * k + p] - want).abs() < 1e-5);
+            }
+        }
+        // dw = aᵀ @ c: compare against naive
+        let mut dw = vec![0.0f32; k * n];
+        matmul_tn(&mut dw, &a, &c, m, k, n);
+        for p in 0..k {
+            for j in 0..n {
+                let want: f32 = (0..m).map(|i| a[i * k + p] * c[i * n + j]).sum();
+                assert!((dw[p * n + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn bias_relu_colsums() {
+        let mut x = [1.0f32, -2.0, 3.0, -4.0];
+        bias_add(&mut x, &[0.5, 0.5]);
+        assert_eq!(x, [1.5, -1.5, 3.5, -3.5]);
+        let mut r = x;
+        relu(&mut r);
+        assert_eq!(r, [1.5, 0.0, 3.5, 0.0]);
+        let mut s = [0.0f32; 2];
+        col_sums(&mut s, &x);
+        assert_eq!(s, [5.0, -5.0]);
+        let mut d = [0.0f32; 4];
+        relu_bwd_scaled(&mut d, &[10.0, 10.0, 10.0, 10.0], &x, 0.3);
+        assert_eq!(d, [3.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_ce_uniform_and_gradient_sign() {
+        // uniform logits over 4 classes: loss = ln 4, grad = (1/4 - 1{t})/b
+        let logits = [0.0f32; 8]; // b=2, c=4
+        let targets = [1i32, 3];
+        let mut d = [0.0f32; 8];
+        let loss = softmax_ce(&logits, &targets, 4, &mut d);
+        assert!((loss - 4.0f32.ln()).abs() < 1e-6);
+        for (i, dv) in d.iter().enumerate() {
+            let (r, c) = (i / 4, i % 4);
+            let want = (0.25 - if c == targets[r] as usize { 1.0 } else { 0.0 }) / 2.0;
+            assert!((dv - want).abs() < 1e-6, "d[{i}] = {dv}, want {want}");
+        }
+        // gradient rows sum to zero
+        assert!(d[..4].iter().sum::<f32>().abs() < 1e-6);
+        // loss-only form agrees with the gradient form
+        assert_eq!(loss, softmax_ce_loss(&logits, &targets, 4));
+        let logits2 = [0.3f32, -0.7, 1.2, 0.1, -0.4, 0.9];
+        let t2 = [2i32, 0];
+        let mut d2 = [0.0f32; 6];
+        let l_grad = softmax_ce(&logits2, &t2, 3, &mut d2);
+        let l_only = softmax_ce_loss(&logits2, &t2, 3);
+        assert!((l_grad - l_only).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_ce_matches_finite_differences() {
+        let mut logits = [0.3f32, -0.7, 1.2, 0.1, -0.4, 0.9];
+        let targets = [2i32, 0];
+        let mut d = [0.0f32; 6];
+        let loss = softmax_ce(&logits, &targets, 3, &mut d);
+        assert!(loss.is_finite());
+        let eps = 1e-3f32;
+        for i in 0..6 {
+            let orig = logits[i];
+            logits[i] = orig + eps;
+            let mut scratch = [0.0f32; 6];
+            let lp = softmax_ce(&logits, &targets, 3, &mut scratch);
+            logits[i] = orig - eps;
+            let lm = softmax_ce(&logits, &targets, 3, &mut scratch);
+            logits[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((d[i] - fd).abs() < 1e-3, "dlogits[{i}] {} vs fd {fd}", d[i]);
         }
     }
 

@@ -5,8 +5,12 @@
 //! host/literal reference, under every update rule.  Plus the upload
 //! contract: ≤ 1 stage-level parameter upload per committed θ-version.
 //!
-//! Require `make artifacts` (tiny + mlp bundles); each test self-skips
-//! when artifacts are missing so `cargo test` stays green pre-build.
+//! Require the `xla` feature plus `make artifacts` (tiny + mlp bundles);
+//! each test self-skips when artifacts are missing so `cargo test` stays
+//! green pre-build.  Compiled out of the default (native) build — the
+//! native backend has a single execution path.
+
+#![cfg(feature = "xla")]
 
 use std::sync::{Arc, OnceLock};
 

@@ -1,0 +1,342 @@
+//! Cross-backend / native-backend test suite: the full trainer
+//! equivalence matrix on the pure-Rust [`NativeBackend`] — zero
+//! artifacts, zero network, the suite the required CI lane runs — plus
+//! gradient checks of the hand-written backward, the arena-view
+//! placement property, and (when the `xla` feature and artifacts are
+//! both present) native-vs-XLA loss agreement.
+
+use std::sync::Arc;
+
+use cyclic_dp::coordinator::{multi, pipeline, single, zero, SharedBackend};
+use cyclic_dp::parallel::arena::ArenaLayout;
+use cyclic_dp::parallel::Rule;
+use cyclic_dp::runtime::{Backend, NativeBackend, NativeMlpConfig};
+use cyclic_dp::tensor::HostTensor;
+
+const RULES: [Rule; 3] = [Rule::Dp, Rule::CdpV1, Rule::CdpV2];
+
+fn native() -> NativeBackend {
+    NativeBackend::default_mlp()
+}
+
+fn host_losses(rt: &NativeBackend, rule: Rule, steps: usize) -> Vec<f64> {
+    let mut t = single::RefTrainer::new(rt, rule).unwrap();
+    t.train(steps).unwrap().iter().map(|l| l.loss).collect()
+}
+
+// --------------------------------------------- trainer equivalence matrix --
+#[test]
+fn multi_barrier_matches_reference_dp() {
+    let rt = native();
+    let want = host_losses(&rt, Rule::Dp, 4);
+    let shared = SharedBackend(Arc::new(rt));
+    let rep =
+        multi::train(shared.clone(), Rule::Dp, multi::CommPattern::Barrier, 4).unwrap();
+    let got: Vec<f64> = rep.logs.iter().map(|l| l.loss).collect();
+    assert_eq!(got, want, "threaded DP must be bit-identical to reference");
+    assert!(rep.comm_bytes > 0);
+    assert_eq!(rep.optimizer_replicas, shared.manifest().n_microbatches);
+}
+
+#[test]
+fn multi_ring_matches_reference_for_cdp_rules() {
+    let rt = native();
+    let shared = SharedBackend(Arc::new(rt));
+    for rule in [Rule::CdpV1, Rule::CdpV2] {
+        let want = host_losses(&shared, rule.clone(), 4);
+        let rep =
+            multi::train(shared.clone(), rule.clone(), multi::CommPattern::Ring, 4)
+                .unwrap();
+        let got: Vec<f64> = rep.logs.iter().map(|l| l.loss).collect();
+        assert_eq!(got, want, "ring CDP ({}) must match reference", rule.name());
+        assert_eq!(rep.optimizer_replicas, 1, "ring keeps one optimizer copy");
+    }
+}
+
+#[test]
+fn zero_both_flows_match_reference() {
+    let shared = SharedBackend(Arc::new(native()));
+    for (rule, flow) in [
+        (Rule::Dp, zero::StateFlow::Broadcast),
+        (Rule::CdpV2, zero::StateFlow::Cyclic),
+        (Rule::CdpV1, zero::StateFlow::Cyclic),
+    ] {
+        let want = host_losses(&shared, rule.clone(), 3);
+        let rep = zero::train(shared.clone(), rule.clone(), flow, 3).unwrap();
+        let got: Vec<f64> = rep.logs.iter().map(|l| l.loss).collect();
+        assert_eq!(got, want, "zero ({}) must match reference", rule.name());
+    }
+}
+
+#[test]
+fn zero_cyclic_halves_boundary_concurrency() {
+    let shared = SharedBackend(Arc::new(native()));
+    let b = zero::train(shared.clone(), Rule::Dp, zero::StateFlow::Broadcast, 2).unwrap();
+    let c = zero::train(shared.clone(), Rule::CdpV2, zero::StateFlow::Cyclic, 2).unwrap();
+    let n = shared.manifest().n_microbatches as u64;
+    assert_eq!(b.max_msgs_per_timestep, n - 1);
+    assert_eq!(c.max_msgs_per_timestep, 1);
+    let ratio = b.comm_bytes as f64 / c.comm_bytes as f64;
+    assert!(ratio > 0.5 && ratio < 2.0, "volume ratio {ratio}");
+}
+
+#[test]
+fn pipeline_both_schedules_match_reference() {
+    let rt = native();
+    for rule in RULES {
+        let want = host_losses(&rt, rule.clone(), 3);
+        for sched in [pipeline::PipeSchedule::OneFOneB, pipeline::PipeSchedule::GPipe] {
+            let rep = pipeline::train(&rt, rule.clone(), sched, 3).unwrap();
+            let got: Vec<f64> = rep.logs.iter().map(|l| l.loss).collect();
+            assert_eq!(
+                got,
+                want,
+                "pipeline {sched:?} ({}) must match reference",
+                rule.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn bucket_size_does_not_change_losses() {
+    let shared = SharedBackend(Arc::new(native()));
+    let want = host_losses(&shared, Rule::CdpV2, 3);
+    for bucket_elems in [1usize, 3, 7, 1 << 20] {
+        let rep = multi::train_with(
+            shared.clone(),
+            Rule::CdpV2,
+            multi::CommPattern::Ring,
+            3,
+            multi::MultiOpts {
+                bucket_elems,
+                record_timeline: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let got: Vec<f64> = rep.logs.iter().map(|l| l.loss).collect();
+        assert_eq!(got, want, "bucket_elems={bucket_elems} changed the losses");
+    }
+}
+
+// ----------------------------------------------------- rule-level checks --
+#[test]
+fn rules_agree_at_step0_and_diverge_after() {
+    let rt = native();
+    let mut first = Vec::new();
+    let mut third = Vec::new();
+    for rule in RULES {
+        let logs = host_losses(&rt, rule, 3);
+        first.push(logs[0]);
+        third.push(logs[2]);
+    }
+    // θ_{−1} := θ_0 bootstrap ⇒ identical first step
+    assert_eq!(first[0], first[1]);
+    assert_eq!(first[0], first[2]);
+    // the delay is real ⇒ different step-2 losses
+    assert_ne!(third[0], third[1]);
+    assert_ne!(third[1], third[2]);
+}
+
+#[test]
+fn cdp_v2_learns_classification() {
+    let rt = native();
+    let mut t = single::RefTrainer::new(&rt, Rule::CdpV2).unwrap();
+    let logs = t.train(30).unwrap();
+    assert!(
+        logs[29].loss < logs[0].loss * 0.8,
+        "loss should drop: {} → {}",
+        logs[0].loss,
+        logs[29].loss
+    );
+    let acc = t.accuracy(8).unwrap();
+    assert!(acc > 0.5, "10-class accuracy {acc} (random = 0.1)");
+}
+
+#[test]
+fn determinism_across_runs() {
+    let a = host_losses(&native(), Rule::CdpV2, 3);
+    let b = host_losses(&native(), Rule::CdpV2, 3);
+    assert_eq!(a, b, "same bundle + rule ⇒ bit-identical runs");
+}
+
+// --------------------------------------------------- backward correctness --
+/// Central-difference gradient check of the hand-written native backward
+/// on a tiny 2-stage model: assemble the analytic model-wide gradient
+/// from last_bwd + first_bwd, then perturb every single parameter and
+/// compare against (L(θ+ε) − L(θ−ε)) / 2ε.
+#[test]
+fn native_backward_matches_finite_differences() {
+    let rt = NativeBackend::synthetic(NativeMlpConfig::tiny());
+    let layout = ArenaLayout::from_manifest(rt.manifest());
+    let flat = rt.init_params_flat().unwrap();
+    let data = cyclic_dp::data::DataSource::from_manifest(rt.manifest());
+    let cyclic_dp::data::MicroBatch::Class { x, labels } = data.microbatch(0, 0) else {
+        panic!("classification bundle")
+    };
+
+    let loss_of = |params: &[f32]| -> f32 {
+        let a = rt
+            .stage_fwd_flat(0, &params[layout.stage_range(0)], &HostTensor::F32(x.clone()))
+            .unwrap();
+        rt.last_fwd_loss_flat(&params[layout.stage_range(1)], &a, &labels).unwrap()
+    };
+
+    // analytic gradient via the backward chain
+    let mut exec = rt.executor(cyclic_dp::coordinator::ExecMode::HostLiteral);
+    let mut g = layout.zeros();
+    let a1 = rt
+        .stage_fwd_flat(0, &flat[layout.stage_range(0)], &HostTensor::F32(x.clone()))
+        .unwrap();
+    let (loss, gx) = rt
+        .last_bwd(
+            &mut exec,
+            0,
+            &flat[layout.stage_range(1)],
+            &HostTensor::F32(a1),
+            &labels,
+            &mut g[layout.stage_range(1)],
+        )
+        .unwrap();
+    assert!(loss.is_finite());
+    rt.first_bwd(
+        &mut exec,
+        0,
+        &flat[layout.stage_range(0)],
+        &HostTensor::F32(x.clone()),
+        &gx,
+        &mut g[layout.stage_range(0)],
+    )
+    .unwrap();
+
+    let eps = 1e-2f32;
+    let mut worst = 0f32;
+    let mut theta = flat.clone();
+    for i in 0..theta.len() {
+        let orig = theta[i];
+        theta[i] = orig + eps;
+        let lp = loss_of(&theta);
+        theta[i] = orig - eps;
+        let lm = loss_of(&theta);
+        theta[i] = orig;
+        let fd = (lp - lm) / (2.0 * eps);
+        let err = (fd - g[i]).abs();
+        worst = worst.max(err - 1e-2 * g[i].abs());
+        assert!(
+            err <= 2e-3 + 1e-2 * g[i].abs(),
+            "param {i}: analytic {} vs finite-diff {fd} (err {err})",
+            g[i]
+        );
+    }
+    assert!(worst.is_finite());
+}
+
+/// Property: each stage's backward writes *every* element of exactly its
+/// own arena stage run — poison the model-wide scratch with a sentinel,
+/// run the backward chain, and check the written/untouched split per
+/// view.
+#[test]
+fn native_backward_lands_exactly_in_arena_views() {
+    let rt = NativeBackend::synthetic(NativeMlpConfig::tiny());
+    let layout = ArenaLayout::from_manifest(rt.manifest());
+    let flat = rt.init_params_flat().unwrap();
+    let data = cyclic_dp::data::DataSource::from_manifest(rt.manifest());
+    let cyclic_dp::data::MicroBatch::Class { x, labels } = data.microbatch(1, 0) else {
+        panic!("classification bundle")
+    };
+    const SENTINEL: f32 = 1.234_567_9e30;
+
+    let mut exec = rt.executor(cyclic_dp::coordinator::ExecMode::HostLiteral);
+    let a1 = rt
+        .stage_fwd_flat(0, &flat[layout.stage_range(0)], &HostTensor::F32(x.clone()))
+        .unwrap();
+
+    // backward into stage 1's run only: stage 0's run must stay poisoned
+    let mut g = vec![SENTINEL; layout.total_len];
+    let (_, gx) = rt
+        .last_bwd(
+            &mut exec,
+            0,
+            &flat[layout.stage_range(1)],
+            &HostTensor::F32(a1),
+            &labels,
+            &mut g[layout.stage_range(1)],
+        )
+        .unwrap();
+    assert!(
+        g[layout.stage_range(1)].iter().all(|v| *v != SENTINEL),
+        "loss-stage backward must write every element of its stage run"
+    );
+    assert!(
+        g[layout.stage_range(0)].iter().all(|v| *v == SENTINEL),
+        "loss-stage backward must not touch other stages"
+    );
+    // per-view: every tensor view of stage 1 is fully written and finite
+    for v in &layout.stages[1].views {
+        let base = layout.stage_offsets[1] + v.offset;
+        assert!(g[base..base + v.len].iter().all(|x| x.is_finite()));
+    }
+
+    // now stage 0
+    rt.first_bwd(
+        &mut exec,
+        0,
+        &flat[layout.stage_range(0)],
+        &HostTensor::F32(x),
+        &gx,
+        &mut g[layout.stage_range(0)],
+    )
+    .unwrap();
+    assert!(
+        g[layout.stage_range(0)].iter().all(|v| *v != SENTINEL && v.is_finite()),
+        "stage-0 backward must write every element of its stage run"
+    );
+}
+
+// ----------------------------------------------------------- construction --
+#[test]
+fn unknown_bundle_is_a_clean_error_with_hint() {
+    let err = NativeBackend::load_or_synthetic("no_such_bundle").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("mlp"), "error should explain family support: {msg}");
+}
+
+#[test]
+fn synthetic_mlp_matches_python_bundle_hyperparams() {
+    let rt = native();
+    let m = rt.manifest();
+    assert_eq!(m.family, "mlp");
+    assert_eq!((m.lr, m.momentum), (0.01, 0.9));
+    assert_eq!(m.n_stages, m.n_microbatches, "paper: N stages == N micro-batches");
+}
+
+// ------------------------------------------------- cross-backend (xla on) --
+/// Native vs XLA on the *same* on-disk mlp bundle (same manifest + same
+/// θ_0 from params.bin): loss sequences agree to kernel-accumulation
+/// tolerance.  Bit-identity is promised *within* a backend, not across —
+/// XLA fuses its f32 reductions differently than `tensor::ops` does.
+#[cfg(feature = "xla")]
+#[test]
+fn native_matches_xla_losses_on_shared_bundle() {
+    let dir = cyclic_dp::model::artifacts_root().join("mlp");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: mlp bundle missing — run `make artifacts`");
+        return;
+    }
+    let nat = NativeBackend::load(&dir).unwrap();
+    let xla = cyclic_dp::runtime::BundleRuntime::load(&dir).unwrap();
+    for rule in RULES {
+        let a = host_losses(&nat, rule.clone(), 3);
+        let mut t = single::RefTrainer::new(&xla, rule.clone()).unwrap();
+        let b: Vec<f64> = t.train(3).unwrap().iter().map(|l| l.loss).collect();
+        for (step, (x, y)) in a.iter().zip(&b).enumerate() {
+            let rel = (x - y).abs() / y.abs().max(1e-9);
+            assert!(
+                rel < 1e-3,
+                "{} step {step}: native {x} vs xla {y} (rel {rel:.2e})",
+                rule.name()
+            );
+        }
+    }
+}
