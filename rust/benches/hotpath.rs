@@ -20,7 +20,7 @@ use std::sync::Arc;
 
 use cyclic_dp::comm::bucketed::BucketedReducer;
 use cyclic_dp::comm::collectives::{allreduce_mean, ring_allreduce};
-use cyclic_dp::comm::{tags, CommStats, Endpoint, EventKind, Fabric};
+use cyclic_dp::comm::{tags, CommStats, Endpoint, EventKind, Fabric, RingView};
 use cyclic_dp::coordinator::single::RefTrainer;
 use cyclic_dp::coordinator::{multi, SharedBackend};
 use cyclic_dp::parallel::arena::ArenaLayout;
@@ -212,9 +212,9 @@ fn main() {
                         let mut data = vec![1.0f32; 1_000_000];
                         for step in 0..4u64 {
                             if ring {
-                                ring_allreduce(&mut ep, step, &mut data);
+                                ring_allreduce(&mut ep, step, &mut data).unwrap();
                             } else {
-                                allreduce_mean(&mut ep, step, &mut data);
+                                allreduce_mean(&mut ep, step, &mut data).unwrap();
                             }
                         }
                     })
@@ -249,7 +249,7 @@ fn main() {
                 std::thread::spawn(move || {
                     let mut data = vec![1.0f32; 100_000];
                     for step in 0..16u64 {
-                        ring_allreduce(&mut ep, step, &mut data);
+                        ring_allreduce(&mut ep, step, &mut data).unwrap();
                     }
                 })
             })
@@ -262,6 +262,62 @@ fn main() {
         );
         counters.push(("ring16_pool_recycled".into(), pool.recycled() as f64));
         counters.push(("ring16_pool_allocated".into(), pool.allocated() as f64));
+    }
+
+    // ---- deadline/retry recv: clean-path cost -----------------------------
+    // Every blocking receive now runs through `recv_deadline` (timeout
+    // accounting + per-sender seq dedup + parked-queue lookup).  On the
+    // clean path — in-order delivery, no faults — that machinery must be
+    // allocation-free in steady state: the parked map is probed with
+    // `get_mut` (no insertion), in-order seqs take the contiguous fast
+    // path, and queued messages pop without blocking.  Self-sends are
+    // forbidden by the fabric, so the probe drives a 2-endpoint fabric
+    // from one thread: pre-queue from endpoint 0, drain on endpoint 1
+    // with received payloads held live so pool recycling stays outside
+    // the measured window.
+    b.section("deadline/retry recv clean path (2 endpoints, pooled)");
+    {
+        let (mut eps, _) = Fabric::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let buf = vec![1.0f32; 65_536];
+        // warm: pool buffers, seq trackers, channel nodes
+        for k in 0..4u64 {
+            e0.send_copy(1, tags::grad(k, 0), &buf).unwrap();
+        }
+        for k in 0..4u64 {
+            std::hint::black_box(e1.recv(0, tags::grad(k, 0)).unwrap());
+        }
+        const DRAIN: u64 = 32;
+        for k in 0..DRAIN {
+            e0.send_copy(1, tags::grad(4 + k, 0), &buf).unwrap();
+        }
+        let mut held = Vec::with_capacity(DRAIN as usize);
+        let a0 = allocs();
+        for k in 0..DRAIN {
+            held.push(e1.recv(0, tags::grad(4 + k, 0)).unwrap());
+        }
+        let recv_allocs = allocs() - a0;
+        drop(held);
+        println!("  clean-path recv steady-state allocations      {recv_allocs} (want 0)");
+        counters.push((
+            "comm_clean_recv_steady_state_allocs".into(),
+            recv_allocs as f64,
+        ));
+        assert_eq!(
+            recv_allocs, 0,
+            "deadline/dedup recv must not allocate on the in-order clean path"
+        );
+
+        // clean-path latency: send_copy + deadline-recv round, 64 KiB f32.
+        // Recorded (not asserted): the honest number for what the
+        // robustness plumbing costs when nothing goes wrong.
+        let mut t = 1_000u64;
+        stats.push(b.time_stat("p2p send_copy+recv 64KiB (deadline path)", 8, 64, || {
+            e0.send_copy(1, tags::grad(t, 0), &buf).unwrap();
+            std::hint::black_box(e1.recv(0, tags::grad(t, 0)).unwrap());
+            t += 1;
+        }));
     }
 
     // ---- arena vs seed: ring parameter hand-off ---------------------------
@@ -553,6 +609,7 @@ fn xla_sections(
                 mode: ExecMode::DeviceResident,
                 bucket_elems: 64,
                 record_timeline: true,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -660,6 +717,7 @@ fn run_synthetic_step(
             std::thread::spawn(move || {
                 let owner = ep.n - 1;
                 let w = ep.id;
+                let ring = RingView::full(&ep);
                 let mut gmb: Vec<f32> = (0..layout.total_len)
                     .map(|k| ((w + k) as f32 * 1e-3).sin())
                     .collect();
@@ -675,7 +733,9 @@ fn run_synthetic_step(
                             } else {
                                 None
                             };
-                            reducer.ring_stage(&mut ep, &layout, t, j, &gmb[r], out);
+                            reducer
+                                .ring_stage(&mut ep, &ring, &layout, t, j, &gmb[r], out)
+                                .unwrap();
                         }
                     } else {
                         for j in (0..layout.n_stages()).rev() {
@@ -690,7 +750,9 @@ fn run_synthetic_step(
                             } else {
                                 None
                             };
-                            reducer.ring_stage(&mut ep, &layout, t, j, &gmb[r], out);
+                            reducer
+                                .ring_stage(&mut ep, &ring, &layout, t, j, &gmb[r], out)
+                                .unwrap();
                         }
                     }
                 }
@@ -722,8 +784,9 @@ fn ring_allreduce_unpooled(ep: &mut Endpoint, step: u64, data: &mut [f32]) {
     for p in 0..n - 1 {
         let send_c = (me + n - p) % n;
         let recv_c = (me + n - p - 1) % n;
-        ep.send(ep.right(), tags::ring(step, p), data[chunk(send_c)].to_vec());
-        let part = ep.recv(ep.left(), tags::ring(step, p));
+        ep.send(ep.right(), tags::ring(step, p), data[chunk(send_c)].to_vec())
+            .unwrap();
+        let part = ep.recv(ep.left(), tags::ring(step, p)).unwrap();
         add_into(&mut data[chunk(recv_c)], &part);
     }
     for p in 0..n - 1 {
@@ -733,8 +796,9 @@ fn ring_allreduce_unpooled(ep: &mut Endpoint, step: u64, data: &mut [f32]) {
             ep.right(),
             tags::ring(step, n + p),
             data[chunk(send_c)].to_vec(),
-        );
-        let part = ep.recv(ep.left(), tags::ring(step, n + p));
+        )
+        .unwrap();
+        let part = ep.recv(ep.left(), tags::ring(step, n + p)).unwrap();
         data[chunk(recv_c)].copy_from_slice(&part);
     }
 }
@@ -753,14 +817,14 @@ fn run_handoff(params: &[f32], zero_copy: bool) {
             std::thread::spawn(move || {
                 let n = ep.n;
                 if ep.id == 0 {
-                    ep.send_copy(1, tags::param(0, 0), &src);
+                    ep.send_copy(1, tags::param(0, 0), &src).unwrap();
                 } else {
-                    let got = ep.recv(ep.left(), tags::param(0, 0));
+                    let got = ep.recv(ep.left(), tags::param(0, 0)).unwrap();
                     if ep.id + 1 < n {
                         if zero_copy {
-                            ep.send(ep.id + 1, tags::param(0, 0), got.clone());
+                            ep.send(ep.id + 1, tags::param(0, 0), got.clone()).unwrap();
                         } else {
-                            ep.send(ep.id + 1, tags::param(0, 0), got.to_vec());
+                            ep.send(ep.id + 1, tags::param(0, 0), got.to_vec()).unwrap();
                         }
                     }
                     std::hint::black_box(got[0]);

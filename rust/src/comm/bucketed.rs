@@ -16,13 +16,18 @@
 //! for stage `s` overlaps the backward of stage `s−1`.
 //!
 //! Determinism: within every bucket the partial sums still accumulate in
-//! micro-batch order 1..N (worker 0 starts the ring, each worker adds its
-//! own contribution, the owner folds the last add and the 1/N average
-//! into one fused pass).  Per element this is exactly the sum order of
-//! the step-boundary reduction, so loss sequences remain bit-identical to
-//! the reference trainer — asserted in rust/tests/.
+//! micro-batch order 1..N (the ring's first member starts, each member
+//! adds its own contribution, the owner folds the last add and the 1/N
+//! average into one fused pass).  Per element this is exactly the sum
+//! order of the step-boundary reduction, so loss sequences remain
+//! bit-identical to the reference trainer — asserted in rust/tests/.
+//!
+//! The ring protocol is addressed through a [`RingView`] — position-based
+//! roles over explicit endpoint ids — so after a worker loss the
+//! survivors re-form an N−1 ring ([`RingView::from_live`]) and the same
+//! code runs unchanged (DESIGN-ROBUSTNESS.md).
 
-use crate::comm::{tags, Endpoint, EventKind};
+use crate::comm::{tags, CommError, Endpoint, EventKind, RingView};
 use crate::parallel::arena::ArenaLayout;
 use crate::tensor::ops;
 
@@ -79,58 +84,64 @@ impl BucketedReducer {
     }
 
     /// Eager ring hop for one stage of the multi-trainer CDP ring, called
-    /// by worker `ep.id` the moment stage `stage`'s backward output lands
-    /// in `own` (the worker's flat stage-run gradients).  Worker 0 (micro-
-    /// batch 1) launches each bucket immediately; middle workers add their
-    /// contribution to the received partial in place and forward the
-    /// handle; the owner (worker N−1, the only optimizer state) folds its
-    /// own contribution and the 1/N average into one fused pass per
-    /// bucket, assembling the averaged stage sums into `avg_out`.
+    /// by ring member `ring.pos` the moment stage `stage`'s backward
+    /// output lands in `own` (the worker's flat stage-run gradients).
+    /// The first member (position 0, micro-batch 1) launches each bucket
+    /// immediately; middle members add their contribution to the received
+    /// partial in place and forward the handle; the owner (position
+    /// `m−1`, the only optimizer state) folds its own contribution and
+    /// the 1/m average into one fused pass per bucket, assembling the
+    /// averaged stage sums into `avg_out`.
     ///
     /// `avg_out` must be `Some` exactly on the owner.  Per-element sum
-    /// order is micro-batch order 1..N — bit-identical to the step-
-    /// boundary ring it replaces.
+    /// order is micro-batch order 1..m — bit-identical to the step-
+    /// boundary ring it replaces.  `ring` is usually [`RingView::full`];
+    /// after a worker loss the survivors pass [`RingView::from_live`] and
+    /// the reduction runs on the smaller ring unchanged.
+    #[allow(clippy::too_many_arguments)]
     pub fn ring_stage(
         &self,
         ep: &mut Endpoint,
+        ring: &RingView,
         layout: &ArenaLayout,
         step: u64,
         stage: usize,
         own: &[f32],
         mut avg_out: Option<&mut [f32]>,
-    ) {
-        let n = ep.n;
-        let w = ep.id;
-        let owner = n - 1;
-        let inv = 1.0 / n as f32;
+    ) -> Result<(), CommError> {
+        let m = ring.m;
+        let pos = ring.pos;
+        let owner = m - 1;
+        let inv = 1.0 / m as f32;
         debug_assert_eq!(own.len(), layout.stage_len(stage));
-        debug_assert_eq!(avg_out.is_some(), w == owner, "avg_out ⇔ owner");
-        if n == 1 {
-            // single worker: own grads are the full sum (inv == 1.0, the
+        debug_assert_eq!(avg_out.is_some(), pos == owner, "avg_out ⇔ owner");
+        if m == 1 {
+            // single member: own grads are the full sum (inv == 1.0, the
             // scale still runs so the averaged contract is uniform)
-            let out = avg_out.expect("single worker is the owner");
+            let out = avg_out.expect("single member is the owner");
             out.copy_from_slice(own);
             ops::scale(out, inv);
-            return;
+            return Ok(());
         }
         for b in layout.stage_buckets(stage, self.stage_elems(layout, stage)) {
             let tag = tags::grad_bucket(step, stage, b.index);
             let nbytes = b.len() as u64 * 4;
-            if w == 0 {
-                ep.stats().mark(EventKind::GradSend, w, stage, nbytes);
-                ep.send_copy(1, tag, &own[b.range()]);
+            if pos == 0 {
+                ep.stats().mark(EventKind::GradSend, ep.id, stage, nbytes);
+                ep.send_copy(ring.right, tag, &own[b.range()])?;
             } else {
-                let mut part = ep.recv(w - 1, tag);
-                if w < owner {
+                let mut part = ep.recv(ring.left, tag)?;
+                if pos < owner {
                     ops::add_into(part.make_mut(), &own[b.range()]);
-                    ep.stats().mark(EventKind::GradSend, w, stage, nbytes);
-                    ep.send(w + 1, tag, part);
+                    ep.stats().mark(EventKind::GradSend, ep.id, stage, nbytes);
+                    ep.send(ring.right, tag, part)?;
                 } else {
                     let out = avg_out.as_deref_mut().expect("owner has avg_out");
                     ops::add_scale_into(&mut out[b.range()], &part, &own[b.range()], inv);
                 }
             }
         }
+        Ok(())
     }
 
     /// Eager ZeRO shard send: push stage `stage`'s gradients for micro-
@@ -147,13 +158,14 @@ impl BucketedReducer {
         mb: usize,
         owner: usize,
         own: &[f32],
-    ) {
+    ) -> Result<(), CommError> {
         debug_assert_ne!(owner, ep.id, "own shard never travels");
         debug_assert_eq!(own.len(), layout.stage_len(stage));
         for b in layout.stage_buckets(stage, self.stage_elems(layout, stage)) {
             ep.stats().mark(EventKind::GradSend, ep.id, stage, b.len() as u64 * 4);
-            ep.send_copy(owner, tags::grad_shard(step, stage, mb, b.index), &own[b.range()]);
+            ep.send_copy(owner, tags::grad_shard(step, stage, mb, b.index), &own[b.range()])?;
         }
+        Ok(())
     }
 
     /// Owner-side ZeRO reduction for its stage: accumulate every micro-
@@ -172,7 +184,7 @@ impl BucketedReducer {
         n_mb: usize,
         own: &[f32],
         gsum: &mut [f32],
-    ) {
+    ) -> Result<(), CommError> {
         debug_assert_eq!(gsum.len(), layout.stage_len(stage));
         gsum.fill(0.0);
         for mb in 1..=n_mb {
@@ -180,12 +192,13 @@ impl BucketedReducer {
                 ops::add_into(gsum, own);
             } else {
                 for b in layout.stage_buckets(stage, self.stage_elems(layout, stage)) {
-                    let part = ep.recv(mb - 1, tags::grad_shard(step, stage, mb, b.index));
+                    let part = ep.recv(mb - 1, tags::grad_shard(step, stage, mb, b.index))?;
                     ops::add_into(&mut gsum[b.range()], &part);
                 }
             }
         }
         ops::scale(gsum, 1.0 / n_mb as f32);
+        Ok(())
     }
 }
 
@@ -236,19 +249,21 @@ mod tests {
                     let own_all = grads_c[ep.id].clone();
                     thread::spawn(move || {
                         let red = BucketedReducer::new(4);
-                        let owner = ep.n - 1;
+                        let ring = RingView::full(&ep);
+                        let owner = ring.m - 1;
                         let mut avg = l.zeros();
                         for stage in (0..l.n_stages()).rev() {
                             let r = l.stage_range(stage);
                             let own = &own_all[r.clone()];
-                            let out = if ep.id == owner {
+                            let out = if ring.pos == owner {
                                 Some(&mut avg[r])
                             } else {
                                 None
                             };
-                            red.ring_stage(&mut ep, &l, 7, stage, own, out);
+                            red.ring_stage(&mut ep, &ring, &l, 7, stage, own, out)
+                                .unwrap();
                         }
-                        (ep.id == owner).then_some(avg)
+                        (ring.pos == owner).then_some(avg)
                     })
                 })
                 .collect();
@@ -265,6 +280,56 @@ mod tests {
                 for (a, b) in got.iter().zip(&want) {
                     assert_eq!(a.to_bits(), b.to_bits(), "n={n} stage={stage}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_stage_on_live_subset_matches_reference() {
+        // 4-worker fabric, worker 2 lost: the 3 survivors re-form and the
+        // averaged result must bitwise match a plain 3-row reference in
+        // ring-position order.
+        let live = [0usize, 1, 3];
+        let l = layout();
+        let (eps, _) = Fabric::new(4);
+        let grads: Vec<Vec<f32>> = (0..4)
+            .map(|w| {
+                (0..l.total_len)
+                    .map(|k| ((w * 13 + k) as f32).sin() * 1e4)
+                    .collect()
+            })
+            .collect();
+        let grads_c = grads.clone();
+        let l2 = l.clone();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .filter(|ep| live.contains(&ep.id))
+            .map(|mut ep| {
+                let l = l2.clone();
+                let own_all = grads_c[ep.id].clone();
+                thread::spawn(move || {
+                    let red = BucketedReducer::new(4);
+                    let ring = RingView::from_live(ep.id, &live);
+                    let mut avg = l.zeros();
+                    for stage in (0..l.n_stages()).rev() {
+                        let r = l.stage_range(stage);
+                        let out = (ring.pos == ring.m - 1).then(|| &mut avg[r.clone()]);
+                        red.ring_stage(&mut ep, &ring, &l, 3, stage, &own_all[r.clone()], out)
+                            .unwrap();
+                    }
+                    (ep.id, avg)
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let avg = &results.iter().find(|(id, _)| *id == 3).unwrap().1;
+        for stage in 0..l.n_stages() {
+            let r = l.stage_range(stage);
+            let rows: Vec<Vec<f32>> =
+                live.iter().map(|&w| grads[w][r.clone()].to_vec()).collect();
+            let want = reference_avg(&rows);
+            for (a, b) in avg[r].iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "stage {stage}");
             }
         }
     }
@@ -300,7 +365,8 @@ mod tests {
                                 mb,
                                 stage, // worker j owns stage j
                                 &own_all[l.stage_range(stage)],
-                            );
+                            )
+                            .unwrap();
                         }
                     }
                     // owner-side reduction of my stage
@@ -314,7 +380,8 @@ mod tests {
                         n,
                         &own_all[l.stage_range(w)],
                         &mut gsum,
-                    );
+                    )
+                    .unwrap();
                     gsum
                 })
             })

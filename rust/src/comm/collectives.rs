@@ -12,53 +12,73 @@
 //! All sends stage through the fabric's buffer pool ([`Endpoint::send_copy`])
 //! and the broadcast fans one pooled payload out to every peer by handle
 //! clone, so in steady state the collectives allocate nothing per step.
+//!
+//! Every receive runs against the endpoint's deadline; a lost peer turns a
+//! collective into a [`CommError`] carrying the missing rank and tag
+//! instead of a hang (DESIGN-ROBUSTNESS.md).
 
-use super::{tags, Endpoint};
+use super::{tags, CommError, Endpoint};
 use crate::tensor::ops::add_into;
 
 /// Sum `data` from all ranks into the root (rank-ordered, deterministic).
 /// Non-roots return their input unchanged.
-pub fn reduce_to_root(ep: &mut Endpoint, root: usize, step: u64, data: &mut [f32]) {
+pub fn reduce_to_root(
+    ep: &mut Endpoint,
+    root: usize,
+    step: u64,
+    data: &mut [f32],
+) -> Result<(), CommError> {
     if ep.id == root {
         // fixed order 0, 1, ..., n-1 (skipping root's own, added first)
         for from in 0..ep.n {
             if from == root {
                 continue;
             }
-            let part = ep.recv(from, tags::ring(step, 1000 + from));
+            let part = ep.recv(from, tags::ring(step, 1000 + from))?;
             add_into(data, &part);
         }
     } else {
-        ep.send_copy(root, tags::ring(step, 1000 + ep.id), data);
+        ep.send_copy(root, tags::ring(step, 1000 + ep.id), data)?;
     }
+    Ok(())
 }
 
 /// Broadcast root's `data` to everyone.  The root copies `data` into one
 /// pooled payload and fans the *handle* out — N−1 sends, one copy.
-pub fn broadcast(ep: &mut Endpoint, root: usize, step: u64, data: &mut [f32]) {
+pub fn broadcast(
+    ep: &mut Endpoint,
+    root: usize,
+    step: u64,
+    data: &mut [f32],
+) -> Result<(), CommError> {
     if ep.id == root {
         let payload = ep.pool().payload_from_slice(data);
         for to in 0..ep.n {
             if to != root {
-                ep.send(to, tags::ring(step, 2000), payload.clone());
+                ep.send(to, tags::ring(step, 2000), payload.clone())?;
             }
         }
     } else {
-        let got = ep.recv(root, tags::ring(step, 2000));
+        let got = ep.recv(root, tags::ring(step, 2000))?;
         data.copy_from_slice(&got);
     }
+    Ok(())
 }
 
 /// Flat all-reduce (reduce to root then broadcast), averaging by 1/n.
-pub fn allreduce_mean(ep: &mut Endpoint, step: u64, data: &mut [f32]) {
-    reduce_to_root(ep, 0, step, data);
+pub fn allreduce_mean(
+    ep: &mut Endpoint,
+    step: u64,
+    data: &mut [f32],
+) -> Result<(), CommError> {
+    reduce_to_root(ep, 0, step, data)?;
     if ep.id == 0 {
         let inv = 1.0 / ep.n as f32;
         for v in data.iter_mut() {
             *v *= inv;
         }
     }
-    broadcast(ep, 0, step, data);
+    broadcast(ep, 0, step, data)
 }
 
 /// Bandwidth-optimal ring all-reduce: reduce-scatter then all-gather,
@@ -66,10 +86,14 @@ pub fn allreduce_mean(ep: &mut Endpoint, step: u64, data: &mut [f32]) {
 /// Sum order differs per chunk (rotation), so results are deterministic
 /// but not bit-identical to the rank-ordered tree — use for throughput,
 /// not for golden comparisons.
-pub fn ring_allreduce(ep: &mut Endpoint, step: u64, data: &mut [f32]) {
+pub fn ring_allreduce(
+    ep: &mut Endpoint,
+    step: u64,
+    data: &mut [f32],
+) -> Result<(), CommError> {
     let n = ep.n;
     if n == 1 {
-        return;
+        return Ok(());
     }
     let len = data.len();
     let chunk = |c: usize| -> std::ops::Range<usize> {
@@ -84,18 +108,19 @@ pub fn ring_allreduce(ep: &mut Endpoint, step: u64, data: &mut [f32]) {
     for p in 0..n - 1 {
         let send_c = (me + n - p) % n;
         let recv_c = (me + n - p - 1) % n;
-        ep.send_copy(ep.right(), tags::ring(step, p), &data[chunk(send_c)]);
-        let part = ep.recv(ep.left(), tags::ring(step, p));
+        ep.send_copy(ep.right(), tags::ring(step, p), &data[chunk(send_c)])?;
+        let part = ep.recv(ep.left(), tags::ring(step, p))?;
         add_into(&mut data[chunk(recv_c)], &part);
     }
     // all-gather: circulate the completed chunks
     for p in 0..n - 1 {
         let send_c = (me + 1 + n - p) % n;
         let recv_c = (me + n - p) % n;
-        ep.send_copy(ep.right(), tags::ring(step, n + p), &data[chunk(send_c)]);
-        let part = ep.recv(ep.left(), tags::ring(step, n + p));
+        ep.send_copy(ep.right(), tags::ring(step, n + p), &data[chunk(send_c)])?;
+        let part = ep.recv(ep.left(), tags::ring(step, n + p))?;
         data[chunk(recv_c)].copy_from_slice(&part);
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -121,7 +146,7 @@ mod tests {
     fn flat_allreduce_means() {
         let out = run_spmd(4, |ep| {
             let mut data = vec![(ep.id + 1) as f32; 3];
-            allreduce_mean(ep, 0, &mut data);
+            allreduce_mean(ep, 0, &mut data).unwrap();
             data
         });
         for o in out {
@@ -136,7 +161,7 @@ mod tests {
                 // len deliberately not divisible by n
                 let mut data: Vec<f32> =
                     (0..10).map(|k| (ep.id * 10 + k) as f32).collect();
-                ring_allreduce(ep, 0, &mut data);
+                ring_allreduce(ep, 0, &mut data).unwrap();
                 data
             });
             let want: Vec<f32> = (0..10)
@@ -154,7 +179,7 @@ mod tests {
     fn ring_n1_is_noop() {
         let (mut eps, stats) = Fabric::new(1);
         let mut data = vec![1.0, 2.0];
-        ring_allreduce(&mut eps[0], 0, &mut data);
+        ring_allreduce(&mut eps[0], 0, &mut data).unwrap();
         assert_eq!(data, vec![1.0, 2.0]);
         assert_eq!(stats.bytes(), 0);
     }
@@ -167,7 +192,7 @@ mod tests {
         let expect = ((vals[0] + vals[1]) + vals[2]).to_bits();
         let out = run_spmd(3, move |ep| {
             let mut data = vec![vals[ep.id]];
-            reduce_to_root(ep, 0, 0, &mut data);
+            reduce_to_root(ep, 0, 0, &mut data).unwrap();
             data
         });
         assert_eq!(out[0][0].to_bits(), expect);
@@ -184,7 +209,7 @@ mod tests {
             handles.push(thread::spawn(move || {
                 let mut data = vec![ep.id as f32; 256];
                 for step in 0..20u64 {
-                    allreduce_mean(&mut ep, step, &mut data);
+                    allreduce_mean(&mut ep, step, &mut data).unwrap();
                 }
             }));
         }

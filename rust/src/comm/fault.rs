@@ -1,0 +1,378 @@
+//! Deterministic, seeded fault injection for the in-process fabric.
+//!
+//! A [`FaultInjector`] sits between [`super::Endpoint::send`] and the
+//! destination channel.  Each directed edge `(from → to)` owns an
+//! independent RNG stream seeded from `splitmix64(plan.seed ^ edge)`, so a
+//! given [`FaultPlan`] reproduces the exact same perturbation schedule on
+//! every run regardless of thread interleaving: an edge's stream is
+//! consumed only by sends on that edge, and each sender's per-edge send
+//! order is deterministic (the trainers' schedules are).
+//!
+//! Per message, one uniform draw selects (cumulative probabilities):
+//!
+//! - **drop** — the message is diverted to the edge's `lost` stash; the
+//!   receiver's timeout/backoff loop recovers it via [`FaultInjector::recover`].
+//! - **duplicate** — delivered twice with the same sequence number; the
+//!   receiver's dedup filter drops the copy.
+//! - **delay** — held, delivered just before the edge's next message
+//!   (per-edge order preserved; wall-clock delayed so the receiver's
+//!   backoff path is exercised).
+//! - **reorder** — held, delivered just *after* the edge's next message
+//!   (a one-slot swap; the receiver's parked queue / seq filter absorb it).
+//!
+//! The injector doubles as the retransmission buffer a real transport
+//! would keep on the sender: `recover(to, from)` flushes everything held
+//! or lost on that edge.  It is the deterministic in-process analogue of
+//! a NACK-triggered retransmit — nothing is ever lost permanently, which
+//! is exactly the contract that makes the retry path loss-transparent
+//! (faulty-run losses bit-identical to clean, asserted in
+//! tests/robustness.rs).
+//!
+//! Scripted worker-kill ([`KillSpec`]) is carried here too, but executed
+//! by the coordinators (the worker exits at the top of the given step,
+//! before sending anything); the injector only transports the script.
+//!
+//! Control-plane tags (heartbeat, checkpoint) never reach the injector —
+//! [`super::Endpoint::send`] routes them directly (fault model in
+//! DESIGN-ROBUSTNESS.md).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+use super::{CommError, Msg};
+use crate::util::rng::{splitmix64, XorShift64Star};
+
+/// Kill worker `worker` at the top of step `at_step` (before it sends
+/// anything for that step).  Coordinators that support degradation
+/// (multi's cyclic ring) re-form without it at that θ-version boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KillSpec {
+    pub worker: usize,
+    pub at_step: u64,
+}
+
+/// Seeded fault schedule for a fabric.  Probabilities are per message,
+/// evaluated on one uniform draw in the order drop → dup → delay →
+/// reorder (cumulative), so `p_drop + p_dup + p_delay + p_reorder ≤ 1`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub p_drop: f32,
+    pub p_dup: f32,
+    pub p_delay: f32,
+    pub p_reorder: f32,
+    pub kill: Option<KillSpec>,
+}
+
+impl FaultPlan {
+    /// Uniformly lossy edges: drop, duplicate and reorder each at `p`.
+    pub fn lossy(seed: u64, p: f32) -> Self {
+        Self { seed, p_drop: p, p_dup: p, p_delay: 0.0, p_reorder: p, kill: None }
+    }
+
+    /// No message perturbation; only a scripted worker-kill.
+    pub fn kill_only(worker: usize, at_step: u64) -> Self {
+        Self { kill: Some(KillSpec { worker, at_step }), ..Self::default() }
+    }
+
+    pub fn with_kill(mut self, worker: usize, at_step: u64) -> Self {
+        self.kill = Some(KillSpec { worker, at_step });
+        self
+    }
+}
+
+/// Per-edge perturbation state.  `rng` is this edge's private stream;
+/// `delayed` / `reordered` hold in-flight messages; `lost` stashes
+/// dropped ones until a receiver recovers them.
+#[derive(Debug)]
+struct EdgeState {
+    rng: XorShift64Star,
+    delayed: VecDeque<Msg>,
+    reordered: Option<Msg>,
+    lost: Vec<Msg>,
+}
+
+/// See the module docs.  Shared (`Arc`) by every endpoint of a fabric
+/// built with [`super::Fabric::with_faults`].
+pub struct FaultInjector {
+    plan: FaultPlan,
+    n: usize,
+    txs: Vec<Sender<Msg>>,
+    edges: Vec<Mutex<EdgeState>>,
+    drops: AtomicU64,
+    dups: AtomicU64,
+    delays: AtomicU64,
+    reorders: AtomicU64,
+    recovered: AtomicU64,
+}
+
+impl FaultInjector {
+    pub(super) fn new(plan: FaultPlan, n: usize, txs: Vec<Sender<Msg>>) -> Self {
+        let total = plan.p_drop + plan.p_dup + plan.p_delay + plan.p_reorder;
+        assert!(
+            (0.0..=1.0).contains(&total),
+            "fault probabilities sum to {total}, must be within [0, 1]"
+        );
+        let edges = (0..n * n)
+            .map(|e| {
+                Mutex::new(EdgeState {
+                    rng: XorShift64Star::new(splitmix64(plan.seed ^ (e as u64 + 1))),
+                    delayed: VecDeque::new(),
+                    reordered: None,
+                    lost: Vec::new(),
+                })
+            })
+            .collect();
+        Self {
+            plan,
+            n,
+            txs,
+            edges,
+            drops: AtomicU64::new(0),
+            dups: AtomicU64::new(0),
+            delays: AtomicU64::new(0),
+            reorders: AtomicU64::new(0),
+            recovered: AtomicU64::new(0),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The scripted kill step for `worker`, if this plan has one.
+    pub fn kill_step_for(&self, worker: usize) -> Option<u64> {
+        self.plan
+            .kill
+            .filter(|k| k.worker == worker)
+            .map(|k| k.at_step)
+    }
+
+    /// Messages diverted to an edge's lost stash so far.
+    pub fn drops(&self) -> u64 {
+        self.drops.load(Ordering::Relaxed)
+    }
+
+    /// Messages delivered twice so far.
+    pub fn dups(&self) -> u64 {
+        self.dups.load(Ordering::Relaxed)
+    }
+
+    /// Messages held for order-preserving delay so far.
+    pub fn delays(&self) -> u64 {
+        self.delays.load(Ordering::Relaxed)
+    }
+
+    /// Messages swapped past their successor so far.
+    pub fn reorders(&self) -> u64 {
+        self.reorders.load(Ordering::Relaxed)
+    }
+
+    /// Messages flushed out of held/lost stashes by receiver recovery.
+    pub fn recovered(&self) -> u64 {
+        self.recovered.load(Ordering::Relaxed)
+    }
+
+    /// Deliver directly to the destination channel, skipping stats (the
+    /// logical send was already accounted).  A dead receiver is fine:
+    /// losing messages to a dead worker is the failure being simulated.
+    fn deliver(&self, to: usize, msg: Msg) {
+        let _ = self.txs[to].send(msg);
+    }
+
+    /// Route one message through the edge's perturbation schedule.  On an
+    /// injected fabric a dead peer never fails the send (a lossy wire
+    /// can't tell) — it surfaces as the peer's silence, i.e. a recv
+    /// [`CommError::Timeout`] on whoever waits for it, which is the
+    /// detection path the coordinators' heartbeats use.
+    pub(super) fn route(&self, to: usize, msg: Msg) -> Result<(), CommError> {
+        let mut e = self.edges[msg.from * self.n + to]
+            .lock()
+            .expect("edge state poisoned");
+        // pending delayed messages go first (order preserved), then a
+        // held reorder partner is released after the current message.
+        while let Some(d) = e.delayed.pop_front() {
+            self.deliver(to, d);
+        }
+        let held = e.reordered.take();
+        let u = e.rng.uniform();
+        let p = &self.plan;
+        if u < p.p_drop {
+            self.drops.fetch_add(1, Ordering::Relaxed);
+            e.lost.push(msg);
+        } else if u < p.p_drop + p.p_dup {
+            self.dups.fetch_add(1, Ordering::Relaxed);
+            self.deliver(to, msg.clone());
+            self.deliver(to, msg);
+        } else if u < p.p_drop + p.p_dup + p.p_delay {
+            self.delays.fetch_add(1, Ordering::Relaxed);
+            e.delayed.push_back(msg);
+        } else if u < p.p_drop + p.p_dup + p.p_delay + p.p_reorder {
+            self.reorders.fetch_add(1, Ordering::Relaxed);
+            e.reordered = Some(msg);
+        } else {
+            self.deliver(to, msg);
+        }
+        if let Some(h) = held {
+            self.deliver(to, h);
+        }
+        Ok(())
+    }
+
+    /// Flush everything held or lost on the `from → to` edge back onto
+    /// the wire — the receiver calls this from its timeout/backoff loop.
+    /// The deterministic analogue of a NACK-triggered retransmit; seqs
+    /// are unchanged, so anything that raced the original is deduped.
+    pub fn recover(&self, to: usize, from: usize) {
+        let mut e = self.edges[from * self.n + to]
+            .lock()
+            .expect("edge state poisoned");
+        let mut flushed = 0u64;
+        while let Some(d) = e.delayed.pop_front() {
+            self.deliver(to, d);
+            flushed += 1;
+        }
+        if let Some(h) = e.reordered.take() {
+            self.deliver(to, h);
+            flushed += 1;
+        }
+        for m in e.lost.drain(..) {
+            self.deliver(to, m);
+            flushed += 1;
+        }
+        if flushed > 0 {
+            self.recovered.fetch_add(flushed, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{tags, Fabric};
+    use std::time::Duration;
+
+    #[test]
+    fn clean_plan_is_transparent() {
+        let (mut eps, _, inj) = Fabric::with_faults(2, FaultPlan::default());
+        let e0 = eps.remove(0);
+        let mut e1 = eps.remove(0);
+        for i in 0..20u64 {
+            e0.send(1, tags::grad(i, 0), vec![i as f32]).unwrap();
+            assert_eq!(e1.recv(0, tags::grad(i, 0)).unwrap(), vec![i as f32]);
+        }
+        assert_eq!(inj.drops() + inj.dups() + inj.delays() + inj.reorders(), 0);
+    }
+
+    #[test]
+    fn dropped_messages_are_recovered_by_receiver_backoff() {
+        let plan = FaultPlan { seed: 7, p_drop: 1.0, ..FaultPlan::default() };
+        let (mut eps, _, inj) = Fabric::with_faults(2, plan);
+        let e0 = eps.remove(0);
+        let mut e1 = eps.remove(0);
+        for i in 0..5u64 {
+            e0.send(1, tags::grad(i, 0), vec![i as f32]).unwrap();
+            // every message is dropped; the recv backoff loop recovers it
+            let got = e1
+                .recv_deadline(0, tags::grad(i, 0), Duration::from_secs(5))
+                .unwrap();
+            assert_eq!(got, vec![i as f32]);
+        }
+        assert_eq!(inj.drops(), 5);
+        assert_eq!(inj.recovered(), 5);
+    }
+
+    #[test]
+    fn duplicates_are_deduped_not_delivered_twice() {
+        let plan = FaultPlan { seed: 3, p_dup: 1.0, ..FaultPlan::default() };
+        let (mut eps, _, inj) = Fabric::with_faults(2, plan);
+        let e0 = eps.remove(0);
+        let mut e1 = eps.remove(0);
+        for i in 0..4u64 {
+            e0.send(1, tags::grad(i, 0), vec![i as f32]).unwrap();
+        }
+        for i in 0..4u64 {
+            assert_eq!(e1.recv(0, tags::grad(i, 0)).unwrap(), vec![i as f32]);
+        }
+        assert_eq!(inj.dups(), 4);
+        // a second receive of any tag must time out — the duplicate copies
+        // were filtered before parking, not left behind
+        let err = e1
+            .recv_deadline(0, tags::grad(0, 0), Duration::from_millis(40))
+            .unwrap_err();
+        assert!(matches!(err, crate::comm::CommError::Timeout { .. }));
+    }
+
+    #[test]
+    fn reordered_messages_arrive_and_match_by_tag() {
+        let plan = FaultPlan { seed: 11, p_reorder: 1.0, ..FaultPlan::default() };
+        let (mut eps, _, inj) = Fabric::with_faults(2, plan);
+        let e0 = eps.remove(0);
+        let mut e1 = eps.remove(0);
+        for i in 0..6u64 {
+            e0.send(1, tags::grad(i, 0), vec![i as f32]).unwrap();
+        }
+        // every message is held one slot; tag-addressed recv + recovery
+        // still yields each exactly once, in any order we ask
+        for i in (0..6u64).rev() {
+            let got = e1
+                .recv_deadline(0, tags::grad(i, 0), Duration::from_secs(5))
+                .unwrap();
+            assert_eq!(got, vec![i as f32]);
+        }
+        assert_eq!(inj.reorders(), 6);
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let plan = FaultPlan { seed: 42, p_drop: 0.3, p_dup: 0.3, ..FaultPlan::default() };
+        let run = || {
+            let (mut eps, _, inj) = Fabric::with_faults(2, plan);
+            let e0 = eps.remove(0);
+            let mut e1 = eps.remove(0);
+            for i in 0..50u64 {
+                e0.send(1, tags::grad(i, 0), vec![i as f32]).unwrap();
+                let got = e1
+                    .recv_deadline(0, tags::grad(i, 0), Duration::from_secs(5))
+                    .unwrap();
+                assert_eq!(got, vec![i as f32]);
+            }
+            (inj.drops(), inj.dups())
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "seeded schedule must be reproducible");
+        assert!(a.0 > 0 && a.1 > 0, "plan actually injected faults: {a:?}");
+    }
+
+    #[test]
+    fn control_plane_tags_bypass_injection() {
+        let plan = FaultPlan { seed: 1, p_drop: 1.0, ..FaultPlan::default() };
+        let (mut eps, _, inj) = Fabric::with_faults(2, plan);
+        let e0 = eps.remove(0);
+        let mut e1 = eps.remove(0);
+        e0.send(1, tags::hb(3), vec![1.0]).unwrap();
+        e0.send(1, tags::ckpt(3, 0, 0), vec![2.0]).unwrap();
+        // p_drop = 1.0, yet both arrive without any recovery round
+        assert_eq!(
+            e1.recv_deadline(0, tags::hb(3), Duration::from_millis(200)).unwrap(),
+            vec![1.0]
+        );
+        assert_eq!(
+            e1.recv_deadline(0, tags::ckpt(3, 0, 0), Duration::from_millis(200))
+                .unwrap(),
+            vec![2.0]
+        );
+        assert_eq!(inj.drops(), 0);
+    }
+
+    #[test]
+    fn kill_script_addresses_one_worker() {
+        let plan = FaultPlan::kill_only(2, 5);
+        let (_eps, _, inj) = Fabric::with_faults(4, plan);
+        assert_eq!(inj.kill_step_for(2), Some(5));
+        assert_eq!(inj.kill_step_for(1), None);
+    }
+}

@@ -23,16 +23,125 @@
 //! grad runs split into fixed buckets whose ring hops launch while
 //! backprop is still running (the paper's balanced-communication claim,
 //! made measurable by the opt-in [`CommStats`] timeline).
+//!
+//! ## Fault tolerance (DESIGN-ROBUSTNESS.md)
+//!
+//! No receive blocks forever: [`Endpoint::recv`] runs against a deadline
+//! and returns a typed [`CommError::Timeout`] carrying the decoded tag and
+//! peer id instead of hanging; sends to a dropped peer return
+//! [`CommError::PeerGone`] instead of panicking.  Every message carries a
+//! per-(sender → receiver) sequence number so retransmitted or injected
+//! duplicates are deduplicated before they can reach the parked queue.
+//! [`fault::FaultInjector`] (attached via [`Fabric::with_faults`]) sits
+//! between `send` and the wire, perturbing delivery — drop / duplicate /
+//! delay / reorder, all driven by per-edge deterministic RNG streams — and
+//! doubles as the retransmit buffer the receiver's timeout/backoff loop
+//! recovers lost messages from.  Control-plane namespaces (heartbeat,
+//! checkpoint) are exempt from injection; see the fault model in
+//! DESIGN-ROBUSTNESS.md.
 
 pub mod bucketed;
 pub mod collectives;
+pub mod fault;
 
-use std::collections::{HashMap, VecDeque};
+use std::cell::Cell;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::ops::Deref;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex, Weak};
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+pub use fault::{FaultInjector, FaultPlan, KillSpec};
+
+/// Default receive deadline.  Generous: a clean in-process run never waits
+/// anywhere near this long, so hitting it means a peer died or the fabric
+/// wedged — the error is diagnosis, not flow control.
+pub const DEFAULT_DEADLINE: Duration = Duration::from_secs(10);
+
+/// First timeout slice of the receive retry loop; doubles per retry.
+const BACKOFF_START: Duration = Duration::from_micros(200);
+/// Backoff ceiling — keeps recovery probes frequent enough that an
+/// injected-lossy edge adds at most ~this much latency per lost message.
+const BACKOFF_MAX: Duration = Duration::from_millis(20);
+
+// ------------------------------------------------------------- errors ----
+
+/// A tag decoded back into its `namespace | step | sub` fields — every
+/// [`CommError`] carries one so a timeout names the protocol message that
+/// went missing, not just a 64-bit opaque.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TagInfo {
+    pub ns: u8,
+    pub step: u64,
+    pub sub: u64,
+    pub raw: u64,
+}
+
+impl TagInfo {
+    pub fn ns_name(&self) -> &'static str {
+        match self.ns {
+            1 => "grad",
+            2 => "grad_part",
+            3 => "param",
+            4 => "loss",
+            5 => "ring",
+            6 => "act",
+            7 => "grad_bucket",
+            8 => "grad_shard",
+            9 => "hb",
+            10 => "ckpt",
+            _ => "unknown",
+        }
+    }
+}
+
+impl std::fmt::Display for TagInfo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}(step={}, sub={:#x})",
+            self.ns_name(),
+            self.step,
+            self.sub
+        )
+    }
+}
+
+/// Recoverable fabric errors.  Each carries the peer id and the decoded
+/// tag so a fault produces a diagnosable message, not a bare panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CommError {
+    /// The deadline elapsed with no matching message.
+    Timeout {
+        peer: usize,
+        tag: TagInfo,
+        waited: Duration,
+    },
+    /// The destination endpoint was dropped (its receiver is gone).
+    PeerGone { peer: usize, tag: TagInfo },
+    /// Every sender of this endpoint's channel is gone.
+    Closed { peer: usize, tag: TagInfo },
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Timeout { peer, tag, waited } => write!(
+                f,
+                "recv timeout after {waited:?} waiting for {tag} from worker {peer}"
+            ),
+            CommError::PeerGone { peer, tag } => {
+                write!(f, "worker {peer} gone (endpoint dropped) sending {tag}")
+            }
+            CommError::Closed { peer, tag } => {
+                write!(f, "fabric closed waiting for {tag} from worker {peer}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
 
 /// What a [`TimelineEvent`] records.  The set is deliberately small: just
 /// enough to prove (in benches/tests) that the bucketed gradient
@@ -63,6 +172,11 @@ pub struct TimelineEvent {
 /// an opt-in event timeline (disabled by default — `mark` is a no-op
 /// until [`CommStats::enable_timeline`] runs, so the hot path pays one
 /// relaxed atomic load).
+///
+/// Counts are *offered* traffic, taken at the `send` call before any
+/// fault injection: a clean run and a faulty run of the same schedule
+/// report identical bytes/messages, and the injector's own counters
+/// ([`fault::FaultInjector::drops`] etc.) account the wire perturbations.
 #[derive(Debug)]
 pub struct CommStats {
     pub bytes: AtomicU64,
@@ -328,14 +442,48 @@ impl PartialEq<Vec<f32>> for Payload {
 
 // ------------------------------------------------------------ endpoint ----
 
-#[derive(Debug)]
-struct Msg {
-    from: usize,
-    tag: u64,
-    data: Payload,
+#[derive(Clone, Debug)]
+pub(crate) struct Msg {
+    pub(crate) from: usize,
+    /// Per-(sender → receiver) sequence number, 1-based.  Retransmits and
+    /// injected duplicates carry the original seq; the receiver dedups.
+    pub(crate) seq: u64,
+    pub(crate) tag: u64,
+    pub(crate) data: Payload,
 }
 
-/// One worker's endpoint: send to any peer, tagged blocking receive.
+/// Receiver-side duplicate filter for one sender edge.  On the clean path
+/// seqs arrive in order, so the watermark bumps and the `ahead` set stays
+/// empty — no hashing, no allocation.  Under reordering the out-of-order
+/// seqs park in `ahead` until the gap closes.
+#[derive(Debug, Default)]
+struct SeqTracker {
+    /// Every seq ≤ this has been seen.
+    max_contig: u64,
+    /// Seen seqs beyond the contiguous watermark.
+    ahead: HashSet<u64>,
+}
+
+impl SeqTracker {
+    /// Record `seq`; returns true if it was already seen (a duplicate).
+    fn duplicate(&mut self, seq: u64) -> bool {
+        if seq <= self.max_contig {
+            return true;
+        }
+        if seq == self.max_contig + 1 {
+            self.max_contig += 1;
+            if !self.ahead.is_empty() {
+                while self.ahead.remove(&(self.max_contig + 1)) {
+                    self.max_contig += 1;
+                }
+            }
+            return false;
+        }
+        !self.ahead.insert(seq)
+    }
+}
+
+/// One worker's endpoint: send to any peer, tagged deadline receive.
 pub struct Endpoint {
     pub id: usize,
     pub n: usize,
@@ -343,6 +491,12 @@ pub struct Endpoint {
     rx: Receiver<Msg>,
     /// Out-of-order arrivals parked until someone asks for them.
     parked: HashMap<(usize, u64), VecDeque<Payload>>,
+    /// Next outgoing sequence number per destination (1-based).
+    next_seq: Vec<Cell<u64>>,
+    /// Duplicate filter per source.
+    seen: Vec<SeqTracker>,
+    deadline: Duration,
+    injector: Option<Arc<FaultInjector>>,
     stats: Arc<CommStats>,
     pool: BufferPool,
 }
@@ -351,42 +505,117 @@ impl Endpoint {
     /// Send `data` to `to` under `tag`.  f32 payloads only (params, grads,
     /// activations — everything the paper communicates).  Accepts a
     /// [`Payload`] (zero-copy hand-off / forward) or a plain `Vec<f32>`.
-    pub fn send(&self, to: usize, tag: u64, data: impl Into<Payload>) {
+    /// Errors with [`CommError::PeerGone`] if `to`'s endpoint was dropped.
+    pub fn send(
+        &self,
+        to: usize,
+        tag: u64,
+        data: impl Into<Payload>,
+    ) -> Result<(), CommError> {
         let data = data.into();
         assert_ne!(to, self.id, "self-send");
         self.stats
             .bytes
             .fetch_add(data.len() as u64 * 4, Ordering::Relaxed);
         self.stats.messages.fetch_add(1, Ordering::Relaxed);
-        self.txs[to]
-            .send(Msg { from: self.id, tag, data })
-            .expect("peer endpoint dropped");
+        let seq = self.next_seq[to].get() + 1;
+        self.next_seq[to].set(seq);
+        let msg = Msg { from: self.id, seq, tag, data };
+        match &self.injector {
+            // Control-plane traffic (heartbeat, checkpoint) bypasses the
+            // injector — see the fault model in DESIGN-ROBUSTNESS.md.
+            Some(inj) if !tags::is_control(tag) => inj.route(to, msg),
+            _ => self.txs[to].send(msg).map_err(|e| CommError::PeerGone {
+                peer: to,
+                tag: tags::unpack(e.0.tag),
+            }),
+        }
     }
 
     /// Send a copy of `data`, staged through the fabric's buffer pool so
     /// steady-state sends allocate nothing.
-    pub fn send_copy(&self, to: usize, tag: u64, data: &[f32]) {
+    pub fn send_copy(&self, to: usize, tag: u64, data: &[f32]) -> Result<(), CommError> {
         let payload = self.pool.payload_from_slice(data);
-        self.send(to, tag, payload);
+        self.send(to, tag, payload)
     }
 
-    /// Blocking receive of the message sent by `from` under `tag`.
-    pub fn recv(&mut self, from: usize, tag: u64) -> Payload {
+    /// Receive the message sent by `from` under `tag`, waiting at most the
+    /// endpoint's default deadline (see [`Endpoint::set_deadline`]).
+    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Payload, CommError> {
+        self.recv_deadline(from, tag, self.deadline)
+    }
+
+    /// Receive with an explicit deadline.  Waits in exponentially growing
+    /// slices ([`BACKOFF_START`] … [`BACKOFF_MAX`]); after each empty
+    /// slice it asks the fault injector (if any) to retransmit anything
+    /// lost or held on the `from → self` edge, so injected-lossy edges
+    /// recover without the sender's involvement.  Duplicates (retransmits
+    /// that raced the original, injected dups) are dropped by sequence
+    /// number before they can match or park.
+    pub fn recv_deadline(
+        &mut self,
+        from: usize,
+        tag: u64,
+        deadline: Duration,
+    ) -> Result<Payload, CommError> {
         if let Some(q) = self.parked.get_mut(&(from, tag)) {
             if let Some(p) = q.pop_front() {
-                return p;
+                return Ok(p);
             }
         }
+        let start = Instant::now();
+        let mut slice = BACKOFF_START;
         loop {
-            let msg = self.rx.recv().expect("fabric closed");
-            if msg.from == from && msg.tag == tag {
-                return msg.data;
+            let waited = start.elapsed();
+            if waited >= deadline {
+                return Err(CommError::Timeout {
+                    peer: from,
+                    tag: tags::unpack(tag),
+                    waited,
+                });
             }
-            self.parked
-                .entry((msg.from, msg.tag))
-                .or_default()
-                .push_back(msg.data);
+            match self.rx.recv_timeout(slice.min(deadline - waited)) {
+                Ok(msg) => {
+                    if self.seen[msg.from].duplicate(msg.seq) {
+                        continue;
+                    }
+                    if msg.from == from && msg.tag == tag {
+                        return Ok(msg.data);
+                    }
+                    self.parked
+                        .entry((msg.from, msg.tag))
+                        .or_default()
+                        .push_back(msg.data);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Some(inj) = &self.injector {
+                        inj.recover(self.id, from);
+                    }
+                    slice = (slice * 2).min(BACKOFF_MAX);
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(CommError::Closed {
+                        peer: from,
+                        tag: tags::unpack(tag),
+                    });
+                }
+            }
         }
+    }
+
+    /// Replace the default receive deadline (tests use short ones; the
+    /// heartbeat detector uses its own explicit [`Endpoint::recv_deadline`]).
+    pub fn set_deadline(&mut self, deadline: Duration) {
+        self.deadline = deadline;
+    }
+
+    pub fn deadline(&self) -> Duration {
+        self.deadline
+    }
+
+    /// The fault injector attached at fabric construction, if any.
+    pub fn injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.injector.as_ref()
     }
 
     pub fn stats(&self) -> &Arc<CommStats> {
@@ -407,11 +636,71 @@ impl Endpoint {
     }
 }
 
+/// A (possibly partial) ring over a fabric's endpoints: position-based
+/// roles (who is first, who is the optimizer owner) with endpoint-id
+/// addressing.  The full fabric is the common case; after a worker loss
+/// the survivors re-form with [`RingView::from_live`] and every ring
+/// protocol keeps working on the smaller ring (DESIGN-ROBUSTNESS.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RingView {
+    /// My position in the ring, 0-based.
+    pub pos: usize,
+    /// Ring size (number of live members).
+    pub m: usize,
+    /// Endpoint id of the member at position `pos - 1 (mod m)`.
+    pub left: usize,
+    /// Endpoint id of the member at position `pos + 1 (mod m)`.
+    pub right: usize,
+}
+
+impl RingView {
+    /// The full fabric as a ring (position = endpoint id).
+    pub fn full(ep: &Endpoint) -> Self {
+        Self { pos: ep.id, m: ep.n, left: ep.left(), right: ep.right() }
+    }
+
+    /// The ring over `live` (sorted, deduplicated endpoint ids) as seen
+    /// from member `me`.  Panics if `me` is not in `live`.
+    pub fn from_live(me: usize, live: &[usize]) -> Self {
+        debug_assert!(live.windows(2).all(|w| w[0] < w[1]), "live set not sorted");
+        let m = live.len();
+        let pos = live
+            .iter()
+            .position(|&w| w == me)
+            .expect("member not in live set");
+        Self {
+            pos,
+            m,
+            left: live[(pos + m - 1) % m],
+            right: live[(pos + 1) % m],
+        }
+    }
+}
+
 /// Build a fully-connected fabric of `n` endpoints.
 pub struct Fabric;
 
 impl Fabric {
     pub fn new(n: usize) -> (Vec<Endpoint>, Arc<CommStats>) {
+        let (eps, stats, _) = Self::build(n, None);
+        (eps, stats)
+    }
+
+    /// A fabric whose edges run through a deterministic, seeded
+    /// [`FaultInjector`] (drop / duplicate / delay / reorder plus the
+    /// scripted worker-kill carried to the coordinators).
+    pub fn with_faults(
+        n: usize,
+        plan: FaultPlan,
+    ) -> (Vec<Endpoint>, Arc<CommStats>, Arc<FaultInjector>) {
+        let (eps, stats, inj) = Self::build(n, Some(plan));
+        (eps, stats, inj.expect("injector built"))
+    }
+
+    fn build(
+        n: usize,
+        plan: Option<FaultPlan>,
+    ) -> (Vec<Endpoint>, Arc<CommStats>, Option<Arc<FaultInjector>>) {
         let stats = Arc::new(CommStats::default());
         let pool = BufferPool::new();
         let mut txs_all = Vec::with_capacity(n);
@@ -421,6 +710,8 @@ impl Fabric {
             txs_all.push(tx);
             rxs.push(rx);
         }
+        let injector =
+            plan.map(|p| Arc::new(FaultInjector::new(p, n, txs_all.clone())));
         let endpoints = rxs
             .into_iter()
             .enumerate()
@@ -430,11 +721,15 @@ impl Fabric {
                 txs: txs_all.clone(),
                 rx,
                 parked: HashMap::new(),
+                next_seq: (0..n).map(|_| Cell::new(0)).collect(),
+                seen: (0..n).map(|_| SeqTracker::default()).collect(),
+                deadline: DEFAULT_DEADLINE,
+                injector: injector.clone(),
                 stats: stats.clone(),
                 pool: pool.clone(),
             })
             .collect();
-        (endpoints, stats)
+        (endpoints, stats, injector)
     }
 }
 
@@ -446,15 +741,38 @@ impl Fabric {
 /// bleed across namespaces for any step < 2³² (tested below, including
 /// steps ≥ 2²⁴ that overflowed the previous packing).
 pub mod tags {
+    use super::TagInfo;
+
     const NS_SHIFT: u32 = 56;
     const STEP_SHIFT: u32 = 24;
     const STEP_MASK: u64 = (1 << 32) - 1;
     const SUB_MASK: u64 = (1 << 24) - 1;
 
+    /// Control-plane namespaces: heartbeat and checkpoint traffic is
+    /// exempt from fault injection (DESIGN-ROBUSTNESS.md fault model).
+    const NS_HB: u64 = 9;
+    const NS_CKPT: u64 = 10;
+
     fn pack(ns: u64, step: u64, sub: u64) -> u64 {
         debug_assert!(step <= STEP_MASK, "step {step} exceeds 32-bit tag field");
         debug_assert!(sub <= SUB_MASK, "sub {sub:#x} exceeds 24-bit tag field");
         (ns << NS_SHIFT) | ((step & STEP_MASK) << STEP_SHIFT) | (sub & SUB_MASK)
+    }
+
+    /// Decode a packed tag back into its fields (for error context).
+    pub fn unpack(tag: u64) -> TagInfo {
+        TagInfo {
+            ns: (tag >> NS_SHIFT) as u8,
+            step: (tag >> STEP_SHIFT) & STEP_MASK,
+            sub: tag & SUB_MASK,
+            raw: tag,
+        }
+    }
+
+    /// True for control-plane tags the fault injector must not perturb.
+    pub fn is_control(tag: u64) -> bool {
+        let ns = tag >> NS_SHIFT;
+        ns == NS_HB || ns == NS_CKPT
     }
 
     /// grad fragment for (step, stage)
@@ -513,6 +831,19 @@ pub mod tags {
         );
         pack(8, step, ((bucket as u64) << 10) | ((mb as u64) << 5) | stage as u64)
     }
+
+    /// liveness heartbeat for a step (control plane — never injected).
+    pub fn hb(step: u64) -> u64 {
+        pack(NS_HB, step, 0)
+    }
+
+    /// checkpoint state transfer for (step, stage, part) where `part`
+    /// distinguishes the arenas (0 = params, 1 = stale params,
+    /// 2 = momentum).  Control plane — never injected.
+    pub fn ckpt(step: u64, stage: usize, part: usize) -> u64 {
+        debug_assert!(stage < 1 << 16 && part < 1 << 8);
+        pack(NS_CKPT, step, ((stage as u64) << 8) | part as u64)
+    }
 }
 
 #[cfg(test)]
@@ -526,13 +857,13 @@ mod tests {
         let mut e1 = eps.pop().unwrap();
         let e0 = eps.pop().unwrap();
         let h = thread::spawn(move || {
-            let got = e1.recv(0, 7);
+            let got = e1.recv(0, 7).unwrap();
             assert_eq!(got, vec![1.0, 2.0, 3.0]);
-            e1.send(0, 8, vec![4.0]);
+            e1.send(0, 8, vec![4.0]).unwrap();
         });
-        e0.send(1, 7, vec![1.0, 2.0, 3.0]);
+        e0.send(1, 7, vec![1.0, 2.0, 3.0]).unwrap();
         let mut e0 = e0;
-        assert_eq!(e0.recv(1, 8), vec![4.0]);
+        assert_eq!(e0.recv(1, 8).unwrap(), vec![4.0]);
         h.join().unwrap();
         assert_eq!(stats.bytes(), 16);
         assert_eq!(stats.messages(), 2);
@@ -543,11 +874,11 @@ mod tests {
         let (mut eps, _) = Fabric::new(2);
         let mut e1 = eps.pop().unwrap();
         let e0 = eps.pop().unwrap();
-        e0.send(1, 100, vec![1.0]);
-        e0.send(1, 200, vec![2.0]);
+        e0.send(1, 100, vec![1.0]).unwrap();
+        e0.send(1, 200, vec![2.0]).unwrap();
         // receive in reverse order
-        assert_eq!(e1.recv(0, 200), vec![2.0]);
-        assert_eq!(e1.recv(0, 100), vec![1.0]);
+        assert_eq!(e1.recv(0, 200).unwrap(), vec![2.0]);
+        assert_eq!(e1.recv(0, 100).unwrap(), vec![1.0]);
     }
 
     #[test]
@@ -556,14 +887,90 @@ mod tests {
         let mut e1 = eps.pop().unwrap();
         let e0 = eps.pop().unwrap();
         // same (from, tag) three times, parked behind a different tag
-        e0.send(1, 9, vec![1.0]);
-        e0.send(1, 9, vec![2.0]);
-        e0.send(1, 9, vec![3.0]);
-        e0.send(1, 10, vec![99.0]);
-        assert_eq!(e1.recv(0, 10), vec![99.0]); // parks all three tag-9 msgs
-        assert_eq!(e1.recv(0, 9), vec![1.0]);
-        assert_eq!(e1.recv(0, 9), vec![2.0]);
-        assert_eq!(e1.recv(0, 9), vec![3.0]);
+        e0.send(1, 9, vec![1.0]).unwrap();
+        e0.send(1, 9, vec![2.0]).unwrap();
+        e0.send(1, 9, vec![3.0]).unwrap();
+        e0.send(1, 10, vec![99.0]).unwrap();
+        assert_eq!(e1.recv(0, 10).unwrap(), vec![99.0]); // parks all three tag-9 msgs
+        assert_eq!(e1.recv(0, 9).unwrap(), vec![1.0]);
+        assert_eq!(e1.recv(0, 9).unwrap(), vec![2.0]);
+        assert_eq!(e1.recv(0, 9).unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn recv_times_out_with_context_instead_of_hanging() {
+        let (mut eps, _) = Fabric::new(2);
+        let mut e0 = eps.remove(0);
+        let t0 = Instant::now();
+        let err = e0
+            .recv_deadline(1, tags::param(3, 2), Duration::from_millis(50))
+            .unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline honored");
+        match err {
+            CommError::Timeout { peer, tag, .. } => {
+                assert_eq!(peer, 1);
+                assert_eq!(tag.ns_name(), "param");
+                assert_eq!(tag.step, 3);
+                assert_eq!(tag.sub, 2);
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn send_to_dropped_peer_errors_instead_of_panicking() {
+        let (mut eps, _) = Fabric::new(2);
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        drop(e1); // peer endpoint gone
+        let err = e0.send(1, tags::loss(7), vec![1.0]).unwrap_err();
+        match err {
+            CommError::PeerGone { peer, tag } => {
+                assert_eq!(peer, 1);
+                assert_eq!(tag.ns_name(), "loss");
+                assert_eq!(tag.step, 7);
+            }
+            other => panic!("expected PeerGone, got {other:?}"),
+        }
+        // the error formats with full context for diagnosis
+        let msg = err.to_string();
+        assert!(msg.contains("worker 1") && msg.contains("loss"), "{msg}");
+    }
+
+    #[test]
+    fn seq_tracker_dedups_in_any_order() {
+        let mut t = SeqTracker::default();
+        assert!(!t.duplicate(1));
+        assert!(!t.duplicate(2));
+        assert!(t.duplicate(2), "immediate dup");
+        assert!(t.duplicate(1), "late dup below watermark");
+        assert!(!t.duplicate(4), "gap parks ahead");
+        assert!(t.duplicate(4), "dup in ahead set");
+        assert!(!t.duplicate(3), "gap closes");
+        assert!(t.duplicate(3));
+        assert!(t.duplicate(4), "absorbed into watermark");
+        assert!(!t.duplicate(5));
+    }
+
+    #[test]
+    fn ring_view_full_and_live_subsets() {
+        let (eps, _) = Fabric::new(4);
+        let full = RingView::full(&eps[1]);
+        assert_eq!(full, RingView { pos: 1, m: 4, left: 0, right: 2 });
+        // worker 2 lost: survivors re-form a 3-ring
+        let live = [0usize, 1, 3];
+        assert_eq!(
+            RingView::from_live(0, &live),
+            RingView { pos: 0, m: 3, left: 3, right: 1 }
+        );
+        assert_eq!(
+            RingView::from_live(1, &live),
+            RingView { pos: 1, m: 3, left: 0, right: 3 }
+        );
+        assert_eq!(
+            RingView::from_live(3, &live),
+            RingView { pos: 2, m: 3, left: 1, right: 0 }
+        );
     }
 
     #[test]
@@ -640,8 +1047,8 @@ mod tests {
         let e0 = eps.pop().unwrap();
         let data = vec![1.0f32; 128];
         for i in 0..10u64 {
-            e0.send_copy(1, i, &data);
-            let got = e1.recv(0, i);
+            e0.send_copy(1, i, &data).unwrap();
+            let got = e1.recv(0, i).unwrap();
             assert_eq!(got, data);
             drop(got); // last handle → buffer returns to the shared pool
         }
@@ -672,12 +1079,37 @@ mod tests {
                         assert!(seen.insert(tags::grad_shard(step, stage, mb, bucket)));
                     }
                 }
+                for part in 0..3usize {
+                    assert!(seen.insert(tags::ckpt(step, stage, part)));
+                }
             }
             // ring phases used by the collectives (reduce 1000+rank,
             // broadcast 2000) stay clear of plain stage phases
             assert!(seen.insert(tags::ring(step, 1000)));
             assert!(seen.insert(tags::ring(step, 2000)));
             assert!(seen.insert(tags::loss(step)));
+            assert!(seen.insert(tags::hb(step)));
         }
+    }
+
+    #[test]
+    fn tags_unpack_round_trips_and_flags_control_plane() {
+        let cases: &[(u64, u8, u64, u64)] = &[
+            (tags::grad(5, 3), 1, 5, 3),
+            (tags::param(1 << 30, 2), 3, 1 << 30, 2),
+            (tags::loss(9), 4, 9, 0),
+            (tags::hb(12), 9, 12, 0),
+            (tags::ckpt(7, 2, 1), 10, 7, (2 << 8) | 1),
+        ];
+        for &(raw, ns, step, sub) in cases {
+            let info = tags::unpack(raw);
+            assert_eq!((info.ns, info.step, info.sub, info.raw), (ns, step, sub, raw));
+        }
+        assert!(tags::is_control(tags::hb(0)));
+        assert!(tags::is_control(tags::ckpt(3, 1, 2)));
+        assert!(!tags::is_control(tags::grad(0, 0)));
+        assert!(!tags::is_control(tags::loss(0)));
+        assert_eq!(tags::unpack(tags::hb(4)).ns_name(), "hb");
+        assert_eq!(tags::unpack(tags::ckpt(4, 0, 0)).ns_name(), "ckpt");
     }
 }

@@ -23,20 +23,43 @@
 //! `ExecMode` (or `CDP_EXEC_MODE`) selects the host path on XLA instead —
 //! loss sequences are bit-identical either way, and bit-identical to
 //! [`super::single::RefTrainer`] under the same rule (rust/tests/).
+//!
+//! ## Robustness (DESIGN-ROBUSTNESS.md)
+//!
+//! Every receive runs against the fabric deadline, so a lost peer turns
+//! into a typed [`crate::comm::CommError`] naming the peer and decoded
+//! tag instead of a silent hang.  [`MultiOpts::faults`] wires a seeded
+//! [`FaultPlan`] into the fabric; loss sequences under drop/dup/reorder
+//! injection stay bit-identical to the clean run (retry + seq dedup).
+//! [`MultiOpts::checkpoint_at`] captures a [`Checkpoint`] at a θ-version
+//! boundary and [`resume_with`] continues from one bit-identically.  A
+//! scripted worker kill in ring mode degrades gracefully: the survivors
+//! detect the silent peer by heartbeat at the next step boundary and
+//! re-form the cyclic ring with N−1 members — post-junction losses match
+//! a fresh N−1-micro-batch run resumed from the junction state.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::{version_id, ExecMode, SharedBackend, StepLog};
 use crate::cluster::run_workers;
 use crate::comm::bucketed::{bucket_elems_from_env, BucketedReducer};
 use crate::comm::collectives::allreduce_mean;
-use crate::comm::{tags, CommStats, Endpoint, EventKind, Fabric, TimelineEvent};
+use crate::comm::fault::FaultPlan;
+use crate::comm::{
+    tags, CommStats, Endpoint, EventKind, Fabric, RingView, TimelineEvent,
+};
 use crate::data::{DataSource, MicroBatch};
 use crate::parallel::arena::ArenaLayout;
-use crate::parallel::{ParamStore, Rule};
+use crate::parallel::{Checkpoint, ParamStore, Rule};
 use crate::runtime::Backend;
 use crate::tensor::{HostTensor, IntTensor};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// How long a heartbeat may stay silent before the peer is declared dead.
+/// Generous against scheduler noise (heartbeats are sent before anyone
+/// blocks, so live peers answer in microseconds).
+const DETECT_DEADLINE: Duration = Duration::from_secs(2);
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommPattern {
@@ -49,7 +72,7 @@ pub enum CommPattern {
 
 /// Knobs for [`train_with`]; [`Default`] is the production configuration
 /// (device-resident where the backend has a device, default bucket size,
-/// no timeline recording).
+/// no timeline recording, no faults, no checkpoint).
 #[derive(Clone, Copy, Debug)]
 pub struct MultiOpts {
     pub mode: ExecMode,
@@ -57,6 +80,10 @@ pub struct MultiOpts {
     pub bucket_elems: usize,
     /// Record the comm/compute timeline (benches assert overlap on it).
     pub record_timeline: bool,
+    /// Seeded fault injection on every non-control fabric edge.
+    pub faults: Option<FaultPlan>,
+    /// Capture a checkpoint at the θ-version boundary after this step.
+    pub checkpoint_at: Option<u64>,
 }
 
 impl Default for MultiOpts {
@@ -65,6 +92,8 @@ impl Default for MultiOpts {
             mode: ExecMode::from_env(ExecMode::DeviceResident),
             bucket_elems: bucket_elems_from_env(),
             record_timeline: false,
+            faults: None,
+            checkpoint_at: None,
         }
     }
 }
@@ -77,6 +106,8 @@ pub struct MultiReport {
     pub optimizer_replicas: usize,
     /// Recorded events when `record_timeline` was set (else empty).
     pub timeline: Vec<TimelineEvent>,
+    /// Captured at the [`MultiOpts::checkpoint_at`] boundary, if any.
+    pub checkpoint: Option<Checkpoint>,
 }
 
 /// Train `steps` steps on `n` worker threads with default options.
@@ -96,29 +127,91 @@ pub fn train_with<B: Backend + Send + Sync + 'static>(
     steps: usize,
     opts: MultiOpts,
 ) -> Result<MultiReport> {
+    run(rt, rule, pattern, steps, opts, None)
+}
+
+/// Continue a run from a θ-version-boundary checkpoint: step `ck.step`
+/// onward is bit-identical to the uninterrupted run that produced it.
+pub fn resume_with<B: Backend + Send + Sync + 'static>(
+    rt: SharedBackend<B>,
+    rule: Rule,
+    pattern: CommPattern,
+    steps: usize,
+    opts: MultiOpts,
+    ck: Checkpoint,
+) -> Result<MultiReport> {
+    run(rt, rule, pattern, steps, opts, Some(ck))
+}
+
+fn run<B: Backend + Send + Sync + 'static>(
+    rt: SharedBackend<B>,
+    rule: Rule,
+    pattern: CommPattern,
+    steps: usize,
+    opts: MultiOpts,
+    resume: Option<Checkpoint>,
+) -> Result<MultiReport> {
     let n = rt.manifest().n_microbatches;
-    let (endpoints, stats) = Fabric::new(n);
+    if let Some(plan) = opts.faults {
+        if let Some(k) = plan.kill {
+            anyhow::ensure!(
+                pattern == CommPattern::Ring,
+                "scripted worker kills require the ring pattern (the barrier \
+                 has no degraded mode — a killed peer is a typed timeout)"
+            );
+            anyhow::ensure!(
+                n >= 3 && k.worker >= 1 && k.worker <= n - 2,
+                "killable workers are 1..={} (worker 0 is the loss logger, \
+                 worker {} the optimizer owner); got {}",
+                n.saturating_sub(2),
+                n - 1,
+                k.worker
+            );
+        }
+    }
+    let (endpoints, stats) = match opts.faults {
+        Some(plan) => {
+            let (eps, stats, _inj) = Fabric::with_faults(n, plan);
+            (eps, stats)
+        }
+        None => Fabric::new(n),
+    };
     if opts.record_timeline {
         stats.enable_timeline();
     }
-    let mut slots: Vec<Option<Endpoint>> = endpoints.into_iter().map(Some).collect();
     let eps: Arc<Vec<std::sync::Mutex<Option<Endpoint>>>> = Arc::new(
-        slots.iter_mut().map(|e| std::sync::Mutex::new(e.take())).collect(),
+        endpoints.into_iter().map(|e| std::sync::Mutex::new(Some(e))).collect(),
     );
 
     let rt_arc = rt.clone();
     let rule_c = rule.clone();
-    let results = run_workers(n, move |w| {
-        let mut ep = eps[w].lock().unwrap().take().expect("endpoint taken twice");
-        let out = match pattern {
-            CommPattern::Barrier => worker_dp(&rt_arc, &rule_c, &mut ep, w, steps, opts),
-            CommPattern::Ring => worker_ring(&rt_arc, &rule_c, &mut ep, w, steps, opts),
-        };
-        out.expect("worker failed")
+    let resume = Arc::new(resume);
+    let results = run_workers(n, move |w| -> Result<(Vec<StepLog>, Option<Checkpoint>)> {
+        let mut ep = eps[w]
+            .lock()
+            .map_err(|_| anyhow::anyhow!("endpoint mutex poisoned for worker {w}"))?
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("endpoint for worker {w} taken twice"))?;
+        match pattern {
+            CommPattern::Barrier => {
+                worker_dp(&rt_arc, &rule_c, &mut ep, w, steps, opts, resume.as_ref().as_ref())
+            }
+            CommPattern::Ring => {
+                worker_ring(&rt_arc, &rule_c, &mut ep, w, steps, opts, resume.as_ref().as_ref())
+            }
+        }
     });
 
-    // worker 0 reports the canonical loss log
-    let logs = results.into_iter().next().unwrap();
+    // worker 0 reports the canonical loss log + checkpoint
+    let mut logs = Vec::new();
+    let mut checkpoint = None;
+    for (w, r) in results.into_iter().enumerate() {
+        let (l, ck) = r.with_context(|| format!("multi worker {w} failed"))?;
+        if w == 0 {
+            logs = l;
+            checkpoint = ck;
+        }
+    }
     Ok(MultiReport {
         logs,
         comm_bytes: stats.bytes(),
@@ -128,7 +221,25 @@ pub fn train_with<B: Backend + Send + Sync + 'static>(
             CommPattern::Ring => 1,
         },
         timeline: stats.timeline(),
+        checkpoint,
     })
+}
+
+/// Fresh-or-restored replica state shared by both worker kinds.
+fn init_store<B: Backend>(
+    rt: &SharedBackend<B>,
+    rule: &Rule,
+    layout: &Arc<ArenaLayout>,
+    resume: Option<&Checkpoint>,
+) -> Result<(ParamStore, u64)> {
+    match resume {
+        Some(ck) => {
+            let store = ck.clone().into_store(layout.clone(), rule)?;
+            let t0 = store.step();
+            Ok((store, t0))
+        }
+        None => Ok((ParamStore::from_flat(layout.clone(), rt.init_params_flat()?), 0)),
+    }
 }
 
 /// Forward chain for micro-batch `i` at the rule's θ̂ versions: stashes
@@ -212,6 +323,7 @@ fn compute_grads<B: Backend>(
 }
 
 /// DP worker: compute → barrier all-reduce → identical local update.
+#[allow(clippy::too_many_arguments)]
 fn worker_dp<B: Backend>(
     rt: &SharedBackend<B>,
     rule: &Rule,
@@ -219,22 +331,25 @@ fn worker_dp<B: Backend>(
     w: usize,
     steps: usize,
     opts: MultiOpts,
-) -> Result<Vec<StepLog>> {
+    resume: Option<&Checkpoint>,
+) -> Result<(Vec<StepLog>, Option<Checkpoint>)> {
     let n = rt.manifest().n_stages;
     let layout = ArenaLayout::from_manifest(rt.manifest());
-    let mut store = ParamStore::from_flat(layout.clone(), rt.init_params_flat()?);
+    let (mut store, t0) = init_store(rt, rule, &layout, resume)?;
     let mut exec = rt.executor(opts.mode);
     let data = DataSource::from_manifest(rt.manifest());
     let mut gmb = layout.zeros();
     let mut logs = Vec::new();
+    let mut checkpoint = None;
 
-    for t in 0..steps as u64 {
+    for t in t0..t0 + steps as u64 {
         let loss =
             compute_grads(rt, &mut exec, &store, &data, rule, t, w + 1, &mut gmb)?;
 
         // synchronous all-reduce over the model-wide gradient run (the
         // paper's waiting barrier); rank-ordered sum + 1/N at the root
-        allreduce_mean(ep, t, &mut gmb);
+        allreduce_mean(ep, t, &mut gmb)
+            .with_context(|| format!("worker {w}: barrier all-reduce, step {t}"))?;
 
         // every replica applies the identical update (N optimizer copies)
         let lr = rt.manifest().lr;
@@ -244,18 +359,28 @@ fn worker_dp<B: Backend>(
         }
         store.commit_step();
 
+        // momentum is replicated bit-identically, so worker 0's replica
+        // is the complete cluster state — direct capture
+        if w == 0 && opts.checkpoint_at == Some(t) {
+            checkpoint = Some(Checkpoint::capture(&store, rule));
+        }
+
         // loss reporting: mean over micro-batches, gathered at worker 0
         if ep.id == 0 {
             let mut sum = loss as f64;
             for from in 1..ep.n {
-                sum += ep.recv(from, tags::loss(t))[0] as f64;
+                let p = ep
+                    .recv(from, tags::loss(t))
+                    .with_context(|| format!("worker 0: loss gather, step {t}"))?;
+                sum += p[0] as f64;
             }
             logs.push(StepLog { step: t, loss: sum / ep.n as f64 });
         } else {
-            ep.send(0, tags::loss(t), vec![loss]);
+            ep.send(0, tags::loss(t), vec![loss])
+                .with_context(|| format!("worker {w}: loss report, step {t}"))?;
         }
     }
-    Ok(logs)
+    Ok((logs, checkpoint))
 }
 
 /// CDP worker: eager bucketed ring — as each backward stage completes,
@@ -263,6 +388,14 @@ fn worker_dp<B: Backend>(
 /// remaining backward keeps computing; the owner (micro-batch N, the
 /// only optimizer state) updates each stage the moment its averaged sum
 /// assembles and hands the fresh parameters down the ring.
+///
+/// With a scripted kill in the fault plan the survivors heartbeat at
+/// each step boundary; when the victim goes silent they drop it from
+/// the live set and the next ring forms over N−1 members (the victim's
+/// micro-batch slot disappears; positions and the 1/m average follow
+/// the smaller ring).  Worker 0 (logger) and the owner are structural
+/// and may not be killed — `run` validates this.
+#[allow(clippy::too_many_arguments)]
 fn worker_ring<B: Backend>(
     rt: &SharedBackend<B>,
     rule: &Rule,
@@ -270,12 +403,12 @@ fn worker_ring<B: Backend>(
     w: usize,
     steps: usize,
     opts: MultiOpts,
-) -> Result<Vec<StepLog>> {
+    resume: Option<&Checkpoint>,
+) -> Result<(Vec<StepLog>, Option<Checkpoint>)> {
     let n = rt.manifest().n_stages;
     let n_mb = ep.n;
-    let owner = n_mb - 1; // worker of micro-batch N: the only optimizer state
     let layout = ArenaLayout::from_manifest(rt.manifest());
-    let mut store = ParamStore::from_flat(layout.clone(), rt.init_params_flat()?);
+    let (mut store, t0) = init_store(rt, rule, &layout, resume)?;
     let mut exec = rt.executor(opts.mode);
     let data = DataSource::from_manifest(rt.manifest());
     let reducer = BucketedReducer::new(opts.bucket_elems);
@@ -283,17 +416,62 @@ fn worker_ring<B: Backend>(
     // owner-side scratch the averaged sums assemble into, bucket by bucket
     let mut avg = layout.zeros();
     let mut logs = Vec::new();
+    let mut checkpoint = None;
     let lr = rt.manifest().lr;
-    let i = w + 1; // this worker's micro-batch index (1-based)
 
-    for t in 0..steps as u64 {
+    let my_kill = ep.injector().and_then(|inj| inj.kill_step_for(w));
+    // heartbeats run only under a kill script; one kill per plan, so the
+    // exchange stops once the loss has been observed
+    let mut hb_active =
+        ep.injector().map(|inj| inj.plan().kill.is_some()).unwrap_or(false);
+    let mut live: Vec<usize> = (0..n_mb).collect();
+
+    for t in t0..t0 + steps as u64 {
+        if my_kill == Some(t) {
+            // scripted crash: vanish at the θ-version boundary without a
+            // word — peers must detect the silence, not be told
+            return Ok((logs, checkpoint));
+        }
+        if hb_active {
+            for &p in &live {
+                if p != w {
+                    // a send error already proves the peer is gone; the
+                    // recv sweep below records it
+                    let _ = ep.send(p, tags::hb(t), vec![1.0]);
+                }
+            }
+            let mut dead = Vec::new();
+            for &p in &live {
+                if p != w && ep.recv_deadline(p, tags::hb(t), DETECT_DEADLINE).is_err() {
+                    dead.push(p);
+                }
+            }
+            if !dead.is_empty() {
+                live.retain(|p| !dead.contains(p));
+                anyhow::ensure!(
+                    live.len() >= 2,
+                    "worker {w}: ring cannot re-form with {} member(s)",
+                    live.len()
+                );
+                hb_active = false;
+            }
+        }
+
+        // ring geometry for this step: full fabric until a loss, then the
+        // sorted survivors.  Micro-batch index = ring position + 1, so a
+        // degraded step is exactly an m-micro-batch training step.
+        let ring = RingView::from_live(w, &live);
+        let m = ring.m;
+        let owner = live[m - 1];
+        let i = ring.pos + 1;
+
         let (acts, targets) = forward_mb(rt, &mut exec, &store, &data, rule, t, i)?;
 
         // ---- backward chain interleaved with the eager ring ----------
         // Stages run N−1 .. 0.  The moment stage j's grads land in the
-        // arena scratch, its buckets enter the ring (worker 0 launches,
+        // arena scratch, its buckets enter the ring (position 0 launches,
         // middles add+forward in micro-batch order, the owner folds the
-        // final add and the 1/N average — exactly the reference sum
+        // final add and the 1/m average — exactly the reference sum
         // order, so losses stay bit-identical).  The owner then updates
         // stage j and sends θ_{t+1}^j down the ring — all while stages
         // j−1..0 are still backpropagating everywhere: the balanced
@@ -323,7 +501,8 @@ fn worker_ring<B: Backend>(
                     ver,
                     store.select(rule, i, j),
                     &acts[j],
-                    gx.as_ref().expect("cotangent from stage above"),
+                    gx.as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("missing cotangent above stage {j}"))?,
                     &mut gmb[grange.clone()],
                 )?;
                 gx = Some(g);
@@ -333,7 +512,8 @@ fn worker_ring<B: Backend>(
                     ver,
                     store.select(rule, i, j),
                     &acts[j],
-                    gx.as_ref().expect("cotangent from stage above"),
+                    gx.as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("missing cotangent above stage {j}"))?,
                     &mut gmb[grange.clone()],
                 )?;
             }
@@ -345,7 +525,9 @@ fn worker_ring<B: Backend>(
             } else {
                 None
             };
-            reducer.ring_stage(ep, &layout, t, j, &gmb[grange.clone()], avg_out);
+            reducer
+                .ring_stage(ep, &ring, &layout, t, j, &gmb[grange.clone()], avg_out)
+                .with_context(|| format!("worker {w}: grad ring, step {t} stage {j}"))?;
 
             if w == owner {
                 // update stage j immediately; θ_{t+1}^j hops the ring
@@ -353,7 +535,7 @@ fn worker_ring<B: Backend>(
                 let g = &avg[grange];
                 let (cur, moms, next) = store.update_parts(j);
                 rt.sgd(&mut exec, j, t, cur, moms, g, lr, next)?;
-                if n_mb > 1 {
+                if m > 1 {
                     let fresh = store.next_stage(j);
                     ep.stats().mark(
                         EventKind::ParamSend,
@@ -361,36 +543,79 @@ fn worker_ring<B: Backend>(
                         j,
                         fresh.len() as u64 * 4,
                     );
-                    ep.send_copy(ep.right(), tags::param(t, j), fresh);
+                    ep.send_copy(ring.right, tags::param(t, j), fresh)
+                        .with_context(|| {
+                            format!("worker {w}: param hand-off, step {t} stage {j}")
+                        })?;
                 }
             }
         }
 
         // ---- non-owners: fresh stage params hop the ring from the owner;
         // forward the payload by handle, then write it into the next slot
-        if w != owner && n_mb > 1 {
+        if w != owner && m > 1 {
             for j in 0..n {
-                let flat = ep.recv(ep.left(), tags::param(t, j));
-                if ep.right() != owner {
-                    ep.send(ep.right(), tags::param(t, j), flat.clone());
+                let flat = ep
+                    .recv(ring.left, tags::param(t, j))
+                    .with_context(|| format!("worker {w}: param recv, step {t} stage {j}"))?;
+                if ring.right != owner {
+                    ep.send(ring.right, tags::param(t, j), flat.clone())
+                        .with_context(|| {
+                            format!("worker {w}: param forward, step {t} stage {j}")
+                        })?;
                 }
                 store.write_next(j, &flat);
             }
         }
         store.commit_step();
 
-        // loss gathering at worker 0 (mb order)
-        if ep.id == 0 {
-            let mut sum = loss as f64;
-            for from in 1..n_mb {
-                sum += ep.recv(from, tags::loss(t))[0] as f64;
+        // ---- checkpoint at the fresh θ-version boundary ----------------
+        // Every replica's cur/prev are bit-identical here; only the owner
+        // has live momentum, so it ships that one arena to the logger
+        // over the control plane (exempt from fault injection).
+        if opts.checkpoint_at == Some(t) {
+            if w == owner && w != 0 {
+                ep.send_copy(0, tags::ckpt(t, 0, 2), store.momentum_flat())
+                    .with_context(|| format!("owner {w}: checkpoint momentum, step {t}"))?;
             }
-            logs.push(StepLog { step: t, loss: sum / n_mb as f64 });
+            if w == 0 {
+                let moms = if owner == 0 {
+                    store.momentum_flat().to_vec()
+                } else {
+                    ep.recv(owner, tags::ckpt(t, 0, 2))
+                        .with_context(|| format!("worker 0: checkpoint momentum, step {t}"))?
+                        .to_vec()
+                };
+                checkpoint = Some(Checkpoint::from_arenas(
+                    &layout,
+                    rule,
+                    store.step(),
+                    store.flat_params().to_vec(),
+                    store.stale_flat().to_vec(),
+                    moms,
+                ));
+            }
+        }
+
+        // loss gathering at worker 0 (mb order)
+        if w == 0 {
+            let mut sum = loss as f64;
+            for &from in &live {
+                if from == 0 {
+                    continue;
+                }
+                let p = ep
+                    .recv(from, tags::loss(t))
+                    .with_context(|| format!("worker 0: loss gather, step {t}"))?;
+                sum += p[0] as f64;
+            }
+            logs.push(StepLog { step: t, loss: sum / m as f64 });
         } else {
-            ep.send(0, tags::loss(t), vec![loss]);
+            ep.send(0, tags::loss(t), vec![loss])
+                .with_context(|| format!("worker {w}: loss report, step {t}"))?;
         }
     }
-    Ok(logs)
+    Ok((logs, checkpoint))
 }
 
 /// Convenience: comm stats snapshot type re-export.

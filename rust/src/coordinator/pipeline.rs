@@ -23,10 +23,17 @@
 //! On XLA, execution is device-resident by default;
 //! `PipeOpts`/`CDP_EXEC_MODE` selects the host/literal path — losses are
 //! bit-identical either way (the native backend has one path).
+//!
+//! ## Robustness (DESIGN-ROBUSTNESS.md)
+//!
+//! The engine runs on a single host thread with *simulated* devices, so
+//! there is no comm fabric to inject faults into — its fault lane is
+//! kill/resume: [`PipeOpts::checkpoint_at`] captures a [`Checkpoint`] at
+//! a θ-version boundary and [`resume_with`] continues bit-identically.
 
 use std::collections::HashMap;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::{version_id, ExecMode, StepLog};
 use crate::cluster::DeviceMem;
@@ -34,7 +41,7 @@ use crate::comm::bucketed::{bucket_elems_from_env, effective_bucket_elems};
 use crate::data::{DataSource, MicroBatch};
 use crate::metrics::Metrics;
 use crate::parallel::arena::ArenaLayout;
-use crate::parallel::{GradBuffer, ParamStore, Rule};
+use crate::parallel::{Checkpoint, GradBuffer, ParamStore, Rule};
 use crate::runtime::{Activation, Backend};
 use crate::tensor::HostTensor;
 
@@ -56,6 +63,8 @@ pub struct PipeOpts {
     pub mode: ExecMode,
     /// Gradient bucket granularity for the overlap accounting (elements).
     pub bucket_elems: usize,
+    /// Capture a checkpoint at the θ-version boundary after this step.
+    pub checkpoint_at: Option<u64>,
 }
 
 impl Default for PipeOpts {
@@ -63,6 +72,7 @@ impl Default for PipeOpts {
         Self {
             mode: ExecMode::from_env(ExecMode::DeviceResident),
             bucket_elems: bucket_elems_from_env(),
+            checkpoint_at: None,
         }
     }
 }
@@ -85,11 +95,17 @@ pub struct PipelineReport {
     /// stage's buckets cannot overlap).
     pub eager_bucket_fraction: f64,
     pub metrics: Metrics,
+    /// Captured at the [`PipeOpts::checkpoint_at`] boundary, if any.
+    pub checkpoint: Option<Checkpoint>,
 }
 
 /// Build one training step's timetable via greedy list scheduling.
 /// Returns rows of (time, device, op); `makespan` slots total.
-fn build_timetable(n: usize, m: usize, sched: PipeSchedule) -> Vec<(usize, usize, PipeOp)> {
+fn build_timetable(
+    n: usize,
+    m: usize,
+    sched: PipeSchedule,
+) -> Result<Vec<(usize, usize, PipeOp)>> {
     let mut done: HashMap<PipeOp, usize> = HashMap::new(); // op → finish time
     let mut out = Vec::new();
     let mut t = 0usize;
@@ -158,10 +174,15 @@ fn build_timetable(n: usize, m: usize, sched: PipeSchedule) -> Vec<(usize, usize
         }
         t += 1;
         if !scheduled_any && t > 10 * n * m + 16 {
-            panic!("pipeline scheduler wedged at t={t}");
+            anyhow::bail!(
+                "pipeline scheduler wedged at t={t} (n={n}, m={m}, {sched:?}): \
+                 {} of {} ops placed",
+                done.len(),
+                2 * n * m
+            );
         }
     }
-    out
+    Ok(out)
 }
 
 pub fn train<B: Backend>(
@@ -180,10 +201,38 @@ pub fn train_with<B: Backend>(
     steps: usize,
     opts: PipeOpts,
 ) -> Result<PipelineReport> {
+    run(rt, rule, sched, steps, opts, None)
+}
+
+/// Continue a run from a θ-version-boundary checkpoint: step `ck.step`
+/// onward is bit-identical to the uninterrupted run that produced it.
+pub fn resume_with<B: Backend>(
+    rt: &B,
+    rule: Rule,
+    sched: PipeSchedule,
+    steps: usize,
+    opts: PipeOpts,
+    ck: Checkpoint,
+) -> Result<PipelineReport> {
+    run(rt, rule, sched, steps, opts, Some(ck))
+}
+
+fn run<B: Backend>(
+    rt: &B,
+    rule: Rule,
+    sched: PipeSchedule,
+    steps: usize,
+    opts: PipeOpts,
+    resume: Option<Checkpoint>,
+) -> Result<PipelineReport> {
     let n = rt.manifest().n_stages;
     let m = rt.manifest().n_microbatches;
     let layout = ArenaLayout::from_manifest(rt.manifest());
-    let mut store = ParamStore::from_flat(layout.clone(), rt.init_params_flat()?);
+    let mut store = match resume {
+        Some(ck) => ck.into_store(layout.clone(), &rule)?,
+        None => ParamStore::from_flat(layout.clone(), rt.init_params_flat()?),
+    };
+    let t0 = store.step();
     let mut grads = GradBuffer::new(layout.clone(), m);
     let mut exec = rt.executor(opts.mode);
     // per-op gradient scratch: one stage run at a time, reused
@@ -193,7 +242,7 @@ pub fn train_with<B: Backend>(
     let mut devices: Vec<DeviceMem> = (0..n).map(|_| DeviceMem::unbounded()).collect();
     let mut logs = Vec::new();
 
-    let timetable = build_timetable(n, m, sched);
+    let timetable = build_timetable(n, m, sched)?;
     let makespan = timetable.iter().map(|(t, _, _)| t + 1).max().unwrap_or(0);
     let bubble = 1.0 - (2 * n * m) as f64 / (makespan * n) as f64;
 
@@ -225,8 +274,9 @@ pub fn train_with<B: Backend>(
     };
 
     let mut act_comm: u64 = 0;
+    let mut checkpoint = None;
 
-    for step in 0..steps as u64 {
+    for step in t0..t0 + steps as u64 {
         // per-(mb) in-flight state
         let mut inputs: HashMap<(usize, usize), B::Act> = HashMap::new(); // (mb, stage) → stashed input
         let mut gxs: HashMap<usize, B::Act> = HashMap::new(); // mb → current cotangent
@@ -249,11 +299,13 @@ pub fn train_with<B: Backend>(
                 PipeOp::Fwd { mb, stage } => {
                     devices[dev]
                         .alloc("stash", rt.manifest().stages[stage].act_bytes)
-                        .unwrap();
+                        .with_context(|| format!("device {dev}: stash alloc, step {step}"))?;
                     if stage < n - 1 {
                         let ver = version_id(&rule, step, mb + 1, stage, n);
                         let y = {
-                            let x = inputs.get(&(mb, stage)).unwrap();
+                            let x = inputs.get(&(mb, stage)).ok_or_else(|| {
+                                anyhow::anyhow!("fwd(mb {mb}, stage {stage}): input never arrived")
+                            })?;
                             let params = store.select(&rule, mb + 1, stage);
                             rt.fwd(&mut exec, stage, ver, params, x)?
                         };
@@ -266,14 +318,19 @@ pub fn train_with<B: Backend>(
                     let ver = version_id(&rule, step, mb + 1, stage, n);
                     let grange = layout.stage_range(stage);
                     if stage == n - 1 {
-                        let x = inputs.get(&(mb, stage)).unwrap();
+                        let x = inputs.get(&(mb, stage)).ok_or_else(|| {
+                            anyhow::anyhow!("bwd(mb {mb}, stage {stage}): stashed input missing")
+                        })?;
                         let params = store.select(&rule, mb + 1, stage);
+                        let targets = targets_of.get(&mb).ok_or_else(|| {
+                            anyhow::anyhow!("bwd(mb {mb}): targets missing")
+                        })?;
                         let (loss, gx) = rt.last_bwd(
                             &mut exec,
                             ver,
                             params,
                             x,
-                            &targets_of[&mb],
+                            targets,
                             &mut gop[grange.clone()],
                         )?;
                         losses[mb] = loss as f64;
@@ -283,8 +340,12 @@ pub fn train_with<B: Backend>(
                         }
                         grads.add_flat(stage, mb + 1, &gop[grange]);
                     } else if stage > 0 {
-                        let x = inputs.get(&(mb, stage)).unwrap();
-                        let gy = gxs.remove(&mb).unwrap();
+                        let x = inputs.get(&(mb, stage)).ok_or_else(|| {
+                            anyhow::anyhow!("bwd(mb {mb}, stage {stage}): stashed input missing")
+                        })?;
+                        let gy = gxs.remove(&mb).ok_or_else(|| {
+                            anyhow::anyhow!("bwd(mb {mb}, stage {stage}): cotangent missing")
+                        })?;
                         let params = store.select(&rule, mb + 1, stage);
                         let gx = rt.mid_bwd(
                             &mut exec,
@@ -299,14 +360,20 @@ pub fn train_with<B: Backend>(
                         gxs.insert(mb, gx);
                         grads.add_flat(stage, mb + 1, &gop[grange]);
                     } else {
-                        let x = inputs.get(&(mb, 0)).unwrap();
-                        let gy = gxs.remove(&mb).unwrap();
+                        let x = inputs.get(&(mb, 0)).ok_or_else(|| {
+                            anyhow::anyhow!("bwd(mb {mb}, stage 0): stashed input missing")
+                        })?;
+                        let gy = gxs.remove(&mb).ok_or_else(|| {
+                            anyhow::anyhow!("bwd(mb {mb}, stage 0): cotangent missing")
+                        })?;
                         let params = store.select(&rule, mb + 1, 0);
                         rt.first_bwd(&mut exec, ver, params, x, &gy, &mut gop[grange.clone()])?;
                         grads.add_flat(0, mb + 1, &gop[grange]);
                     }
                     inputs.remove(&(mb, stage));
-                    devices[dev].free("stash").unwrap();
+                    devices[dev]
+                        .free("stash")
+                        .with_context(|| format!("device {dev}: stash free, step {step}"))?;
                 }
             }
         }
@@ -321,6 +388,10 @@ pub fn train_with<B: Backend>(
         }
         grads.reset();
         store.commit_step();
+
+        if opts.checkpoint_at == Some(step) {
+            checkpoint = Some(Checkpoint::capture(&store, &rule));
+        }
 
         let loss = losses.iter().sum::<f64>() / m as f64;
         metrics.record("loss", step as f64, loss);
@@ -337,6 +408,7 @@ pub fn train_with<B: Backend>(
         grad_buckets,
         eager_bucket_fraction,
         metrics,
+        checkpoint,
     })
 }
 
@@ -347,7 +419,7 @@ mod tests {
     #[test]
     fn timetable_covers_all_ops_once() {
         for sched in [PipeSchedule::GPipe, PipeSchedule::OneFOneB] {
-            let tt = build_timetable(4, 4, sched);
+            let tt = build_timetable(4, 4, sched).unwrap();
             assert_eq!(tt.len(), 2 * 4 * 4);
             let set: std::collections::HashSet<_> =
                 tt.iter().map(|(_, _, op)| *op).collect();
@@ -366,7 +438,7 @@ mod tests {
     #[test]
     fn timetable_respects_dependencies() {
         for sched in [PipeSchedule::GPipe, PipeSchedule::OneFOneB] {
-            let tt = build_timetable(3, 3, sched);
+            let tt = build_timetable(3, 3, sched).unwrap();
             let time_of: std::collections::HashMap<_, _> =
                 tt.iter().map(|(t, _, op)| (*op, *t)).collect();
             for mb in 0..3 {
@@ -392,7 +464,7 @@ mod tests {
 
     #[test]
     fn gpipe_has_full_fwd_drain() {
-        let tt = build_timetable(3, 3, PipeSchedule::GPipe);
+        let tt = build_timetable(3, 3, PipeSchedule::GPipe).unwrap();
         let last_fwd = tt
             .iter()
             .filter(|(_, _, op)| matches!(op, PipeOp::Fwd { .. }))
@@ -410,7 +482,7 @@ mod tests {
 
     #[test]
     fn onefoneb_interleaves() {
-        let tt = build_timetable(4, 4, PipeSchedule::OneFOneB);
+        let tt = build_timetable(4, 4, PipeSchedule::OneFOneB).unwrap();
         let last_fwd = tt
             .iter()
             .filter(|(_, _, op)| matches!(op, PipeOp::Fwd { .. }))

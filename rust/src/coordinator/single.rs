@@ -27,7 +27,7 @@ use super::{version_id, ExecMode, StepLog};
 use crate::data::{DataSource, MicroBatch};
 use crate::metrics::Metrics;
 use crate::parallel::arena::ArenaLayout;
-use crate::parallel::{GradBuffer, ParamStore, Rule};
+use crate::parallel::{Checkpoint, GradBuffer, ParamStore, Rule};
 use crate::runtime::Backend;
 use crate::tensor::{HostTensor, Tensor};
 
@@ -64,6 +64,32 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
     /// With explicit initial params (equivalence tests inject these).
     pub fn with_params(rt: &'rt B, rule: Rule, init: Vec<Vec<Tensor>>) -> Self {
         Self::assemble(rt, rule, ParamStore::new(init), ExecMode::HostLiteral)
+    }
+
+    /// Resume from a θ-version-boundary checkpoint.  The continuation is
+    /// bit-identical to the uninterrupted run: the restored step counter
+    /// re-derives the data stream (`microbatch_seed` is pure in
+    /// `(seed, step, mb)`), and the three arenas are the complete
+    /// optimizer state (DESIGN-ROBUSTNESS.md).
+    pub fn resume(rt: &'rt B, rule: Rule, ck: Checkpoint) -> Result<Self> {
+        Self::resume_with_mode(rt, rule, ck, ExecMode::HostLiteral)
+    }
+
+    pub fn resume_with_mode(
+        rt: &'rt B,
+        rule: Rule,
+        ck: Checkpoint,
+        mode: ExecMode,
+    ) -> Result<Self> {
+        let layout = ArenaLayout::from_manifest(rt.manifest());
+        let store = ck.into_store(layout, &rule)?;
+        Ok(Self::assemble(rt, rule, store, mode))
+    }
+
+    /// Snapshot the trainer at its current θ-version boundary (between
+    /// [`Self::step`] calls — never mid-step).
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint::capture(&self.store, &self.rule)
     }
 
     fn assemble(rt: &'rt B, rule: Rule, store: ParamStore, mode: ExecMode) -> Self {
@@ -216,8 +242,11 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
                 let y = self.rt.stage_fwd_flat(j, self.store.fresh(j), &a)?;
                 a = HostTensor::F32(y);
             }
-            let logits =
-                self.rt.predict_flat(self.store.fresh(n - 1), a.as_f32().unwrap())?;
+            let logits = self.rt.predict_flat(
+                self.store.fresh(n - 1),
+                a.as_f32()
+                    .ok_or_else(|| anyhow::anyhow!("eval stage chain produced non-f32 acts"))?,
+            )?;
             let classes = logits.shape[1];
             for (b, lbl) in labels.data.iter().enumerate() {
                 let row = &logits.data[b * classes..(b + 1) * classes];
@@ -252,7 +281,8 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
             }
             let loss = self.rt.last_fwd_loss_flat(
                 self.store.fresh(n - 1),
-                a.as_f32().unwrap(),
+                a.as_f32()
+                    .ok_or_else(|| anyhow::anyhow!("eval stage chain produced non-f32 acts"))?,
                 &targets,
             )?;
             sum += loss as f64;

@@ -29,16 +29,30 @@
 //! authoritative — the fabric serves and accounts the same bytes as
 //! before, so the paper's comm numbers are unchanged by the execution
 //! mode or backend.
+//!
+//! ## Robustness (DESIGN-ROBUSTNESS.md)
+//!
+//! Every receive carries the fabric deadline: a dead owner turns into a
+//! typed [`crate::comm::CommError`] naming the peer and the decoded
+//! param/shard tag.  Sharding makes N−1 re-forming structurally
+//! impossible — a lost worker takes its stage's only optimizer state
+//! with it — so the degraded mode here is *checkpoint and restart*:
+//! [`ZeroOpts::checkpoint_at`] gathers the full model state to worker 0
+//! at a θ-version boundary over the control plane, and [`resume_with`]
+//! re-shards it bit-identically.  Seeded fault injection
+//! ([`ZeroOpts::faults`]) leaves loss sequences bit-identical to clean
+//! runs (retry + seq dedup); scripted kills are rejected.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::{version_id, ExecMode, SharedBackend, StepLog};
 use crate::cluster::run_workers;
 use crate::comm::bucketed::{bucket_elems_from_env, BucketedReducer};
+use crate::comm::fault::FaultPlan;
 use crate::comm::{tags, Endpoint, EventKind, Fabric, Payload};
 use crate::data::{DataSource, MicroBatch};
 use crate::parallel::arena::ArenaLayout;
-use crate::parallel::{Rule, Version};
+use crate::parallel::{Checkpoint, Rule, Version};
 use crate::runtime::Backend;
 use crate::tensor::HostTensor;
 use std::sync::Arc;
@@ -57,6 +71,11 @@ pub struct ZeroOpts {
     pub mode: ExecMode,
     /// Gradient bucket granularity for the eager shard sends (elements).
     pub bucket_elems: usize,
+    /// Seeded fault injection on every non-control fabric edge.
+    pub faults: Option<FaultPlan>,
+    /// Capture a checkpoint at the θ-version boundary after this step
+    /// (full state gathered to worker 0 over the control plane).
+    pub checkpoint_at: Option<u64>,
 }
 
 impl Default for ZeroOpts {
@@ -64,6 +83,8 @@ impl Default for ZeroOpts {
         Self {
             mode: ExecMode::from_env(ExecMode::DeviceResident),
             bucket_elems: bucket_elems_from_env(),
+            faults: None,
+            checkpoint_at: None,
         }
     }
 }
@@ -76,6 +97,8 @@ pub struct ZeroReport {
     pub max_msgs_per_timestep: u64,
     /// Peak per-worker model-state bytes (params it holds at once).
     pub peak_state_bytes: u64,
+    /// Captured at the [`ZeroOpts::checkpoint_at`] boundary, if any.
+    pub checkpoint: Option<Checkpoint>,
 }
 
 /// Param version a worker must use for (mb i, stage j) under the rule.
@@ -96,14 +119,16 @@ fn stage_run<'a>(
     own_cur: &'a [f32],
     own_prev: &'a [f32],
     recv: &'a [Option<Payload>],
-) -> &'a [f32] {
+) -> Result<&'a [f32]> {
     if j == w {
-        match needed_version(rule, i, w, n) {
+        Ok(match needed_version(rule, i, w, n) {
             Version::Fresh => own_cur,
             Version::Stale => own_prev,
-        }
+        })
     } else {
-        recv[j].as_ref().expect("stage params received")
+        recv[j]
+            .as_deref()
+            .ok_or_else(|| anyhow::anyhow!("worker {w}: stage {j} params never arrived"))
     }
 }
 
@@ -123,33 +148,79 @@ pub fn train_with<B: Backend + Send + Sync + 'static>(
     steps: usize,
     opts: ZeroOpts,
 ) -> Result<ZeroReport> {
+    run(rt, rule, flow, steps, opts, None)
+}
+
+/// Continue from a θ-version-boundary checkpoint, re-sharding the saved
+/// state: step `ck.step` onward is bit-identical to the run that produced
+/// it.  This is ZeRO's whole degraded mode — sharding means a lost worker
+/// cannot be absorbed by the survivors (its optimizer shard died with it).
+pub fn resume_with<B: Backend + Send + Sync + 'static>(
+    rt: SharedBackend<B>,
+    rule: Rule,
+    flow: StateFlow,
+    steps: usize,
+    opts: ZeroOpts,
+    ck: Checkpoint,
+) -> Result<ZeroReport> {
+    run(rt, rule, flow, steps, opts, Some(ck))
+}
+
+fn run<B: Backend + Send + Sync + 'static>(
+    rt: SharedBackend<B>,
+    rule: Rule,
+    flow: StateFlow,
+    steps: usize,
+    opts: ZeroOpts,
+    resume: Option<Checkpoint>,
+) -> Result<ZeroReport> {
     let n = rt.manifest().n_stages;
     let n_mb = rt.manifest().n_microbatches;
-    assert_eq!(n, n_mb, "ZeRO sharding assumes N stages == N workers");
-    let (endpoints, stats) = Fabric::new(n);
+    anyhow::ensure!(n == n_mb, "ZeRO sharding assumes N stages == N workers");
+    if let Some(plan) = opts.faults {
+        anyhow::ensure!(
+            plan.kill.is_none(),
+            "ZeRO has no degraded ring — a killed worker takes its only \
+             optimizer shard with it; recover via checkpoint_at + resume_with"
+        );
+    }
+    let (endpoints, stats) = match opts.faults {
+        Some(plan) => {
+            let (eps, stats, _inj) = Fabric::with_faults(n, plan);
+            (eps, stats)
+        }
+        None => Fabric::new(n),
+    };
     let eps: Arc<Vec<std::sync::Mutex<Option<Endpoint>>>> = Arc::new(
         endpoints.into_iter().map(|e| std::sync::Mutex::new(Some(e))).collect(),
     );
 
     let rt_arc = rt.clone();
     let rule_c = rule.clone();
-    let results = run_workers(n, move |w| {
-        let mut ep = eps[w].lock().unwrap().take().unwrap();
-        worker(&rt_arc, &rule_c, flow, &mut ep, w, steps, opts)
-            .expect("zero worker failed")
-    });
+    let resume = Arc::new(resume);
+    let results = run_workers(
+        n,
+        move |w| -> Result<(Vec<StepLog>, u64, Option<Checkpoint>)> {
+            let mut ep = eps[w]
+                .lock()
+                .map_err(|_| anyhow::anyhow!("endpoint mutex poisoned for worker {w}"))?
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("endpoint for worker {w} taken twice"))?;
+            worker(&rt_arc, &rule_c, flow, &mut ep, w, steps, opts, resume.as_ref().as_ref())
+        },
+    );
 
-    let (logs, peaks): (Vec<_>, Vec<u64>) = {
-        let mut logs = Vec::new();
-        let mut peaks = Vec::new();
-        for (w, (l, p)) in results.into_iter().enumerate() {
-            if w == 0 {
-                logs = l;
-            }
-            peaks.push(p);
+    let mut logs = Vec::new();
+    let mut checkpoint = None;
+    let mut peaks = Vec::new();
+    for (w, r) in results.into_iter().enumerate() {
+        let (l, p, ck) = r.with_context(|| format!("zero worker {w} failed"))?;
+        if w == 0 {
+            logs = l;
+            checkpoint = ck;
         }
-        (logs, peaks)
-    };
+        peaks.push(p);
+    }
 
     // Parameter-broadcast concurrency per time step: in Broadcast mode the
     // owner emits N−1 messages within one time step; in Cyclic mode the
@@ -166,6 +237,7 @@ pub fn train_with<B: Backend + Send + Sync + 'static>(
         comm_messages: stats.messages(),
         max_msgs_per_timestep: max_msgs,
         peak_state_bytes: peaks.into_iter().max().unwrap_or(0),
+        checkpoint,
     })
 }
 
@@ -178,17 +250,36 @@ fn worker<B: Backend>(
     w: usize,
     steps: usize,
     opts: ZeroOpts,
-) -> Result<(Vec<StepLog>, u64)> {
+    resume: Option<&Checkpoint>,
+) -> Result<(Vec<StepLog>, u64, Option<Checkpoint>)> {
     let n = rt.manifest().n_stages;
     let n_mb = ep.n;
     let layout = ArenaLayout::from_manifest(rt.manifest());
-    let init = rt.init_params_flat()?;
     // Owner state: stage `w` params (current + previous version), momentum
-    // and the next-step slot — flat stage runs, allocated once.
-    let mut own_cur: Vec<f32> = init[layout.stage_range(w)].to_vec();
-    let mut own_prev: Vec<f32> = own_cur.clone();
+    // and the next-step slot — flat stage runs, allocated once.  On resume
+    // each worker re-shards its slices from the checkpoint (validated
+    // against this layout + rule via the transient full store).
+    let range = layout.stage_range(w);
+    let (mut own_cur, mut own_prev, mut own_mom, t0): (Vec<f32>, Vec<f32>, Vec<f32>, u64) =
+        match resume {
+            Some(ck) => {
+                let full = ck.clone().into_store(layout.clone(), rule)?;
+                (
+                    full.flat_params()[range.clone()].to_vec(),
+                    full.stale_flat()[range.clone()].to_vec(),
+                    full.momentum_flat()[range.clone()].to_vec(),
+                    full.step(),
+                )
+            }
+            None => {
+                let init = rt.init_params_flat()?;
+                let cur = init[range.clone()].to_vec();
+                let prev = cur.clone();
+                let mom = vec![0.0; cur.len()];
+                (cur, prev, mom, 0)
+            }
+        };
     let mut own_next: Vec<f32> = vec![0.0; own_cur.len()];
-    let mut own_mom: Vec<f32> = vec![0.0; own_cur.len()];
     let own_bytes: u64 = own_cur.len() as u64 * 4;
     // cur + prev + next slot + momentum — all four are persistent
     let mut peak_state: u64 = 4 * own_bytes;
@@ -201,9 +292,10 @@ fn worker<B: Backend>(
 
     let data = DataSource::from_manifest(rt.manifest());
     let mut logs = Vec::new();
+    let mut checkpoint = None;
     let i = w + 1; // this worker's micro-batch index (1-based)
 
-    for t in 0..steps as u64 {
+    for t in t0..t0 + steps as u64 {
         // ---- parameter distribution -----------------------------------
         // Worker w needs θ̂^j for every stage j.  Owners send; everyone
         // receives what they don't own.
@@ -211,7 +303,7 @@ fn worker<B: Backend>(
         // Both flows move the same bytes; Cyclic attributes sends to
         // distinct time steps (one peer per step) while Broadcast sends
         // all N−1 at once.  The fabric counts bytes/messages; the
-        // step-concurrency difference is scored in `train` above and in
+        // step-concurrency difference is scored in `run` above and in
         // sim::schemes.  Each needed version is copied into *one* pooled
         // payload whose handle fans out to every peer wanting it.
         let order: Vec<usize> = match flow {
@@ -235,7 +327,8 @@ fn worker<B: Backend>(
                     .get_or_insert_with(|| pool.payload_from_slice(&own_prev))
                     .clone(),
             };
-            ep.send(peer, tags::param(t, w), payload);
+            ep.send(peer, tags::param(t, w), payload)
+                .with_context(|| format!("owner {w}: param hand-off, step {t}"))?;
         }
 
         // Receive the other stages' params from their owners; my own stage
@@ -246,7 +339,9 @@ fn worker<B: Backend>(
             if j == w {
                 continue;
             }
-            let payload = ep.recv(j, tags::param(t, j));
+            let payload = ep
+                .recv(j, tags::param(t, j))
+                .with_context(|| format!("worker {w}: stage params, step {t}"))?;
             recv_bytes += payload.len() as u64 * 4;
             recv_params[j] = Some(payload);
         }
@@ -264,7 +359,7 @@ fn worker<B: Backend>(
         acts.push(rt.input(&mut exec, x0)?);
         for j in 0..n - 1 {
             let ver = version_id(rule, t, i, j, n);
-            let p = stage_run(j, w, i, n, rule, &own_cur, &own_prev, &recv_params);
+            let p = stage_run(j, w, i, n, rule, &own_cur, &own_prev, &recv_params)?;
             let y = rt.fwd(&mut exec, j, ver, p, &acts[j])?;
             acts.push(y);
         }
@@ -278,14 +373,16 @@ fn worker<B: Backend>(
         let (loss, mut gx) = rt.last_bwd(
             &mut exec,
             ver,
-            stage_run(last, w, i, n, rule, &own_cur, &own_prev, &recv_params),
+            stage_run(last, w, i, n, rule, &own_cur, &own_prev, &recv_params)?,
             &acts[last],
             &targets,
             &mut gmb[layout.stage_range(last)],
         )?;
         ep.stats().mark(EventKind::BwdStageDone, w, last, 0);
         if last != w {
-            reducer.shard_send(ep, &layout, t, last, i, last, &gmb[layout.stage_range(last)]);
+            reducer
+                .shard_send(ep, &layout, t, last, i, last, &gmb[layout.stage_range(last)])
+                .with_context(|| format!("worker {w}: shard send, step {t} stage {last}"))?;
         }
         for j in (1..last).rev() {
             let ver = version_id(rule, t, i, j, n);
@@ -293,14 +390,16 @@ fn worker<B: Backend>(
                 &mut exec,
                 j,
                 ver,
-                stage_run(j, w, i, n, rule, &own_cur, &own_prev, &recv_params),
+                stage_run(j, w, i, n, rule, &own_cur, &own_prev, &recv_params)?,
                 &acts[j],
                 &gx,
                 &mut gmb[layout.stage_range(j)],
             )?;
             ep.stats().mark(EventKind::BwdStageDone, w, j, 0);
             if j != w {
-                reducer.shard_send(ep, &layout, t, j, i, j, &gmb[layout.stage_range(j)]);
+                reducer
+                    .shard_send(ep, &layout, t, j, i, j, &gmb[layout.stage_range(j)])
+                    .with_context(|| format!("worker {w}: shard send, step {t} stage {j}"))?;
             }
         }
         if n > 1 {
@@ -308,29 +407,33 @@ fn worker<B: Backend>(
             rt.first_bwd(
                 &mut exec,
                 ver,
-                stage_run(0, w, i, n, rule, &own_cur, &own_prev, &recv_params),
+                stage_run(0, w, i, n, rule, &own_cur, &own_prev, &recv_params)?,
                 &acts[0],
                 &gx,
                 &mut gmb[layout.stage_range(0)],
             )?;
             ep.stats().mark(EventKind::BwdStageDone, w, 0, 0);
             if w != 0 {
-                reducer.shard_send(ep, &layout, t, 0, i, 0, &gmb[layout.stage_range(0)]);
+                reducer
+                    .shard_send(ep, &layout, t, 0, i, 0, &gmb[layout.stage_range(0)])
+                    .with_context(|| format!("worker {w}: shard send, step {t} stage 0"))?;
             }
         }
         drop(recv_params); // release received payloads back to the pool
 
         // ---- owner-side reduction (micro-batch order 1..N) -------------
-        reducer.shard_reduce(
-            ep,
-            &layout,
-            t,
-            w,
-            i,
-            n_mb,
-            &gmb[layout.stage_range(w)],
-            &mut gsum,
-        );
+        reducer
+            .shard_reduce(
+                ep,
+                &layout,
+                t,
+                w,
+                i,
+                n_mb,
+                &gmb[layout.stage_range(w)],
+                &mut gsum,
+            )
+            .with_context(|| format!("owner {w}: shard reduce, step {t}"))?;
 
         // ---- owner update ----------------------------------------------
         rt.sgd(
@@ -346,16 +449,61 @@ fn worker<B: Backend>(
         std::mem::swap(&mut own_prev, &mut own_cur); // prev ← θ_t
         std::mem::swap(&mut own_cur, &mut own_next); // cur ← θ_{t+1}
 
+        // ---- checkpoint at the fresh θ-version boundary ----------------
+        // The shards converge on worker 0 over the control plane (exempt
+        // from fault injection): three messages per non-zero worker, one
+        // per arena part.
+        if opts.checkpoint_at == Some(t) {
+            if w != 0 {
+                for (part, run) in
+                    [(0usize, &own_cur), (1, &own_prev), (2, &own_mom)]
+                {
+                    ep.send_copy(0, tags::ckpt(t, w, part), run)
+                        .with_context(|| format!("worker {w}: checkpoint shard, step {t}"))?;
+                }
+            } else {
+                let mut cur = layout.zeros();
+                let mut prev = layout.zeros();
+                let mut moms = layout.zeros();
+                cur[range.clone()].copy_from_slice(&own_cur);
+                prev[range.clone()].copy_from_slice(&own_prev);
+                moms[range.clone()].copy_from_slice(&own_mom);
+                for peer in 1..n_mb {
+                    let pr = layout.stage_range(peer);
+                    for (part, dst) in
+                        [(0usize, &mut cur), (1, &mut prev), (2, &mut moms)]
+                    {
+                        let p = ep.recv(peer, tags::ckpt(t, peer, part)).with_context(
+                            || format!("worker 0: checkpoint shard from {peer}, step {t}"),
+                        )?;
+                        dst[pr.clone()].copy_from_slice(&p);
+                    }
+                }
+                checkpoint = Some(Checkpoint::from_arenas(
+                    &layout,
+                    rule,
+                    t + 1,
+                    cur,
+                    prev,
+                    moms,
+                ));
+            }
+        }
+
         // ---- loss reporting (worker 0 logs the canonical mean) ---------
         if w == 0 {
             let mut sum = loss as f64;
             for from in 1..n_mb {
-                sum += ep.recv(from, tags::loss(t))[0] as f64;
+                let p = ep
+                    .recv(from, tags::loss(t))
+                    .with_context(|| format!("worker 0: loss gather, step {t}"))?;
+                sum += p[0] as f64;
             }
             logs.push(StepLog { step: t, loss: sum / n_mb as f64 });
         } else {
-            ep.send(0, tags::loss(t), vec![loss]);
+            ep.send(0, tags::loss(t), vec![loss])
+                .with_context(|| format!("worker {w}: loss report, step {t}"))?;
         }
     }
-    Ok((logs, peak_state))
+    Ok((logs, peak_state, checkpoint))
 }

@@ -1,0 +1,325 @@
+//! θ-version-boundary checkpointing (ROADMAP item 5a, DESIGN-ROBUSTNESS.md).
+//!
+//! The cyclic schedule has exactly one globally consistent recovery
+//! point: the θ-version boundary right after [`ParamStore::commit_step`],
+//! where every worker holds the same `{θ_t, θ_{t−1}, momentum, t}` and no
+//! message is in flight.  A [`Checkpoint`] is that state, nothing more:
+//!
+//! - the three flat arenas (current params, stale params, momentum),
+//! - the step counter `t` — which *is* the schedule position and,
+//!   because every data stream is derived as a pure function
+//!   `microbatch_seed(base, step, mb)` of it, the complete RNG state
+//!   (nothing else to serialize — the counter-based design from
+//!   `util::rng` pays off here),
+//! - the update-rule name and per-stage arena lengths as a fingerprint,
+//!   so resuming against the wrong model or rule is a typed error, not
+//!   silent corruption.
+//!
+//! ## Wire format (version 1)
+//!
+//! ```text
+//! magic    8  b"CDPCKPT1"
+//! version  u32 (= 1)
+//! step     u64
+//! rule     u32 len + UTF-8
+//! n_stages u32
+//! lens     n_stages × u64          per-stage arena lengths
+//! cur      Σlens × f32 LE          θ_t
+//! prev     Σlens × f32 LE          θ_{t−1}
+//! moms     Σlens × f32 LE          momentum
+//! checksum u64                     FNV-1a64 of all preceding bytes
+//! ```
+//!
+//! Everything little-endian via `util::binio`; round-trip is bit-exact
+//! (property-tested) — a resumed run's loss trajectory is bit-identical
+//! to the uninterrupted one (tests/robustness.rs).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::parallel::arena::ArenaLayout;
+use crate::parallel::param_store::ParamStore;
+use crate::parallel::update_rule::Rule;
+use crate::util::binio::{fnv1a64, ByteReader, ByteWriter};
+
+const MAGIC: &[u8; 8] = b"CDPCKPT1";
+const FORMAT_VERSION: u32 = 1;
+
+/// Complete trainer state at a θ-version boundary.  See module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// The run resumes at this step (state is "about to run step `step`").
+    pub step: u64,
+    /// Update-rule name ([`Rule::name`]) — validated on resume.
+    pub rule: String,
+    /// Per-stage flat arena lengths — the layout fingerprint.
+    pub stage_lens: Vec<u64>,
+    /// θ_t, model-wide stage-major flat.
+    pub cur: Vec<f32>,
+    /// θ_{t−1}.
+    pub prev: Vec<f32>,
+    /// Momentum.
+    pub moms: Vec<f32>,
+}
+
+impl Checkpoint {
+    /// Snapshot a store at its current θ-version boundary (call right
+    /// after `commit_step`; the store's own step counter is the boundary).
+    pub fn capture(store: &ParamStore, rule: &Rule) -> Self {
+        let layout = store.layout();
+        Self {
+            step: store.step(),
+            rule: rule.name().to_string(),
+            stage_lens: (0..layout.n_stages())
+                .map(|s| layout.stage_len(s) as u64)
+                .collect(),
+            cur: store.flat_params().to_vec(),
+            prev: store.stale_flat().to_vec(),
+            moms: store.momentum_flat().to_vec(),
+        }
+    }
+
+    /// Assemble from already-gathered flat arenas (threaded trainers
+    /// gather the owner's momentum over the fabric before building this).
+    pub fn from_arenas(
+        layout: &ArenaLayout,
+        rule: &Rule,
+        step: u64,
+        cur: Vec<f32>,
+        prev: Vec<f32>,
+        moms: Vec<f32>,
+    ) -> Self {
+        Self {
+            step,
+            rule: rule.name().to_string(),
+            stage_lens: (0..layout.n_stages())
+                .map(|s| layout.stage_len(s) as u64)
+                .collect(),
+            cur,
+            prev,
+            moms,
+        }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.stage_lens.iter().map(|&l| l as usize).sum()
+    }
+
+    /// Validate this checkpoint against a target layout and rule, then
+    /// rebuild the store.  Mismatches are diagnosable errors.
+    pub fn into_store(self, layout: Arc<ArenaLayout>, rule: &Rule) -> Result<ParamStore> {
+        anyhow::ensure!(
+            self.rule == rule.name(),
+            "checkpoint was written under rule `{}`, resuming under `{}`",
+            self.rule,
+            rule.name()
+        );
+        let want: Vec<u64> = (0..layout.n_stages())
+            .map(|s| layout.stage_len(s) as u64)
+            .collect();
+        anyhow::ensure!(
+            self.stage_lens == want,
+            "checkpoint layout {:?} does not match target layout {:?}",
+            self.stage_lens,
+            want
+        );
+        Ok(ParamStore::restore(
+            layout,
+            self.cur,
+            self.prev,
+            Some(self.moms),
+            self.step,
+        ))
+    }
+
+    /// Serialize (see the wire format in the module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let total = self.total_len();
+        debug_assert_eq!(self.cur.len(), total);
+        debug_assert_eq!(self.prev.len(), total);
+        debug_assert_eq!(self.moms.len(), total);
+        let mut w = ByteWriter::with_capacity(64 + self.rule.len() + total * 12);
+        w.bytes(MAGIC);
+        w.u32(FORMAT_VERSION);
+        w.u64(self.step);
+        w.str(&self.rule);
+        w.u32(self.stage_lens.len() as u32);
+        for &l in &self.stage_lens {
+            w.u64(l);
+        }
+        w.f32_slice(&self.cur);
+        w.f32_slice(&self.prev);
+        w.f32_slice(&self.moms);
+        let sum = fnv1a64(w.as_slice());
+        w.u64(sum);
+        w.finish()
+    }
+
+    /// Deserialize + integrity-check.  Truncation, magic/version
+    /// mismatches and checksum failures are all typed errors.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(bytes);
+        let magic = r.bytes(8).context("checkpoint header")?;
+        anyhow::ensure!(
+            magic == MAGIC,
+            "not a CDP checkpoint (bad magic {magic:02x?})"
+        );
+        let version = r.u32()?;
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "checkpoint format version {version} unsupported (this build reads {FORMAT_VERSION})"
+        );
+        let step = r.u64()?;
+        let rule = r.str()?;
+        let n_stages = r.u32()? as usize;
+        let mut stage_lens = Vec::with_capacity(n_stages);
+        for _ in 0..n_stages {
+            stage_lens.push(r.u64()?);
+        }
+        let total: usize = stage_lens.iter().map(|&l| l as usize).sum();
+        let cur = r.f32_vec(total).context("checkpoint cur arena")?;
+        let prev = r.f32_vec(total).context("checkpoint prev arena")?;
+        let moms = r.f32_vec(total).context("checkpoint momentum arena")?;
+        let want_sum = fnv1a64(r.consumed());
+        let got_sum = r.u64().context("checkpoint checksum")?;
+        anyhow::ensure!(
+            want_sum == got_sum,
+            "checkpoint checksum mismatch (file {got_sum:#018x}, computed {want_sum:#018x}) — truncated or corrupt"
+        );
+        anyhow::ensure!(r.remaining() == 0, "trailing bytes after checkpoint");
+        Ok(Self { step, rule, stage_lens, cur, prev, moms })
+    }
+
+    /// Write to a file (atomic-enough for the local fault model: written
+    /// to a sibling temp path, then renamed over the target).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("ckpt.tmp");
+        std::fs::write(&tmp, self.to_bytes())
+            .with_context(|| format!("write checkpoint {tmp:?}"))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename checkpoint into {path:?}"))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read checkpoint {path:?}"))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parse checkpoint {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::testing::check;
+
+    fn store() -> ParamStore {
+        ParamStore::new(vec![
+            vec![Tensor::new(vec![3], vec![1.0, -2.0, 0.5])],
+            vec![Tensor::new(vec![2], vec![4.0, 5.0])],
+        ])
+    }
+
+    #[test]
+    fn capture_restore_round_trips_through_store() {
+        let mut s = store();
+        s.write_next(0, &[9.0, 8.0, 7.0]);
+        s.write_next(1, &[6.0, 5.5]);
+        s.commit_step();
+        let ck = Checkpoint::capture(&s, &Rule::CdpV2);
+        assert_eq!(ck.step, 1);
+        assert_eq!(ck.rule, "cdp_v2");
+        let restored = ck
+            .clone()
+            .into_store(s.layout().clone(), &Rule::CdpV2)
+            .unwrap();
+        assert_eq!(restored.step(), 1);
+        assert_eq!(restored.flat_params(), s.flat_params());
+        assert_eq!(restored.stale_flat(), s.stale_flat());
+        assert_eq!(restored.momentum_flat(), s.momentum_flat());
+    }
+
+    #[test]
+    fn rule_and_layout_mismatches_are_typed_errors() {
+        let s = store();
+        let ck = Checkpoint::capture(&s, &Rule::Dp);
+        let err = ck
+            .clone()
+            .into_store(s.layout().clone(), &Rule::CdpV1)
+            .unwrap_err();
+        assert!(err.to_string().contains("rule"), "{err}");
+        let other = ArenaLayout::from_stage_shapes(&[vec![vec![4]]]);
+        let err2 = ck.into_store(other, &Rule::Dp).unwrap_err();
+        assert!(err2.to_string().contains("layout"), "{err2}");
+    }
+
+    #[test]
+    fn corrupt_bytes_are_rejected() {
+        let ck = Checkpoint::capture(&store(), &Rule::Dp);
+        let mut bytes = ck.to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 3]).is_err(), "truncation");
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        assert!(Checkpoint::from_bytes(b"NOTACKPT").is_err(), "bad magic");
+    }
+
+    #[test]
+    fn save_load_round_trips_on_disk() {
+        let dir = std::env::temp_dir().join("cdp_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("state.ckpt");
+        let ck = Checkpoint::capture(&store(), &Rule::CdpV2);
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back, ck);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    /// Property (ISSUE satellite): arbitrary arena layouts + θ-versions
+    /// serialize → deserialize bit-identically, including NaN payloads
+    /// and denormals.
+    #[test]
+    fn prop_round_trip_is_bit_exact() {
+        check("ckpt-roundtrip", 40, |g| {
+            let n = g.usize_in(1, 5);
+            let stage_lens: Vec<u64> =
+                (0..n).map(|_| g.usize_in(1, 32) as u64).collect();
+            let total: usize = stage_lens.iter().map(|&l| l as usize).sum();
+            let mut arena = |g: &mut crate::testing::Gen| -> Vec<f32> {
+                (0..total)
+                    .map(|_| {
+                        // cover exact bit patterns, not just nice floats
+                        match g.usize_in(0, 9) {
+                            0 => f32::from_bits(g.u64() as u32),
+                            1 => f32::MIN_POSITIVE / 2.0, // denormal
+                            _ => g.f32_in(-1e6, 1e6),
+                        }
+                    })
+                    .collect()
+            };
+            let ck = Checkpoint {
+                step: g.u64() & 0xFFFF_FFFF,
+                rule: ["dp", "cdp_v1", "cdp_v2"][g.usize_in(0, 2)].to_string(),
+                stage_lens,
+                cur: arena(g),
+                prev: arena(g),
+                moms: arena(g),
+            };
+            let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+            assert_eq!(back.step, ck.step);
+            assert_eq!(back.rule, ck.rule);
+            assert_eq!(back.stage_lens, ck.stage_lens);
+            for (a, b) in [(&back.cur, &ck.cur), (&back.prev, &ck.prev), (&back.moms, &ck.moms)] {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        });
+    }
+}

@@ -10,14 +10,18 @@
 //!   model-wide flat arena.
 //! - [`schedule`] — the time-step timelines of Fig 1 (DP lockstep vs the
 //!   cyclic pattern with per-worker delay 2(i−1)).
+//! - [`checkpoint`] — θ-version-boundary snapshots for kill/resume
+//!   (DESIGN-ROBUSTNESS.md): bit-exact serialization of the param store.
 
 pub mod arena;
+pub mod checkpoint;
 pub mod grad_buffer;
 pub mod param_store;
 pub mod schedule;
 pub mod update_rule;
 
 pub use arena::ArenaLayout;
+pub use checkpoint::Checkpoint;
 pub use grad_buffer::GradBuffer;
 pub use param_store::ParamStore;
 pub use schedule::{Op, Schedule};

@@ -46,10 +46,28 @@ impl ParamStore {
     pub fn from_flat(layout: Arc<ArenaLayout>, cur: Vec<f32>) -> Self {
         assert_eq!(cur.len(), layout.total_len, "init params/layout mismatch");
         let prev = cur.clone(); // θ_{−1} := θ_0
+        Self::restore(layout, cur, prev, None, 0)
+    }
+
+    /// Rebuild a store mid-run from checkpointed state: θ_t (`cur`),
+    /// θ_{t−1} (`prev`), momentum (zeros when `None` — e.g. a ring
+    /// non-owner that never reads it) and the step counter.  A store
+    /// restored from a θ-version-boundary checkpoint continues the run
+    /// bit-identically (`parallel::checkpoint`, tests/robustness.rs).
+    pub fn restore(
+        layout: Arc<ArenaLayout>,
+        cur: Vec<f32>,
+        prev: Vec<f32>,
+        moms: Option<Vec<f32>>,
+        step: u64,
+    ) -> Self {
+        assert_eq!(cur.len(), layout.total_len, "cur/layout mismatch");
+        assert_eq!(prev.len(), layout.total_len, "prev/layout mismatch");
+        let moms = moms.unwrap_or_else(|| layout.zeros());
+        assert_eq!(moms.len(), layout.total_len, "moms/layout mismatch");
         let next = layout.zeros();
-        let moms = layout.zeros();
         let next_written = vec![false; layout.n_stages()];
-        Self { layout, cur, prev, next, moms, next_written, step: 0 }
+        Self { layout, cur, prev, next, moms, next_written, step }
     }
 
     pub fn layout(&self) -> &Arc<ArenaLayout> {
@@ -147,6 +165,16 @@ impl ParamStore {
     /// this is a borrow, not a copy).
     pub fn flat_params(&self) -> &[f32] {
         &self.cur
+    }
+
+    /// Model-wide flat θ_{t−1} (checkpointing).
+    pub fn stale_flat(&self) -> &[f32] {
+        &self.prev
+    }
+
+    /// Model-wide flat momentum (checkpointing).
+    pub fn momentum_flat(&self) -> &[f32] {
+        &self.moms
     }
 
     /// Materialize θ_t of one stage as tensors (edge-of-system only).

@@ -66,6 +66,11 @@ pub struct NativeMlpConfig {
     pub layers_per_stage: usize,
     pub microbatch: usize,
     pub n_stages: usize,
+    /// Number of data microbatches N.  0 (the default) means "follow
+    /// `n_stages`" — the paper's square N×N cyclic schedule.  Setting it
+    /// explicitly lets fault-tolerance tests build a reference backend
+    /// that matches a degraded N−1 ring (DESIGN-ROBUSTNESS.md).
+    pub n_microbatches: usize,
     pub lr: f32,
     pub momentum: f32,
     pub noise: f32,
@@ -82,6 +87,7 @@ impl Default for NativeMlpConfig {
             layers_per_stage: 2,
             microbatch: 8,
             n_stages: 4,
+            n_microbatches: 0,
             lr: 0.01,
             momentum: 0.9,
             noise: 0.3,
@@ -623,7 +629,11 @@ fn synthetic_manifest(cfg: &NativeMlpConfig) -> Manifest {
         name: "native_mlp".into(),
         family: "mlp".into(),
         n_stages: cfg.n_stages,
-        n_microbatches: cfg.n_stages,
+        n_microbatches: if cfg.n_microbatches == 0 {
+            cfg.n_stages
+        } else {
+            cfg.n_microbatches
+        },
         lr: cfg.lr,
         momentum: cfg.momentum,
         data: DataSpec::Class {

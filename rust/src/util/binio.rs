@@ -1,11 +1,151 @@
 //! Binary IO for parameter blobs: `params.bin` is little-endian f32,
-//! stage-major, manifest order (written by `python/compile/aot.py`).
+//! stage-major, manifest order (written by `python/compile/aot.py`) —
+//! plus the little-endian cursor primitives ([`ByteWriter`] /
+//! [`ByteReader`]) and the FNV-1a checksum the checkpoint format
+//! (`parallel::checkpoint`, DESIGN-ROBUSTNESS.md) is built from.
 
 use std::fs::File;
 use std::io::{BufWriter, Read, Write};
 use std::path::Path;
 
 use anyhow::{Context, Result};
+
+/// FNV-1a, 64-bit — checkpoint integrity checksum.  Not cryptographic;
+/// it catches truncation and bit rot, which is the failure model for
+/// local checkpoint files.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Append-only little-endian byte buffer for fixed-layout records.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed (u32) UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Raw f32 slice, little-endian, no length prefix (the record's
+    /// layout carries the lengths).
+    pub fn f32_slice(&mut self, data: &[f32]) {
+        self.buf.reserve(data.len() * 4);
+        for v in data {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Current contents (e.g. to checksum before appending the digest).
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian cursor over a byte slice.  Every read
+/// returns `Err` on truncation instead of panicking — a half-written
+/// checkpoint must surface as a diagnosable error.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Bytes consumed so far (everything before the cursor).
+    pub fn consumed(&self) -> &'a [u8] {
+        &self.buf[..self.pos]
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.remaining() >= n,
+            "truncated record: wanted {n} bytes at offset {}, {} left",
+            self.pos,
+            self.remaining()
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Length-prefixed (u32) UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let b = self.bytes(len)?;
+        Ok(std::str::from_utf8(b)
+            .context("record string is not UTF-8")?
+            .to_string())
+    }
+
+    /// `n` little-endian f32 values.
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.bytes(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
 
 /// Read a whole file of little-endian f32 values.
 pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
@@ -48,6 +188,46 @@ mod tests {
         let back = read_f32_file(&p).unwrap();
         assert_eq!(back, data);
         std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn byte_cursor_round_trips() {
+        let mut w = ByteWriter::new();
+        w.u32(7);
+        w.u64(u64::MAX - 3);
+        w.str("cdp-v2");
+        w.f32_slice(&[0.0, -1.5, f32::MIN_POSITIVE, 1e30]);
+        let body_sum = fnv1a64(w.as_slice());
+        w.u64(body_sum);
+        let bytes = w.finish();
+
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.str().unwrap(), "cdp-v2");
+        assert_eq!(r.f32_vec(4).unwrap(), vec![0.0, -1.5, f32::MIN_POSITIVE, 1e30]);
+        assert_eq!(fnv1a64(r.consumed()), body_sum);
+        assert_eq!(r.u64().unwrap(), body_sum);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn byte_reader_rejects_truncation() {
+        let mut w = ByteWriter::new();
+        w.u64(42);
+        let bytes = w.finish();
+        let mut r = ByteReader::new(&bytes[..5]);
+        assert!(r.u64().is_err());
+        let mut r2 = ByteReader::new(&bytes);
+        assert!(r2.str().is_err(), "u64 misread as huge string length errors");
+    }
+
+    #[test]
+    fn fnv1a64_known_answers() {
+        // Pinned vectors from the FNV reference implementation.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
     }
 
     #[test]

@@ -157,6 +157,7 @@ fn bucket_size_does_not_change_losses() {
                 mode: ExecMode::DeviceResident,
                 bucket_elems,
                 record_timeline: false,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -181,6 +182,7 @@ fn eager_ring_overlaps_backprop() {
             mode: ExecMode::DeviceResident,
             bucket_elems: 64, // several buckets per stage on mlp
             record_timeline: true,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -223,6 +225,7 @@ fn zero_device_matches_reference_both_flows() {
             zero::ZeroOpts {
                 mode: ExecMode::DeviceResident,
                 bucket_elems: 16,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -245,6 +248,7 @@ fn pipeline_device_matches_reference_and_reports_overlap() {
             pipeline::PipeOpts {
                 mode: ExecMode::DeviceResident,
                 bucket_elems: 32,
+                ..Default::default()
             },
         )
         .unwrap();

@@ -1,0 +1,94 @@
+//! CI fault-matrix smoke: one seeded fault configuration per trainer,
+//! sized to finish in seconds.  The exhaustive equivalences live in
+//! `tests/robustness.rs`; this suite is the fast signal the fault lane
+//! runs on every push (`cargo test --release --test fault_matrix`).
+
+use std::sync::Arc;
+
+use cyclic_dp::comm::FaultPlan;
+use cyclic_dp::coordinator::{multi, pipeline, single, zero, SharedBackend};
+use cyclic_dp::parallel::{Checkpoint, Rule};
+use cyclic_dp::runtime::NativeBackend;
+
+fn losses(logs: &[cyclic_dp::coordinator::StepLog]) -> Vec<f64> {
+    logs.iter().map(|l| l.loss).collect()
+}
+
+#[test]
+fn smoke_multi_ring_lossy() {
+    let shared = SharedBackend(Arc::new(NativeBackend::default_mlp()));
+    let want = losses(
+        &multi::train(shared.clone(), Rule::CdpV2, multi::CommPattern::Ring, 10)
+            .unwrap()
+            .logs,
+    );
+    let rep = multi::train_with(
+        shared,
+        Rule::CdpV2,
+        multi::CommPattern::Ring,
+        10,
+        multi::MultiOpts {
+            faults: Some(FaultPlan::lossy(0x530_0AE, 0.05)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(losses(&rep.logs), want);
+}
+
+#[test]
+fn smoke_zero_cyclic_lossy() {
+    let shared = SharedBackend(Arc::new(NativeBackend::default_mlp()));
+    let want = losses(
+        &zero::train(shared.clone(), Rule::CdpV2, zero::StateFlow::Cyclic, 10)
+            .unwrap()
+            .logs,
+    );
+    let rep = zero::train_with(
+        shared,
+        Rule::CdpV2,
+        zero::StateFlow::Cyclic,
+        10,
+        zero::ZeroOpts {
+            faults: Some(FaultPlan::lossy(0x530_0AF, 0.05)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(losses(&rep.logs), want);
+}
+
+#[test]
+fn smoke_single_checkpoint_wire_resume() {
+    let rt = NativeBackend::default_mlp();
+    let mut clean = single::RefTrainer::new(&rt, Rule::CdpV1).unwrap();
+    let want = losses(&clean.train(4).unwrap());
+    let mut head = single::RefTrainer::new(&rt, Rule::CdpV1).unwrap();
+    let mut got = losses(&head.train(2).unwrap());
+    let ck = Checkpoint::from_bytes(&head.checkpoint().to_bytes()).unwrap();
+    let mut tail = single::RefTrainer::resume(&rt, Rule::CdpV1, ck).unwrap();
+    got.extend(losses(&tail.train(2).unwrap()));
+    assert_eq!(got, want);
+}
+
+#[test]
+fn smoke_pipeline_checkpoint_resume() {
+    let rt = NativeBackend::default_mlp();
+    let sched = pipeline::PipeSchedule::OneFOneB;
+    let want = losses(&pipeline::train(&rt, Rule::CdpV2, sched, 4).unwrap().logs);
+    let head = pipeline::train_with(
+        &rt,
+        Rule::CdpV2,
+        sched,
+        2,
+        pipeline::PipeOpts { checkpoint_at: Some(1), ..Default::default() },
+    )
+    .unwrap();
+    let ck = head.checkpoint.unwrap();
+    let tail =
+        pipeline::resume_with(&rt, Rule::CdpV2, sched, 2, Default::default(), ck)
+            .unwrap();
+    let mut got = losses(&head.logs);
+    got.extend(losses(&tail.logs));
+    assert_eq!(got, want);
+}

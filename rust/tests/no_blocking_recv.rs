@@ -1,0 +1,109 @@
+//! Grep-shim enforcing the deadline contract (DESIGN-ROBUSTNESS.md):
+//! no blocking receive without a deadline, and none of the silent-hang
+//! `expect` sites the seed fabric had, anywhere in the comm or
+//! coordinator layers.  Source-text scanning is crude but it is the one
+//! check that cannot be dodged by a new call site: the only raw
+//! `Receiver::recv()` in the tree is the deadline-looped one inside
+//! `Endpoint::recv_deadline`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn rust_sources(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_dir() {
+            rust_sources(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Strip the scanner's own exemption: the single raw `rx.recv_timeout`
+/// loop lives in `Endpoint::recv_deadline`, every other receive must go
+/// through `recv`/`recv_deadline` (which carry deadlines and typed
+/// errors).
+#[test]
+fn no_blocking_receive_without_a_deadline() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    for sub in ["comm", "coordinator"] {
+        rust_sources(&root.join(sub), &mut files);
+    }
+    assert!(files.len() >= 8, "scanner found too few files — wrong root?");
+
+    // needles are split so this file does not match itself when the
+    // scanner ever widens to tests/
+    let raw_recv = format!("rx.{}()", "recv");
+    let hang_a = format!("expect(\"{}\")", "fabric closed");
+    let hang_b = format!("expect(\"{}\")", "peer endpoint dropped");
+
+    let mut offenders = Vec::new();
+    for path in &files {
+        let text = fs::read_to_string(path).unwrap();
+        for (lineno, line) in text.lines().enumerate() {
+            let trimmed = line.trim_start();
+            if trimmed.starts_with("//") {
+                continue;
+            }
+            if line.contains(&raw_recv)
+                || line.contains(&hang_a)
+                || line.contains(&hang_b)
+            {
+                offenders.push(format!("{}:{}: {}", path.display(), lineno + 1, line.trim()));
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "blocking receives without deadlines (or seed-era hang sites) found:\n{}",
+        offenders.join("\n")
+    );
+}
+
+/// The hot paths may not unwrap a channel operation either: a worker
+/// death must surface as a typed `CommError`/`anyhow` context, never a
+/// panic in a random peer.  `unwrap()` on locks/joins is fine — those
+/// are process-local invariants — so the scan is scoped to comm calls.
+#[test]
+fn comm_results_are_not_unwrapped_in_coordinators() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src").join("coordinator");
+    let mut files = Vec::new();
+    rust_sources(&root, &mut files);
+
+    let mut offenders = Vec::new();
+    for path in &files {
+        let text = fs::read_to_string(path).unwrap();
+        let mut in_tests = false;
+        for (lineno, line) in text.lines().enumerate() {
+            if line.contains("mod tests") {
+                in_tests = true; // unwraps are fine in test code
+            }
+            if in_tests {
+                continue;
+            }
+            let t = line.trim_start();
+            if t.starts_with("//") {
+                continue;
+            }
+            for call in [".send(", ".send_copy(", ".recv(", ".recv_deadline("] {
+                if line.contains(call)
+                    && (line.contains(".unwrap()") || line.contains(".expect("))
+                {
+                    offenders.push(format!(
+                        "{}:{}: {}",
+                        path.display(),
+                        lineno + 1,
+                        line.trim()
+                    ));
+                }
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "comm calls unwrapped on coordinator hot paths:\n{}",
+        offenders.join("\n")
+    );
+}

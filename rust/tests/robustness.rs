@@ -1,0 +1,380 @@
+//! Fault-tolerance integration suite (DESIGN-ROBUSTNESS.md): the
+//! kill-and-resume contract on every trainer, loss equivalence under a
+//! seeded lossy fabric, and the multi ring's graceful N−1 degradation
+//! after a scripted worker kill.
+//!
+//! Everything here runs on the pure-Rust [`NativeBackend`] — no
+//! artifacts, no network — and every equivalence is *bit*-identical
+//! (`f64` losses compared with `==`), not approximate: checkpoints
+//! capture complete optimizer state at θ-version boundaries, the data
+//! stream is a pure function of `(seed, step, mb)`, and fault recovery
+//! re-delivers the original payload bytes.
+
+use std::sync::Arc;
+
+use cyclic_dp::comm::FaultPlan;
+use cyclic_dp::coordinator::{multi, pipeline, single, zero, SharedBackend};
+use cyclic_dp::parallel::{Checkpoint, Rule};
+use cyclic_dp::runtime::{NativeBackend, NativeMlpConfig};
+
+fn native() -> NativeBackend {
+    NativeBackend::default_mlp()
+}
+
+fn losses(logs: &[cyclic_dp::coordinator::StepLog]) -> Vec<f64> {
+    logs.iter().map(|l| l.loss).collect()
+}
+
+/// Serialize + deserialize: every resume below goes through the wire
+/// format, so the tests cover `to_bytes`/`from_bytes` as well as the
+/// in-memory round trip.
+fn through_wire(ck: Checkpoint) -> Checkpoint {
+    Checkpoint::from_bytes(&ck.to_bytes()).expect("wire round trip")
+}
+
+// ---------------------------------------------- kill/resume, bit-identical --
+// Contract: run K steps, checkpoint, "kill" the process (here: drop all
+// state), resume from the serialized checkpoint, run the remaining
+// steps — the concatenated losses equal the uninterrupted run's.
+
+#[test]
+fn single_kill_resume_is_bit_identical() {
+    for rule in [Rule::Dp, Rule::CdpV1, Rule::CdpV2] {
+        let rt = native();
+        let mut clean = single::RefTrainer::new(&rt, rule.clone()).unwrap();
+        let want = losses(&clean.train(6).unwrap());
+
+        let mut head = single::RefTrainer::new(&rt, rule.clone()).unwrap();
+        let mut got = losses(&head.train(3).unwrap());
+        let ck = through_wire(head.checkpoint());
+        drop(head); // the "kill"
+
+        let mut tail = single::RefTrainer::resume(&rt, rule.clone(), ck).unwrap();
+        got.extend(losses(&tail.train(3).unwrap()));
+        assert_eq!(got, want, "single ({}) resume diverged", rule.name());
+    }
+}
+
+#[test]
+fn multi_kill_resume_is_bit_identical_for_both_patterns() {
+    let shared = SharedBackend(Arc::new(native()));
+    for (rule, pattern) in [
+        (Rule::Dp, multi::CommPattern::Barrier),
+        (Rule::CdpV2, multi::CommPattern::Ring),
+        (Rule::CdpV1, multi::CommPattern::Ring),
+    ] {
+        let want = losses(
+            &multi::train(shared.clone(), rule.clone(), pattern, 6).unwrap().logs,
+        );
+
+        let head = multi::train_with(
+            shared.clone(),
+            rule.clone(),
+            pattern,
+            3,
+            multi::MultiOpts { checkpoint_at: Some(2), ..Default::default() },
+        )
+        .unwrap();
+        let ck = through_wire(head.checkpoint.expect("checkpoint captured"));
+        assert_eq!(ck.step, 3, "boundary after step 2 is θ-version 3");
+
+        let tail = multi::resume_with(
+            shared.clone(),
+            rule.clone(),
+            pattern,
+            3,
+            multi::MultiOpts::default(),
+            ck,
+        )
+        .unwrap();
+        let mut got = losses(&head.logs);
+        got.extend(losses(&tail.logs));
+        assert_eq!(got, want, "multi {pattern:?} ({}) resume diverged", rule.name());
+    }
+}
+
+#[test]
+fn zero_kill_resume_is_bit_identical_for_both_flows() {
+    let shared = SharedBackend(Arc::new(native()));
+    for (rule, flow) in [
+        (Rule::Dp, zero::StateFlow::Broadcast),
+        (Rule::CdpV2, zero::StateFlow::Cyclic),
+    ] {
+        let want =
+            losses(&zero::train(shared.clone(), rule.clone(), flow, 6).unwrap().logs);
+
+        let head = zero::train_with(
+            shared.clone(),
+            rule.clone(),
+            flow,
+            3,
+            zero::ZeroOpts { checkpoint_at: Some(2), ..Default::default() },
+        )
+        .unwrap();
+        let ck = through_wire(head.checkpoint.expect("checkpoint gathered to worker 0"));
+
+        let tail = zero::resume_with(
+            shared.clone(),
+            rule.clone(),
+            flow,
+            3,
+            zero::ZeroOpts::default(),
+            ck,
+        )
+        .unwrap();
+        let mut got = losses(&head.logs);
+        got.extend(losses(&tail.logs));
+        assert_eq!(got, want, "zero {flow:?} ({}) resume diverged", rule.name());
+    }
+}
+
+#[test]
+fn pipeline_kill_resume_is_bit_identical_for_both_schedules() {
+    let rt = native();
+    for (rule, sched) in [
+        (Rule::CdpV2, pipeline::PipeSchedule::OneFOneB),
+        (Rule::Dp, pipeline::PipeSchedule::GPipe),
+    ] {
+        let want = losses(&pipeline::train(&rt, rule.clone(), sched, 6).unwrap().logs);
+
+        let head = pipeline::train_with(
+            &rt,
+            rule.clone(),
+            sched,
+            3,
+            pipeline::PipeOpts { checkpoint_at: Some(2), ..Default::default() },
+        )
+        .unwrap();
+        let ck = through_wire(head.checkpoint.expect("checkpoint captured"));
+
+        let tail = pipeline::resume_with(
+            &rt,
+            rule.clone(),
+            sched,
+            3,
+            pipeline::PipeOpts::default(),
+            ck,
+        )
+        .unwrap();
+        let mut got = losses(&head.logs);
+        got.extend(losses(&tail.logs));
+        assert_eq!(got, want, "pipeline {sched:?} ({}) resume diverged", rule.name());
+    }
+}
+
+/// A checkpoint written under one rule must not silently resume under
+/// another: the version-selection schedule is part of the state.
+#[test]
+fn resume_under_wrong_rule_is_a_typed_error() {
+    let rt = native();
+    let mut t = single::RefTrainer::new(&rt, Rule::CdpV2).unwrap();
+    t.train(2).unwrap();
+    let ck = t.checkpoint();
+    let Err(err) = single::RefTrainer::resume(&rt, Rule::Dp, ck) else {
+        panic!("rule mismatch must fail")
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("cdp_v2") && msg.contains("dp"), "unhelpful error: {msg}");
+}
+
+// ------------------------------------------------- lossy fabric, 30 steps --
+// Seeded drop/dup/reorder at p = 0.05 on every non-control edge: the
+// deadline/retry receive path recovers every message, so 30 training
+// steps stay bit-identical to the clean run.
+
+#[test]
+fn multi_losses_survive_a_lossy_fabric() {
+    let shared = SharedBackend(Arc::new(native()));
+    for (rule, pattern) in [
+        (Rule::CdpV2, multi::CommPattern::Ring),
+        (Rule::Dp, multi::CommPattern::Barrier),
+    ] {
+        let want = losses(
+            &multi::train(shared.clone(), rule.clone(), pattern, 30).unwrap().logs,
+        );
+        let rep = multi::train_with(
+            shared.clone(),
+            rule.clone(),
+            pattern,
+            30,
+            multi::MultiOpts {
+                faults: Some(FaultPlan::lossy(0xFA_01, 0.05)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            losses(&rep.logs),
+            want,
+            "multi {pattern:?} ({}) diverged under faults",
+            rule.name()
+        );
+    }
+}
+
+#[test]
+fn zero_losses_survive_a_lossy_fabric() {
+    let shared = SharedBackend(Arc::new(native()));
+    for (rule, flow) in [
+        (Rule::CdpV2, zero::StateFlow::Cyclic),
+        (Rule::Dp, zero::StateFlow::Broadcast),
+    ] {
+        let want =
+            losses(&zero::train(shared.clone(), rule.clone(), flow, 30).unwrap().logs);
+        let rep = zero::train_with(
+            shared.clone(),
+            rule.clone(),
+            flow,
+            30,
+            zero::ZeroOpts {
+                faults: Some(FaultPlan::lossy(0xFA_02, 0.05)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            losses(&rep.logs),
+            want,
+            "zero {flow:?} ({}) diverged under faults",
+            rule.name()
+        );
+    }
+}
+
+// --------------------------------------------------- graceful degradation --
+// Scripted kill of a mid-ring worker: survivors detect the loss at the
+// next θ-version boundary, re-form the cyclic ring with N−1 workers and
+// keep training.  Post-junction losses are bit-identical to a reference
+// trainer on an N−1-micro-batch model resumed from the junction
+// checkpoint — the degraded cluster *is* that smaller cluster.
+
+#[test]
+fn multi_ring_reforms_with_n_minus_1_after_scripted_kill() {
+    const KILL_STEP: u64 = 3;
+    let shared = SharedBackend(Arc::new(native()));
+    let n = shared.manifest().n_microbatches; // 4
+    let rep = multi::train_with(
+        shared.clone(),
+        Rule::CdpV2,
+        multi::CommPattern::Ring,
+        6,
+        multi::MultiOpts {
+            faults: Some(FaultPlan::kill_only(2, KILL_STEP)),
+            checkpoint_at: Some(KILL_STEP - 1), // junction boundary
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.logs.len(), 6, "survivors must finish all steps");
+
+    // pre-junction steps match the clean 4-worker run
+    let clean = multi::train(shared.clone(), Rule::CdpV2, multi::CommPattern::Ring, 3)
+        .unwrap();
+    assert_eq!(
+        losses(&rep.logs[..KILL_STEP as usize]),
+        losses(&clean.logs[..KILL_STEP as usize]),
+        "pre-kill steps must be unaffected"
+    );
+
+    // post-junction steps match an N−1 reference resumed from the
+    // junction: same model (layout depends on stages, not micro-batch
+    // count), same data stream, 3 micro-batches per step.
+    let ck = through_wire(rep.checkpoint.expect("junction checkpoint"));
+    assert_eq!(ck.step, KILL_STEP);
+    let rt3 = NativeBackend::synthetic(NativeMlpConfig {
+        n_microbatches: n - 1,
+        ..NativeMlpConfig::default()
+    });
+    let mut reference = single::RefTrainer::resume(&rt3, Rule::CdpV2, ck).unwrap();
+    let want = losses(&reference.train(3).unwrap());
+    assert_eq!(
+        losses(&rep.logs[KILL_STEP as usize..]),
+        want,
+        "degraded ring must equal the fresh N−1 cluster"
+    );
+}
+
+#[test]
+fn kill_plans_are_validated_per_trainer() {
+    let shared = SharedBackend(Arc::new(native()));
+    let n = shared.manifest().n_microbatches;
+
+    // barrier has no degraded mode
+    let Err(err) = multi::train_with(
+        shared.clone(),
+        Rule::Dp,
+        multi::CommPattern::Barrier,
+        2,
+        multi::MultiOpts {
+            faults: Some(FaultPlan::kill_only(1, 1)),
+            ..Default::default()
+        },
+    ) else {
+        panic!("barrier kill plan must be rejected")
+    };
+    assert!(format!("{err:#}").contains("ring"), "{err:#}");
+
+    // structural workers (loss logger, optimizer owner) are not killable
+    for w in [0, n - 1] {
+        let Err(err) = multi::train_with(
+            shared.clone(),
+            Rule::CdpV2,
+            multi::CommPattern::Ring,
+            2,
+            multi::MultiOpts {
+                faults: Some(FaultPlan::kill_only(w, 1)),
+                ..Default::default()
+            },
+        ) else {
+            panic!("structural-worker kill plan must be rejected")
+        };
+        assert!(format!("{err:#}").contains("killable"), "{err:#}");
+    }
+
+    // ZeRO shards the optimizer — a kill takes unrecoverable state with
+    // it, so the plan is rejected up front in favor of checkpoint/resume
+    let Err(err) = zero::train_with(
+        shared.clone(),
+        Rule::CdpV2,
+        zero::StateFlow::Cyclic,
+        2,
+        zero::ZeroOpts {
+            faults: Some(FaultPlan::kill_only(1, 1)),
+            ..Default::default()
+        },
+    ) else {
+        panic!("zero kill plan must be rejected")
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("checkpoint"), "{msg}");
+}
+
+/// Kill + lossy edges at once: detection and re-form still converge, and
+/// the degraded steps still match the N−1 reference (recovery is exact,
+/// not approximate, even while the membership changes).
+#[test]
+fn degradation_survives_simultaneous_message_faults() {
+    const KILL_STEP: u64 = 2;
+    let shared = SharedBackend(Arc::new(native()));
+    let n = shared.manifest().n_microbatches;
+    let rep = multi::train_with(
+        shared.clone(),
+        Rule::CdpV1,
+        multi::CommPattern::Ring,
+        5,
+        multi::MultiOpts {
+            faults: Some(FaultPlan::lossy(0xFA_03, 0.05).with_kill(1, KILL_STEP)),
+            checkpoint_at: Some(KILL_STEP - 1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let ck = through_wire(rep.checkpoint.expect("junction checkpoint"));
+    let rt3 = NativeBackend::synthetic(NativeMlpConfig {
+        n_microbatches: n - 1,
+        ..NativeMlpConfig::default()
+    });
+    let mut reference = single::RefTrainer::resume(&rt3, Rule::CdpV1, ck).unwrap();
+    let want = losses(&reference.train(3).unwrap());
+    assert_eq!(losses(&rep.logs[KILL_STEP as usize..]), want);
+}
