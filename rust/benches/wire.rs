@@ -1,0 +1,123 @@
+//! Wire-transport benchmarks (DESIGN-ROBUSTNESS.md, "Crossing a real
+//! wire"): what framing + CRC + socket hops cost against the in-process
+//! channel fabric, and proof that the eager-overlap property (gradient
+//! reduction starting before the last backward completes) survives the
+//! move onto a real socket.  Results go to `BENCH_wire.json`; the CI
+//! fault-matrix lane uploads it SHA-stamped.
+
+mod harness;
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use cyclic_dp::cluster::run_workers;
+use cyclic_dp::comm::{tags, Endpoint, EventKind, Fabric, WireConfig, WireKind};
+use cyclic_dp::coordinator::{multi, SharedBackend};
+use cyclic_dp::parallel::Rule;
+use cyclic_dp::runtime::NativeBackend;
+
+fn rdv(label: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cdp-bench-wire-{label}-{}", std::process::id()))
+}
+
+fn main() {
+    let b = harness::Bench::new("wire");
+    let mut stats: Vec<harness::Stat> = Vec::new();
+    let mut counters: Vec<(String, f64)> = Vec::new();
+
+    // ---- p2p latency: channels vs framed sockets --------------------------
+    // Same 64 KiB tagged payload, same deadline/dedup recv path; the only
+    // difference is whether the bytes cross a socket with frame headers
+    // and a CRC, or an in-process channel node.
+    b.section("p2p send_copy+recv 64KiB: channels vs wire");
+    let buf = vec![1.0f32; 16_384];
+    {
+        let (mut eps, _) = Fabric::new(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let mut t = 0u64;
+        stats.push(b.time_stat("in-process channels", 8, 64, || {
+            e0.send_copy(1, tags::grad(t, 0), &buf).unwrap();
+            std::hint::black_box(e1.recv(0, tags::grad(t, 0)).unwrap());
+            t += 1;
+        }));
+    }
+    for (kind, label) in [(WireKind::Uds, "uds loopback"), (WireKind::Tcp, "tcp loopback")] {
+        let dir = rdv(kind.name());
+        let cfg = WireConfig::new(kind, &dir, 2);
+        let (mut eps, _) = Fabric::wire(&cfg).unwrap();
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let mut t = 0u64;
+        stats.push(b.time_stat(label, 8, 64, || {
+            e0.send_copy(1, tags::grad(t, 0), &buf).unwrap();
+            std::hint::black_box(e1.recv(0, tags::grad(t, 0)).unwrap());
+            t += 1;
+        }));
+        drop(e0);
+        drop(e1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- trainer throughput + eager overlap over the wire -----------------
+    // The multi ring trainer runs unchanged over wire endpoints; its
+    // eager bucketed reduction must still start before the cluster's
+    // last backward stage completes even with socket latency in the way.
+    b.section("multi ring over uds (native mlp, eager overlap)");
+    let shared = SharedBackend(Arc::new(NativeBackend::default_mlp()));
+    let n = shared.manifest().n_microbatches;
+
+    let run_ring = |label: &str, record: bool| {
+        let dir = rdv(label);
+        let cfg = WireConfig::new(WireKind::Uds, &dir, n);
+        let (endpoints, wire_stats) = Fabric::wire(&cfg).unwrap();
+        if record {
+            wire_stats.enable_timeline();
+        }
+        let eps: Arc<Vec<Mutex<Option<Endpoint>>>> =
+            Arc::new(endpoints.into_iter().map(|e| Mutex::new(Some(e))).collect());
+        let shared_c = shared.clone();
+        let steps = if record { 1 } else { 2 };
+        run_workers(n, move |w| {
+            let mut ep = eps[w].lock().unwrap().take().unwrap();
+            multi::run_worker(
+                &shared_c,
+                &Rule::CdpV2,
+                multi::CommPattern::Ring,
+                steps,
+                multi::MultiOpts {
+                    record_timeline: record,
+                    ..Default::default()
+                },
+                None,
+                &mut ep,
+            )
+            .unwrap()
+        });
+        std::fs::remove_dir_all(&dir).ok();
+        wire_stats
+    };
+
+    stats.push(b.time_stat("multi ring 2 steps over uds (cdp_v2)", 1, 3, || {
+        std::hint::black_box(run_ring("ring-timed", false));
+    }));
+
+    // a single step, so overlap cannot come from step interleaving
+    let tl = run_ring("ring-timeline", true);
+    let first_send = tl.first_ns(EventKind::GradSend).expect("grad sends recorded");
+    let last_bwd = tl.last_ns(EventKind::BwdStageDone).expect("bwd marks recorded");
+    assert!(
+        first_send < last_bwd,
+        "eager reduction over the wire must start before the last backward \
+         completes (first send {first_send} ns vs last bwd {last_bwd} ns)"
+    );
+    println!(
+        "  wire overlap: first grad send at {first_send} ns, last bwd done at {last_bwd} ns"
+    );
+    counters.push(("wire_overlap_first_send_ns".into(), first_send as f64));
+    counters.push(("wire_overlap_last_bwd_ns".into(), last_bwd as f64));
+    counters.push(("wire_eager_starts_before_last_bwd".into(), 1.0));
+    counters.push(("wire_workers".into(), n as f64));
+
+    harness::write_json("BENCH_wire.json", "wire", &stats, &counters);
+}

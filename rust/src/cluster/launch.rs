@@ -1,0 +1,180 @@
+//! Multi-process launcher: one OS process per worker, rendezvousing
+//! over a wire transport (`comm::transport`) instead of sharing an
+//! in-process fabric.
+//!
+//! The launcher (`cdp launch`) spawns N copies of its own executable
+//! running `cdp worker --worker-id w ...`; each child binds its wire
+//! endpoint in the shared rendezvous directory, trains, and worker 0
+//! prints one `CDP_LOSS <step> <f64-bits-hex>` line per step so the
+//! launcher (and tests) can compare losses *bit*-exactly across process
+//! boundaries — text-formatted floats would round.
+
+use std::path::PathBuf;
+use std::process::{Command, Output, Stdio};
+
+use anyhow::{Context, Result};
+
+use crate::comm::WireKind;
+
+/// Everything a launch needs to spawn its worker fleet.
+pub struct LaunchSpec {
+    pub workers: usize,
+    pub transport: WireKind,
+    /// Shared rendezvous directory (socket files / port files).
+    pub rendezvous: PathBuf,
+    /// Executable to run; `None` means this process's own binary.
+    pub exe: Option<PathBuf>,
+    /// Arguments forwarded verbatim to every `cdp worker` child after
+    /// the launcher-owned flags (trainer, rule, steps, wire faults...).
+    pub forward: Vec<String>,
+}
+
+/// Fresh per-launch rendezvous directory under the system temp dir,
+/// unique across concurrent launches on the same machine.
+pub fn default_rendezvous_dir() -> PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    std::env::temp_dir().join(format!("cdp-rdv-{}-{nanos}", std::process::id()))
+}
+
+/// The command line for worker `w`: launcher-owned flags first, then the
+/// spec's forwarded trainer arguments.
+pub fn worker_command(spec: &LaunchSpec, w: usize) -> Result<Command> {
+    let exe = match &spec.exe {
+        Some(p) => p.clone(),
+        None => std::env::current_exe().context("locate the cdp executable")?,
+    };
+    let mut cmd = Command::new(exe);
+    cmd.arg("worker")
+        .arg("--worker-id")
+        .arg(w.to_string())
+        .arg("--workers")
+        .arg(spec.workers.to_string())
+        .arg("--transport")
+        .arg(spec.transport.name())
+        .arg("--rendezvous")
+        .arg(&spec.rendezvous);
+    cmd.args(&spec.forward);
+    Ok(cmd)
+}
+
+/// Spawn the whole fleet, wait for every worker, and fail with the
+/// stderr of each non-zero exit.  Outputs come back in rank order with
+/// stdout/stderr captured (worker 0's stdout carries the loss lines).
+pub fn launch(spec: &LaunchSpec) -> Result<Vec<Output>> {
+    anyhow::ensure!(spec.workers >= 2, "a fleet needs at least 2 workers");
+    let mut children = Vec::with_capacity(spec.workers);
+    for w in 0..spec.workers {
+        let mut cmd = worker_command(spec, w)?;
+        let child = cmd
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawn worker process {w}"))?;
+        children.push(child);
+    }
+    let mut outs = Vec::with_capacity(spec.workers);
+    let mut failures = Vec::new();
+    for (w, child) in children.into_iter().enumerate() {
+        let out = child
+            .wait_with_output()
+            .with_context(|| format!("wait for worker process {w}"))?;
+        if !out.status.success() {
+            failures.push(format!(
+                "worker {w} exited with {}:\n{}",
+                out.status,
+                String::from_utf8_lossy(&out.stderr).trim_end()
+            ));
+        }
+        outs.push(out);
+    }
+    anyhow::ensure!(failures.is_empty(), "{}", failures.join("\n---\n"));
+    Ok(outs)
+}
+
+/// Extract `(step, loss)` pairs from a worker-0 stdout.  Losses travel
+/// as `f64::to_bits` hex so the comparison against an in-process run is
+/// exact, not printf-rounded.
+pub fn parse_loss_bits(stdout: &str) -> Result<Vec<(u64, f64)>> {
+    let mut out = Vec::new();
+    for line in stdout.lines() {
+        if let Some(rest) = line.strip_prefix("CDP_LOSS ") {
+            let mut it = rest.split_whitespace();
+            let step: u64 = it
+                .next()
+                .context("CDP_LOSS line missing step")?
+                .parse()
+                .context("CDP_LOSS step")?;
+            let bits = u64::from_str_radix(
+                it.next().context("CDP_LOSS line missing bits")?,
+                16,
+            )
+            .context("CDP_LOSS bits")?;
+            out.push((step, f64::from_bits(bits)));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_bits_round_trip_exactly() {
+        let losses = [0.123456789f64, -1.5e-300, f64::MIN_POSITIVE, 3.0];
+        let stdout: String = losses
+            .iter()
+            .enumerate()
+            .map(|(t, l)| format!("step {t} extraneous line\nCDP_LOSS {t} {:016x}\n", l.to_bits()))
+            .collect();
+        let got = parse_loss_bits(&stdout).unwrap();
+        assert_eq!(got.len(), losses.len());
+        for (t, (step, loss)) in got.into_iter().enumerate() {
+            assert_eq!(step, t as u64);
+            assert_eq!(loss.to_bits(), losses[t].to_bits(), "bit-exact");
+        }
+    }
+
+    #[test]
+    fn malformed_loss_lines_are_errors_not_garbage() {
+        assert!(parse_loss_bits("CDP_LOSS").unwrap().is_empty()); // no prefix match
+        assert!(parse_loss_bits("CDP_LOSS 3").is_err());
+        assert!(parse_loss_bits("CDP_LOSS x 3ff0000000000000").is_err());
+        assert!(parse_loss_bits("CDP_LOSS 3 nothex!").is_err());
+    }
+
+    #[test]
+    fn worker_command_renders_launcher_flags_then_forwarded_args() {
+        let spec = LaunchSpec {
+            workers: 4,
+            transport: WireKind::Uds,
+            rendezvous: PathBuf::from("/tmp/rdv"),
+            exe: Some(PathBuf::from("/bin/echo")),
+            forward: vec!["--trainer".into(), "zero".into()],
+        };
+        let cmd = worker_command(&spec, 2).unwrap();
+        let args: Vec<String> = cmd
+            .get_args()
+            .map(|a| a.to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(
+            args,
+            [
+                "worker",
+                "--worker-id",
+                "2",
+                "--workers",
+                "4",
+                "--transport",
+                "uds",
+                "--rendezvous",
+                "/tmp/rdv",
+                "--trainer",
+                "zero",
+            ]
+        );
+    }
+}

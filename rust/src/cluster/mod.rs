@@ -3,6 +3,7 @@
 //! state, endpoint and memory ledger).
 
 pub mod device;
+pub mod launch;
 
 pub use device::DeviceMem;
 

@@ -39,20 +39,37 @@
 //! recovers lost messages from.  Control-plane namespaces (heartbeat,
 //! checkpoint) are exempt from injection; see the fault model in
 //! DESIGN-ROBUSTNESS.md.
+//!
+//! ## Transports (`comm::transport`)
+//!
+//! The protocol layer above (tags, deadlines, seq dedup, parking) is
+//! transport-agnostic: an [`Endpoint`] moves [`Msg`]s through a boxed
+//! [`Transport`].  [`Fabric::new`] wires the in-process
+//! [`transport::ChannelTransport`] (identical behavior to the
+//! pre-transport fabric); [`Fabric::wire`] and [`Endpoint::over`] run
+//! the same protocol over real UDS/TCP sockets with framed,
+//! CRC-validated messages and reconnect supervision
+//! ([`transport::WireTransport`]) — that is what makes N separate OS
+//! processes a fabric.
 
 pub mod bucketed;
 pub mod collectives;
 pub mod fault;
+pub mod transport;
 
 use std::cell::Cell;
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::ops::Deref;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 pub use fault::{FaultInjector, FaultPlan, KillSpec};
+pub use transport::{
+    ChannelTransport, RecvTimeoutErr, Transport, WireConfig, WireFaultPlan, WireKind,
+    WireTransport,
+};
 
 /// Default receive deadline.  Generous: a clean in-process run never waits
 /// anywhere near this long, so hitting it means a peer died or the fabric
@@ -346,6 +363,21 @@ impl BufferPool {
         }))
     }
 
+    /// Decode little-endian f32 bytes (a wire frame body) straight into
+    /// a pooled buffer — the receive path's analogue of
+    /// [`BufferPool::payload_from_slice`], no intermediate `Vec<f32>`.
+    pub(crate) fn payload_from_le_bytes(&self, bytes: &[u8]) -> Payload {
+        debug_assert_eq!(bytes.len() % 4, 0, "frame bodies are f32-aligned");
+        let mut buf = self.take(bytes.len() / 4);
+        for c in bytes.chunks_exact(4) {
+            buf.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Payload(Arc::new(PayloadBuf {
+            data: buf,
+            pool: Arc::downgrade(&self.inner),
+        }))
+    }
+
     /// Buffers served from the free list so far.
     pub fn recycled(&self) -> u64 {
         self.inner.recycled.load(Ordering::Relaxed)
@@ -442,14 +474,17 @@ impl PartialEq<Vec<f32>> for Payload {
 
 // ------------------------------------------------------------ endpoint ----
 
+/// One fabric message as a [`Transport`] carries it.  Public because the
+/// transport trait is public SPI; protocol code never builds these by
+/// hand — `Endpoint::send` assigns the seq and accounts the stats.
 #[derive(Clone, Debug)]
-pub(crate) struct Msg {
-    pub(crate) from: usize,
+pub struct Msg {
+    pub from: usize,
     /// Per-(sender → receiver) sequence number, 1-based.  Retransmits and
     /// injected duplicates carry the original seq; the receiver dedups.
-    pub(crate) seq: u64,
-    pub(crate) tag: u64,
-    pub(crate) data: Payload,
+    pub seq: u64,
+    pub tag: u64,
+    pub data: Payload,
 }
 
 /// Receiver-side duplicate filter for one sender edge.  On the clean path
@@ -484,11 +519,12 @@ impl SeqTracker {
 }
 
 /// One worker's endpoint: send to any peer, tagged deadline receive.
+/// The protocol layer (seq assignment, dedup, parking, deadlines) lives
+/// here and is identical whichever [`Transport`] moves the bytes.
 pub struct Endpoint {
     pub id: usize,
     pub n: usize,
-    txs: Vec<Sender<Msg>>,
-    rx: Receiver<Msg>,
+    transport: Box<dyn Transport>,
     /// Out-of-order arrivals parked until someone asks for them.
     parked: HashMap<(usize, u64), VecDeque<Payload>>,
     /// Next outgoing sequence number per destination (1-based).
@@ -525,10 +561,7 @@ impl Endpoint {
             // Control-plane traffic (heartbeat, checkpoint) bypasses the
             // injector — see the fault model in DESIGN-ROBUSTNESS.md.
             Some(inj) if !tags::is_control(tag) => inj.route(to, msg),
-            _ => self.txs[to].send(msg).map_err(|e| CommError::PeerGone {
-                peer: to,
-                tag: tags::unpack(e.0.tag),
-            }),
+            _ => self.transport.send(to, msg),
         }
     }
 
@@ -574,7 +607,7 @@ impl Endpoint {
                     waited,
                 });
             }
-            match self.rx.recv_timeout(slice.min(deadline - waited)) {
+            match self.transport.recv_timeout(slice.min(deadline - waited)) {
                 Ok(msg) => {
                     if self.seen[msg.from].duplicate(msg.seq) {
                         continue;
@@ -587,13 +620,13 @@ impl Endpoint {
                         .or_default()
                         .push_back(msg.data);
                 }
-                Err(RecvTimeoutError::Timeout) => {
+                Err(RecvTimeoutErr::Timeout) => {
                     if let Some(inj) = &self.injector {
                         inj.recover(self.id, from);
                     }
                     slice = (slice * 2).min(BACKOFF_MAX);
                 }
-                Err(RecvTimeoutError::Disconnected) => {
+                Err(RecvTimeoutErr::Closed) => {
                     return Err(CommError::Closed {
                         peer: from,
                         tag: tags::unpack(tag),
@@ -633,6 +666,31 @@ impl Endpoint {
 
     pub fn left(&self) -> usize {
         (self.id + self.n - 1) % self.n
+    }
+
+    /// An endpoint over an externally built transport — the
+    /// multi-process path, where each OS process holds exactly one
+    /// endpoint of the fabric (`WireTransport::bind` + this).
+    /// In-process fabrics use [`Fabric::new`] / [`Fabric::wire`].
+    pub fn over(
+        id: usize,
+        n: usize,
+        transport: Box<dyn Transport>,
+        stats: Arc<CommStats>,
+        pool: BufferPool,
+    ) -> Self {
+        Endpoint {
+            id,
+            n,
+            transport,
+            parked: HashMap::new(),
+            next_seq: (0..n).map(|_| Cell::new(0)).collect(),
+            seen: (0..n).map(|_| SeqTracker::default()).collect(),
+            deadline: DEFAULT_DEADLINE,
+            injector: None,
+            stats,
+            pool,
+        }
     }
 }
 
@@ -697,29 +755,50 @@ impl Fabric {
         (eps, stats, inj.expect("injector built"))
     }
 
+    /// All `n` endpoints of a socket fabric in **one** process — real
+    /// frames, real reconnect supervision, no process spawning.  This is
+    /// what the wire tests and benches use; a real multi-process launch
+    /// builds one endpoint per process with [`WireTransport::bind`] +
+    /// [`Endpoint::over`] against the same [`WireConfig`].
+    pub fn wire(cfg: &WireConfig) -> anyhow::Result<(Vec<Endpoint>, Arc<CommStats>)> {
+        let stats = Arc::new(CommStats::default());
+        let pool = BufferPool::new();
+        let mut endpoints = Vec::with_capacity(cfg.n);
+        for id in 0..cfg.n {
+            let t = WireTransport::bind(id, cfg, pool.clone())?;
+            endpoints.push(Endpoint::over(
+                id,
+                cfg.n,
+                Box::new(t),
+                stats.clone(),
+                pool.clone(),
+            ));
+        }
+        Ok((endpoints, stats))
+    }
+
     fn build(
         n: usize,
         plan: Option<FaultPlan>,
     ) -> (Vec<Endpoint>, Arc<CommStats>, Option<Arc<FaultInjector>>) {
         let stats = Arc::new(CommStats::default());
         let pool = BufferPool::new();
-        let mut txs_all = Vec::with_capacity(n);
-        let mut rxs = Vec::with_capacity(n);
+        let mut txs_all: Vec<Sender<Msg>> = Vec::with_capacity(n);
+        let mut inboxes = Vec::with_capacity(n);
         for _ in 0..n {
-            let (tx, rx) = channel();
+            let (tx, inbox) = channel();
             txs_all.push(tx);
-            rxs.push(rx);
+            inboxes.push(inbox);
         }
         let injector =
             plan.map(|p| Arc::new(FaultInjector::new(p, n, txs_all.clone())));
-        let endpoints = rxs
+        let endpoints = inboxes
             .into_iter()
             .enumerate()
-            .map(|(id, rx)| Endpoint {
+            .map(|(id, inbox)| Endpoint {
                 id,
                 n,
-                txs: txs_all.clone(),
-                rx,
+                transport: Box::new(ChannelTransport::new(txs_all.clone(), inbox)),
                 parked: HashMap::new(),
                 next_seq: (0..n).map(|_| Cell::new(0)).collect(),
                 seen: (0..n).map(|_| SeqTracker::default()).collect(),

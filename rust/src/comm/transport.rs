@@ -1,0 +1,1231 @@
+//! Pluggable message transports for the comm fabric.
+//!
+//! [`Transport`] is the seam between the fabric's protocol layer
+//! (tagged sends, deadline receives, per-sender seq dedup — all in
+//! `comm::mod`) and the bytes underneath.  Two implementations:
+//!
+//! - [`ChannelTransport`] — the in-process `mpsc` channels every fabric
+//!   used before this module existed.  Default, zero behavior change.
+//! - [`WireTransport`] — real sockets (Unix-domain or loopback TCP) with
+//!   length-prefixed CRC-validated frames ([`frame`]), one writer thread
+//!   per directed edge, and a connection supervisor that reconnects with
+//!   capped backoff, replays a bounded window of recent frames, and maps
+//!   a peer that stays unreachable to the existing typed
+//!   [`CommError::PeerGone`] / `Timeout` errors (decoded tags intact).
+//!
+//! ## What the supervisor guarantees vs. what dedup guarantees
+//!
+//! The supervisor guarantees *delivery effort*: a broken connection is
+//! redialed (backoff 2 ms doubling to 200 ms, give-up after
+//! [`WireConfig::connect_deadline`]), and on reconnect the last
+//! [`WireConfig::replay_frames`] frames are retransmitted before new
+//! traffic.  It does NOT guarantee exactly-once delivery — replay
+//! re-sends frames the receiver may already have.  Exactly-once is the
+//! receiver's job: every message carries the per-sender monotone `seq`
+//! assigned by `Endpoint::send`, and the receiver's `SeqTracker` drops
+//! duplicates before they can match or park.  The two layers compose:
+//! supervisor = at-least-once, seq dedup = at-most-once, together =
+//! exactly-once across disconnects.
+//!
+//! ## Topology and rendezvous
+//!
+//! Each directed edge `a → b` is one connection, dialed by `a` (writes
+//! only) and accepted by `b` (reads only).  Worker `w` binds
+//! `dir/peer-{w}.sock` (UDS) or an ephemeral loopback TCP port published
+//! atomically as `dir/peer-{w}.port`; dialers poll the rendezvous dir
+//! until the peer appears.  The first bytes on a fresh connection are a
+//! hello (`CDPH`, protocol version, from/to worker ids) so a
+//! mis-addressed or foreign connection is refused before any frame is
+//! parsed.
+//!
+//! ## Scripted wire faults
+//!
+//! [`WireFaultPlan`] extends the in-process fault plan to the socket
+//! layer: per-edge one-shot disconnects, truncated frames (half a frame
+//! flushed, then the connection dropped), and stalls, keyed by the
+//! 0-based index of the next data frame on that edge.  All three recover
+//! through the reconnect + replay + dedup path above, so loss sequences
+//! stay bit-identical to a clean run.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{tags, BufferPool, CommError, Msg};
+
+/// Poll slice for a writer thread's outbox (also bounds shutdown latency).
+const WRITER_POLL: Duration = Duration::from_millis(25);
+/// Socket read timeout slice — readers wake this often to check shutdown.
+const READ_SLICE: Duration = Duration::from_millis(100);
+/// Accept-loop poll interval (listeners run non-blocking).
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+/// First reconnect backoff; doubles per failed dial.
+const RECONNECT_BACKOFF_START: Duration = Duration::from_millis(2);
+/// Reconnect backoff ceiling.
+const RECONNECT_BACKOFF_MAX: Duration = Duration::from_millis(200);
+/// Connect give-up horizon once the transport is being torn down — a
+/// drop must not block for the full `connect_deadline` on a dead peer.
+const CLOSING_CONNECT_DEADLINE: Duration = Duration::from_millis(200);
+
+// ------------------------------------------------------------ trait ----
+
+/// Transport-level receive failures.  The protocol layer
+/// (`Endpoint::recv_deadline`) turns these into the typed
+/// [`CommError::Timeout`] / [`CommError::Closed`] with decoded tags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvTimeoutErr {
+    /// Nothing arrived inside the slice — retry/backoff upstream.
+    Timeout,
+    /// The transport can never produce another message.
+    Closed,
+}
+
+/// The seam between the fabric's protocol layer and the bytes under it.
+///
+/// `send` is called with a fully formed [`Msg`] (seq already assigned,
+/// stats already accounted); `recv_timeout` yields whole messages in
+/// arrival order.  Implementations must preserve per-edge FIFO order on
+/// the clean path; after faults they may redeliver (the protocol layer
+/// dedups by seq) but must never corrupt or reorder within one
+/// connection.
+pub trait Transport: Send {
+    /// Queue `msg` for `to`.  Errors with [`CommError::PeerGone`] when
+    /// the peer is known unreachable (endpoint dropped, or the wire
+    /// supervisor gave up reconnecting).
+    fn send(&self, to: usize, msg: Msg) -> Result<(), CommError>;
+
+    /// Next inbound message from any peer, waiting at most `timeout`.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Msg, RecvTimeoutErr>;
+}
+
+// -------------------------------------------------- channel transport ----
+
+/// The in-process transport: one `mpsc` channel per endpoint, every
+/// sender holds clones of all receivers' send halves.  This is exactly
+/// the pre-`Transport` fabric, factored behind the trait — same types,
+/// same error mapping, same FIFO guarantees.
+pub struct ChannelTransport {
+    txs: Vec<Sender<Msg>>,
+    inbox: Receiver<Msg>,
+}
+
+impl ChannelTransport {
+    pub(crate) fn new(txs: Vec<Sender<Msg>>, inbox: Receiver<Msg>) -> Self {
+        Self { txs, inbox }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&self, to: usize, msg: Msg) -> Result<(), CommError> {
+        self.txs[to].send(msg).map_err(|e| CommError::PeerGone {
+            peer: to,
+            tag: tags::unpack(e.0.tag),
+        })
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Msg, RecvTimeoutErr> {
+        self.inbox.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => RecvTimeoutErr::Timeout,
+            RecvTimeoutError::Disconnected => RecvTimeoutErr::Closed,
+        })
+    }
+}
+
+// -------------------------------------------------------- frame codec ----
+
+/// The length-prefixed frame format [`WireTransport`] ships.
+///
+/// ```text
+/// offset  size  field
+///      0     4  magic  "CDPF"
+///      4     4  body length in bytes (u32 LE, multiple of 4, bounded)
+///      8     4  sender worker id (u32 LE)
+///     12     8  seq (u64 LE)
+///     20     8  tag (u64 LE)
+///     28     4  CRC-32 (IEEE) over bytes 4..28 + body
+///     32     …  body: f32 little-endian
+/// ```
+///
+/// Every decode failure is a typed [`FrameError`] — never a panic, and
+/// never a silent hang: a reader that hits one drops the connection,
+/// which the sending side's supervisor repairs by reconnect + replay.
+pub mod frame {
+    /// Frame magic: the first four bytes of every data frame.
+    pub const MAGIC: [u8; 4] = *b"CDPF";
+    /// Fixed header length in bytes (see the module-level layout).
+    pub const HEADER_LEN: usize = 32;
+    /// Upper bound on a frame body — a corrupted length field must not
+    /// make a reader wait for gigabytes that will never arrive.
+    pub const MAX_BODY_BYTES: u32 = 1 << 28;
+    /// Hello magic: the first four bytes after a fresh connect.
+    pub const HELLO_MAGIC: [u8; 4] = *b"CDPH";
+    /// Hello length: magic + version + from + to, all u32 LE.
+    pub const HELLO_LEN: usize = 16;
+    /// Wire protocol version carried in the hello.
+    pub const PROTO_VERSION: u32 = 1;
+
+    /// Typed frame decode failures.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum FrameError {
+        /// The first four bytes are not [`MAGIC`] (or not [`HELLO_MAGIC`]
+        /// for a hello) — stream desync or a foreign writer.
+        BadMagic { got: [u8; 4] },
+        /// Hello carried an unknown protocol version.
+        BadVersion { got: u32 },
+        /// The length field exceeds [`MAX_BODY_BYTES`].
+        Oversized { len: u32, max: u32 },
+        /// The length field is not a multiple of the f32 element size.
+        UnalignedBody { len: u32 },
+        /// Fewer bytes than the header + declared body.
+        Truncated { need: usize, have: usize },
+        /// The CRC over the header fields + body does not match.
+        CrcMismatch { expect: u32, got: u32 },
+    }
+
+    impl std::fmt::Display for FrameError {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            match self {
+                FrameError::BadMagic { got } => {
+                    write!(f, "bad frame magic {got:02x?}")
+                }
+                FrameError::BadVersion { got } => {
+                    write!(f, "unknown wire protocol version {got}")
+                }
+                FrameError::Oversized { len, max } => {
+                    write!(f, "frame body length {len} exceeds cap {max}")
+                }
+                FrameError::UnalignedBody { len } => {
+                    write!(f, "frame body length {len} not a multiple of 4")
+                }
+                FrameError::Truncated { need, have } => {
+                    write!(f, "truncated frame: need {need} bytes, have {have}")
+                }
+                FrameError::CrcMismatch { expect, got } => {
+                    write!(f, "frame CRC mismatch: header says {expect:#010x}, body hashes to {got:#010x}")
+                }
+            }
+        }
+    }
+
+    impl std::error::Error for FrameError {}
+
+    /// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) lookup table,
+    /// built at compile time.
+    const CRC_TABLE: [u32; 256] = {
+        let mut table = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            table[i] = c;
+            i += 1;
+        }
+        table
+    };
+
+    /// Incremental CRC-32 so the check covers header fields + body
+    /// without materializing them contiguously.
+    pub struct Crc32(u32);
+
+    impl Crc32 {
+        pub fn new() -> Self {
+            Crc32(0xFFFF_FFFF)
+        }
+
+        pub fn update(&mut self, bytes: &[u8]) {
+            for &b in bytes {
+                self.0 = CRC_TABLE[((self.0 ^ b as u32) & 0xFF) as usize] ^ (self.0 >> 8);
+            }
+        }
+
+        pub fn finish(self) -> u32 {
+            !self.0
+        }
+    }
+
+    impl Default for Crc32 {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    /// One-shot CRC-32 of `bytes`.
+    pub fn crc32(bytes: &[u8]) -> u32 {
+        let mut c = Crc32::new();
+        c.update(bytes);
+        c.finish()
+    }
+
+    /// A decoded frame header.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct Header {
+        pub body_len: u32,
+        pub from: u32,
+        pub seq: u64,
+        pub tag: u64,
+        pub crc: u32,
+    }
+
+    fn u32_at(buf: &[u8], at: usize) -> u32 {
+        u32::from_le_bytes([buf[at], buf[at + 1], buf[at + 2], buf[at + 3]])
+    }
+
+    fn u64_at(buf: &[u8], at: usize) -> u64 {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&buf[at..at + 8]);
+        u64::from_le_bytes(b)
+    }
+
+    /// Encode one frame into `out` (cleared first; reused per writer so
+    /// steady-state framing does not allocate).
+    pub fn encode(from: u32, seq: u64, tag: u64, body: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&((body.len() * 4) as u32).to_le_bytes());
+        out.extend_from_slice(&from.to_le_bytes());
+        out.extend_from_slice(&seq.to_le_bytes());
+        out.extend_from_slice(&tag.to_le_bytes());
+        out.extend_from_slice(&[0u8; 4]); // CRC placeholder, patched below
+        for v in body {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let crc = {
+            let mut c = Crc32::new();
+            c.update(&out[4..28]);
+            c.update(&out[HEADER_LEN..]);
+            c.finish()
+        };
+        out[28..32].copy_from_slice(&crc.to_le_bytes());
+    }
+
+    /// Validate + decode a frame header (magic, bounds, alignment).
+    pub fn decode_header(buf: &[u8; HEADER_LEN]) -> Result<Header, FrameError> {
+        if buf[0..4] != MAGIC {
+            return Err(FrameError::BadMagic { got: [buf[0], buf[1], buf[2], buf[3]] });
+        }
+        let body_len = u32_at(buf, 4);
+        if body_len > MAX_BODY_BYTES {
+            return Err(FrameError::Oversized { len: body_len, max: MAX_BODY_BYTES });
+        }
+        if body_len % 4 != 0 {
+            return Err(FrameError::UnalignedBody { len: body_len });
+        }
+        Ok(Header {
+            body_len,
+            from: u32_at(buf, 8),
+            seq: u64_at(buf, 12),
+            tag: u64_at(buf, 20),
+            crc: u32_at(buf, 28),
+        })
+    }
+
+    /// Check the declared CRC against the header fields + body bytes.
+    pub fn check_body(h: &Header, body: &[u8]) -> Result<(), FrameError> {
+        if body.len() != h.body_len as usize {
+            return Err(FrameError::Truncated { need: h.body_len as usize, have: body.len() });
+        }
+        let mut c = Crc32::new();
+        c.update(&h.body_len.to_le_bytes());
+        c.update(&h.from.to_le_bytes());
+        c.update(&h.seq.to_le_bytes());
+        c.update(&h.tag.to_le_bytes());
+        c.update(body);
+        let got = c.finish();
+        if got != h.crc {
+            return Err(FrameError::CrcMismatch { expect: h.crc, got });
+        }
+        Ok(())
+    }
+
+    /// Decode a whole buffered frame (tests and tooling; the streaming
+    /// readers use [`decode_header`] + [`check_body`] directly).
+    pub fn decode(bytes: &[u8]) -> Result<(Header, &[u8]), FrameError> {
+        if bytes.len() < HEADER_LEN {
+            return Err(FrameError::Truncated { need: HEADER_LEN, have: bytes.len() });
+        }
+        let mut head = [0u8; HEADER_LEN];
+        head.copy_from_slice(&bytes[..HEADER_LEN]);
+        let h = decode_header(&head)?;
+        let need = HEADER_LEN + h.body_len as usize;
+        if bytes.len() < need {
+            return Err(FrameError::Truncated { need, have: bytes.len() });
+        }
+        let body = &bytes[HEADER_LEN..need];
+        check_body(&h, body)?;
+        Ok((h, body))
+    }
+
+    /// Encode the post-connect hello identifying the directed edge.
+    pub fn encode_hello(from: u32, to: u32) -> [u8; HELLO_LEN] {
+        let mut out = [0u8; HELLO_LEN];
+        out[0..4].copy_from_slice(&HELLO_MAGIC);
+        out[4..8].copy_from_slice(&PROTO_VERSION.to_le_bytes());
+        out[8..12].copy_from_slice(&from.to_le_bytes());
+        out[12..16].copy_from_slice(&to.to_le_bytes());
+        out
+    }
+
+    /// Decode a hello into `(from, to)` worker ids.
+    pub fn decode_hello(buf: &[u8; HELLO_LEN]) -> Result<(u32, u32), FrameError> {
+        if buf[0..4] != HELLO_MAGIC {
+            return Err(FrameError::BadMagic { got: [buf[0], buf[1], buf[2], buf[3]] });
+        }
+        let version = u32_at(buf, 4);
+        if version != PROTO_VERSION {
+            return Err(FrameError::BadVersion { got: version });
+        }
+        Ok((u32_at(buf, 8), u32_at(buf, 12)))
+    }
+}
+
+// -------------------------------------------------------- wire faults ----
+
+/// What a scripted wire fault does to its edge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFaultKind {
+    /// Drop the connection before shipping the frame; the supervisor
+    /// reconnects and replays.
+    Disconnect,
+    /// Flush half the encoded frame, then drop the connection — the
+    /// reader sees a truncated/corrupt stream and discards it.
+    Truncate,
+    /// Sleep before shipping the frame (a stalled peer, bounded by the
+    /// receiver's deadline).
+    Stall,
+}
+
+/// One scripted, one-shot fault on the directed edge `from → to`,
+/// firing when the writer is about to ship data frame `at_frame`
+/// (0-based count of frames delivered on that edge).
+#[derive(Clone, Copy, Debug)]
+pub struct WireFault {
+    pub kind: WireFaultKind,
+    pub from: usize,
+    pub to: usize,
+    pub at_frame: u64,
+    /// Stall duration in milliseconds ([`WireFaultKind::Stall`] only).
+    pub stall_ms: u64,
+}
+
+/// A set of scripted socket-layer faults, the wire analogue of the
+/// in-process `FaultPlan`.  Spec strings round-trip through
+/// [`WireFaultPlan::parse`] / [`WireFaultPlan::render`] so the launcher
+/// can forward a plan to worker processes on the command line.
+#[derive(Clone, Debug, Default)]
+pub struct WireFaultPlan {
+    pub faults: Vec<WireFault>,
+}
+
+impl WireFaultPlan {
+    pub fn disconnect(mut self, from: usize, to: usize, at_frame: u64) -> Self {
+        self.faults.push(WireFault {
+            kind: WireFaultKind::Disconnect,
+            from,
+            to,
+            at_frame,
+            stall_ms: 0,
+        });
+        self
+    }
+
+    pub fn truncate(mut self, from: usize, to: usize, at_frame: u64) -> Self {
+        self.faults.push(WireFault {
+            kind: WireFaultKind::Truncate,
+            from,
+            to,
+            at_frame,
+            stall_ms: 0,
+        });
+        self
+    }
+
+    pub fn stall(mut self, from: usize, to: usize, at_frame: u64, ms: u64) -> Self {
+        self.faults.push(WireFault {
+            kind: WireFaultKind::Stall,
+            from,
+            to,
+            at_frame,
+            stall_ms: ms,
+        });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Parse a comma-separated spec: `disc:F:T:K`, `trunc:F:T:K`,
+    /// `stall:F:T:K:MS` (edge F→T, 0-based frame index K).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = WireFaultPlan::default();
+        for entry in spec.split(',').filter(|e| !e.trim().is_empty()) {
+            let parts: Vec<&str> = entry.trim().split(':').collect();
+            let num = |i: usize| -> Result<u64> {
+                parts
+                    .get(i)
+                    .with_context(|| format!("wire fault {entry:?}: missing field {i}"))?
+                    .parse::<u64>()
+                    .with_context(|| format!("wire fault {entry:?}: field {i} not a number"))
+            };
+            let (from, to, at) = (num(1)? as usize, num(2)? as usize, num(3)?);
+            ensure!(from != to, "wire fault {entry:?}: self-edge");
+            plan = match parts[0] {
+                "disc" => {
+                    ensure!(parts.len() == 4, "disc takes 3 fields: {entry:?}");
+                    plan.disconnect(from, to, at)
+                }
+                "trunc" => {
+                    ensure!(parts.len() == 4, "trunc takes 3 fields: {entry:?}");
+                    plan.truncate(from, to, at)
+                }
+                "stall" => {
+                    ensure!(parts.len() == 5, "stall takes 4 fields: {entry:?}");
+                    plan.stall(from, to, at, num(4)?)
+                }
+                other => bail!("unknown wire fault kind {other:?} in {entry:?}"),
+            };
+        }
+        Ok(plan)
+    }
+
+    /// Inverse of [`WireFaultPlan::parse`].
+    pub fn render(&self) -> String {
+        self.faults
+            .iter()
+            .map(|f| match f.kind {
+                WireFaultKind::Disconnect => {
+                    format!("disc:{}:{}:{}", f.from, f.to, f.at_frame)
+                }
+                WireFaultKind::Truncate => {
+                    format!("trunc:{}:{}:{}", f.from, f.to, f.at_frame)
+                }
+                WireFaultKind::Stall => {
+                    format!("stall:{}:{}:{}:{}", f.from, f.to, f.at_frame, f.stall_ms)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+// ------------------------------------------------------- wire config ----
+
+/// Which socket family carries the frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireKind {
+    /// Unix-domain sockets under the rendezvous dir (unix only).
+    Uds,
+    /// Loopback TCP with ports published as rendezvous files.
+    Tcp,
+}
+
+impl WireKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "uds" => Ok(WireKind::Uds),
+            "tcp" => Ok(WireKind::Tcp),
+            other => bail!("unknown transport {other:?} (expected \"uds\" or \"tcp\")"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WireKind::Uds => "uds",
+            WireKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Configuration for one wire fabric (shared by every worker of a run).
+#[derive(Clone, Debug)]
+pub struct WireConfig {
+    pub kind: WireKind,
+    /// Rendezvous directory: sockets / port files live here.  Created on
+    /// bind if missing.
+    pub dir: PathBuf,
+    /// Fabric size (worker count).
+    pub n: usize,
+    /// Scripted socket-layer faults (empty by default).
+    pub faults: WireFaultPlan,
+    /// Give-up horizon for (re)connecting to a peer; after this the edge
+    /// reports [`CommError::PeerGone`].
+    pub connect_deadline: Duration,
+    /// Frames kept per edge for post-reconnect redelivery.
+    pub replay_frames: usize,
+}
+
+impl WireConfig {
+    pub fn new(kind: WireKind, dir: impl Into<PathBuf>, n: usize) -> Self {
+        Self {
+            kind,
+            dir: dir.into(),
+            n,
+            faults: WireFaultPlan::default(),
+            connect_deadline: Duration::from_secs(10),
+            replay_frames: 256,
+        }
+    }
+}
+
+// ---------------------------------------------------- wire transport ----
+
+enum WireStream {
+    #[cfg(unix)]
+    Uds(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl WireStream {
+    fn set_nonblocking(&self, on: bool) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            WireStream::Uds(s) => s.set_nonblocking(on),
+            WireStream::Tcp(s) => s.set_nonblocking(on),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            WireStream::Uds(s) => s.set_read_timeout(d),
+            WireStream::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+}
+
+impl Read for WireStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            WireStream::Uds(s) => s.read(buf),
+            WireStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for WireStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            WireStream::Uds(s) => s.write(buf),
+            WireStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            WireStream::Uds(s) => s.flush(),
+            WireStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+enum WireListener {
+    #[cfg(unix)]
+    Uds(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl WireListener {
+    fn set_nonblocking(&self, on: bool) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            WireListener::Uds(l) => l.set_nonblocking(on),
+            WireListener::Tcp(l) => l.set_nonblocking(on),
+        }
+    }
+
+    fn accept(&self) -> io::Result<WireStream> {
+        match self {
+            #[cfg(unix)]
+            WireListener::Uds(l) => l.accept().map(|(s, _)| WireStream::Uds(s)),
+            WireListener::Tcp(l) => l.accept().map(|(s, _)| WireStream::Tcp(s)),
+        }
+    }
+}
+
+fn sock_path(dir: &Path, worker: usize) -> PathBuf {
+    dir.join(format!("peer-{worker}.sock"))
+}
+
+fn port_path(dir: &Path, worker: usize) -> PathBuf {
+    dir.join(format!("peer-{worker}.port"))
+}
+
+fn bind_listener(kind: WireKind, dir: &Path, id: usize) -> Result<WireListener> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating rendezvous dir {}", dir.display()))?;
+    match kind {
+        #[cfg(unix)]
+        WireKind::Uds => {
+            let path = sock_path(dir, id);
+            let _ = std::fs::remove_file(&path); // stale socket from a dead run
+            let l = UnixListener::bind(&path)
+                .with_context(|| format!("binding uds listener {}", path.display()))?;
+            Ok(WireListener::Uds(l))
+        }
+        #[cfg(not(unix))]
+        WireKind::Uds => bail!("uds transport requires unix"),
+        WireKind::Tcp => {
+            let l = TcpListener::bind(("127.0.0.1", 0)).context("binding tcp listener")?;
+            let port = l.local_addr().context("tcp local addr")?.port();
+            let tmp = dir.join(format!("peer-{id}.port.tmp"));
+            let fin = port_path(dir, id);
+            std::fs::write(&tmp, format!("{port}\n"))
+                .with_context(|| format!("writing port file {}", tmp.display()))?;
+            std::fs::rename(&tmp, &fin)
+                .with_context(|| format!("publishing port file {}", fin.display()))?;
+            Ok(WireListener::Tcp(l))
+        }
+    }
+}
+
+struct WriterCtx {
+    me: usize,
+    peer: usize,
+    kind: WireKind,
+    dir: PathBuf,
+    connect_deadline: Duration,
+    replay_cap: usize,
+    /// Faults pre-filtered to this directed edge.
+    faults: Vec<WireFault>,
+    gone: Arc<AtomicBool>,
+    closing: Arc<AtomicBool>,
+}
+
+fn dial(ctx: &WriterCtx) -> io::Result<WireStream> {
+    match ctx.kind {
+        #[cfg(unix)]
+        WireKind::Uds => {
+            let s = UnixStream::connect(sock_path(&ctx.dir, ctx.peer))?;
+            Ok(WireStream::Uds(s))
+        }
+        #[cfg(not(unix))]
+        WireKind::Uds => Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "uds transport requires unix",
+        )),
+        WireKind::Tcp => {
+            let text = std::fs::read_to_string(port_path(&ctx.dir, ctx.peer))?;
+            let port: u16 = text
+                .trim()
+                .parse()
+                .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad port file"))?;
+            let s = TcpStream::connect(("127.0.0.1", port))?;
+            s.set_nodelay(true)?;
+            Ok(WireStream::Tcp(s))
+        }
+    }
+}
+
+/// Dial + hello with capped exponential backoff.  `None` = the peer
+/// stayed unreachable for the whole deadline — the edge is declared gone.
+/// A transport being torn down shortens the horizon so drops stay fast.
+fn connect_with_backoff(ctx: &WriterCtx) -> Option<WireStream> {
+    let deadline = if ctx.closing.load(Ordering::Acquire) {
+        CLOSING_CONNECT_DEADLINE.min(ctx.connect_deadline)
+    } else {
+        ctx.connect_deadline
+    };
+    let start = Instant::now();
+    let mut backoff = RECONNECT_BACKOFF_START;
+    loop {
+        if let Ok(mut c) = dial(ctx) {
+            let hello = frame::encode_hello(ctx.me as u32, ctx.peer as u32);
+            if c.write_all(&hello).is_ok() && c.flush().is_ok() {
+                return Some(c);
+            }
+        }
+        if start.elapsed() + backoff > deadline {
+            return None;
+        }
+        thread::sleep(backoff);
+        backoff = (backoff * 2).min(RECONNECT_BACKOFF_MAX);
+    }
+}
+
+fn write_frame(conn: &mut Option<WireStream>, buf: &[u8]) -> io::Result<()> {
+    let c = conn.as_mut().expect("connection present");
+    c.write_all(buf)?;
+    c.flush()
+}
+
+/// Ship one frame, repairing the connection as needed.  On reconnect the
+/// replay window goes out first (receiver seq-dedup makes redelivery
+/// idempotent).  `false` = the supervisor gave up (connect deadline).
+fn deliver(
+    ctx: &WriterCtx,
+    conn: &mut Option<WireStream>,
+    replay: &VecDeque<Msg>,
+    msg: &Msg,
+    buf: &mut Vec<u8>,
+) -> bool {
+    loop {
+        if conn.is_none() {
+            let Some(c) = connect_with_backoff(ctx) else {
+                return false;
+            };
+            *conn = Some(c);
+            let mut replay_ok = true;
+            for m in replay.iter() {
+                frame::encode(m.from as u32, m.seq, m.tag, &m.data, buf);
+                if write_frame(conn, buf).is_err() {
+                    replay_ok = false;
+                    break;
+                }
+            }
+            if !replay_ok {
+                *conn = None;
+                continue;
+            }
+        }
+        frame::encode(msg.from as u32, msg.seq, msg.tag, &msg.data, buf);
+        if write_frame(conn, buf).is_ok() {
+            return true;
+        }
+        *conn = None;
+    }
+}
+
+/// One directed edge's writer: drains the outbox, applies scripted wire
+/// faults, frames and ships under the reconnect supervisor.  Exits when
+/// the outbox closes (transport drop, after draining) or the supervisor
+/// gives up (marks the peer gone; queued frames are discarded and later
+/// sends fail fast with `PeerGone`).
+fn writer_loop(ctx: WriterCtx, outbox: Receiver<Msg>) {
+    let mut conn: Option<WireStream> = None;
+    let mut replay: VecDeque<Msg> = VecDeque::new();
+    let mut fired = vec![false; ctx.faults.len()];
+    let mut delivered: u64 = 0;
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let msg = match outbox.recv_timeout(WRITER_POLL) {
+            Ok(m) => m,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return, // queue drained
+        };
+        for (k, f) in ctx.faults.iter().enumerate() {
+            if fired[k] || f.at_frame != delivered {
+                continue;
+            }
+            fired[k] = true;
+            match f.kind {
+                WireFaultKind::Stall => thread::sleep(Duration::from_millis(f.stall_ms)),
+                WireFaultKind::Disconnect => conn = None,
+                WireFaultKind::Truncate => {
+                    if conn.is_some() {
+                        frame::encode(msg.from as u32, msg.seq, msg.tag, &msg.data, &mut buf);
+                        let half = buf.len() / 2;
+                        let _ = write_frame(&mut conn, &buf[..half]);
+                    }
+                    conn = None;
+                }
+            }
+        }
+        if !deliver(&ctx, &mut conn, &replay, &msg, &mut buf) {
+            ctx.gone.store(true, Ordering::Release);
+            return;
+        }
+        delivered += 1;
+        replay.push_back(msg);
+        while replay.len() > ctx.replay_cap {
+            replay.pop_front();
+        }
+    }
+}
+
+/// Fill `buf` from the stream, tolerating read-timeout slices (each one
+/// re-checks the shutdown flag).  `false` = EOF, error, or shutdown —
+/// the caller drops the connection either way.
+fn read_full(stream: &mut WireStream, buf: &mut [u8], stop: &AtomicBool) -> bool {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if stop.load(Ordering::Acquire) {
+            return false;
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return false,
+            Ok(k) => filled += k,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut
+                    || e.kind() == io::ErrorKind::Interrupted =>
+            {
+                continue
+            }
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// One accepted connection's reader: validates the hello, then streams
+/// frames into the shared inbox.  Any decode failure (bad magic,
+/// oversized length, truncation, CRC mismatch) drops the connection —
+/// typed-and-contained, never a panic or a wedged parse — and the
+/// sending side's supervisor reconnects + replays.
+fn reader_loop(
+    mut stream: WireStream,
+    feed: Sender<Msg>,
+    pool: BufferPool,
+    me: usize,
+    n: usize,
+    stop: Arc<AtomicBool>,
+) {
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    if stream.set_read_timeout(Some(READ_SLICE)).is_err() {
+        return;
+    }
+    let mut hello = [0u8; frame::HELLO_LEN];
+    if !read_full(&mut stream, &mut hello, &stop) {
+        return;
+    }
+    let from = match frame::decode_hello(&hello) {
+        Ok((from, to)) if to as usize == me && (from as usize) < n && from as usize != me => {
+            from as usize
+        }
+        _ => return, // mis-addressed or foreign connection: refuse it
+    };
+    let mut header = [0u8; frame::HEADER_LEN];
+    let mut body: Vec<u8> = Vec::new();
+    loop {
+        if !read_full(&mut stream, &mut header, &stop) {
+            return;
+        }
+        let h = match frame::decode_header(&header) {
+            Ok(h) => h,
+            Err(_) => return,
+        };
+        if h.from as usize != from {
+            return; // frames must match the hello identity
+        }
+        body.clear();
+        body.resize(h.body_len as usize, 0);
+        if !read_full(&mut stream, &mut body, &stop) {
+            return;
+        }
+        if frame::check_body(&h, &body).is_err() {
+            return;
+        }
+        let data = pool.payload_from_le_bytes(&body);
+        if feed.send(Msg { from, seq: h.seq, tag: h.tag, data }).is_err() {
+            return;
+        }
+    }
+}
+
+fn listen_loop(
+    listener: WireListener,
+    feed: Sender<Msg>,
+    pool: BufferPool,
+    me: usize,
+    n: usize,
+    stop: Arc<AtomicBool>,
+    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok(stream) => {
+                let feed = feed.clone();
+                let pool = pool.clone();
+                let stop = stop.clone();
+                let spawned = thread::Builder::new()
+                    .name(format!("wire-read-{me}"))
+                    .spawn(move || reader_loop(stream, feed, pool, me, n, stop));
+                if let Ok(h) = spawned {
+                    readers.lock().expect("reader registry poisoned").push(h);
+                }
+            }
+            Err(_) => thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+struct PeerHandle {
+    outbox: Sender<Msg>,
+    gone: Arc<AtomicBool>,
+    writer: Option<JoinHandle<()>>,
+}
+
+/// A socket-backed [`Transport`]: one listener + accept loop feeding a
+/// shared inbox, one supervised writer thread per directed outgoing
+/// edge.  See the module docs for the topology, rendezvous, and the
+/// supervisor/dedup split of guarantees.
+pub struct WireTransport {
+    peers: Vec<Option<PeerHandle>>,
+    inbox: Receiver<Msg>,
+    shutdown: Arc<AtomicBool>,
+    closing: Arc<AtomicBool>,
+    listener: Option<JoinHandle<()>>,
+    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl WireTransport {
+    /// Bind worker `id`'s listener under the rendezvous dir and start
+    /// the per-peer writer supervisors.  Dials are lazy: the first frame
+    /// to a peer establishes the directed connection, with backoff while
+    /// the peer is still coming up.
+    pub fn bind(id: usize, cfg: &WireConfig, pool: BufferPool) -> Result<Self> {
+        ensure!(cfg.n >= 2, "wire fabric needs at least 2 workers, got {}", cfg.n);
+        ensure!(id < cfg.n, "worker id {id} out of range for n={}", cfg.n);
+        let listener = bind_listener(cfg.kind, &cfg.dir, id)?;
+        let (feed, inbox) = channel();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let closing = Arc::new(AtomicBool::new(false));
+        let readers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let listener_thread = {
+            let pool = pool.clone();
+            let stop = shutdown.clone();
+            let readers = readers.clone();
+            let n = cfg.n;
+            thread::Builder::new()
+                .name(format!("wire-accept-{id}"))
+                .spawn(move || listen_loop(listener, feed, pool, id, n, stop, readers))
+                .context("spawning wire accept thread")?
+        };
+        let mut peers: Vec<Option<PeerHandle>> = Vec::with_capacity(cfg.n);
+        for p in 0..cfg.n {
+            if p == id {
+                peers.push(None);
+                continue;
+            }
+            let (outbox_tx, outbox) = channel();
+            let gone = Arc::new(AtomicBool::new(false));
+            let ctx = WriterCtx {
+                me: id,
+                peer: p,
+                kind: cfg.kind,
+                dir: cfg.dir.clone(),
+                connect_deadline: cfg.connect_deadline,
+                replay_cap: cfg.replay_frames.max(1),
+                faults: cfg
+                    .faults
+                    .faults
+                    .iter()
+                    .filter(|f| f.from == id && f.to == p)
+                    .copied()
+                    .collect(),
+                gone: gone.clone(),
+                closing: closing.clone(),
+            };
+            let writer = thread::Builder::new()
+                .name(format!("wire-send-{id}-{p}"))
+                .spawn(move || writer_loop(ctx, outbox))
+                .context("spawning wire writer thread")?;
+            peers.push(Some(PeerHandle { outbox: outbox_tx, gone, writer: Some(writer) }));
+        }
+        Ok(Self {
+            peers,
+            inbox,
+            shutdown,
+            closing,
+            listener: Some(listener_thread),
+            readers,
+        })
+    }
+}
+
+impl Transport for WireTransport {
+    fn send(&self, to: usize, msg: Msg) -> Result<(), CommError> {
+        let peer = self.peers[to].as_ref().expect("self-send rejected by Endpoint");
+        if peer.gone.load(Ordering::Acquire) {
+            return Err(CommError::PeerGone { peer: to, tag: tags::unpack(msg.tag) });
+        }
+        peer.outbox.send(msg).map_err(|e| CommError::PeerGone {
+            peer: to,
+            tag: tags::unpack(e.0.tag),
+        })
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Msg, RecvTimeoutErr> {
+        self.inbox.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => RecvTimeoutErr::Timeout,
+            RecvTimeoutError::Disconnected => RecvTimeoutErr::Closed,
+        })
+    }
+}
+
+impl Drop for WireTransport {
+    fn drop(&mut self) {
+        self.closing.store(true, Ordering::Release);
+        // Writers drain their queues (flushing in-flight frames), then
+        // exit when the outbox sender drops.
+        for slot in &mut self.peers {
+            if let Some(mut ph) = slot.take() {
+                drop(ph.outbox);
+                if let Some(w) = ph.writer.take() {
+                    let _ = w.join();
+                }
+            }
+        }
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(l) = self.listener.take() {
+            let _ = l.join();
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut reg = self.readers.lock().expect("reader registry poisoned");
+            reg.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+
+    #[test]
+    fn crc32_known_vector() {
+        // the standard CRC-32/ISO-HDLC check value
+        assert_eq!(frame::crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(frame::crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_round_trips_tagged_payloads() {
+        testing::check("frame_round_trip", 200, |g| {
+            let from = g.usize_in(0, 31) as u32;
+            let seq = g.u64() >> 1;
+            let tag = tags::grad_shard(
+                g.usize_in(0, 1000) as u64,
+                g.usize_in(0, 7),
+                g.usize_in(0, 7),
+                g.usize_in(0, 15),
+            );
+            let len = g.usize_in(0, 300);
+            let mut body = g.vec_f32(len, -1e6, 1e6);
+            // exercise special bit patterns too
+            if !body.is_empty() && g.bool() {
+                body[0] = f32::NAN;
+            }
+            let mut buf = Vec::new();
+            frame::encode(from, seq, tag, &body, &mut buf);
+            let (h, got) = frame::decode(&buf).expect("clean frame decodes");
+            assert_eq!((h.from, h.seq, h.tag), (from, seq, tag));
+            assert_eq!(got.len(), body.len() * 4);
+            let decoded: Vec<f32> = got
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            for (a, b) in decoded.iter().zip(body.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bit-exact body round trip");
+            }
+        });
+    }
+
+    #[test]
+    fn truncated_frame_is_a_typed_error() {
+        let mut buf = Vec::new();
+        frame::encode(1, 7, tags::loss(3), &[1.0, 2.0, 3.0], &mut buf);
+        // header cut short
+        let err = frame::decode(&buf[..10]).unwrap_err();
+        assert!(matches!(err, frame::FrameError::Truncated { have: 10, .. }), "{err}");
+        // body cut short
+        let err = frame::decode(&buf[..buf.len() - 4]).unwrap_err();
+        assert!(matches!(err, frame::FrameError::Truncated { .. }), "{err}");
+    }
+
+    #[test]
+    fn bit_flipped_body_is_a_crc_mismatch() {
+        let mut buf = Vec::new();
+        frame::encode(2, 9, tags::grad(5, 1), &[4.0, 5.0], &mut buf);
+        let last = buf.len() - 1;
+        buf[last] ^= 0x10;
+        let err = frame::decode(&buf).unwrap_err();
+        assert!(matches!(err, frame::FrameError::CrcMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn oversized_length_header_is_rejected_before_reading_the_body() {
+        let mut buf = Vec::new();
+        frame::encode(0, 1, tags::loss(0), &[1.0], &mut buf);
+        buf[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = frame::decode(&buf).unwrap_err();
+        assert!(
+            matches!(err, frame::FrameError::Oversized { len: u32::MAX, .. }),
+            "{err}"
+        );
+        // unaligned length is also typed, not a wedge
+        buf[4..8].copy_from_slice(&3u32.to_le_bytes());
+        let err = frame::decode(&buf).unwrap_err();
+        assert!(matches!(err, frame::FrameError::UnalignedBody { len: 3 }), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut buf = Vec::new();
+        frame::encode(0, 1, tags::loss(0), &[], &mut buf);
+        buf[0] = b'X';
+        let err = frame::decode(&buf).unwrap_err();
+        assert!(matches!(err, frame::FrameError::BadMagic { .. }), "{err}");
+    }
+
+    #[test]
+    fn hello_round_trips_and_rejects_bad_versions() {
+        let h = frame::encode_hello(3, 0);
+        assert_eq!(frame::decode_hello(&h).unwrap(), (3, 0));
+        let mut bad = h;
+        bad[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert!(matches!(
+            frame::decode_hello(&bad).unwrap_err(),
+            frame::FrameError::BadVersion { got: 99 }
+        ));
+        let mut wrong = h;
+        wrong[0] = b'Z';
+        assert!(matches!(
+            frame::decode_hello(&wrong).unwrap_err(),
+            frame::FrameError::BadMagic { .. }
+        ));
+    }
+
+    #[test]
+    fn wire_fault_plan_parses_and_renders() {
+        let spec = "disc:0:1:5,trunc:2:0:3,stall:1:0:2:200";
+        let plan = WireFaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.faults.len(), 3);
+        assert_eq!(plan.faults[0].kind, WireFaultKind::Disconnect);
+        assert_eq!((plan.faults[0].from, plan.faults[0].to), (0, 1));
+        assert_eq!(plan.faults[2].stall_ms, 200);
+        assert_eq!(plan.render(), spec);
+        assert!(WireFaultPlan::parse("").unwrap().is_empty());
+        assert!(WireFaultPlan::parse("bogus:0:1:2").is_err());
+        assert!(WireFaultPlan::parse("disc:0:0:1").is_err(), "self-edge rejected");
+        assert!(WireFaultPlan::parse("disc:0:1").is_err(), "missing field");
+        assert!(WireFaultPlan::parse("stall:0:1:2").is_err(), "stall needs ms");
+    }
+
+    #[test]
+    fn wire_kind_parses() {
+        assert_eq!(WireKind::parse("uds").unwrap(), WireKind::Uds);
+        assert_eq!(WireKind::parse("tcp").unwrap(), WireKind::Tcp);
+        assert!(WireKind::parse("carrier-pigeon").is_err());
+        assert_eq!(WireKind::Uds.name(), "uds");
+        assert_eq!(WireKind::Tcp.name(), "tcp");
+    }
+}

@@ -143,6 +143,35 @@ pub fn resume_with<B: Backend + Send + Sync + 'static>(
     run(rt, rule, pattern, steps, opts, Some(ck))
 }
 
+/// One worker's share of [`train_with`] over an externally built
+/// endpoint — the multi-process path: `cdp launch` spawns one OS process
+/// per worker, each of which binds a wire endpoint (`Fabric::wire`'s
+/// per-process analogue) and calls this.  `ep.id` is the worker's rank;
+/// `ep.n` must match the manifest's micro-batch count.  Returns the
+/// worker's loss log (canonical on rank 0, empty elsewhere) and the
+/// checkpoint if this rank captured one.
+pub fn run_worker<B: Backend>(
+    rt: &SharedBackend<B>,
+    rule: &Rule,
+    pattern: CommPattern,
+    steps: usize,
+    opts: MultiOpts,
+    resume: Option<&Checkpoint>,
+    ep: &mut Endpoint,
+) -> Result<(Vec<StepLog>, Option<Checkpoint>)> {
+    anyhow::ensure!(
+        ep.n == rt.manifest().n_microbatches,
+        "fabric size {} != manifest micro-batches {}",
+        ep.n,
+        rt.manifest().n_microbatches
+    );
+    let w = ep.id;
+    match pattern {
+        CommPattern::Barrier => worker_dp(rt, rule, ep, w, steps, opts, resume),
+        CommPattern::Ring => worker_ring(rt, rule, ep, w, steps, opts, resume),
+    }
+}
+
 fn run<B: Backend + Send + Sync + 'static>(
     rt: SharedBackend<B>,
     rule: Rule,
@@ -192,14 +221,7 @@ fn run<B: Backend + Send + Sync + 'static>(
             .map_err(|_| anyhow::anyhow!("endpoint mutex poisoned for worker {w}"))?
             .take()
             .ok_or_else(|| anyhow::anyhow!("endpoint for worker {w} taken twice"))?;
-        match pattern {
-            CommPattern::Barrier => {
-                worker_dp(&rt_arc, &rule_c, &mut ep, w, steps, opts, resume.as_ref().as_ref())
-            }
-            CommPattern::Ring => {
-                worker_ring(&rt_arc, &rule_c, &mut ep, w, steps, opts, resume.as_ref().as_ref())
-            }
-        }
+        run_worker(&rt_arc, &rule_c, pattern, steps, opts, resume.as_ref().as_ref(), &mut ep)
     });
 
     // worker 0 reports the canonical loss log + checkpoint

@@ -34,14 +34,21 @@
 //!
 //! Every receive carries the fabric deadline: a dead owner turns into a
 //! typed [`crate::comm::CommError`] naming the peer and the decoded
-//! param/shard tag.  Sharding makes N−1 re-forming structurally
-//! impossible — a lost worker takes its stage's only optimizer state
-//! with it — so the degraded mode here is *checkpoint and restart*:
-//! [`ZeroOpts::checkpoint_at`] gathers the full model state to worker 0
-//! at a θ-version boundary over the control plane, and [`resume_with`]
-//! re-shards it bit-identically.  Seeded fault injection
-//! ([`ZeroOpts::faults`]) leaves loss sequences bit-identical to clean
-//! runs (retry + seq dedup); scripted kills are rejected.
+//! param/shard tag.  Sharding means a lost worker takes its stage's
+//! *only* optimizer state with it, so there is no N−1 degraded ring the
+//! way the multi trainer re-forms one.  Instead the trainer
+//! *re-replicates*: under a scripted kill ([`ZeroOpts::faults`]) the
+//! survivors heartbeat at each θ-version boundary, freeze at the
+//! junction when the victim goes silent, and hand their shards to a
+//! second phase in which the dead worker's stage is rebuilt from the
+//! latest persisted checkpoint ([`ZeroOpts::recover_from`], written by
+//! worker 0 when [`ZeroOpts::save_checkpoint_to`] is set).
+//! [`recover_shard`] returns a typed [`ShardRecoveryError`] when no
+//! checkpoint exists, none covers the shard, or the saved boundary does
+//! not meet the junction.  With `checkpoint_at = kill_step − 1` the
+//! recovered run's losses are bit-identical to a clean run.  Seeded
+//! fault injection on the data plane likewise leaves loss sequences
+//! bit-identical (retry + seq dedup).
 
 use anyhow::{Context, Result};
 
@@ -55,7 +62,14 @@ use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{Checkpoint, Rule, Version};
 use crate::runtime::Backend;
 use crate::tensor::HostTensor;
-use std::sync::Arc;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A silent peer is declared dead after this long without a heartbeat
+/// (generous next to the in-process hop; a live peer answers in µs).
+const DETECT_DEADLINE: Duration = Duration::from_secs(2);
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StateFlow {
@@ -66,7 +80,7 @@ pub enum StateFlow {
 }
 
 /// Knobs for [`train_with`]; [`Default`] is the production configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ZeroOpts {
     pub mode: ExecMode,
     /// Gradient bucket granularity for the eager shard sends (elements).
@@ -76,6 +90,13 @@ pub struct ZeroOpts {
     /// Capture a checkpoint at the θ-version boundary after this step
     /// (full state gathered to worker 0 over the control plane).
     pub checkpoint_at: Option<u64>,
+    /// Worker 0 also persists the gathered checkpoint here
+    /// (`util::binio` format, written atomically via temp + rename).
+    pub save_checkpoint_to: Option<PathBuf>,
+    /// Shard re-replication source for a scripted kill: the dead
+    /// worker's stage is rebuilt from this checkpoint at the junction.
+    /// Required whenever [`ZeroOpts::faults`] scripts a kill.
+    pub recover_from: Option<PathBuf>,
 }
 
 impl Default for ZeroOpts {
@@ -85,6 +106,8 @@ impl Default for ZeroOpts {
             bucket_elems: bucket_elems_from_env(),
             faults: None,
             checkpoint_at: None,
+            save_checkpoint_to: None,
+            recover_from: None,
         }
     }
 }
@@ -99,6 +122,119 @@ pub struct ZeroReport {
     pub peak_state_bytes: u64,
     /// Captured at the [`ZeroOpts::checkpoint_at`] boundary, if any.
     pub checkpoint: Option<Checkpoint>,
+}
+
+/// Why a dead worker's shard could not be rebuilt from a checkpoint.
+/// Re-replication is only as good as the last persisted boundary; every
+/// way it can fall short is a distinct, matchable variant.
+#[derive(Debug)]
+pub enum ShardRecoveryError {
+    /// Nothing at the path — no checkpoint was ever persisted.
+    NoCheckpoint { path: PathBuf },
+    /// A checkpoint exists but its θ-version boundary is not the
+    /// junction the survivors froze at — resuming from it would fork
+    /// the dead stage's history.
+    StaleCheckpoint { path: PathBuf, found: u64, needed: u64 },
+    /// The checkpoint does not contain the dead worker's stage at all.
+    ShardUncovered { stage: usize, n_stages: usize },
+    /// Unreadable, corrupt, or written under a different rule/layout.
+    Invalid { path: PathBuf, source: anyhow::Error },
+}
+
+impl fmt::Display for ShardRecoveryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::NoCheckpoint { path } => write!(
+                f,
+                "no checkpoint covers the lost shard: {path:?} does not exist \
+                 (set ZeroOpts::save_checkpoint_to to persist one)"
+            ),
+            Self::StaleCheckpoint { path, found, needed } => write!(
+                f,
+                "checkpoint {path:?} is at θ-version boundary {found} but the \
+                 survivors froze at {needed} — the lost shard cannot be \
+                 rebuilt bit-identically from it"
+            ),
+            Self::ShardUncovered { stage, n_stages } => write!(
+                f,
+                "checkpoint holds {n_stages} stage(s); stage {stage} is not \
+                 covered"
+            ),
+            Self::Invalid { path, source } => {
+                write!(f, "checkpoint {path:?} unusable for shard recovery: {source:#}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardRecoveryError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Invalid { source, .. } => Some(source.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+/// One stage's model states lifted out of a persisted checkpoint.
+pub struct RecoveredShard {
+    pub cur: Vec<f32>,
+    pub prev: Vec<f32>,
+    pub moms: Vec<f32>,
+}
+
+/// Rebuild stage `stage`'s shard (θ_t, θ_{t−1}, momentum) from the
+/// checkpoint at `path`, for a run whose survivors froze at θ-version
+/// boundary `junction`.  The checkpoint must match the run's rule and
+/// layout and sit exactly at the junction — anything less is a typed
+/// [`ShardRecoveryError`], never a silently-forked history.
+pub fn recover_shard(
+    path: &Path,
+    layout: &ArenaLayout,
+    rule: &Rule,
+    stage: usize,
+    junction: u64,
+) -> Result<RecoveredShard, ShardRecoveryError> {
+    if !path.exists() {
+        return Err(ShardRecoveryError::NoCheckpoint { path: path.to_path_buf() });
+    }
+    let ck = Checkpoint::load(path)
+        .map_err(|source| ShardRecoveryError::Invalid { path: path.to_path_buf(), source })?;
+    if stage >= ck.stage_lens.len() {
+        return Err(ShardRecoveryError::ShardUncovered {
+            stage,
+            n_stages: ck.stage_lens.len(),
+        });
+    }
+    let want: Vec<u64> = (0..layout.n_stages())
+        .map(|s| layout.stage_len(s) as u64)
+        .collect();
+    if ck.rule != rule.name() || ck.stage_lens != want {
+        return Err(ShardRecoveryError::Invalid {
+            path: path.to_path_buf(),
+            source: anyhow::anyhow!(
+                "written under rule `{}` with layout {:?}; this run is rule `{}` \
+                 with layout {:?}",
+                ck.rule,
+                ck.stage_lens,
+                rule.name(),
+                want
+            ),
+        });
+    }
+    if ck.step != junction {
+        return Err(ShardRecoveryError::StaleCheckpoint {
+            path: path.to_path_buf(),
+            found: ck.step,
+            needed: junction,
+        });
+    }
+    let range = layout.stage_range(stage);
+    Ok(RecoveredShard {
+        cur: ck.cur[range.clone()].to_vec(),
+        prev: ck.prev[range.clone()].to_vec(),
+        moms: ck.moms[range].to_vec(),
+    })
 }
 
 /// Param version a worker must use for (mb i, stage j) under the rule.
@@ -132,6 +268,33 @@ fn stage_run<'a>(
     }
 }
 
+/// How a worker's owned shard comes to exist at phase start.
+enum WorkerInit {
+    /// Slice the backend's initial parameters (step 0).
+    Fresh,
+    /// Re-shard a full checkpoint (validated against layout + rule).
+    Resume(Checkpoint),
+    /// Adopt an already-sharded state at θ-version boundary `t0` — a
+    /// survivor's handoff, or the recovered shard of a dead worker.
+    Shard { t0: u64, cur: Vec<f32>, prev: Vec<f32>, moms: Vec<f32> },
+}
+
+/// A survivor's owned shard, frozen at the junction where the victim's
+/// silence was detected.  Phase 2 resumes every worker from here.
+struct ShardHandoff {
+    at_step: u64,
+    cur: Vec<f32>,
+    prev: Vec<f32>,
+    moms: Vec<f32>,
+}
+
+struct WorkerOut {
+    logs: Vec<StepLog>,
+    peak_state: u64,
+    checkpoint: Option<Checkpoint>,
+    handoff: Option<ShardHandoff>,
+}
+
 pub fn train<B: Backend + Send + Sync + 'static>(
     rt: SharedBackend<B>,
     rule: Rule,
@@ -153,8 +316,9 @@ pub fn train_with<B: Backend + Send + Sync + 'static>(
 
 /// Continue from a θ-version-boundary checkpoint, re-sharding the saved
 /// state: step `ck.step` onward is bit-identical to the run that produced
-/// it.  This is ZeRO's whole degraded mode — sharding means a lost worker
-/// cannot be absorbed by the survivors (its optimizer shard died with it).
+/// it.  This is ZeRO's full-restart degraded mode; for a single lost
+/// worker the cheaper path is shard re-replication (scripted kill +
+/// [`ZeroOpts::recover_from`]), which rebuilds only the dead stage.
 pub fn resume_with<B: Backend + Send + Sync + 'static>(
     rt: SharedBackend<B>,
     rule: Rule,
@@ -164,6 +328,97 @@ pub fn resume_with<B: Backend + Send + Sync + 'static>(
     ck: Checkpoint,
 ) -> Result<ZeroReport> {
     run(rt, rule, flow, steps, opts, Some(ck))
+}
+
+/// Run one ZeRO worker against an externally-built endpoint — the entry
+/// point for multi-process launches, where each OS process owns exactly
+/// one endpoint over a wire transport.  Returns (step logs, peak state
+/// bytes, checkpoint); logs and checkpoint are only populated on worker
+/// 0.  Scripted kills are an in-process orchestration (the two-phase
+/// re-replication needs a shared junction) and are rejected here — real
+/// processes die for real and resume from a checkpoint.
+pub fn run_worker<B: Backend>(
+    rt: &SharedBackend<B>,
+    rule: &Rule,
+    flow: StateFlow,
+    steps: usize,
+    opts: ZeroOpts,
+    resume: Option<&Checkpoint>,
+    ep: &mut Endpoint,
+) -> Result<(Vec<StepLog>, u64, Option<Checkpoint>)> {
+    let n = rt.manifest().n_stages;
+    anyhow::ensure!(ep.n == n, "fabric size {} != manifest stages {n}", ep.n);
+    anyhow::ensure!(
+        n == rt.manifest().n_microbatches,
+        "ZeRO sharding assumes N stages == N workers"
+    );
+    if let Some(plan) = opts.faults {
+        anyhow::ensure!(
+            plan.kill.is_none(),
+            "scripted kills are an in-process orchestration; over a wire, \
+             kill the process and resume it from a checkpoint"
+        );
+    }
+    let init = match resume {
+        Some(ck) => WorkerInit::Resume(ck.clone()),
+        None => WorkerInit::Fresh,
+    };
+    let w = ep.id;
+    let out = worker(rt, rule, flow, ep, w, steps, &opts, init)?;
+    Ok((out.logs, out.peak_state, out.checkpoint))
+}
+
+struct PhaseOut {
+    outs: Vec<WorkerOut>,
+    bytes: u64,
+    messages: u64,
+}
+
+/// One fabric lifetime: build endpoints (with the phase's fault plan),
+/// seat every worker's initial shard state, run them to completion.
+fn run_phase<B: Backend + Send + Sync + 'static>(
+    rt: &SharedBackend<B>,
+    rule: &Rule,
+    flow: StateFlow,
+    steps: usize,
+    opts: &ZeroOpts,
+    inits: Vec<WorkerInit>,
+) -> Result<PhaseOut> {
+    let n = rt.manifest().n_stages;
+    let (endpoints, stats) = match opts.faults {
+        Some(plan) => {
+            let (eps, stats, _inj) = Fabric::with_faults(n, plan);
+            (eps, stats)
+        }
+        None => Fabric::new(n),
+    };
+    let eps: Arc<Vec<Mutex<Option<Endpoint>>>> =
+        Arc::new(endpoints.into_iter().map(|e| Mutex::new(Some(e))).collect());
+    let seats: Arc<Vec<Mutex<Option<WorkerInit>>>> =
+        Arc::new(inits.into_iter().map(|i| Mutex::new(Some(i))).collect());
+
+    let rt_arc = rt.clone();
+    let rule_c = rule.clone();
+    let opts_c = opts.clone();
+    let results = run_workers(n, move |w| -> Result<WorkerOut> {
+        let mut ep = eps[w]
+            .lock()
+            .map_err(|_| anyhow::anyhow!("endpoint mutex poisoned for worker {w}"))?
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("endpoint for worker {w} taken twice"))?;
+        let init = seats[w]
+            .lock()
+            .map_err(|_| anyhow::anyhow!("init mutex poisoned for worker {w}"))?
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("init for worker {w} taken twice"))?;
+        worker(&rt_arc, &rule_c, flow, &mut ep, w, steps, &opts_c, init)
+    });
+
+    let mut outs = Vec::with_capacity(n);
+    for (w, r) in results.into_iter().enumerate() {
+        outs.push(r.with_context(|| format!("zero worker {w} failed"))?);
+    }
+    Ok(PhaseOut { outs, bytes: stats.bytes(), messages: stats.messages() })
 }
 
 fn run<B: Backend + Send + Sync + 'static>(
@@ -177,49 +432,111 @@ fn run<B: Backend + Send + Sync + 'static>(
     let n = rt.manifest().n_stages;
     let n_mb = rt.manifest().n_microbatches;
     anyhow::ensure!(n == n_mb, "ZeRO sharding assumes N stages == N workers");
-    if let Some(plan) = opts.faults {
+    let t0 = resume.as_ref().map(|c| c.step).unwrap_or(0);
+    let kill = opts.faults.and_then(|p| p.kill);
+    if let Some(k) = kill {
         anyhow::ensure!(
-            plan.kill.is_none(),
-            "ZeRO has no degraded ring — a killed worker takes its only \
-             optimizer shard with it; recover via checkpoint_at + resume_with"
+            n >= 2,
+            "shard re-replication needs at least one survivor (n = {n})"
+        );
+        anyhow::ensure!(
+            k.worker != 0,
+            "ZeRO worker 0 is structural (logger + checkpoint assembler) and \
+             may not be killed"
+        );
+        anyhow::ensure!(
+            k.worker < n,
+            "kill names worker {} but the fabric has {n}",
+            k.worker
+        );
+        anyhow::ensure!(
+            opts.recover_from.is_some(),
+            "a ZeRO kill needs ZeroOpts::recover_from: the dead worker's \
+             optimizer shard has no replica and must re-replicate from a \
+             persisted checkpoint (pair checkpoint_at = kill_step − 1 with \
+             save_checkpoint_to)"
+        );
+        anyhow::ensure!(
+            k.at_step > t0 && k.at_step < t0 + steps as u64,
+            "kill at step {} is outside this run's boundaries {}..{}",
+            k.at_step,
+            t0 + 1,
+            t0 + steps as u64
         );
     }
-    let (endpoints, stats) = match opts.faults {
-        Some(plan) => {
-            let (eps, stats, _inj) = Fabric::with_faults(n, plan);
-            (eps, stats)
-        }
-        None => Fabric::new(n),
+
+    let inits: Vec<WorkerInit> = match resume {
+        Some(ck) => (0..n).map(|_| WorkerInit::Resume(ck.clone())).collect(),
+        None => (0..n).map(|_| WorkerInit::Fresh).collect(),
     };
-    let eps: Arc<Vec<std::sync::Mutex<Option<Endpoint>>>> = Arc::new(
-        endpoints.into_iter().map(|e| std::sync::Mutex::new(Some(e))).collect(),
-    );
+    let p1 = run_phase(&rt, &rule, flow, steps, &opts, inits)?;
+    let mut outs = p1.outs;
+    let mut comm_bytes = p1.bytes;
+    let mut comm_messages = p1.messages;
+    let mut logs = std::mem::take(&mut outs[0].logs);
+    let mut checkpoint = outs[0].checkpoint.take();
+    let mut peak = outs.iter().map(|o| o.peak_state).max().unwrap_or(0);
 
-    let rt_arc = rt.clone();
-    let rule_c = rule.clone();
-    let resume = Arc::new(resume);
-    let results = run_workers(
-        n,
-        move |w| -> Result<(Vec<StepLog>, u64, Option<Checkpoint>)> {
-            let mut ep = eps[w]
-                .lock()
-                .map_err(|_| anyhow::anyhow!("endpoint mutex poisoned for worker {w}"))?
-                .take()
-                .ok_or_else(|| anyhow::anyhow!("endpoint for worker {w} taken twice"))?;
-            worker(&rt_arc, &rule_c, flow, &mut ep, w, steps, opts, resume.as_ref().as_ref())
-        },
-    );
+    if let Some(k) = kill {
+        // ---- phase 2: re-replicate the dead shard, resume the fleet ----
+        // Every survivor froze at the junction with its shard in hand; the
+        // victim's shard is rebuilt from the persisted checkpoint.  The
+        // second fabric re-arms the data-plane faults minus the kill.
+        let junction = match outs[0].handoff.as_ref() {
+            Some(h) => h.at_step,
+            None => anyhow::bail!("scripted kill at step {} never fired", k.at_step),
+        };
+        let done = (junction - t0) as usize;
+        let remaining = steps - done;
+        let layout = ArenaLayout::from_manifest(rt.manifest());
+        let path = opts
+            .recover_from
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("recover_from vanished after validation"))?;
+        let shard = recover_shard(path, &layout, &rule, k.worker, junction)?;
 
-    let mut logs = Vec::new();
-    let mut checkpoint = None;
-    let mut peaks = Vec::new();
-    for (w, r) in results.into_iter().enumerate() {
-        let (l, p, ck) = r.with_context(|| format!("zero worker {w} failed"))?;
-        if w == 0 {
-            logs = l;
-            checkpoint = ck;
+        let mut seats: Vec<Option<WorkerInit>> = (0..n).map(|_| None).collect();
+        for (w, out) in outs.iter_mut().enumerate() {
+            if let Some(h) = out.handoff.take() {
+                anyhow::ensure!(
+                    h.at_step == junction,
+                    "worker {w} froze at step {} but worker 0 froze at \
+                     {junction} — survivors disagree on the junction",
+                    h.at_step
+                );
+                seats[w] = Some(WorkerInit::Shard {
+                    t0: junction,
+                    cur: h.cur,
+                    prev: h.prev,
+                    moms: h.moms,
+                });
+            }
         }
-        peaks.push(p);
+        seats[k.worker] = Some(WorkerInit::Shard {
+            t0: junction,
+            cur: shard.cur,
+            prev: shard.prev,
+            moms: shard.moms,
+        });
+        let inits2: Vec<WorkerInit> = seats
+            .into_iter()
+            .enumerate()
+            .map(|(w, s)| {
+                s.ok_or_else(|| anyhow::anyhow!("worker {w} returned no shard handoff"))
+            })
+            .collect::<Result<_>>()?;
+
+        let opts2 = ZeroOpts {
+            faults: opts.faults.map(|p| FaultPlan { kill: None, ..p }),
+            ..opts.clone()
+        };
+        let p2 = run_phase(&rt, &rule, flow, remaining, &opts2, inits2)?;
+        comm_bytes += p2.bytes;
+        comm_messages += p2.messages;
+        let mut outs2 = p2.outs;
+        logs.extend(std::mem::take(&mut outs2[0].logs));
+        checkpoint = checkpoint.or_else(|| outs2[0].checkpoint.take());
+        peak = peak.max(outs2.iter().map(|o| o.peak_state).max().unwrap_or(0));
     }
 
     // Parameter-broadcast concurrency per time step: in Broadcast mode the
@@ -233,10 +550,10 @@ fn run<B: Backend + Send + Sync + 'static>(
 
     Ok(ZeroReport {
         logs,
-        comm_bytes: stats.bytes(),
-        comm_messages: stats.messages(),
+        comm_bytes,
+        comm_messages,
         max_msgs_per_timestep: max_msgs,
-        peak_state_bytes: peaks.into_iter().max().unwrap_or(0),
+        peak_state_bytes: peak,
         checkpoint,
     })
 }
@@ -249,21 +566,22 @@ fn worker<B: Backend>(
     ep: &mut Endpoint,
     w: usize,
     steps: usize,
-    opts: ZeroOpts,
-    resume: Option<&Checkpoint>,
-) -> Result<(Vec<StepLog>, u64, Option<Checkpoint>)> {
+    opts: &ZeroOpts,
+    init: WorkerInit,
+) -> Result<WorkerOut> {
     let n = rt.manifest().n_stages;
     let n_mb = ep.n;
     let layout = ArenaLayout::from_manifest(rt.manifest());
     // Owner state: stage `w` params (current + previous version), momentum
     // and the next-step slot — flat stage runs, allocated once.  On resume
     // each worker re-shards its slices from the checkpoint (validated
-    // against this layout + rule via the transient full store).
+    // against this layout + rule via the transient full store); a Shard
+    // init adopts an already-sharded state (survivor handoff or recovery).
     let range = layout.stage_range(w);
     let (mut own_cur, mut own_prev, mut own_mom, t0): (Vec<f32>, Vec<f32>, Vec<f32>, u64) =
-        match resume {
-            Some(ck) => {
-                let full = ck.clone().into_store(layout.clone(), rule)?;
+        match init {
+            WorkerInit::Resume(ck) => {
+                let full = ck.into_store(layout.clone(), rule)?;
                 (
                     full.flat_params()[range.clone()].to_vec(),
                     full.stale_flat()[range.clone()].to_vec(),
@@ -271,12 +589,23 @@ fn worker<B: Backend>(
                     full.step(),
                 )
             }
-            None => {
+            WorkerInit::Fresh => {
                 let init = rt.init_params_flat()?;
                 let cur = init[range.clone()].to_vec();
                 let prev = cur.clone();
                 let mom = vec![0.0; cur.len()];
                 (cur, prev, mom, 0)
+            }
+            WorkerInit::Shard { t0, cur, prev, moms } => {
+                anyhow::ensure!(
+                    cur.len() == range.len()
+                        && prev.len() == range.len()
+                        && moms.len() == range.len(),
+                    "worker {w}: handed a {}-element shard, stage needs {}",
+                    cur.len(),
+                    range.len()
+                );
+                (cur, prev, moms, t0)
             }
         };
     let mut own_next: Vec<f32> = vec![0.0; own_cur.len()];
@@ -295,7 +624,50 @@ fn worker<B: Backend>(
     let mut checkpoint = None;
     let i = w + 1; // this worker's micro-batch index (1-based)
 
+    let my_kill = ep.injector().and_then(|inj| inj.kill_step_for(w));
+    // heartbeats run only under a kill script; one kill per plan, and the
+    // whole fleet freezes at the junction on detection, so there is no
+    // post-loss exchange to keep alive
+    let hb_active =
+        ep.injector().map(|inj| inj.plan().kill.is_some()).unwrap_or(false);
+    let peers: Vec<usize> = (0..n_mb).filter(|p| *p != w).collect();
+
     for t in t0..t0 + steps as u64 {
+        if my_kill == Some(t) {
+            // scripted crash: vanish at the θ-version boundary without a
+            // word — peers must detect the silence, not be told
+            return Ok(WorkerOut { logs, peak_state, checkpoint, handoff: None });
+        }
+        if hb_active {
+            for &p in &peers {
+                // a send error already proves the peer is gone; the recv
+                // sweep below records it
+                let _ = ep.send(p, tags::hb(t), vec![1.0]);
+            }
+            let mut lost = false;
+            for &p in &peers {
+                if ep.recv_deadline(p, tags::hb(t), DETECT_DEADLINE).is_err() {
+                    lost = true;
+                }
+            }
+            if lost {
+                // ZeRO cannot run degraded — the silent worker's stage has
+                // no replica anywhere.  Freeze at this boundary and hand
+                // the owned shard to the re-replication phase.
+                return Ok(WorkerOut {
+                    logs,
+                    peak_state,
+                    checkpoint,
+                    handoff: Some(ShardHandoff {
+                        at_step: t,
+                        cur: own_cur,
+                        prev: own_prev,
+                        moms: own_mom,
+                    }),
+                });
+            }
+        }
+
         // ---- parameter distribution -----------------------------------
         // Worker w needs θ̂^j for every stage j.  Owners send; everyone
         // receives what they don't own.
@@ -479,14 +851,12 @@ fn worker<B: Backend>(
                         dst[pr.clone()].copy_from_slice(&p);
                     }
                 }
-                checkpoint = Some(Checkpoint::from_arenas(
-                    &layout,
-                    rule,
-                    t + 1,
-                    cur,
-                    prev,
-                    moms,
-                ));
+                let ck = Checkpoint::from_arenas(&layout, rule, t + 1, cur, prev, moms);
+                if let Some(path) = &opts.save_checkpoint_to {
+                    ck.save(path)
+                        .with_context(|| format!("worker 0: persist checkpoint, step {t}"))?;
+                }
+                checkpoint = Some(ck);
             }
         }
 
@@ -505,5 +875,5 @@ fn worker<B: Backend>(
                 .with_context(|| format!("worker {w}: loss report, step {t}"))?;
         }
     }
-    Ok((logs, peak_state, checkpoint))
+    Ok(WorkerOut { logs, peak_state, checkpoint, handoff: None })
 }

@@ -5,6 +5,11 @@
 //!             [--pattern barrier|ring] [--flow broadcast|cyclic] [--sched gpipe|1f1b]
 //!             [--backend native|xla]   (also CDP_BACKEND; native needs no artifacts
 //!                                       for the mlp family — try --bundle native_mlp)
+//!   launch    --workers N --transport uds|tcp --trainer multi|zero
+//!             [--rule ...] [--steps ...] [--wire-faults disc:F:T:K,...]
+//!             (spawns one OS process per worker; see `worker` below)
+//!   worker    --worker-id W --workers N --transport uds|tcp --rendezvous DIR
+//!             (one rank of a multi-process fleet; normally spawned by launch)
 //!   timeline  --n 3 --horizon 18            (Fig 1)
 //!   schemes   --n 3                         (Fig 2)
 //!   table1    --n 4                         (Tab 1)
@@ -26,6 +31,8 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "train" => cmd_train(&args),
+        "launch" => cmd_launch(&args),
+        "worker" => cmd_worker(&args),
         "timeline" => cmd_timeline(&args),
         "schemes" => cmd_schemes(&args),
         "table1" => cmd_table1(&args),
@@ -45,7 +52,7 @@ fn main() {
 fn print_help() {
     println!(
         "cdp — Cyclic Data Parallelism coordinator\n\
-         subcommands: train | timeline | schemes | table1 | memsim | golden\n\
+         subcommands: train | launch | worker | timeline | schemes | table1 | memsim | golden\n\
          backend: --backend native|xla (or CDP_BACKEND); this build has \
          xla {}\n\
          see rust/src/main.rs header for flags",
@@ -165,6 +172,139 @@ fn run_train<B: Backend + Send + Sync + 'static>(rt: B, args: &Args) -> Result<(
             );
         }
         other => anyhow::bail!("unknown trainer `{other}`"),
+    }
+    Ok(())
+}
+
+/// Spawn one OS process per worker (`cdp worker ...`), rendezvousing
+/// over a real wire transport, and re-print worker 0's output.  The
+/// launcher only needs the manifest (for the fleet size); the children
+/// load the bundle themselves.
+fn cmd_launch(args: &Args) -> Result<()> {
+    use cyclic_dp::cluster::launch::{default_rendezvous_dir, launch, LaunchSpec};
+    use cyclic_dp::comm::WireKind;
+
+    let rt = load_native_bundle(args)?;
+    let workers = args.usize_or("workers", rt.manifest().n_microbatches);
+    anyhow::ensure!(
+        workers == rt.manifest().n_microbatches,
+        "--workers {workers} must match the bundle's micro-batch count {} \
+         (the fabric is one endpoint per micro-batch)",
+        rt.manifest().n_microbatches
+    );
+    let transport = WireKind::parse(args.str_or("transport", "uds"))?;
+    let (rendezvous, created) = match args.get("rendezvous") {
+        Some(d) => (std::path::PathBuf::from(d), false),
+        None => (default_rendezvous_dir(), true),
+    };
+    // Trainer-facing flags travel to every child verbatim; the launcher
+    // stays agnostic of what they mean.
+    let mut forward = Vec::new();
+    for key in ["trainer", "rule", "steps", "bundle", "flow", "pattern", "wire-faults"] {
+        if let Some(v) = args.get(key) {
+            forward.push(format!("--{key}"));
+            forward.push(v.to_string());
+        }
+    }
+    let spec = LaunchSpec {
+        workers,
+        transport,
+        rendezvous: rendezvous.clone(),
+        exe: None,
+        forward,
+    };
+    println!(
+        "launching {workers} worker processes over {} (rendezvous {})",
+        transport.name(),
+        rendezvous.display()
+    );
+    let result = launch(&spec);
+    if created {
+        let _ = std::fs::remove_dir_all(&rendezvous);
+    }
+    let outs = result?;
+    print!("{}", String::from_utf8_lossy(&outs[0].stdout));
+    Ok(())
+}
+
+/// One rank of a multi-process fleet: bind the wire endpoint, run the
+/// worker loop of the selected trainer, and (on worker 0) print per-step
+/// losses both human-readable and as `CDP_LOSS <step> <f64-bits-hex>`
+/// lines for bit-exact comparison by the launcher's caller.
+fn cmd_worker(args: &Args) -> Result<()> {
+    use anyhow::Context;
+    use cyclic_dp::comm::{
+        BufferPool, CommStats, Endpoint, WireConfig, WireFaultPlan, WireKind, WireTransport,
+    };
+
+    let id: usize = args
+        .get("worker-id")
+        .context("worker needs --worker-id")?
+        .parse()
+        .context("--worker-id")?;
+    let n: usize = args
+        .get("workers")
+        .context("worker needs --workers")?
+        .parse()
+        .context("--workers")?;
+    let dir = args.get("rendezvous").context("worker needs --rendezvous")?;
+    let kind = WireKind::parse(args.str_or("transport", "uds"))?;
+    let mut cfg = WireConfig::new(kind, dir, n);
+    if let Some(spec) = args.get("wire-faults") {
+        cfg.faults = WireFaultPlan::parse(spec)?;
+    }
+
+    let rt = load_native_bundle(args)?;
+    let rule = rule_by_name(args.str_or("rule", "cdp_v2"))?;
+    let steps = args.usize_or("steps", 10);
+
+    let pool = BufferPool::new();
+    let stats = Arc::new(CommStats::default());
+    let transport = WireTransport::bind(id, &cfg, pool.clone())
+        .with_context(|| format!("worker {id}: bind {} endpoint", kind.name()))?;
+    let mut ep = Endpoint::over(id, n, Box::new(transport), stats, pool);
+
+    let shared = SharedBackend(Arc::new(rt));
+    let logs = match args.str_or("trainer", "multi") {
+        "multi" => {
+            let pattern = match args.str_or("pattern", "ring") {
+                "barrier" => multi::CommPattern::Barrier,
+                _ => multi::CommPattern::Ring,
+            };
+            let (logs, _ck) = multi::run_worker(
+                &shared,
+                &rule,
+                pattern,
+                steps,
+                multi::MultiOpts::default(),
+                None,
+                &mut ep,
+            )?;
+            logs
+        }
+        "zero" => {
+            let flow = match args.str_or("flow", "cyclic") {
+                "broadcast" => zero::StateFlow::Broadcast,
+                _ => zero::StateFlow::Cyclic,
+            };
+            let (logs, _peak, _ck) = zero::run_worker(
+                &shared,
+                &rule,
+                flow,
+                steps,
+                zero::ZeroOpts::default(),
+                None,
+                &mut ep,
+            )?;
+            logs
+        }
+        other => anyhow::bail!("worker supports --trainer multi|zero, got `{other}`"),
+    };
+    if id == 0 {
+        for log in &logs {
+            println!("step {:>4}  loss {:.5}", log.step, log.loss);
+            println!("CDP_LOSS {} {:016x}", log.step, log.loss.to_bits());
+        }
     }
     Ok(())
 }

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use cyclic_dp::comm::FaultPlan;
 use cyclic_dp::coordinator::{multi, pipeline, single, zero, SharedBackend};
-use cyclic_dp::parallel::{Checkpoint, Rule};
+use cyclic_dp::parallel::{ArenaLayout, Checkpoint, Rule};
 use cyclic_dp::runtime::{NativeBackend, NativeMlpConfig};
 
 fn native() -> NativeBackend {
@@ -331,8 +331,9 @@ fn kill_plans_are_validated_per_trainer() {
         assert!(format!("{err:#}").contains("killable"), "{err:#}");
     }
 
-    // ZeRO shards the optimizer — a kill takes unrecoverable state with
-    // it, so the plan is rejected up front in favor of checkpoint/resume
+    // ZeRO shards the optimizer — a kill takes the only copy of a stage's
+    // state with it, so a kill plan without a re-replication source
+    // (ZeroOpts::recover_from) is rejected up front
     let Err(err) = zero::train_with(
         shared.clone(),
         Rule::CdpV2,
@@ -343,10 +344,26 @@ fn kill_plans_are_validated_per_trainer() {
             ..Default::default()
         },
     ) else {
-        panic!("zero kill plan must be rejected")
+        panic!("zero kill plan without recover_from must be rejected")
     };
     let msg = format!("{err:#}");
-    assert!(msg.contains("checkpoint"), "{msg}");
+    assert!(msg.contains("recover_from"), "{msg}");
+
+    // and ZeRO's checkpoint assembler (worker 0) is structural
+    let Err(err) = zero::train_with(
+        shared.clone(),
+        Rule::CdpV2,
+        zero::StateFlow::Cyclic,
+        2,
+        zero::ZeroOpts {
+            faults: Some(FaultPlan::kill_only(0, 1)),
+            recover_from: Some(std::env::temp_dir().join("unused.ckpt")),
+            ..Default::default()
+        },
+    ) else {
+        panic!("zero worker-0 kill plan must be rejected")
+    };
+    assert!(format!("{err:#}").contains("structural"), "{err:#}");
 }
 
 /// Kill + lossy edges at once: detection and re-form still converge, and
@@ -377,4 +394,163 @@ fn degradation_survives_simultaneous_message_faults() {
     let mut reference = single::RefTrainer::resume(&rt3, Rule::CdpV1, ck).unwrap();
     let want = losses(&reference.train(3).unwrap());
     assert_eq!(losses(&rep.logs[KILL_STEP as usize..]), want);
+}
+
+// ------------------------------------------------ zero shard re-replication --
+// ZeRO's kill path (DESIGN-ROBUSTNESS.md): survivors heartbeat, freeze at
+// the junction when the victim goes silent, and the dead worker's shard
+// re-replicates from the persisted checkpoint — the resumed fleet keeps
+// full strength and its losses stay bit-identical to an uninterrupted run.
+
+fn tmp_ckpt(label: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cdp-zero-{label}-{}.ckpt", std::process::id()))
+}
+
+#[test]
+fn zero_rereplicates_dead_shard_bit_identically() {
+    const KILL_STEP: u64 = 3;
+    let shared = SharedBackend(Arc::new(native()));
+    for (rule, flow, label) in [
+        (Rule::CdpV2, zero::StateFlow::Cyclic, "cyc"),
+        (Rule::Dp, zero::StateFlow::Broadcast, "bro"),
+    ] {
+        let want =
+            losses(&zero::train(shared.clone(), rule.clone(), flow, 6).unwrap().logs);
+        let path = tmp_ckpt(label);
+        let rep = zero::train_with(
+            shared.clone(),
+            rule.clone(),
+            flow,
+            6,
+            zero::ZeroOpts {
+                faults: Some(FaultPlan::kill_only(2, KILL_STEP)),
+                checkpoint_at: Some(KILL_STEP - 1), // junction boundary
+                save_checkpoint_to: Some(path.clone()),
+                recover_from: Some(path.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(rep.logs.len(), 6, "re-replicated fleet must finish all steps");
+        assert_eq!(
+            losses(&rep.logs),
+            want,
+            "zero {flow:?} ({}) re-replication diverged",
+            rule.name()
+        );
+    }
+}
+
+/// Kill + lossy data plane at once: detection, freeze and the phase-2
+/// resume still converge bit-identically (recovery composes with
+/// retry + seq-dedup rather than fighting it).
+#[test]
+fn zero_rereplication_survives_simultaneous_message_faults() {
+    const KILL_STEP: u64 = 2;
+    let shared = SharedBackend(Arc::new(native()));
+    let want =
+        losses(&zero::train(shared.clone(), Rule::CdpV2, zero::StateFlow::Cyclic, 5)
+            .unwrap()
+            .logs);
+    let path = tmp_ckpt("lossy");
+    let rep = zero::train_with(
+        shared.clone(),
+        Rule::CdpV2,
+        zero::StateFlow::Cyclic,
+        5,
+        zero::ZeroOpts {
+            faults: Some(FaultPlan::lossy(0xFA_04, 0.05).with_kill(3, KILL_STEP)),
+            checkpoint_at: Some(KILL_STEP - 1),
+            save_checkpoint_to: Some(path.clone()),
+            recover_from: Some(path.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(losses(&rep.logs), want);
+}
+
+#[test]
+fn zero_kill_without_covering_checkpoint_is_a_typed_error() {
+    let shared = SharedBackend(Arc::new(native()));
+    let path = tmp_ckpt("missing");
+    let _ = std::fs::remove_file(&path);
+    let err = zero::train_with(
+        shared,
+        Rule::CdpV2,
+        zero::StateFlow::Cyclic,
+        4,
+        zero::ZeroOpts {
+            faults: Some(FaultPlan::kill_only(1, 2)),
+            recover_from: Some(path.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap_err();
+    match err.downcast_ref::<zero::ShardRecoveryError>() {
+        Some(zero::ShardRecoveryError::NoCheckpoint { path: p }) => assert_eq!(p, &path),
+        other => panic!("want NoCheckpoint, got {other:?} ({err:#})"),
+    }
+}
+
+#[test]
+fn zero_stale_checkpoint_is_a_typed_error() {
+    let shared = SharedBackend(Arc::new(native()));
+    let path = tmp_ckpt("stale");
+    let err = zero::train_with(
+        shared,
+        Rule::CdpV2,
+        zero::StateFlow::Cyclic,
+        5,
+        zero::ZeroOpts {
+            faults: Some(FaultPlan::kill_only(1, 3)),
+            checkpoint_at: Some(0), // boundary 1; the junction is 3
+            save_checkpoint_to: Some(path.clone()),
+            recover_from: Some(path.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap_err();
+    match err.downcast_ref::<zero::ShardRecoveryError>() {
+        Some(zero::ShardRecoveryError::StaleCheckpoint { found, needed, .. }) => {
+            assert_eq!((*found, *needed), (1, 3));
+        }
+        other => panic!("want StaleCheckpoint, got {other:?} ({err:#})"),
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn recover_shard_rejects_uncovered_stage_and_wrong_junction() {
+    let shared = SharedBackend(Arc::new(native()));
+    let path = tmp_ckpt("uncov");
+    zero::train_with(
+        shared.clone(),
+        Rule::CdpV2,
+        zero::StateFlow::Cyclic,
+        2,
+        zero::ZeroOpts {
+            checkpoint_at: Some(1),
+            save_checkpoint_to: Some(path.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let layout = ArenaLayout::from_manifest(shared.manifest());
+    let n = shared.manifest().n_stages;
+
+    let err = zero::recover_shard(&path, &layout, &Rule::CdpV2, n + 3, 2).unwrap_err();
+    assert!(matches!(err, zero::ShardRecoveryError::ShardUncovered { .. }), "{err}");
+
+    let err = zero::recover_shard(&path, &layout, &Rule::CdpV2, 1, 99).unwrap_err();
+    assert!(matches!(err, zero::ShardRecoveryError::StaleCheckpoint { .. }), "{err}");
+
+    let err = zero::recover_shard(&path, &layout, &Rule::Dp, 1, 2).unwrap_err();
+    assert!(matches!(err, zero::ShardRecoveryError::Invalid { .. }), "{err}");
+
+    let shard = zero::recover_shard(&path, &layout, &Rule::CdpV2, 1, 2).unwrap();
+    assert_eq!(shard.cur.len(), layout.stage_range(1).len());
+    let _ = std::fs::remove_file(&path);
 }

@@ -1,0 +1,257 @@
+//! Wire-transport integration suite (DESIGN-ROBUSTNESS.md, "Crossing a
+//! real wire"): the framed UDS/TCP transport must be a drop-in for the
+//! in-process channel fabric — same losses bit-for-bit, same typed
+//! errors when a peer is unreachable — and scripted socket faults
+//! (disconnects, truncated frames, stalled peers) must be absorbed by
+//! the reconnect supervisor + seq-dedup without perturbing training.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use cyclic_dp::cluster::run_workers;
+use cyclic_dp::comm::{
+    tags, BufferPool, CommError, CommStats, Endpoint, Fabric, WireConfig, WireFaultPlan,
+    WireKind, WireTransport,
+};
+use cyclic_dp::coordinator::{multi, zero, SharedBackend, StepLog};
+use cyclic_dp::parallel::Rule;
+use cyclic_dp::runtime::NativeBackend;
+
+const STEPS: usize = 4;
+
+fn rdv(label: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cdp-wire-{label}-{}", std::process::id()))
+}
+
+fn native() -> NativeBackend {
+    NativeBackend::default_mlp()
+}
+
+fn losses(logs: &[StepLog]) -> Vec<f64> {
+    logs.iter().map(|l| l.loss).collect()
+}
+
+// --------------------------------------------------------- p2p round trip --
+
+fn roundtrip(kind: WireKind, label: &str) {
+    let dir = rdv(label);
+    let cfg = WireConfig::new(kind, &dir, 2);
+    let (mut eps, stats) = Fabric::wire(&cfg).unwrap();
+    let mut e1 = eps.pop().unwrap();
+    let mut e0 = eps.pop().unwrap();
+
+    let body = vec![0.5f32, -1.25, f32::EPSILON, 3.75e-30];
+    e0.send(1, tags::param(3, 0), body.clone()).unwrap();
+    let p = e1.recv(0, tags::param(3, 0)).unwrap();
+    assert_eq!(p.len(), body.len());
+    for (a, b) in p.iter().zip(&body) {
+        assert_eq!(a.to_bits(), b.to_bits(), "payload must cross the wire bit-exactly");
+    }
+
+    e1.send(0, tags::loss(7), vec![42.0]).unwrap();
+    assert_eq!(&e0.recv(1, tags::loss(7)).unwrap()[..], &[42.0]);
+    assert!(stats.messages() >= 2);
+
+    drop(e0);
+    drop(e1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn uds_endpoints_round_trip_tagged_payloads() {
+    roundtrip(WireKind::Uds, "p2p-uds");
+}
+
+#[test]
+fn tcp_endpoints_round_trip_tagged_payloads() {
+    roundtrip(WireKind::Tcp, "p2p-tcp");
+}
+
+// ------------------------------------------- trainer equivalence over wire --
+// The whole fleet lives in one test process (each worker a thread), but
+// every byte crosses a real socket: `Fabric::wire` binds one wire
+// endpoint per worker in the shared rendezvous dir.
+
+fn run_multi_over_wire(kind: WireKind, label: &str, faults: WireFaultPlan) -> Vec<f64> {
+    let shared = SharedBackend(Arc::new(native()));
+    let n = shared.manifest().n_microbatches;
+    let dir = rdv(label);
+    let mut cfg = WireConfig::new(kind, &dir, n);
+    cfg.faults = faults;
+    let (endpoints, _stats) = Fabric::wire(&cfg).unwrap();
+    let eps: Arc<Vec<Mutex<Option<Endpoint>>>> =
+        Arc::new(endpoints.into_iter().map(|e| Mutex::new(Some(e))).collect());
+
+    let shared_c = shared.clone();
+    let results = run_workers(n, move |w| {
+        let mut ep = eps[w].lock().unwrap().take().unwrap();
+        multi::run_worker(
+            &shared_c,
+            &Rule::CdpV2,
+            multi::CommPattern::Ring,
+            STEPS,
+            multi::MultiOpts::default(),
+            None,
+            &mut ep,
+        )
+    });
+    let mut logs = Vec::new();
+    for (w, r) in results.into_iter().enumerate() {
+        let (l, _ck) = r.unwrap_or_else(|e| panic!("wire worker {w} failed: {e:#}"));
+        if w == 0 {
+            logs = l;
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    losses(&logs)
+}
+
+fn run_zero_over_wire(kind: WireKind, label: &str) -> Vec<f64> {
+    let shared = SharedBackend(Arc::new(native()));
+    let n = shared.manifest().n_microbatches;
+    let dir = rdv(label);
+    let cfg = WireConfig::new(kind, &dir, n);
+    let (endpoints, _stats) = Fabric::wire(&cfg).unwrap();
+    let eps: Arc<Vec<Mutex<Option<Endpoint>>>> =
+        Arc::new(endpoints.into_iter().map(|e| Mutex::new(Some(e))).collect());
+
+    let shared_c = shared.clone();
+    let results = run_workers(n, move |w| {
+        let mut ep = eps[w].lock().unwrap().take().unwrap();
+        zero::run_worker(
+            &shared_c,
+            &Rule::CdpV2,
+            zero::StateFlow::Cyclic,
+            STEPS,
+            zero::ZeroOpts::default(),
+            None,
+            &mut ep,
+        )
+    });
+    let mut logs = Vec::new();
+    for (w, r) in results.into_iter().enumerate() {
+        let (l, _peak, _ck) = r.unwrap_or_else(|e| panic!("wire worker {w} failed: {e:#}"));
+        if w == 0 {
+            logs = l;
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    losses(&logs)
+}
+
+#[test]
+fn multi_ring_over_uds_matches_the_in_process_fabric() {
+    let want = losses(
+        &multi::train(
+            SharedBackend(Arc::new(native())),
+            Rule::CdpV2,
+            multi::CommPattern::Ring,
+            STEPS,
+        )
+        .unwrap()
+        .logs,
+    );
+    let got = run_multi_over_wire(WireKind::Uds, "multi-uds", WireFaultPlan::default());
+    assert_eq!(got, want, "uds fabric diverged from in-process channels");
+}
+
+#[test]
+fn multi_ring_over_tcp_matches_the_in_process_fabric() {
+    let want = losses(
+        &multi::train(
+            SharedBackend(Arc::new(native())),
+            Rule::CdpV2,
+            multi::CommPattern::Ring,
+            STEPS,
+        )
+        .unwrap()
+        .logs,
+    );
+    let got = run_multi_over_wire(WireKind::Tcp, "multi-tcp", WireFaultPlan::default());
+    assert_eq!(got, want, "tcp fabric diverged from in-process channels");
+}
+
+#[test]
+fn zero_cyclic_over_uds_matches_the_in_process_fabric() {
+    let want = losses(
+        &zero::train(
+            SharedBackend(Arc::new(native())),
+            Rule::CdpV2,
+            zero::StateFlow::Cyclic,
+            STEPS,
+        )
+        .unwrap()
+        .logs,
+    );
+    let got = run_zero_over_wire(WireKind::Uds, "zero-uds");
+    assert_eq!(got, want, "zero over uds diverged from in-process channels");
+}
+
+// ----------------------------------------------------- scripted wire faults --
+// Mid-step disconnects drop the socket under live traffic: the
+// supervisor reconnects with backoff and replays its redelivery window,
+// seq-dedup discards what already arrived, and losses stay bit-identical.
+// Truncated frames exercise the reader's discard-and-resync path; a
+// stalled peer leans on the receive deadline's patience.
+
+#[test]
+fn scripted_disconnects_truncations_and_stalls_recover_bit_identically() {
+    let want = losses(
+        &multi::train(
+            SharedBackend(Arc::new(native())),
+            Rule::CdpV2,
+            multi::CommPattern::Ring,
+            STEPS,
+        )
+        .unwrap()
+        .logs,
+    );
+    let faults = WireFaultPlan::default()
+        .disconnect(1, 2, 3) // drop the 1→2 socket before its 4th frame
+        .disconnect(0, 1, 5)
+        .truncate(2, 3, 2) // ship half a frame on 2→3, then drop it
+        .stall(3, 0, 1, 50); // 3→0 freezes 50ms mid-stream
+    let got = run_multi_over_wire(WireKind::Uds, "multi-uds-faulted", faults);
+    assert_eq!(got, want, "scripted wire faults must not perturb training");
+}
+
+// ------------------------------------------------------------ typed errors --
+
+#[test]
+fn unreachable_peer_becomes_peergone_and_timeout_with_decoded_tags() {
+    let dir = rdv("gone");
+    let mut cfg = WireConfig::new(WireKind::Uds, &dir, 3);
+    cfg.connect_deadline = Duration::from_millis(300);
+    // Bind worker 0 only — worker 2 never shows up at the rendezvous.
+    let pool = BufferPool::new();
+    let stats = Arc::new(CommStats::default());
+    let t0 = WireTransport::bind(0, &cfg, pool.clone()).unwrap();
+    let mut e0 = Endpoint::over(0, 3, Box::new(t0), stats, pool);
+
+    // The first send queues; the supervisor burns its connect deadline
+    // in the writer thread and then marks the edge gone.
+    let _ = e0.send(2, tags::param(3, 2), vec![1.0]);
+    std::thread::sleep(Duration::from_millis(700));
+    match e0.send(2, tags::param(4, 2), vec![1.0]) {
+        Err(CommError::PeerGone { peer, tag }) => {
+            assert_eq!(peer, 2);
+            assert_eq!(tag.ns_name(), "param");
+            assert_eq!(tag.step, 4);
+        }
+        other => panic!("expected PeerGone, got {other:?}"),
+    }
+
+    // Receiving from the silent peer is a deadline timeout, tags intact.
+    match e0.recv_deadline(2, tags::param(4, 2), Duration::from_millis(50)) {
+        Err(CommError::Timeout { peer, tag, .. }) => {
+            assert_eq!(peer, 2);
+            assert_eq!(tag.ns_name(), "param");
+            assert_eq!(tag.step, 4);
+        }
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+
+    drop(e0);
+    std::fs::remove_dir_all(&dir).ok();
+}

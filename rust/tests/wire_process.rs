@@ -1,0 +1,89 @@
+//! True multi-process equivalence: launch a fleet of real `cdp` worker
+//! processes (one OS process per worker, rendezvousing over UDS or TCP)
+//! and require worker 0's per-step losses to be bit-identical to the
+//! single-process, in-process-channel trainer.  Losses cross the process
+//! boundary as `CDP_LOSS <step> <f64-bits-hex>` lines, so the comparison
+//! is on bits, never on printf-rounded text.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cyclic_dp::cluster::launch::{launch, parse_loss_bits, LaunchSpec};
+use cyclic_dp::comm::WireKind;
+use cyclic_dp::coordinator::{multi, zero, SharedBackend, StepLog};
+use cyclic_dp::parallel::Rule;
+use cyclic_dp::runtime::NativeBackend;
+
+const STEPS: usize = 3;
+
+fn shared() -> SharedBackend<NativeBackend> {
+    SharedBackend(Arc::new(NativeBackend::default_mlp()))
+}
+
+/// Launch `n` worker processes for `trainer` and return worker 0's
+/// `(step, loss)` pairs.
+fn fleet(trainer: &str, kind: WireKind, label: &str) -> Vec<(u64, f64)> {
+    let dir = std::env::temp_dir().join(format!(
+        "cdp-proc-{label}-{}",
+        std::process::id()
+    ));
+    let n = shared().manifest().n_microbatches;
+    let spec = LaunchSpec {
+        workers: n,
+        transport: kind,
+        rendezvous: dir.clone(),
+        exe: Some(PathBuf::from(env!("CARGO_BIN_EXE_cdp"))),
+        forward: vec![
+            "--trainer".into(),
+            trainer.into(),
+            "--rule".into(),
+            "cdp_v2".into(),
+            "--steps".into(),
+            STEPS.to_string(),
+        ],
+    };
+    let result = launch(&spec);
+    std::fs::remove_dir_all(&dir).ok();
+    let outs = result.unwrap_or_else(|e| panic!("launch failed: {e:#}"));
+    parse_loss_bits(&String::from_utf8_lossy(&outs[0].stdout))
+        .unwrap_or_else(|e| panic!("bad worker-0 stdout: {e:#}"))
+}
+
+fn assert_bit_identical(got: &[(u64, f64)], want: &[StepLog]) {
+    assert_eq!(got.len(), want.len(), "step count across processes");
+    for (log, (step, loss)) in want.iter().zip(got) {
+        assert_eq!(*step, log.step);
+        assert_eq!(
+            loss.to_bits(),
+            log.loss.to_bits(),
+            "step {step}: process fleet diverged from in-process run"
+        );
+    }
+}
+
+#[test]
+fn multi_worker_processes_over_uds_match_the_in_process_fabric() {
+    let want = multi::train(shared(), Rule::CdpV2, multi::CommPattern::Ring, STEPS)
+        .unwrap()
+        .logs;
+    let got = fleet("multi", WireKind::Uds, "multi-uds");
+    assert_bit_identical(&got, &want);
+}
+
+#[test]
+fn multi_worker_processes_over_tcp_match_the_in_process_fabric() {
+    let want = multi::train(shared(), Rule::CdpV2, multi::CommPattern::Ring, STEPS)
+        .unwrap()
+        .logs;
+    let got = fleet("multi", WireKind::Tcp, "multi-tcp");
+    assert_bit_identical(&got, &want);
+}
+
+#[test]
+fn zero_worker_processes_over_uds_match_the_in_process_fabric() {
+    let want = zero::train(shared(), Rule::CdpV2, zero::StateFlow::Cyclic, STEPS)
+        .unwrap()
+        .logs;
+    let got = fleet("zero", WireKind::Uds, "zero-uds");
+    assert_bit_identical(&got, &want);
+}
