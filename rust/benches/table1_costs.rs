@@ -11,6 +11,7 @@ use cyclic_dp::coordinator::{multi, zero, SharedBackend};
 use cyclic_dp::parallel::Rule;
 use cyclic_dp::runtime::{Backend, NativeBackend};
 use cyclic_dp::sim::{analytic, schemes, Scheme, SymbolicCosts};
+use cyclic_dp::tensor::ops::{self, set_kernel_mode, KernelMode};
 use cyclic_dp::util::stats::fmt_bytes;
 
 fn main() {
@@ -67,4 +68,54 @@ fn main() {
         fmt_bytes(zc.comm_bytes),
         zc.max_msgs_per_timestep
     );
+
+    // ---- dense-kernel cross-check: fast vs retained scalar reference ------
+    // Times the three matmul variants in both dispatch modes on a
+    // trainer-sized shape and asserts bit-equality while at it — the same
+    // contract the kernel_equivalence property suite enforces, visible
+    // here next to the wall-clock gap it buys.
+    b.section("dense kernels: fast vs scalar reference (b=64, 512×512)");
+    cyclic_dp::util::par::warm();
+    let (m, k, n) = (64usize, 512usize, 512usize);
+    let a: Vec<f32> = (0..m * k).map(|i| ((i * 37) % 101) as f32 * 0.01 - 0.5).collect();
+    let w: Vec<f32> = (0..k * n).map(|i| ((i * 53) % 97) as f32 * 0.01 - 0.48).collect();
+    let g: Vec<f32> = (0..m * n).map(|i| ((i * 29) % 89) as f32 * 0.01 - 0.44).collect();
+    let mut fast = vec![0.0f32; m * n];
+    let mut slow = vec![0.0f32; m * n];
+    let mut fast_tn = vec![0.0f32; k * n];
+    let mut slow_tn = vec![0.0f32; k * n];
+    let mut fast_nt = vec![0.0f32; m * k];
+    let mut slow_nt = vec![0.0f32; m * k];
+
+    set_kernel_mode(KernelMode::Fast);
+    b.time("matmul fast", 2, 20, || {
+        fast.iter_mut().for_each(|v| *v = 0.0);
+        ops::matmul(&mut fast, &a, &w, m, k, n);
+    });
+    b.time("matmul_tn fast", 2, 20, || {
+        ops::matmul_tn(&mut fast_tn, &a, &g, m, k, n);
+    });
+    b.time("matmul_nt_acc fast", 2, 20, || {
+        fast_nt.iter_mut().for_each(|v| *v = 0.0);
+        ops::matmul_nt_acc(&mut fast_nt, &g, &w, m, n, k);
+    });
+    set_kernel_mode(KernelMode::ScalarReference);
+    b.time("matmul scalar", 2, 20, || {
+        slow.iter_mut().for_each(|v| *v = 0.0);
+        ops::matmul(&mut slow, &a, &w, m, k, n);
+    });
+    b.time("matmul_tn scalar", 2, 20, || {
+        ops::matmul_tn(&mut slow_tn, &a, &g, m, k, n);
+    });
+    b.time("matmul_nt_acc scalar", 2, 20, || {
+        slow_nt.iter_mut().for_each(|v| *v = 0.0);
+        ops::matmul_nt_acc(&mut slow_nt, &g, &w, m, n, k);
+    });
+    set_kernel_mode(KernelMode::Fast);
+
+    let bits_eq = |x: &[f32], y: &[f32]| x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits());
+    assert!(bits_eq(&fast, &slow), "matmul fast/scalar bit mismatch");
+    assert!(bits_eq(&fast_tn, &slow_tn), "matmul_tn fast/scalar bit mismatch");
+    assert!(bits_eq(&fast_nt, &slow_nt), "matmul_nt_acc fast/scalar bit mismatch");
+    println!("  fast/scalar outputs bit-identical for all three kernels");
 }

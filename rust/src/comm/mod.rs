@@ -579,7 +579,7 @@ impl Endpoint {
     }
 
     /// Receive with an explicit deadline.  Waits in exponentially growing
-    /// slices ([`BACKOFF_START`] … [`BACKOFF_MAX`]); after each empty
+    /// slices (`BACKOFF_START` … `BACKOFF_MAX`); after each empty
     /// slice it asks the fault injector (if any) to retransmit anything
     /// lost or held on the `from → self` edge, so injected-lossy edges
     /// recover without the sender's involvement.  Duplicates (retransmits

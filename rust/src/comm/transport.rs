@@ -46,6 +46,7 @@
 //! 0-based index of the next data frame on that edge.  All three recover
 //! through the reconnect + replay + dedup path above, so loss sequences
 //! stay bit-identical to a clean run.
+#![deny(missing_docs)]
 
 use std::collections::VecDeque;
 use std::io::{self, Read, Write};
@@ -242,16 +243,19 @@ pub mod frame {
     pub struct Crc32(u32);
 
     impl Crc32 {
+        /// Fresh accumulator (standard 0xFFFFFFFF seed).
         pub fn new() -> Self {
             Crc32(0xFFFF_FFFF)
         }
 
+        /// Fold `bytes` into the running checksum.
         pub fn update(&mut self, bytes: &[u8]) {
             for &b in bytes {
                 self.0 = CRC_TABLE[((self.0 ^ b as u32) & 0xFF) as usize] ^ (self.0 >> 8);
             }
         }
 
+        /// Final CRC-32 value (bit-inverted accumulator).
         pub fn finish(self) -> u32 {
             !self.0
         }
@@ -273,10 +277,15 @@ pub mod frame {
     /// A decoded frame header.
     #[derive(Clone, Copy, Debug, PartialEq, Eq)]
     pub struct Header {
+        /// Payload length in bytes (f32 count × 4).
         pub body_len: u32,
+        /// Sending worker id.
         pub from: u32,
+        /// Per-sender monotone sequence number (receiver-side dedup key).
         pub seq: u64,
+        /// Protocol tag (`comm::tags`) the message matches on.
         pub tag: u64,
+        /// CRC-32 over header fields + body.
         pub crc: u32,
     }
 
@@ -413,9 +422,13 @@ pub enum WireFaultKind {
 /// (0-based count of frames delivered on that edge).
 #[derive(Clone, Copy, Debug)]
 pub struct WireFault {
+    /// What happens when the fault fires.
     pub kind: WireFaultKind,
+    /// Sending worker id of the faulted edge.
     pub from: usize,
+    /// Receiving worker id of the faulted edge.
     pub to: usize,
+    /// 0-based index of the data frame the fault fires on.
     pub at_frame: u64,
     /// Stall duration in milliseconds ([`WireFaultKind::Stall`] only).
     pub stall_ms: u64,
@@ -427,10 +440,12 @@ pub struct WireFault {
 /// can forward a plan to worker processes on the command line.
 #[derive(Clone, Debug, Default)]
 pub struct WireFaultPlan {
+    /// The scripted faults, in declaration order.
     pub faults: Vec<WireFault>,
 }
 
 impl WireFaultPlan {
+    /// Add a one-shot connection drop on `from → to` at `at_frame`.
     pub fn disconnect(mut self, from: usize, to: usize, at_frame: u64) -> Self {
         self.faults.push(WireFault {
             kind: WireFaultKind::Disconnect,
@@ -442,6 +457,7 @@ impl WireFaultPlan {
         self
     }
 
+    /// Add a truncated-frame fault (half a frame flushed, then dropped).
     pub fn truncate(mut self, from: usize, to: usize, at_frame: u64) -> Self {
         self.faults.push(WireFault {
             kind: WireFaultKind::Truncate,
@@ -453,6 +469,7 @@ impl WireFaultPlan {
         self
     }
 
+    /// Add a stall of `ms` milliseconds before shipping `at_frame`.
     pub fn stall(mut self, from: usize, to: usize, at_frame: u64, ms: u64) -> Self {
         self.faults.push(WireFault {
             kind: WireFaultKind::Stall,
@@ -464,6 +481,7 @@ impl WireFaultPlan {
         self
     }
 
+    /// True when no faults are scripted (the clean-run default).
     pub fn is_empty(&self) -> bool {
         self.faults.is_empty()
     }
@@ -534,6 +552,7 @@ pub enum WireKind {
 }
 
 impl WireKind {
+    /// Parse a `--transport` value ("uds" | "tcp").
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "uds" => Ok(WireKind::Uds),
@@ -542,6 +561,7 @@ impl WireKind {
         }
     }
 
+    /// Canonical lowercase name, the inverse of [`WireKind::parse`].
     pub fn name(self) -> &'static str {
         match self {
             WireKind::Uds => "uds",
@@ -553,6 +573,7 @@ impl WireKind {
 /// Configuration for one wire fabric (shared by every worker of a run).
 #[derive(Clone, Debug)]
 pub struct WireConfig {
+    /// Socket flavor (Unix-domain or loopback TCP).
     pub kind: WireKind,
     /// Rendezvous directory: sockets / port files live here.  Created on
     /// bind if missing.
@@ -569,6 +590,7 @@ pub struct WireConfig {
 }
 
 impl WireConfig {
+    /// A clean-run config with default deadlines and no scripted faults.
     pub fn new(kind: WireKind, dir: impl Into<PathBuf>, n: usize) -> Self {
         Self {
             kind,

@@ -360,7 +360,12 @@ fn worker_dp<B: Backend>(
     let (mut store, t0) = init_store(rt, rule, &layout, resume)?;
     let mut exec = rt.executor(opts.mode);
     let data = DataSource::from_manifest(rt.manifest());
-    let mut gmb = layout.zeros();
+    // Kernel-pool warm-up + parallelism composition: each ring worker is
+    // already a thread, so the first worker to hit a parallel kernel gets
+    // the pool and the rest run the bit-identical serial fallback
+    // (DESIGN-PERF.md §Kernel architecture).
+    crate::util::par::warm();
+    let mut gmb = layout.zeros_aligned();
     let mut logs = Vec::new();
     let mut checkpoint = None;
 
@@ -434,9 +439,10 @@ fn worker_ring<B: Backend>(
     let mut exec = rt.executor(opts.mode);
     let data = DataSource::from_manifest(rt.manifest());
     let reducer = BucketedReducer::new(opts.bucket_elems);
-    let mut gmb = layout.zeros();
+    crate::util::par::warm(); // see the all-reduce worker's note
+    let mut gmb = layout.zeros_aligned();
     // owner-side scratch the averaged sums assemble into, bucket by bucket
-    let mut avg = layout.zeros();
+    let mut avg = layout.zeros_aligned();
     let mut logs = Vec::new();
     let mut checkpoint = None;
     let lr = rt.manifest().lr;

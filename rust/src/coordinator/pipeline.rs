@@ -235,8 +235,13 @@ fn run<B: Backend>(
     let t0 = store.step();
     let mut grads = GradBuffer::new(layout.clone(), m);
     let mut exec = rt.executor(opts.mode);
+    // Warm the kernel pool before the timed loop; this trainer is
+    // single-threaded, so every stage op in the software pipeline gets
+    // the pool's full width inside its kernels (DESIGN-PERF.md §Kernel
+    // architecture).
+    crate::util::par::warm();
     // per-op gradient scratch: one stage run at a time, reused
-    let mut gop = layout.zeros();
+    let mut gop = layout.zeros_aligned();
     let data = DataSource::from_manifest(rt.manifest());
     let mut metrics = Metrics::new();
     let mut devices: Vec<DeviceMem> = (0..n).map(|_| DeviceMem::unbounded()).collect();

@@ -26,7 +26,7 @@ use anyhow::Result;
 use super::{version_id, ExecMode, StepLog};
 use crate::data::{DataSource, MicroBatch};
 use crate::metrics::Metrics;
-use crate::parallel::arena::ArenaLayout;
+use crate::parallel::arena::{AlignedBuf, ArenaLayout};
 use crate::parallel::{Checkpoint, GradBuffer, ParamStore, Rule};
 use crate::runtime::Backend;
 use crate::tensor::{HostTensor, Tensor};
@@ -39,8 +39,9 @@ pub struct RefTrainer<'rt, B: Backend> {
     pub lr: f32,
     pub metrics: Metrics,
     grads: GradBuffer,
-    /// Per-micro-batch gradient scratch (model-wide flat run, reused).
-    gmb: Vec<f32>,
+    /// Per-micro-batch gradient scratch (model-wide flat run, reused;
+    /// aligned so the vectorized kernels write on full SIMD lanes).
+    gmb: AlignedBuf,
     /// Execution state behind the backend boundary.  Defaults to
     /// [`ExecMode::HostLiteral`]: this trainer *is* the reference oracle,
     /// and the host path is the reference semantics.
@@ -93,6 +94,16 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
     }
 
     fn assemble(rt: &'rt B, rule: Rule, store: ParamStore, mode: ExecMode) -> Self {
+        // Spawn the kernel worker pool before the first step, so one-time
+        // thread/stack setup never lands inside a timed or
+        // allocation-counted training step.  Parallelism composition
+        // (DESIGN-PERF.md §Kernel architecture): this single-threaded
+        // trainer gets its parallelism *inside* the kernels — the matmuls
+        // and the backend's SGD partition across the pool; trainers that
+        // already run stages on their own threads keep the pool for
+        // whichever stage grabs it first and the rest fall back to the
+        // bit-identical serial path.
+        crate::util::par::warm();
         let n_mb = rt.manifest().n_microbatches;
         let layout = store.layout().clone();
         Self {
@@ -103,7 +114,7 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
             lr: rt.manifest().lr,
             metrics: Metrics::new(),
             grads: GradBuffer::new(layout.clone(), n_mb),
-            gmb: layout.zeros(),
+            gmb: layout.zeros_aligned(),
             exec: rt.executor(mode),
         }
     }

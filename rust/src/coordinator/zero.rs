@@ -615,7 +615,10 @@ fn worker<B: Backend>(
     // Owner-side reduction scratch, reused every step.
     let mut gsum: Vec<f32> = vec![0.0; own_cur.len()];
     // This worker's own micro-batch gradients, model-wide flat scratch.
-    let mut gmb: Vec<f32> = layout.zeros();
+    // Pool warm-up + composition as in the ring worker: ZeRO workers are
+    // threads, kernels parallelize inside whichever worker grabs the pool.
+    crate::util::par::warm();
+    let mut gmb = layout.zeros_aligned();
     let mut exec = rt.executor(opts.mode);
     let reducer = BucketedReducer::new(opts.bucket_elems);
 

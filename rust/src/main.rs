@@ -5,6 +5,8 @@
 //!             [--pattern barrier|ring] [--flow broadcast|cyclic] [--sched gpipe|1f1b]
 //!             [--backend native|xla]   (also CDP_BACKEND; native needs no artifacts
 //!                                       for the mlp family — try --bundle native_mlp)
+//!             [--precision f32|bf16]   (also CDP_PRECISION; native backend only —
+//!                                       f32 is the bit-identical default)
 //!   launch    --workers N --transport uds|tcp --trainer multi|zero
 //!             [--rule ...] [--steps ...] [--wire-faults disc:F:T:K,...]
 //!             (spawns one OS process per worker; see `worker` below)
@@ -21,7 +23,7 @@ use cyclic_dp::cli::Args;
 use cyclic_dp::coordinator::{multi, pipeline, single, zero, SharedBackend};
 use cyclic_dp::memsim::{extrapolate, resnet50_profile, vit_b16_profile, MemoryCurve};
 use cyclic_dp::parallel::{rule_by_name, Schedule};
-use cyclic_dp::runtime::{backend_choice, Backend, BackendChoice, NativeBackend};
+use cyclic_dp::runtime::{backend_choice, Backend, BackendChoice, NativeBackend, Precision};
 use cyclic_dp::sim::{analytic, schemes, Scheme, SymbolicCosts};
 use cyclic_dp::util::stats::fmt_bytes;
 use std::sync::Arc;
@@ -71,10 +73,18 @@ fn load_xla_bundle(args: &Args) -> Result<cyclic_dp::runtime::BundleRuntime> {
 }
 
 /// Load the native bundle: an on-disk mlp bundle dir, or the synthetic
-/// in-memory `mlp`/`native_mlp` when no artifacts exist.
+/// in-memory `mlp`/`native_mlp` when no artifacts exist.  `--precision`
+/// (then `CDP_PRECISION`, default f32) selects the storage precision.
 fn load_native_bundle(args: &Args) -> Result<NativeBackend> {
     let bundle = args.str_or("bundle", "native_mlp");
-    NativeBackend::load_or_synthetic(bundle)
+    let precision = match args.get("precision") {
+        Some(v) => Precision::parse(v)?,
+        None => Precision::from_env(Precision::default()),
+    };
+    if precision != Precision::default() {
+        println!("precision={}", precision.name());
+    }
+    Ok(NativeBackend::load_or_synthetic(bundle)?.with_precision(precision))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -200,7 +210,16 @@ fn cmd_launch(args: &Args) -> Result<()> {
     // Trainer-facing flags travel to every child verbatim; the launcher
     // stays agnostic of what they mean.
     let mut forward = Vec::new();
-    for key in ["trainer", "rule", "steps", "bundle", "flow", "pattern", "wire-faults"] {
+    for key in [
+        "trainer",
+        "rule",
+        "steps",
+        "bundle",
+        "flow",
+        "pattern",
+        "wire-faults",
+        "precision",
+    ] {
         if let Some(v) = args.get(key) {
             forward.push(format!("--{key}"));
             forward.push(v.to_string());

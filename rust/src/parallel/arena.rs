@@ -153,6 +153,16 @@ impl ArenaLayout {
         vec![0.0; self.total_len]
     }
 
+    /// Fresh zero-filled model-wide buffer with its base 64-byte aligned,
+    /// so SIMD loads on arena runs start on full-vector boundaries
+    /// (DESIGN-PERF.md §Kernel architecture).  View offsets within the
+    /// buffer are unchanged — alignment of the *base* is all the blocked
+    /// kernels want, and keeping offsets identical to [`Self::zeros`]
+    /// preserves the on-disk `params.bin` mapping.
+    pub fn zeros_aligned(&self) -> AlignedBuf {
+        AlignedBuf::zeroed(self.total_len)
+    }
+
     /// Fresh zero-filled buffer for one stage.
     pub fn stage_zeros(&self, stage: usize) -> Vec<f32> {
         vec![0.0; self.stages[stage].len]
@@ -227,6 +237,86 @@ impl ArenaLayout {
             let start = index * bucket_elems;
             Bucket { stage, index, start, end: (start + bucket_elems).min(len) }
         })
+    }
+}
+
+/// 64-byte-aligned chunk of 16 f32: the allocation unit of [`AlignedBuf`].
+/// `repr(C)` + the element count matching the alignment make a `Vec` of
+/// these one gapless f32 run (stride == size == alignment == 64 bytes).
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct AlignedChunk([f32; 16]);
+
+/// A heap `f32` buffer whose base address is 64-byte (cache-line / full
+/// AVX-512 vector) aligned, dereferencing to `[f32]`.
+///
+/// `Vec<f32>`'s 4-byte alignment is legal for every kernel in this crate
+/// (the blocked kernels use unaligned-tolerant accesses), but an aligned
+/// base lets the autovectorizer emit aligned loads for run-starting
+/// slices and keeps hot accumulator rows from straddling cache lines.
+/// Arena consumers on the training hot path ([`super::GradBuffer`]) use
+/// this via [`ArenaLayout::zeros_aligned`]; edges that need a real
+/// `Vec<f32>` (checkpoint IO, XLA literals) keep [`ArenaLayout::zeros`].
+///
+/// Implemented as a `Vec` of 64-byte `repr(C, align(64))` chunks — safe
+/// stable Rust, no custom allocator — over-allocating at most 15 floats.
+pub struct AlignedBuf {
+    chunks: Vec<AlignedChunk>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    /// Zero-filled buffer of `len` f32 with a 64-byte-aligned base.
+    pub fn zeroed(len: usize) -> Self {
+        let chunks = vec![AlignedChunk([0.0; 16]); len.div_ceil(16)];
+        Self { chunks, len }
+    }
+
+    /// Number of f32 elements (not the rounded-up capacity).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the buffer holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::ops::Deref for AlignedBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        // SAFETY: `chunks` is a contiguous run of `repr(C)` 16-f32 arrays
+        // whose stride equals their size (align == size == 64), so the
+        // first `len` f32 reads are in bounds and correctly typed.
+        unsafe { std::slice::from_raw_parts(self.chunks.as_ptr() as *const f32, self.len) }
+    }
+}
+
+impl std::ops::DerefMut for AlignedBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: as in `deref`, plus `&mut self` guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.chunks.as_mut_ptr() as *mut f32, self.len) }
+    }
+}
+
+impl Clone for AlignedBuf {
+    fn clone(&self) -> Self {
+        Self { chunks: self.chunks.clone(), len: self.len }
+    }
+}
+
+/// Empty buffer — lets owners `std::mem::take` the scratch for the
+/// duration of a step without an allocation.
+impl Default for AlignedBuf {
+    fn default() -> Self {
+        Self { chunks: Vec::new(), len: 0 }
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlignedBuf").field("len", &self.len).finish()
     }
 }
 
@@ -392,5 +482,34 @@ mod tests {
     fn zero_bucket_size_rejected() {
         let l = layout3();
         let _ = l.n_buckets(0, 0);
+    }
+
+    #[test]
+    fn aligned_buf_is_aligned_and_slice_compatible() {
+        check("aligned-buf", 30, |g| {
+            let len = g.usize_in(0, 100);
+            let mut buf = AlignedBuf::zeroed(len);
+            assert_eq!(buf.len(), len);
+            assert_eq!(buf.is_empty(), len == 0);
+            assert_eq!(buf.as_ptr() as usize % 64, 0, "base must be 64-byte aligned");
+            assert!(buf.iter().all(|x| *x == 0.0));
+            for (i, x) in buf.iter_mut().enumerate() {
+                *x = i as f32;
+            }
+            let copy = buf.clone();
+            for i in 0..len {
+                assert_eq!(copy[i], i as f32);
+            }
+        });
+    }
+
+    #[test]
+    fn zeros_aligned_matches_layout_len() {
+        let l = layout3();
+        let buf = l.zeros_aligned();
+        assert_eq!(buf.len(), l.total_len);
+        assert_eq!(buf.as_ptr() as usize % 64, 0);
+        // slices through stage ranges work exactly as on Vec<f32>
+        assert_eq!(buf[l.stage_range(1)].len(), l.stage_len(1));
     }
 }

@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use crate::parallel::arena::ArenaLayout;
+use crate::parallel::arena::{AlignedBuf, ArenaLayout};
 use crate::tensor::ops;
 use crate::tensor::Tensor;
 
@@ -22,17 +22,18 @@ const AVERAGED: usize = 0;
 #[derive(Clone, Debug)]
 pub struct GradBuffer {
     layout: Arc<ArenaLayout>,
-    /// Model-wide stage-major running sums.
-    sums: Vec<f32>,
+    /// Model-wide stage-major running sums (64-byte-aligned base so the
+    /// vectorized reduction kernels start on full SIMD lanes).
+    sums: AlignedBuf,
     /// Which micro-batch index is expected next per stage (1-based;
-    /// [`AVERAGED`] after `average` until `reset`).
+    /// `AVERAGED` after `average` until `reset`).
     next_mb: Vec<usize>,
     n_microbatches: usize,
 }
 
 impl GradBuffer {
     pub fn new(layout: Arc<ArenaLayout>, n_microbatches: usize) -> Self {
-        let sums = layout.zeros();
+        let sums = layout.zeros_aligned();
         let next_mb = vec![1; layout.n_stages()];
         Self { layout, sums, next_mb, n_microbatches }
     }

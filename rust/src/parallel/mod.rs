@@ -20,7 +20,7 @@ pub mod param_store;
 pub mod schedule;
 pub mod update_rule;
 
-pub use arena::ArenaLayout;
+pub use arena::{AlignedBuf, ArenaLayout};
 pub use checkpoint::Checkpoint;
 pub use grad_buffer::GradBuffer;
 pub use param_store::ParamStore;

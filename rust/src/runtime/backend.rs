@@ -21,6 +21,7 @@
 //! Across backends the schedules agree exactly; the floating-point values
 //! agree to kernel-accumulation-order tolerance (tested when both
 //! backends are built).
+#![deny(missing_docs)]
 
 use anyhow::Result;
 
@@ -55,6 +56,69 @@ impl ExecMode {
                     eprintln!(
                         "CDP_EXEC_MODE=`{other}` not recognized \
                          (use host|device); keeping {default:?}"
+                    );
+                    default
+                }
+            },
+            Err(_) => default,
+        }
+    }
+}
+
+/// Numeric storage precision for the compute path (DESIGN-PERF.md
+/// §Kernel architecture, "Precision model").
+///
+/// - [`Precision::F32`] (default) is the bit-identical oracle: every
+///   kernel accumulates in f32 in the documented canonical order, and the
+///   four trainers produce bit-identical loss sequences.
+/// - [`Precision::Bf16`] rounds parameters and stage-boundary activations
+///   to bfloat16 storage (round-to-nearest-even) before each stage
+///   computes; accumulation stays in f32.  Master parameters and the
+///   optimizer state remain f32, so the update itself is full-precision.
+///   The rounding points are fixed and schedule-independent, so bf16 runs
+///   are still deterministic and bit-identical *across trainers* — they
+///   are just not bit-comparable to f32 runs (tolerance ≤ 2⁻⁸ relative
+///   per rounding, tested in `tensor::bf16`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full f32 storage + compute — the bit-identical reference (default).
+    #[default]
+    F32,
+    /// bf16 storage for parameters/activations at stage boundaries; f32
+    /// master copies and f32 accumulation (mixed precision).
+    Bf16,
+}
+
+impl Precision {
+    /// Short name for logs/reports ("f32", "bf16").
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a CLI/env value (case-insensitive).
+    pub fn parse(v: &str) -> Result<Self> {
+        match v.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Ok(Precision::F32),
+            "bf16" | "bfloat16" => Ok(Precision::Bf16),
+            other => anyhow::bail!("unknown precision `{other}` (f32|bf16)"),
+        }
+    }
+
+    /// Resolve the precision, letting `CDP_PRECISION` override the
+    /// default (mirrors [`ExecMode::from_env`]; an unrecognized value
+    /// warns and keeps the default rather than silently switching the
+    /// numeric contract).
+    pub fn from_env(default: Self) -> Self {
+        match std::env::var("CDP_PRECISION") {
+            Ok(v) => match Self::parse(&v) {
+                Ok(p) => p,
+                Err(_) => {
+                    eprintln!(
+                        "CDP_PRECISION=`{v}` not recognized (use f32|bf16); \
+                         keeping {default:?}"
                     );
                     default
                 }
@@ -214,11 +278,15 @@ pub trait Backend: Sized {
 /// feature is compiled in — preserving pre-split behavior — else native).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendChoice {
+    /// Pure-Rust `tensor::ops` kernels — no external dependencies; the
+    /// default build and the required CI lane.
     Native,
+    /// AOT-compiled HLO executed through PJRT (`xla` cargo feature).
     Xla,
 }
 
 impl BackendChoice {
+    /// Canonical lowercase name ("native", "xla") for CLI echo and logs.
     pub fn as_str(self) -> &'static str {
         match self {
             BackendChoice::Native => "native",
@@ -272,6 +340,16 @@ mod tests {
         {
             assert_eq!(backend_choice(Some("xla")).unwrap(), BackendChoice::Xla);
         }
+    }
+
+    #[test]
+    fn precision_parse_and_names() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("BF16").unwrap(), Precision::Bf16);
+        assert_eq!(Precision::parse("bfloat16").unwrap(), Precision::Bf16);
+        assert!(Precision::parse("f64").is_err());
+        assert_eq!(Precision::default().name(), "f32");
+        assert_eq!(Precision::Bf16.name(), "bf16");
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub mod native;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-pub use backend::{backend_choice, Activation, Backend, BackendChoice, ExecMode};
+pub use backend::{backend_choice, Activation, Backend, BackendChoice, ExecMode, Precision};
 pub use native::{NativeBackend, NativeExec, NativeMlpConfig};
 
 #[cfg(feature = "xla")]

@@ -29,17 +29,29 @@
 //! caller's arena slice in manifest view order.  Everything is a pure
 //! deterministic function of its inputs, so the trainers' bit-identity
 //! invariants hold natively exactly as they do on XLA.
+//!
+//! Precision ([`Precision`], DESIGN-PERF.md §Kernel architecture): in
+//! `Bf16` mode parameters and stage-boundary activations are rounded to
+//! bfloat16 storage before each stage computes (round-to-nearest-even,
+//! idempotent — re-rounding an already-rounded value is a no-op, so the
+//! hand-off direction never matters); accumulation, gradients and the
+//! master parameters stay f32.  `F32` (the default) is the bit-identical
+//! oracle and allocates nothing for precision handling.
+#![deny(missing_docs)]
 
+use std::borrow::Cow;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use super::backend::{Backend, ExecMode};
+use super::backend::{Backend, ExecMode, Precision};
 use crate::model::{DataSpec, DType, IoSpec, Manifest, ParamSpec, StageSpec};
 use crate::parallel::arena::{ArenaLayout, ViewSpec};
+use crate::tensor::bf16;
 use crate::tensor::ops;
 use crate::tensor::{HostTensor, IntTensor, Tensor};
 use crate::util::binio;
+use crate::util::par;
 use crate::util::rng::{splitmix64, XorShift64Star};
 
 /// Residual-branch scale, fixed by the python model (`Mlp.RES_SCALE`).
@@ -60,21 +72,32 @@ struct MlpShape {
 /// every schedule property and keeps the bundle self-consistent.
 #[derive(Clone, Copy, Debug)]
 pub struct NativeMlpConfig {
+    /// Classifier output classes C.
     pub classes: usize,
+    /// Input feature dimension D.
     pub input_dim: usize,
+    /// Hidden width H (every residual layer is [H,H]+[H]).
     pub hidden: usize,
+    /// Residual layers per stage L.
     pub layers_per_stage: usize,
+    /// Micro-batch size b.
     pub microbatch: usize,
+    /// Pipeline stage count N.
     pub n_stages: usize,
     /// Number of data microbatches N.  0 (the default) means "follow
     /// `n_stages`" — the paper's square N×N cyclic schedule.  Setting it
     /// explicitly lets fault-tolerance tests build a reference backend
     /// that matches a degraded N−1 ring (DESIGN-ROBUSTNESS.md).
     pub n_microbatches: usize,
+    /// SGD learning rate.
     pub lr: f32,
+    /// SGD momentum coefficient µ.
     pub momentum: f32,
+    /// Synthetic-data label-noise level.
     pub noise: f32,
+    /// Seed of the deterministic data stream.
     pub data_seed: u64,
+    /// Seed of the deterministic θ_0 draw.
     pub param_seed: u64,
 }
 
@@ -120,12 +143,19 @@ pub struct NativeExec {
     _requested: ExecMode,
 }
 
+/// The pure-Rust execution backend: mlp stage graphs on the
+/// `tensor::ops` kernels.  Construct with [`NativeBackend::load`] (bundle
+/// directory) or [`NativeBackend::synthetic`] (fully in-memory); see the
+/// module docs for the math and the determinism/precision contracts.
 pub struct NativeBackend {
+    /// The bundle manifest (stage shapes, data distribution, hyperparams).
     pub manifest: Manifest,
     layout: Arc<ArenaLayout>,
     shape: MlpShape,
     /// θ_0, model-wide stage-major flat (arena order).
     init: Vec<f32>,
+    /// Storage precision of the compute path (f32 master state either way).
+    precision: Precision,
 }
 
 impl NativeBackend {
@@ -144,7 +174,7 @@ impl NativeBackend {
             init.len(),
             manifest.total_param_elems
         );
-        Ok(Self { manifest, layout, shape, init })
+        Ok(Self { manifest, layout, shape, init, precision: Precision::default() })
     }
 
     /// Build a fully in-memory mlp bundle: manifest synthesized from
@@ -158,7 +188,7 @@ impl NativeBackend {
             classes: cfg.classes,
         };
         let init = init_params(&manifest, cfg.param_seed);
-        Self { manifest, layout, shape, init }
+        Self { manifest, layout, shape, init, precision: Precision::default() }
     }
 
     /// The default synthetic bundle (`native_mlp`).
@@ -185,8 +215,56 @@ impl NativeBackend {
         }
     }
 
+    /// The flat-arena layout derived from the manifest.
     pub fn layout(&self) -> &Arc<ArenaLayout> {
         &self.layout
+    }
+
+    /// The active storage precision of the compute path.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Select the storage precision (builder style).  `--precision bf16`
+    /// / `CDP_PRECISION=bf16` route here; the default is f32.
+    pub fn with_precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
+    /// Select the storage precision in place.
+    pub fn set_precision(&mut self, p: Precision) {
+        self.precision = p;
+    }
+
+    /// Parameters as the compute path sees them: the borrow itself in f32
+    /// mode (zero-cost — the hot path stays allocation-free), a
+    /// bf16-rounded local copy in bf16 mode (one allocation per stage
+    /// call, the documented cost of the mixed-precision knob; the f32
+    /// master copy is never mutated).
+    fn q_params<'a>(&self, flat: &'a [f32]) -> Cow<'a, [f32]> {
+        match self.precision {
+            Precision::F32 => Cow::Borrowed(flat),
+            Precision::Bf16 => {
+                let mut v = flat.to_vec();
+                bf16::round_slice(&mut v);
+                Cow::Owned(v)
+            }
+        }
+    }
+
+    /// Stage-boundary activation as the compute path sees it (same
+    /// contract as [`Self::q_params`]).  Rounding is idempotent, so it is
+    /// harmless that both the producing and the consuming stage round.
+    fn q_act<'a>(&self, x: &'a Tensor) -> Cow<'a, Tensor> {
+        match self.precision {
+            Precision::F32 => Cow::Borrowed(x),
+            Precision::Bf16 => {
+                let mut t = x.clone();
+                bf16::round_slice(&mut t.data);
+                Cow::Owned(t)
+            }
+        }
     }
 
     /// (has input prologue, residual layer count, has loss head) of stage j.
@@ -238,13 +316,18 @@ impl NativeBackend {
             vi = 2;
             let mut u = vec![0.0f32; b * h_dim];
             ops::matmul(&mut u, &x.data, w, b, d_in, h_dim);
-            ops::bias_add(&mut u, bias);
-            let mut h0 = u.clone();
-            ops::relu(&mut h0);
             if stash {
+                // the backward wants the pre-activation; two-pass form
+                ops::bias_add(&mut u, bias);
+                let mut h0 = u.clone();
+                ops::relu(&mut h0);
                 u_in = Some(u);
+                h0
+            } else {
+                // fused epilogue — elementwise-identical to bias_add+relu
+                ops::bias_add_relu(&mut u, bias);
+                u
             }
-            h0
         } else {
             anyhow::ensure!(d_in == h_dim, "stage {j}: input dim {d_in} != hidden {h_dim}");
             x.data.clone()
@@ -257,20 +340,28 @@ impl NativeBackend {
             let bias = Self::view(flat, &views[vi + 2 * l + 1]);
             let mut u = vec![0.0f32; b * h_dim];
             ops::matmul(&mut u, &h, w, b, h_dim, h_dim);
-            ops::bias_add(&mut u, bias);
-            let mut r = u.clone();
-            ops::relu(&mut r);
             if stash {
+                ops::bias_add(&mut u, bias);
+                let mut r = u.clone();
+                ops::relu(&mut r);
                 hs.push(h.clone());
                 us.push(u);
+                ops::axpy(&mut h, RES_SCALE, &r);
+            } else {
+                // fused epilogue — elementwise-identical to bias_add+relu
+                ops::bias_add_relu(&mut u, bias);
+                ops::axpy(&mut h, RES_SCALE, &u);
             }
-            ops::axpy(&mut h, RES_SCALE, &r);
         }
         Ok((h, u_in, hs, us))
     }
 
     /// Logits of the loss stage: body forward + the head linear.
     fn logits(&self, flat: &[f32], x: &Tensor) -> Result<Vec<f32>> {
+        let flat_q = self.q_params(flat);
+        let flat: &[f32] = &flat_q;
+        let x_q = self.q_act(x);
+        let x: &Tensor = &x_q;
         let j = self.manifest.n_stages - 1;
         let (h, _, _, _) = self.body_fwd(j, flat, x, false)?;
         let views = &self.layout.stages[j].views;
@@ -297,6 +388,12 @@ impl NativeBackend {
         targets: Option<&IntTensor>,
         gdst: &mut [f32],
     ) -> Result<(f32, Tensor)> {
+        // bf16 mode: the recomputation sees exactly the rounded values the
+        // forward saw (rounding is idempotent); gradients stay f32.
+        let flat_q = self.q_params(flat);
+        let flat: &[f32] = &flat_q;
+        let x_q = self.q_act(x);
+        let x: &Tensor = &x_q;
         let (has_input, n_layers, has_head) = self.stage_shape(j);
         let views = &self.layout.stages[j].views;
         anyhow::ensure!(
@@ -481,7 +578,13 @@ impl Backend for NativeBackend {
             "stage_fwd_flat on the loss stage — use last_fwd_loss_flat/predict_flat"
         );
         let x = self.act_f32(stage, x)?;
-        let (h, _, _, _) = self.body_fwd(stage, flat, x, false)?;
+        let flat_q = self.q_params(flat);
+        let x_q = self.q_act(x);
+        let (mut h, _, _, _) = self.body_fwd(stage, &flat_q, &x_q, false)?;
+        if self.precision == Precision::Bf16 {
+            // quantize the stage-boundary hand-off (see module docs)
+            bf16::round_slice(&mut h);
+        }
         let b = x.shape[0];
         Ok(Tensor::new(vec![b, self.shape.hidden], h))
     }
@@ -503,7 +606,11 @@ impl Backend for NativeBackend {
     }
 
     /// The python `sgd_momentum` kernel, elementwise over the flat run:
-    /// m' = µ·m + g; p' = p − lr·m' (µ from the manifest).
+    /// m' = µ·m + g; p' = p − lr·m' (µ from the manifest).  Partitioned
+    /// across the kernel pool in fast mode — elementwise with no
+    /// reduction, so bit-identical at any thread count.  Always f32: the
+    /// master parameters and optimizer state are full-precision in every
+    /// [`Precision`] mode.
     fn sgd_update_flat(
         &self,
         stage: usize,
@@ -521,11 +628,39 @@ impl Backend for NativeBackend {
             "stage {stage}: flat run length mismatch"
         );
         let mu = self.manifest.momentum;
-        for i in 0..params.len() {
-            let m = mu * moms[i] + grads[i];
-            out[i] = params[i] - lr * m;
-            moms[i] = m;
+        let len = params.len();
+        if ops::kernel_mode() == ops::KernelMode::ScalarReference {
+            for i in 0..len {
+                let m = mu * moms[i] + grads[i];
+                out[i] = params[i] - lr * m;
+                moms[i] = m;
+            }
+            return Ok(());
         }
+        // Elementwise with no reduction: any index partition produces the
+        // same bits, so the pool split is unconditionally bit-identical to
+        // the scalar loop above.
+        let nblocks = par::partition(len, 4096);
+        let per = len.div_ceil(nblocks.max(1)).max(1);
+        let pm = par::SendPtr(moms.as_mut_ptr());
+        let po = par::SendPtr(out.as_mut_ptr());
+        par::run(nblocks, |blk| {
+            let lo = blk * per;
+            let hi = (lo + per).min(len);
+            if lo >= hi {
+                return;
+            }
+            // disjoint [lo, hi) windows per block — no two blocks alias
+            let mb = unsafe { std::slice::from_raw_parts_mut(pm.0.add(lo), hi - lo) };
+            let ob = unsafe { std::slice::from_raw_parts_mut(po.0.add(lo), hi - lo) };
+            let pb = &params[lo..hi];
+            let gb = &grads[lo..hi];
+            for i in 0..hi - lo {
+                let m = mu * mb[i] + gb[i];
+                ob[i] = pb[i] - lr * m;
+                mb[i] = m;
+            }
+        });
         Ok(())
     }
 }
@@ -605,8 +740,8 @@ fn synthetic_manifest(cfg: &NativeMlpConfig) -> Manifest {
         let output = (j != cfg.n_stages - 1)
             .then(|| IoSpec { shape: vec![mb, h], dtype: DType::F32 });
         // analytic accounting, following Mlp.stage_act_bytes / stage_flops
-        let act_bytes =
-            4 * mb as u64 * h as u64 * (2 * cfg.layers_per_stage as u64 + if j == 0 { 2 } else { 0 });
+        let per_elem = 2 * cfg.layers_per_stage as u64 + if j == 0 { 2 } else { 0 };
+        let act_bytes = 4 * mb as u64 * h as u64 * per_elem;
         let mut flops = 2 * (mb * h * h * cfg.layers_per_stage) as u64;
         if j == 0 {
             flops += 2 * (mb * d * h) as u64;
@@ -734,5 +869,38 @@ mod tests {
         // residual growth across 8 layers inflates it somewhat (≈ 2.69
         // for the default seeds, vs ln 10 ≈ 2.30)
         assert!((loss - 10.0f32.ln()).abs() < 0.6, "initial loss {loss}");
+    }
+
+    #[test]
+    fn bf16_mode_is_deterministic_and_tracks_f32() {
+        let nb = NativeBackend::default_mlp();
+        let nb16 = NativeBackend::default_mlp().with_precision(Precision::Bf16);
+        assert_eq!(nb16.precision().name(), "bf16");
+        let data = crate::data::DataSource::from_manifest(&nb.manifest);
+        let crate::data::MicroBatch::Class { x, labels } = data.microbatch(0, 0) else {
+            panic!("mlp bundle is classification")
+        };
+        let flat = nb.init_params_flat().unwrap();
+        let l = nb.layout().clone();
+        let run = |b: &NativeBackend| -> f32 {
+            let mut a = HostTensor::F32(x.clone());
+            for j in 0..b.manifest.n_stages - 1 {
+                let y = Backend::stage_fwd_flat(b, j, &flat[l.stage_range(j)], &a).unwrap();
+                a = HostTensor::F32(y);
+            }
+            let last = b.manifest.n_stages - 1;
+            b.last_fwd_loss_flat(&flat[l.stage_range(last)], a.as_f32().unwrap(), &labels)
+                .unwrap()
+        };
+        let lf = run(&nb);
+        let l16a = run(&nb16);
+        let l16b = run(&nb16);
+        // fixed rounding points ⇒ bit-identical across repeats
+        assert_eq!(l16a.to_bits(), l16b.to_bits(), "bf16 must be deterministic");
+        // ≤ 2⁻⁸ relative per rounding; loosely bounded end-to-end
+        assert!(
+            (lf - l16a).abs() / lf.abs().max(1e-6) < 0.05,
+            "f32 loss {lf} vs bf16 loss {l16a}"
+        );
     }
 }

@@ -1,0 +1,112 @@
+//! bfloat16 storage emulation for the mixed-precision training mode.
+//!
+//! The native backend's bf16 mode keeps an **f32 master copy** of every
+//! parameter (the optimizer state and SGD update run in full f32) and
+//! emulates bf16 *storage* by rounding values to the nearest bf16 at the
+//! points where a bf16 system would store them: parameters as read by
+//! compute, and activations/gradient-inputs crossing a stage boundary.
+//! Rounding is round-to-nearest-even on the top 16 bits of the f32
+//! representation — the standard bf16 conversion — implemented with the
+//! classic bit trick and no table lookups, so it is branch-light and
+//! auto-vectorizes.
+//!
+//! Everything here is deterministic pure bit manipulation: the same f32
+//! always rounds to the same bf16, so bf16 runs are exactly as
+//! reproducible (bit-identical across trainers, thread counts and
+//! processes) as f32 runs — just against a different, coarser value
+//! lattice.  f32 remains the oracle the equivalence suite pins.
+
+/// Round an f32 to the nearest bf16 (ties to even) and return its 16 raw
+/// bits (the high half of the rounded f32).  NaNs are quieted so the
+/// payload truncation can't produce an infinity bit pattern.
+#[inline]
+pub fn to_bits(x: f32) -> u16 {
+    let u = x.to_bits();
+    if x.is_nan() {
+        return ((u >> 16) as u16) | 0x0040;
+    }
+    // Add 0x7FFF plus the lowest kept bit, then truncate: rounds the
+    // discarded 16 bits to nearest, ties to even.  Overflow into the
+    // exponent correctly rounds up to the next binade / infinity.
+    let round = ((u >> 16) & 1) + 0x7FFF;
+    ((u + round) >> 16) as u16
+}
+
+/// Expand 16 raw bf16 bits to the f32 with the same value (exact —
+/// every bf16 value is representable in f32).
+#[inline]
+pub fn from_bits(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round an f32 through bf16 and back: the value a bf16 store would
+/// hand to the next kernel.
+#[inline]
+pub fn round(x: f32) -> f32 {
+    from_bits(to_bits(x))
+}
+
+/// Round a whole buffer through bf16 in place — the stage-boundary /
+/// parameter-read quantization pass of the bf16 storage model.
+pub fn round_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = round(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 256.0, f32::INFINITY, f32::NEG_INFINITY] {
+            assert_eq!(round(v).to_bits(), v.to_bits(), "{v} should be exact in bf16");
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1.0 + 2^-9 is exactly halfway between bf16(1.0) and the next
+        // bf16 up (1.0 + 2^-7 steps... the bf16 mantissa has 7 bits, so
+        // the step above 1.0 is 2^-7).  Halfway = 1.0 + 2^-8: ties to the
+        // even mantissa, which is 1.0 itself.
+        let half_step = 1.0f32 + (0.5f32).powi(8);
+        assert_eq!(round(half_step), 1.0);
+        // Just above halfway rounds up.
+        let above = f32::from_bits(half_step.to_bits() + 1);
+        assert_eq!(round(above), 1.0 + (0.5f32).powi(7));
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        // bf16 has 8 significand bits (1 implicit + 7 stored): relative
+        // rounding error ≤ 2^-8 for normal values.
+        let mut x = 1.337e-3f32;
+        for _ in 0..60 {
+            let q = round(x);
+            assert!((q - x).abs() <= x.abs() * 0.00390625 + f32::MIN_POSITIVE);
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        for i in 0..1000u32 {
+            let x = f32::from_bits(0x3F00_0000 + i * 7919);
+            let q = round(x);
+            assert_eq!(round(q).to_bits(), q.to_bits());
+        }
+    }
+
+    #[test]
+    fn nan_stays_nan_inf_stays_inf() {
+        assert!(round(f32::NAN).is_nan());
+        assert_eq!(round(f32::MAX), f32::INFINITY); // rounds up past the bf16 max
+        let mut v = [1.0f32, f32::NAN, 3.5e38];
+        round_slice(&mut v);
+        assert_eq!(v[0], 1.0);
+        assert!(v[1].is_nan());
+        assert_eq!(v[2], f32::INFINITY);
+    }
+}

@@ -3,6 +3,7 @@
 //! shape — because everything numeric runs in HLO; the host side only
 //! stores, versions, communicates and reduces.
 
+pub mod bf16;
 pub mod ops;
 
 /// Contiguous f32 tensor.

@@ -7,9 +7,39 @@
 //! deterministic accumulation order — of the reductions *and* of the
 //! dense kernels — is a correctness feature: it is what lets the
 //! multi-worker trainers be bit-identical to the single-process reference
-//! (DESIGN.md invariants).  Every kernel here walks its inputs in one
-//! fixed order, so the same f32 inputs always produce the same f32 bits,
-//! independent of which worker thread runs them.
+//! (DESIGN.md invariants).  Every kernel here computes each output
+//! element with one fixed accumulation order, so the same f32 inputs
+//! always produce the same f32 bits, independent of which worker thread
+//! runs them and of how many pool threads partition the work.
+//!
+//! # Two implementations, one order
+//!
+//! The dense kernels exist twice (DESIGN-PERF.md §Kernel architecture):
+//!
+//! * [`scalar`] — the retained readable reference: single-threaded plain
+//!   loops whose source *is* the canonical accumulation-order spec.
+//! * `fast` (private) — cache-blocked, 4-way-unrolled, auto-vectorizable
+//!   loops partitioned across the [`crate::util::par`] worker pool.
+//!
+//! The two produce **bit-identical f32 outputs for finite inputs**: the
+//! fast kernels only restructure loops in order-preserving ways (row /
+//! element partitioning plus left-associated unrolling), and where a dot
+//! product is lane-split for SIMD (`split_dot8`) the reference
+//! implements the *same* split order.  `tests/kernel_equivalence.rs`
+//! property-checks this and the pinned-order tests below keep it true.
+//!
+//! The top-level kernel entry points dispatch on [`kernel_mode`]
+//! (default [`KernelMode::Fast`]; `CDP_KERNELS=scalar` or
+//! [`set_kernel_mode`] selects the reference — used by the scalar
+//! baseline sections of `benches/hotpath.rs`).  The flat reductions are
+//! not dispatched: they sit inside asserted zero-allocation windows and
+//! on every trainer's bit-audited reduction path, and are already
+//! single-pass streaming loops the compiler vectorizes.
+#![deny(missing_docs)]
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::util::par;
 
 /// dst += src, elementwise.
 pub fn add_into(dst: &mut [f32], src: &[f32]) {
@@ -91,68 +121,364 @@ pub fn scale(dst: &mut [f32], s: f32) {
     }
 }
 
-// ---- dense kernels (NativeBackend stage graphs) ---------------------------
+// ---- kernel-mode dispatch -------------------------------------------------
 
-/// dst[m,n] = a[m,k] @ b[k,n].  i-k-j loop order: the k-accumulation into
-/// each dst row is sequential (deterministic f32 sum order) and the inner
-/// loop streams b's rows — cache-friendly without tiling machinery.
-pub fn matmul(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(dst.len(), m * n);
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    dst.fill(0.0);
-    for i in 0..m {
-        let drow = &mut dst[i * n..(i + 1) * n];
-        for (p, brow) in b.chunks_exact(n).enumerate() {
-            // skipping exact zeros (common after ReLU) is bit-neutral for
-            // finite accumulators: x + 0·y == x in f32 unless x is NaN
-            let aip = a[i * k + p];
-            if aip != 0.0 {
-                for (d, bv) in drow.iter_mut().zip(brow) {
-                    *d += aip * *bv;
+/// Which implementation family the dense-kernel entry points use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Cache-blocked, unrolled, pool-parallel kernels (the default).
+    Fast,
+    /// The retained reference: single-threaded plain loops whose source
+    /// is the canonical accumulation-order spec.  Bit-identical to
+    /// [`KernelMode::Fast`] for finite f32 inputs.
+    ScalarReference,
+}
+
+const MODE_UNSET: u8 = 0;
+const MODE_FAST: u8 = 1;
+const MODE_SCALAR: u8 = 2;
+static KERNEL_MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// The active [`KernelMode`].  Initialized lazily from `CDP_KERNELS`
+/// (`scalar` selects the reference; anything else, or unset, selects
+/// fast); after that, whatever [`set_kernel_mode`] last stored.
+pub fn kernel_mode() -> KernelMode {
+    match KERNEL_MODE.load(Ordering::Relaxed) {
+        MODE_FAST => KernelMode::Fast,
+        MODE_SCALAR => KernelMode::ScalarReference,
+        _ => {
+            let m = match std::env::var("CDP_KERNELS").as_deref() {
+                Ok("scalar") => KernelMode::ScalarReference,
+                _ => KernelMode::Fast,
+            };
+            set_kernel_mode(m);
+            m
+        }
+    }
+}
+
+/// Select the [`KernelMode`] process-wide (benches' scalar-baseline
+/// sections; tests).  Both modes produce the same bits for finite f32
+/// inputs, so flipping this mid-run changes speed, not results.
+pub fn set_kernel_mode(m: KernelMode) {
+    let v = match m {
+        KernelMode::Fast => MODE_FAST,
+        KernelMode::ScalarReference => MODE_SCALAR,
+    };
+    KERNEL_MODE.store(v, Ordering::Relaxed);
+}
+
+// ---- canonical lane-split dot --------------------------------------------
+
+/// The canonical 8-lane split dot product Σⱼ a[j]·b[j], the one place the
+/// kernels' accumulation order differs from a plain sequential sum:
+///
+/// 1. lane `l` accumulates `a[8c+l]·b[8c+l]` over full 8-chunks `c`, in
+///    ascending `c`;
+/// 2. lanes combine in the fixed pairwise tree
+///    `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`;
+/// 3. the `< 8` tail is added sequentially in ascending `j`.
+///
+/// Both the reference and the fast kernels compute dots in exactly this
+/// order, so lane-splitting never breaks bit-identity.  The split is what
+/// lets the hot loop vectorize: each lane maps to one SIMD lane with no
+/// cross-lane dependency until the final tree.
+#[inline]
+fn split_dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let c = n & !7;
+    let mut acc = [0.0f32; 8];
+    let mut j = 0;
+    while j < c {
+        let (ca, cb) = (&a[j..j + 8], &b[j..j + 8]);
+        for ((s, x), y) in acc.iter_mut().zip(ca).zip(cb) {
+            *s += *x * *y;
+        }
+        j += 8;
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    while j < n {
+        s += a[j] * b[j];
+        j += 1;
+    }
+    s
+}
+
+// ---- reference kernels ----------------------------------------------------
+
+/// The retained scalar reference kernels: single-threaded plain loops
+/// whose source is the canonical accumulation-order specification the
+/// fast kernels must reproduce bit-for-bit (finite inputs).  Selected via
+/// [`KernelMode::ScalarReference`](super::KernelMode); also the baseline the trainstep bench
+/// measures speedup against.
+pub mod scalar {
+    use super::split_dot8;
+
+    /// dst[m,n] = a[m,k] @ b[k,n].  i-k-j loop order: the k-accumulation
+    /// into each dst row is sequential (deterministic f32 sum order) and
+    /// the inner loop streams b's rows — cache-friendly without tiling
+    /// machinery.
+    pub fn matmul(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(dst.len(), m * n);
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        dst.fill(0.0);
+        for i in 0..m {
+            let drow = &mut dst[i * n..(i + 1) * n];
+            for (p, brow) in b.chunks_exact(n).enumerate() {
+                // skipping exact zeros (common after ReLU) is bit-neutral
+                // for finite accumulators: x + 0·y == x in f32 unless x
+                // is NaN, and the accumulator can never become −0.0
+                let aip = a[i * k + p];
+                if aip != 0.0 {
+                    for (d, bv) in drow.iter_mut().zip(brow) {
+                        *d += aip * *bv;
+                    }
                 }
             }
         }
+    }
+
+    /// dst[m,k] += a[m,n] @ b[k,n]ᵀ  (accumulating) — the `dx += dy @ Wᵀ`
+    /// step of a linear layer's backward.  Each element is the canonical
+    /// lane-split dot (see the module docs) of a row of `a` and a row of
+    /// `b`.
+    pub fn matmul_nt_acc(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+        debug_assert_eq!(dst.len(), m * k);
+        debug_assert_eq!(a.len(), m * n);
+        debug_assert_eq!(b.len(), k * n);
+        if m == 0 || k == 0 {
+            return;
+        }
+        for (arow, drow) in a.chunks_exact(n.max(1)).zip(dst.chunks_exact_mut(k)) {
+            for (d, brow) in drow.iter_mut().zip(b.chunks_exact(n.max(1))) {
+                *d += split_dot8(arow, brow);
+            }
+        }
+    }
+
+    /// dst[k,n] = a[m,k]ᵀ @ b[m,n] — the `dW = xᵀ @ dy` step of a linear
+    /// layer's backward.  Row-major accumulation over m in fixed order.
+    pub fn matmul_tn(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(dst.len(), k * n);
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        dst.fill(0.0);
+        for i in 0..m {
+            let brow = &b[i * n..(i + 1) * n];
+            for p in 0..k {
+                let aip = a[i * k + p];
+                if aip != 0.0 {
+                    let drow = &mut dst[p * n..(p + 1) * n];
+                    for (d, bv) in drow.iter_mut().zip(brow) {
+                        *d += aip * *bv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// dst = relu(dst + bias), rows × broadcast bias — the fused form of
+    /// `bias_add` then `relu`, element-for-element the same two ops.
+    pub fn bias_add_relu(dst: &mut [f32], bias: &[f32]) {
+        super::bias_add(dst, bias);
+        super::relu(dst);
+    }
+}
+
+// ---- fast kernels ---------------------------------------------------------
+
+/// Cache-blocked, 4-way-unrolled, pool-parallel kernels.  Private: reach
+/// them through the dispatching entry points.  Order-preservation notes
+/// live on each function; DESIGN-PERF.md §Kernel architecture has the
+/// full argument.
+mod fast {
+    use super::{par, split_dot8};
+
+    /// One dst row of the i-k-j matmul, k unrolled ×4.  The unrolled body
+    /// writes `d += a0·b0; d += a1·b1; …` as explicit sequential adds, so
+    /// per element the k-accumulation order is exactly the reference's
+    /// (left-associated, ascending p) — bit-identical for finite inputs
+    /// (dropping the reference's zero-skip is bit-neutral, see there).
+    #[inline]
+    fn matmul_row(drow: &mut [f32], arow: &[f32], b: &[f32], n: usize) {
+        drow.fill(0.0);
+        let k = arow.len();
+        let kc = k & !3;
+        let mut p = 0;
+        while p < kc {
+            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            let b0 = &b[p * n..(p + 1) * n];
+            let b1 = &b[(p + 1) * n..(p + 2) * n];
+            let b2 = &b[(p + 2) * n..(p + 3) * n];
+            let b3 = &b[(p + 3) * n..(p + 4) * n];
+            for ((((d, v0), v1), v2), v3) in drow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3) {
+                let mut s = *d;
+                s += a0 * *v0;
+                s += a1 * *v1;
+                s += a2 * *v2;
+                s += a3 * *v3;
+                *d = s;
+            }
+            p += 4;
+        }
+        while p < k {
+            let ap = arow[p];
+            for (d, bv) in drow.iter_mut().zip(&b[p * n..(p + 1) * n]) {
+                *d += ap * *bv;
+            }
+            p += 1;
+        }
+    }
+
+    /// dst[m,n] = a[m,k] @ b[k,n], partitioned across dst row blocks —
+    /// every output row is computed entirely by one pool task, so the
+    /// partition never affects bits.
+    pub fn matmul(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(dst.len(), m * n);
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        if m == 0 || n == 0 {
+            return;
+        }
+        let rows_per_block = m.div_ceil(par::partition(m, 1));
+        par::par_chunks_mut(dst, rows_per_block * n, |blk, dblock| {
+            let i0 = blk * rows_per_block;
+            for (r, drow) in dblock.chunks_exact_mut(n).enumerate() {
+                let i = i0 + r;
+                matmul_row(drow, &a[i * k..(i + 1) * k], b, n);
+            }
+        });
+    }
+
+    /// dst[m,k] += a[m,n] @ b[k,n]ᵀ, partitioned across dst element
+    /// blocks; every element is one canonical [`split_dot8`] computed
+    /// entirely by one pool task.
+    pub fn matmul_nt_acc(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+        debug_assert_eq!(dst.len(), m * k);
+        debug_assert_eq!(a.len(), m * n);
+        debug_assert_eq!(b.len(), k * n);
+        if m == 0 || k == 0 {
+            return;
+        }
+        let total = m * k;
+        let per_block = total.div_ceil(par::partition(total, 64));
+        par::par_chunks_mut(dst, per_block, |blk, dblock| {
+            let e0 = blk * per_block;
+            for (off, d) in dblock.iter_mut().enumerate() {
+                let e = e0 + off;
+                let (i, p) = (e / k, e % k);
+                *d += split_dot8(&a[i * n..(i + 1) * n], &b[p * n..(p + 1) * n]);
+            }
+        });
+    }
+
+    /// dst[k,n] = a[m,k]ᵀ @ b[m,n], partitioned across dst row blocks
+    /// (rows of dst are columns p of a), m unrolled ×4 with explicit
+    /// sequential adds — per element the m-accumulation order is exactly
+    /// the reference's ascending-i order, so bits match (the reference's
+    /// zero-skip is bit-neutral as in `matmul`).
+    pub fn matmul_tn(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(dst.len(), k * n);
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        if k == 0 || n == 0 {
+            return;
+        }
+        let rows_per_block = k.div_ceil(par::partition(k, 1));
+        par::par_chunks_mut(dst, rows_per_block * n, |blk, dblock| {
+            let p0 = blk * rows_per_block;
+            for (r, drow) in dblock.chunks_exact_mut(n).enumerate() {
+                let p = p0 + r;
+                drow.fill(0.0);
+                let mc = m & !3;
+                let mut i = 0;
+                while i < mc {
+                    let a0 = a[i * k + p];
+                    let a1 = a[(i + 1) * k + p];
+                    let a2 = a[(i + 2) * k + p];
+                    let a3 = a[(i + 3) * k + p];
+                    let b0 = &b[i * n..(i + 1) * n];
+                    let b1 = &b[(i + 1) * n..(i + 2) * n];
+                    let b2 = &b[(i + 2) * n..(i + 3) * n];
+                    let b3 = &b[(i + 3) * n..(i + 4) * n];
+                    for ((((d, v0), v1), v2), v3) in
+                        drow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+                    {
+                        let mut s = *d;
+                        s += a0 * *v0;
+                        s += a1 * *v1;
+                        s += a2 * *v2;
+                        s += a3 * *v3;
+                        *d = s;
+                    }
+                    i += 4;
+                }
+                while i < m {
+                    let ai = a[i * k + p];
+                    for (d, bv) in drow.iter_mut().zip(&b[i * n..(i + 1) * n]) {
+                        *d += ai * *bv;
+                    }
+                    i += 1;
+                }
+            }
+        });
+    }
+
+    /// dst = relu(dst + bias) in one fused pass — same per-element ops as
+    /// `bias_add` then `relu`, so bit-identical to the two-pass reference;
+    /// the single pass halves the memory traffic and the straight-line
+    /// body auto-vectorizes on the same 8-wide lanes as the matmuls.
+    pub fn bias_add_relu(dst: &mut [f32], bias: &[f32]) {
+        debug_assert_eq!(dst.len() % bias.len().max(1), 0);
+        for row in dst.chunks_exact_mut(bias.len()) {
+            for (d, bv) in row.iter_mut().zip(bias) {
+                *d = (*d + *bv).max(0.0);
+            }
+        }
+    }
+}
+
+// ---- dense kernel entry points (dispatching) ------------------------------
+
+/// dst[m,n] = a[m,k] @ b[k,n].  Dispatches on [`kernel_mode`]; both modes
+/// accumulate k sequentially per element, so the bits agree for finite
+/// inputs.
+pub fn matmul(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    match kernel_mode() {
+        KernelMode::Fast => fast::matmul(dst, a, b, m, k, n),
+        KernelMode::ScalarReference => scalar::matmul(dst, a, b, m, k, n),
     }
 }
 
 /// dst[m,k] += a[m,n] @ b[k,n]ᵀ  (accumulating) — the `dx += dy @ Wᵀ`
-/// step of a linear layer's backward.
+/// step of a linear layer's backward.  Dispatches on [`kernel_mode`];
+/// both modes compute each element with the canonical lane-split dot.
 pub fn matmul_nt_acc(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
-    debug_assert_eq!(dst.len(), m * k);
-    debug_assert_eq!(a.len(), m * n);
-    debug_assert_eq!(b.len(), k * n);
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let drow = &mut dst[i * k..(i + 1) * k];
-        for (d, brow) in drow.iter_mut().zip(b.chunks_exact(n)) {
-            let mut acc = 0.0f32;
-            for (av, bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            *d += acc;
-        }
+    match kernel_mode() {
+        KernelMode::Fast => fast::matmul_nt_acc(dst, a, b, m, n, k),
+        KernelMode::ScalarReference => scalar::matmul_nt_acc(dst, a, b, m, n, k),
     }
 }
 
 /// dst[k,n] = a[m,k]ᵀ @ b[m,n] — the `dW = xᵀ @ dy` step of a linear
-/// layer's backward.  Row-major accumulation over m in fixed order.
+/// layer's backward.  Dispatches on [`kernel_mode`]; both modes
+/// accumulate over m in ascending order per element.
 pub fn matmul_tn(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(dst.len(), k * n);
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    dst.fill(0.0);
-    for i in 0..m {
-        let brow = &b[i * n..(i + 1) * n];
-        for p in 0..k {
-            let aip = a[i * k + p];
-            if aip != 0.0 {
-                let drow = &mut dst[p * n..(p + 1) * n];
-                for (d, bv) in drow.iter_mut().zip(brow) {
-                    *d += aip * *bv;
-                }
-            }
-        }
+    match kernel_mode() {
+        KernelMode::Fast => fast::matmul_tn(dst, a, b, m, k, n),
+        KernelMode::ScalarReference => scalar::matmul_tn(dst, a, b, m, k, n),
+    }
+}
+
+/// dst = relu(dst + bias[n]), broadcast over rows — the fused
+/// linear-layer epilogue.  Dispatches on [`kernel_mode`]; the fused fast
+/// form performs the identical two ops per element in one pass.
+pub fn bias_add_relu(dst: &mut [f32], bias: &[f32]) {
+    match kernel_mode() {
+        KernelMode::Fast => fast::bias_add_relu(dst, bias),
+        KernelMode::ScalarReference => scalar::bias_add_relu(dst, bias),
     }
 }
 
@@ -197,13 +523,10 @@ pub fn relu_bwd_scaled(dst: &mut [f32], g: &[f32], pre: &[f32], s: f32) {
 /// Softmax cross-entropy over `logits[b, c]` with integer `targets[b]`:
 /// returns the batch-mean loss and writes d(loss)/d(logits) — already
 /// scaled by 1/b — into `dlogits`.  Row-stable (max-subtracted) and
-/// summed in fixed row/column order.
-pub fn softmax_ce(
-    logits: &[f32],
-    targets: &[i32],
-    classes: usize,
-    dlogits: &mut [f32],
-) -> f32 {
+/// summed in fixed row/column order.  Not dispatched: the cost is the
+/// transcendentals, and the strict row-sequential loss sum is the
+/// determinism contract itself.
+pub fn softmax_ce(logits: &[f32], targets: &[i32], classes: usize, dlogits: &mut [f32]) -> f32 {
     let b = targets.len();
     debug_assert_eq!(logits.len(), b * classes);
     debug_assert_eq!(dlogits.len(), b * classes);
@@ -358,6 +681,103 @@ mod tests {
         }
     }
 
+    /// Deterministic pseudo-random test matrix with zeros sprinkled in
+    /// (so the reference's zero-skip paths are exercised).
+    fn test_mat(len: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let u = (s >> 40) as u32;
+                if u % 5 == 0 {
+                    0.0
+                } else {
+                    (u as f32 / (1u64 << 24) as f32) - 0.5
+                }
+            })
+            .collect()
+    }
+
+    /// Covers both the fast-vs-reference bit identity and the mode
+    /// dispatch in ONE test: `set_kernel_mode` is process-global, and two
+    /// tests flipping it concurrently under the parallel test runner
+    /// would race (harmlessly for results — the modes agree bit-for-bit —
+    /// but not for asserts that read the mode back).
+    #[test]
+    fn fast_kernels_bit_match_scalar_reference() {
+        // dispatch: the scalar mode routes to the reference and agrees
+        {
+            let a = test_mat(6 * 10, 1);
+            let b = test_mat(10 * 8, 2);
+            let mut via_scalar = vec![0.0f32; 6 * 8];
+            set_kernel_mode(KernelMode::ScalarReference);
+            assert_eq!(kernel_mode(), KernelMode::ScalarReference);
+            matmul(&mut via_scalar, &a, &b, 6, 10, 8);
+            let mut via_fast = vec![0.0f32; 6 * 8];
+            set_kernel_mode(KernelMode::Fast);
+            assert_eq!(kernel_mode(), KernelMode::Fast);
+            matmul(&mut via_fast, &a, &b, 6, 10, 8);
+            assert_bits_eq(&via_scalar, &via_fast, "dispatch");
+        }
+        // shapes chosen to hit unroll remainders (k % 4, n % 8 ≠ 0) and
+        // multi-block parallel partitions
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (8, 16, 9), (17, 33, 12), (4, 64, 64)] {
+            let a = test_mat(m * k, 0xA5);
+            let b = test_mat(k * n, 0x5A);
+            let g = test_mat(m * n, 0x77);
+            let mut want = vec![0.0f32; m * n];
+            scalar::matmul(&mut want, &a, &b, m, k, n);
+            let mut got = vec![0.0f32; m * n];
+            set_kernel_mode(KernelMode::Fast);
+            matmul(&mut got, &a, &b, m, k, n);
+            assert_bits_eq(&want, &got, "matmul");
+
+            let mut want_dx = test_mat(m * k, 0x11);
+            let mut got_dx = want_dx.clone();
+            scalar::matmul_nt_acc(&mut want_dx, &g, &b, m, n, k);
+            matmul_nt_acc(&mut got_dx, &g, &b, m, n, k);
+            assert_bits_eq(&want_dx, &got_dx, "matmul_nt_acc");
+
+            let mut want_dw = vec![0.0f32; k * n];
+            scalar::matmul_tn(&mut want_dw, &a, &g, m, k, n);
+            let mut got_dw = vec![0.0f32; k * n];
+            matmul_tn(&mut got_dw, &a, &g, m, k, n);
+            assert_bits_eq(&want_dw, &got_dw, "matmul_tn");
+
+            let bias = test_mat(n, 0x33);
+            let mut want_h = g.clone();
+            scalar::bias_add_relu(&mut want_h, &bias);
+            let mut got_h = g.clone();
+            bias_add_relu(&mut got_h, &bias);
+            assert_bits_eq(&want_h, &got_h, "bias_add_relu");
+        }
+    }
+
+    fn assert_bits_eq(want: &[f32], got: &[f32], what: &str) {
+        assert_eq!(want.len(), got.len());
+        for (i, (w, g)) in want.iter().zip(got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "{what}[{i}]: {w} vs {g}");
+        }
+    }
+
+    #[test]
+    fn split_dot_order_is_pinned() {
+        // 11 elements: one full 8-chunk + a 3-tail.  Recompute the
+        // documented order by hand and demand exact bits.
+        let a: Vec<f32> = (0..11).map(|i| (i as f32 * 0.9).sin()).collect();
+        let b: Vec<f32> = (0..11).map(|i| (i as f32 * 1.3).cos()).collect();
+        let mut lanes = [0.0f32; 8];
+        for l in 0..8 {
+            lanes[l] += a[l] * b[l];
+        }
+        let mut want = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+        for j in 8..11 {
+            want += a[j] * b[j];
+        }
+        assert_eq!(split_dot8(&a, &b).to_bits(), want.to_bits());
+    }
+
     #[test]
     fn bias_relu_colsums() {
         let mut x = [1.0f32, -2.0, 3.0, -4.0];
@@ -372,6 +792,10 @@ mod tests {
         let mut d = [0.0f32; 4];
         relu_bwd_scaled(&mut d, &[10.0, 10.0, 10.0, 10.0], &x, 0.3);
         assert_eq!(d, [3.0, 0.0, 3.0, 0.0]);
+        // fused epilogue == bias_add then relu
+        let mut f1 = [1.0f32, -2.0, 3.0, -4.0];
+        bias_add_relu(&mut f1, &[0.5, 0.5]);
+        assert_eq!(f1, r);
     }
 
     #[test]

@@ -3,5 +3,6 @@
 
 pub mod binio;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;

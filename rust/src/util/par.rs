@@ -1,0 +1,412 @@
+//! Minimal fixed-size worker pool for data-parallel kernel execution.
+//!
+//! rayon is unavailable offline (the DESIGN.md no-crates substitution
+//! applies to parallelism too), so this module provides the small subset
+//! the dense kernels need: fan a closure over `0..total` block indices
+//! across a lazily spawned, process-wide worker pool, block the submitter
+//! until every index has run, and do all of that **without allocating** in
+//! steady state — the job slot is inline in the pool, not boxed per call,
+//! so parallel kernels stay compatible with the hot-path bench's
+//! zero-allocation windows (warm the pool first, see [`warm`]).
+//!
+//! Determinism contract: the pool only ever *partitions* work; it never
+//! reorders arithmetic.  Callers must hand it element- or row-independent
+//! block bodies (each output element fully computed by exactly one index),
+//! which is what keeps kernel results bit-identical at every thread count
+//! — see DESIGN-PERF.md §Kernel architecture and the
+//! `kernel_equivalence` suite.
+//!
+//! Thread count: `RAYON_NUM_THREADS` (the conventional knob) if set and
+//! ≥ 1, else `std::thread::available_parallelism()`.  A value of 1
+//! disables the pool entirely — every [`run`] call executes inline on the
+//! caller's thread.  [`with_threads`] overrides the *partitioning target*
+//! on the current thread (used by the thread-count-invariance tests).
+//!
+//! Concurrency notes: one job runs at a time (`submit` mutex).  A caller
+//! that finds the pool busy — e.g. two coordinator worker threads hitting
+//! a parallel kernel at once — falls back to inline serial execution,
+//! which by the determinism contract yields the same bits.  Stale workers
+//! are fenced by an epoch tag in the claim ticket: an index can only be
+//! claimed by CAS on a ticket whose epoch matches the job the worker
+//! snapshotted, so a descheduled worker can never run a stale closure
+//! against a newer job's indices.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock, TryLockError};
+
+/// Low 32 bits of the claim ticket: next unclaimed index.  High 32 bits:
+/// the job epoch (wraps at 2³² runs; a worker would have to stay
+/// descheduled across 2³² submissions to be fooled, which we accept).
+const INDEX_MASK: u64 = (1 << 32) - 1;
+
+/// Raw pointer to the submitter's closure.  Only dereferenced for indices
+/// claimed through the epoch-checked ticket CAS, and the submitter does
+/// not return until `done == total`, so every dereference happens while
+/// the closure is alive on the submitter's stack.
+#[derive(Clone, Copy)]
+struct FnPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: see FnPtr docs — lifetime is enforced by the done-counter wait,
+// and the pointee is `Sync` so shared cross-thread calls are fine.
+unsafe impl Send for FnPtr {}
+unsafe impl Sync for FnPtr {}
+
+/// The published job: guarded by the slot mutex, snapshotted by workers.
+struct Slot {
+    epoch: u64,
+    func: Option<FnPtr>,
+    total: usize,
+}
+
+struct Inner {
+    slot: Mutex<Slot>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// `(epoch & 0xffff_ffff) << 32 | next_index` — claims CAS this.
+    ticket: AtomicU64,
+    done: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+struct Pool {
+    inner: Inner,
+    /// Serializes submitters; busy callers fall back to inline serial.
+    submit: Mutex<()>,
+}
+
+/// The process-wide pool, spawned on first parallel submission and
+/// intentionally leaked (workers live for the process lifetime, parked on
+/// `work_cv` when idle).  `None` when the configured thread count is 1.
+fn pool() -> Option<&'static Pool> {
+    static POOL: OnceLock<Option<&'static Pool>> = OnceLock::new();
+    *POOL.get_or_init(|| {
+        let n = configured_threads();
+        if n <= 1 {
+            return None;
+        }
+        let p: &'static Pool = Box::leak(Box::new(Pool {
+            inner: Inner {
+                slot: Mutex::new(Slot { epoch: 0, func: None, total: 0 }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+                ticket: AtomicU64::new(0),
+                done: AtomicUsize::new(0),
+                panicked: AtomicBool::new(false),
+            },
+            submit: Mutex::new(()),
+        }));
+        // n − 1 workers: the submitting thread is the n-th participant.
+        for w in 0..n - 1 {
+            std::thread::Builder::new()
+                .name(format!("cdp-kern-{w}"))
+                .spawn(move || worker(&p.inner))
+                .expect("spawn kernel pool worker");
+        }
+        Some(p)
+    })
+}
+
+fn worker(inner: &'static Inner) {
+    let mut seen = 0u64;
+    loop {
+        let (func, total, epoch) = {
+            let mut s = inner.slot.lock().unwrap();
+            loop {
+                if s.epoch != seen {
+                    seen = s.epoch;
+                    if let Some(f) = s.func {
+                        break (f, s.total, s.epoch);
+                    }
+                    // epoch advanced but the job already retired — keep
+                    // waiting for the next one.
+                }
+                s = inner.work_cv.wait(s).unwrap();
+            }
+        };
+        execute(inner, func, total, epoch);
+    }
+}
+
+/// Claim-and-run loop shared by workers and the submitter.  Claims are
+/// epoch-fenced CASes, so once a job's `done` count reaches `total` no
+/// further claim on it can succeed — the invariant that makes the raw
+/// closure pointer sound.
+fn execute(inner: &Inner, func: FnPtr, total: usize, epoch: u64) {
+    let tag = (epoch & INDEX_MASK) << 32;
+    loop {
+        let cur = inner.ticket.load(Ordering::Acquire);
+        if cur & !INDEX_MASK != tag {
+            return; // a newer job owns the ticket
+        }
+        let idx = (cur & INDEX_MASK) as usize;
+        if idx >= total {
+            return; // every index claimed
+        }
+        if inner
+            .ticket
+            .compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            continue;
+        }
+        // SAFETY: the claim succeeded under the live epoch, so the
+        // submitter is still blocked in `run` and the closure is alive.
+        let f = unsafe { &*func.0 };
+        if catch_unwind(AssertUnwindSafe(|| f(idx))).is_err() {
+            inner.panicked.store(true, Ordering::Relaxed);
+        }
+        if inner.done.fetch_add(1, Ordering::AcqRel) + 1 == total {
+            // Lock-then-notify so the submitter can't miss the wakeup
+            // between its predicate check and its wait.
+            let _g = inner.slot.lock().unwrap();
+            inner.done_cv.notify_all();
+        }
+    }
+}
+
+/// The configured pool width: `RAYON_NUM_THREADS` if set and ≥ 1, else
+/// the machine's available parallelism.  Read once per process.
+pub fn configured_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("RAYON_NUM_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+thread_local! {
+    static OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// The thread count [`run`] partitions for on the current thread: the
+/// [`with_threads`] override if one is active, else [`configured_threads`].
+pub fn effective_threads() -> usize {
+    OVERRIDE.with(|o| o.get()).unwrap_or_else(configured_threads)
+}
+
+/// Run `f` with the partitioning target overridden to `n` on this thread
+/// (restored on exit, panic-safe).  `n = 1` forces fully inline serial
+/// execution — the reference arm of the thread-count-invariance tests.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|o| o.set(self.0));
+        }
+    }
+    let _restore = Restore(OVERRIDE.with(|o| o.replace(Some(n.max(1)))));
+    f()
+}
+
+/// Spawn the pool's workers and run one trivial job through them, so the
+/// one-time setup (thread spawn, stacks, lazy statics) happens *before*
+/// any allocation-counting window opens.  Cheap and idempotent.
+pub fn warm() {
+    let n = configured_threads();
+    if n > 1 {
+        run(n * 2, |_| {});
+    }
+}
+
+/// Call `f(i)` for every `i in 0..total`, fanned across the pool; returns
+/// when all indices have run.  Falls back to inline serial execution when
+/// the pool is width-1, busy, or `total == 1` — identical results either
+/// way, because callers only submit index-independent bodies (the module
+/// determinism contract).  Steady-state allocation-free.  Re-raises as a
+/// panic on the submitting thread if any index's body panicked.
+pub fn run<F: Fn(usize) + Sync>(total: usize, f: F) {
+    let serial = |f: &F| {
+        for i in 0..total {
+            f(i);
+        }
+    };
+    if total == 0 {
+        return;
+    }
+    if total == 1 || effective_threads() <= 1 {
+        serial(&f);
+        return;
+    }
+    let Some(p) = pool() else {
+        serial(&f);
+        return;
+    };
+    let guard = match p.submit.try_lock() {
+        Ok(g) => g,
+        // Busy (another submitter, possibly this thread re-entering from
+        // inside a parallel body): run inline.
+        Err(TryLockError::WouldBlock) => {
+            serial(&f);
+            return;
+        }
+        // A previous submitter re-raised a body panic while holding the
+        // lock; the pool state was already retired cleanly — recover.
+        Err(TryLockError::Poisoned(pe)) => pe.into_inner(),
+    };
+    assert!(total < INDEX_MASK as usize, "par::run: total out of ticket range");
+    let fobj: &(dyn Fn(usize) + Sync) = &f;
+    let fp = FnPtr(fobj as *const _);
+    let epoch;
+    {
+        let mut s = p.inner.slot.lock().unwrap();
+        s.epoch += 1;
+        epoch = s.epoch;
+        s.func = Some(fp);
+        s.total = total;
+        p.inner.done.store(0, Ordering::Relaxed);
+        p.inner.panicked.store(false, Ordering::Relaxed);
+        p.inner.ticket.store((epoch & INDEX_MASK) << 32, Ordering::Release);
+        p.inner.work_cv.notify_all();
+    }
+    // The submitter is a full participant.
+    execute(&p.inner, fp, total, epoch);
+    {
+        let mut s = p.inner.slot.lock().unwrap();
+        while p.inner.done.load(Ordering::Acquire) < total {
+            s = p.inner.done_cv.wait(s).unwrap();
+        }
+        s.func = None;
+    }
+    drop(guard);
+    if p.inner.panicked.load(Ordering::Relaxed) {
+        panic!("par::run: a parallel kernel task panicked");
+    }
+}
+
+/// Fan disjoint `chunk`-sized pieces of `data` across the pool:
+/// `f(block_index, piece)` where piece `b` is `data[b·chunk ..]` clipped
+/// to `chunk` elements.  The mutable splits are disjoint by construction,
+/// which is what makes handing them to concurrent workers sound.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "par_chunks_mut: zero chunk");
+    let len = data.len();
+    if len == 0 {
+        return;
+    }
+    let nblocks = len.div_ceil(chunk);
+    let ptr = SendPtr(data.as_mut_ptr());
+    run(nblocks, move |b| {
+        let start = b * chunk;
+        let n = chunk.min(len - start);
+        // SAFETY: blocks index disjoint ranges of one live &mut slice.
+        let piece = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(start), n) };
+        f(b, piece);
+    });
+}
+
+/// Number of blocks to split `total` work items into: enough for load
+/// balance (4 blocks per effective thread) but never finer than
+/// `min_per_block` items.  Partitioning never affects result bits (the
+/// module determinism contract), so this may vary with thread count.
+pub fn partition(total: usize, min_per_block: usize) -> usize {
+    if total == 0 {
+        return 1;
+    }
+    let max_blocks = total.div_ceil(min_per_block.max(1));
+    (effective_threads() * 4).clamp(1, max_blocks)
+}
+
+/// Wrapper making a raw pointer shippable to pool workers.  The caller
+/// asserts that concurrent uses touch disjoint memory — used by kernels
+/// that update several parallel arrays (e.g. params + momentum) in one
+/// partitioned pass.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+// SAFETY: caller-asserted disjointness (see type docs).
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_covers_every_index_exactly_once() {
+        let counts: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        run(counts.len(), |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_disjoint_pieces() {
+        let mut v = vec![0u32; 1000];
+        par_chunks_mut(&mut v, 64, |b, piece| {
+            for (j, x) in piece.iter_mut().enumerate() {
+                *x = (b * 64 + j) as u32;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as u32);
+        }
+    }
+
+    #[test]
+    fn serial_override_matches_parallel() {
+        let work = |blocks: usize| {
+            let out: Vec<AtomicU64> = (0..blocks).map(|_| AtomicU64::new(0)).collect();
+            run(blocks, |i| {
+                out[i].store((i as u64).wrapping_mul(0x9E37_79B9), Ordering::Relaxed);
+            });
+            out.iter().map(|x| x.load(Ordering::Relaxed)).collect::<Vec<_>>()
+        };
+        let par = work(100);
+        let ser = with_threads(1, || work(100));
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn nested_run_falls_back_to_serial() {
+        let hits = AtomicUsize::new(0);
+        run(4, |_| {
+            run(4, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn panics_propagate_to_submitter() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            run(8, |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // the pool must still be usable afterwards
+        let n = AtomicUsize::new(0);
+        run(8, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn partition_respects_min_block() {
+        with_threads(8, || {
+            assert_eq!(partition(0, 16), 1);
+            assert_eq!(partition(10, 16), 1);
+            assert_eq!(partition(1000, 16), 32); // 8 threads × 4
+            assert_eq!(partition(64, 16), 4); // capped by min_per_block
+        });
+    }
+}

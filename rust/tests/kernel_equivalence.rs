@@ -1,0 +1,218 @@
+//! Kernel-equivalence property suite (DESIGN-PERF.md §Kernel
+//! architecture, "Test enforcement"): the blocked/vectorized/pooled fast
+//! kernels are **bit-identical** to the retained scalar reference in f32,
+//! invariant to the pool's thread count, and the bf16 precision knob is
+//! deterministic and toleranced against f32.
+//!
+//! The tests call `ops::scalar::*` directly for the reference arm and the
+//! dispatching entry points for the candidate arm, so they hold whatever
+//! the process-global dispatch mode happens to be — the two modes agree
+//! bit-for-bit by contract, which is exactly what is being checked.
+
+use std::sync::Arc;
+
+use cyclic_dp::coordinator::{multi, single, SharedBackend};
+use cyclic_dp::parallel::Rule;
+use cyclic_dp::runtime::{Backend, NativeBackend, Precision};
+use cyclic_dp::tensor::ops::{self, scalar};
+use cyclic_dp::testing::{check, Gen};
+use cyclic_dp::util::par::{self, with_threads};
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// Random matrix with a sprinkling of exact zeros (exercises the scalar
+/// matmul's zero-skip) and magnitudes spanning several binades.
+fn mat(g: &mut Gen, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            if g.usize_in(0, 5) == 0 {
+                0.0
+            } else {
+                g.f32_in(-2.0, 2.0)
+            }
+        })
+        .collect()
+}
+
+// ------------------------------------------------ fast == scalar, bitwise --
+#[test]
+fn fast_kernels_bit_match_scalar_reference_on_random_shapes() {
+    par::warm();
+    check("fast==scalar kernels", 40, |g| {
+        let m = g.usize_in(1, 33);
+        let k = g.usize_in(1, 65);
+        let n = g.usize_in(1, 49);
+        let a = mat(g, m * k);
+        let b = mat(g, k * n);
+        let gy = mat(g, m * n);
+
+        // matmul: dst [m,n] = a [m,k] · b [k,n] (overwrites — seeding dst
+        // with random garbage checks both modes clear it)
+        let mut fast = mat(g, m * n);
+        let mut slow = fast.clone();
+        ops::matmul(&mut fast, &a, &b, m, k, n);
+        scalar::matmul(&mut slow, &a, &b, m, k, n);
+        assert_bits_eq(&fast, &slow, "matmul");
+
+        // matmul_tn: dst [k,n] = aᵀ [k,m] · gy [m,n]
+        let mut fast_tn = vec![0.0; k * n];
+        let mut slow_tn = vec![0.0; k * n];
+        ops::matmul_tn(&mut fast_tn, &a, &gy, m, k, n);
+        scalar::matmul_tn(&mut slow_tn, &a, &gy, m, k, n);
+        assert_bits_eq(&fast_tn, &slow_tn, "matmul_tn");
+
+        // matmul_nt_acc: dst [m,k] += gy [m,n] · bᵀ (b as [k,n])
+        let mut fast_nt = mat(g, m * k);
+        let mut slow_nt = fast_nt.clone();
+        ops::matmul_nt_acc(&mut fast_nt, &gy, &b, m, n, k);
+        scalar::matmul_nt_acc(&mut slow_nt, &gy, &b, m, n, k);
+        assert_bits_eq(&fast_nt, &slow_nt, "matmul_nt_acc");
+
+        // fused bias_add_relu over [m,n] rows
+        let bias = mat(g, n);
+        let mut fast_br = gy.clone();
+        let mut slow_br = gy.clone();
+        ops::bias_add_relu(&mut fast_br, &bias);
+        scalar::bias_add_relu(&mut slow_br, &bias);
+        assert_bits_eq(&fast_br, &slow_br, "bias_add_relu");
+    });
+}
+
+// ------------------------------------------- thread-count invariance ------
+#[test]
+fn kernel_results_do_not_depend_on_thread_count() {
+    par::warm();
+    check("thread-count invariance", 20, |g| {
+        let m = g.usize_in(1, 40);
+        let k = g.usize_in(1, 70);
+        let n = g.usize_in(1, 40);
+        let a = mat(g, m * k);
+        let b = mat(g, k * n);
+        let gy = mat(g, m * n);
+
+        let run_all = |threads: usize| {
+            with_threads(threads, || {
+                let mut c = vec![0.0; m * n];
+                ops::matmul(&mut c, &a, &b, m, k, n);
+                let mut tn = vec![0.0; k * n];
+                ops::matmul_tn(&mut tn, &a, &gy, m, k, n);
+                let mut nt = vec![0.0; m * k];
+                ops::matmul_nt_acc(&mut nt, &gy, &b, m, n, k);
+                (c, tn, nt)
+            })
+        };
+        let serial = run_all(1);
+        for threads in [2usize, 3, 8] {
+            let par_r = run_all(threads);
+            assert_bits_eq(&serial.0, &par_r.0, "matmul across thread counts");
+            assert_bits_eq(&serial.1, &par_r.1, "matmul_tn across thread counts");
+            assert_bits_eq(&serial.2, &par_r.2, "matmul_nt_acc across thread counts");
+        }
+    });
+}
+
+/// The whole oracle trainer, serial vs pooled: the loss sequence is the
+/// observable the four-trainer equivalence suite compares, so it must be
+/// bit-identical at any `RAYON_NUM_THREADS`.
+#[test]
+fn reference_trainer_losses_are_thread_count_invariant() {
+    par::warm();
+    let losses_at = |threads: usize| -> Vec<u64> {
+        with_threads(threads, || {
+            let rt = NativeBackend::default_mlp();
+            let mut t = single::RefTrainer::new(&rt, Rule::CdpV2).unwrap();
+            t.train(3)
+                .unwrap()
+                .iter()
+                .map(|l| l.loss.to_bits())
+                .collect()
+        })
+    };
+    let serial = losses_at(1);
+    for threads in [2usize, 4, 16] {
+        assert_eq!(
+            losses_at(threads),
+            serial,
+            "loss bits changed between 1 and {threads} partitioning threads"
+        );
+    }
+}
+
+// ------------------------------------------------- sgd partition parity ---
+#[test]
+fn sgd_update_flat_matches_serial_loop_bitwise() {
+    par::warm();
+    let rt = NativeBackend::default_mlp();
+    let layout = rt.layout().clone();
+    let mu = rt.manifest.momentum;
+    let params = rt.init_params_flat().unwrap();
+    let grads: Vec<f32> = (0..layout.total_len).map(|i| ((i as f32) * 0.37).sin()).collect();
+    let lr = 0.01f32;
+
+    for j in 0..rt.manifest.n_stages {
+        let r = layout.stage_range(j);
+        let (p, g) = (&params[r.clone()], &grads[r.clone()]);
+        // hand-rolled serial reference
+        let mut want_m: Vec<f32> = g.iter().map(|x| x * 0.5).collect();
+        let mut want_o = vec![0.0f32; p.len()];
+        for i in 0..p.len() {
+            let m = mu * want_m[i] + g[i];
+            want_o[i] = p[i] - lr * m;
+            want_m[i] = m;
+        }
+        // backend kernel (pool-partitioned in fast mode)
+        let mut got_m: Vec<f32> = g.iter().map(|x| x * 0.5).collect();
+        let mut got_o = vec![0.0f32; p.len()];
+        rt.sgd_update_flat(j, p, &mut got_m, g, lr, &mut got_o).unwrap();
+        assert_bits_eq(&got_m, &want_m, "sgd momentum");
+        assert_bits_eq(&got_o, &want_o, "sgd params");
+        // and invariant to the partition target
+        let mut m1: Vec<f32> = g.iter().map(|x| x * 0.5).collect();
+        let mut o1 = vec![0.0f32; p.len()];
+        with_threads(1, || rt.sgd_update_flat(j, p, &mut m1, g, lr, &mut o1).unwrap());
+        assert_bits_eq(&m1, &want_m, "sgd momentum serial");
+        assert_bits_eq(&o1, &want_o, "sgd params serial");
+    }
+}
+
+// --------------------------------------------------------- bf16 contract --
+/// bf16 runs are deterministic and bit-identical *across trainers* (the
+/// rounding points are schedule-independent), and track the f32 oracle to
+/// rounding tolerance.
+#[test]
+fn bf16_trainers_agree_bitwise_and_track_f32() {
+    let host = |p: Precision| -> Vec<f64> {
+        let rt = NativeBackend::default_mlp().with_precision(p);
+        let mut t = single::RefTrainer::new(&rt, Rule::CdpV2).unwrap();
+        t.train(3).unwrap().iter().map(|l| l.loss).collect()
+    };
+    let f32_losses = host(Precision::F32);
+    let bf_single = host(Precision::Bf16);
+    let bf_again = host(Precision::Bf16);
+    assert_eq!(bf_single, bf_again, "bf16 oracle must be run-to-run deterministic");
+    for (s, f) in bf_single.iter().zip(&f32_losses) {
+        let rel = (s - f).abs() / f.abs().max(1e-9);
+        assert!(rel < 0.05, "bf16 {s} vs f32 {f} (rel {rel:.2e})");
+    }
+
+    // cross-trainer bit-identity holds in bf16 exactly as in f32
+    let shared = SharedBackend(Arc::new(
+        NativeBackend::default_mlp().with_precision(Precision::Bf16),
+    ));
+    let rep =
+        multi::train(shared.clone(), Rule::CdpV2, multi::CommPattern::Ring, 3).unwrap();
+    let got: Vec<f64> = rep.logs.iter().map(|l| l.loss).collect();
+    assert_eq!(
+        got, bf_single,
+        "bf16 ring trainer must be bit-identical to the bf16 oracle"
+    );
+}

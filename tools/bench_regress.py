@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Bench regression gate for BENCH_*.json reports.
+
+Usage:
+    bench_regress.py CURRENT.json BASELINE.json [--threshold=0.25]
+
+Compares the ``timings`` arrays of two reports produced by the bench
+harness (``rust/benches/harness.rs``::write_json).  For every label
+present in *both* files, fails if the current ``mean_ns`` exceeds the
+baseline by more than the threshold (default +25%).  Labels only present
+on one side are reported but never fail the gate — benches grow sections
+over time and the baseline lags by design.
+
+The script self-skips (exit 0, with a notice) when the baseline file
+does not exist: the first green CI run on quiet hardware seeds the
+baseline, which is then committed at ``rust/bench_baselines/``.
+
+Exit codes: 0 ok/skipped, 1 regression, 2 usage or malformed input.
+Stdlib only — no third-party dependencies.
+"""
+
+import json
+import sys
+
+
+def load_timings(path):
+    with open(path, encoding="utf-8") as f:
+        report = json.load(f)
+    timings = report.get("timings")
+    if not isinstance(timings, list):
+        raise ValueError(f"{path}: no 'timings' array")
+    out = {}
+    for t in timings:
+        label, mean = t.get("label"), t.get("mean_ns")
+        if not isinstance(label, str) or not isinstance(mean, (int, float)):
+            raise ValueError(f"{path}: malformed timing entry {t!r}")
+        out[label] = float(mean)
+    return report.get("git_sha", "unknown"), out
+
+
+def fmt_ns(ns):
+    if ns < 1e3:
+        return f"{ns:.0f}ns"
+    if ns < 1e6:
+        return f"{ns / 1e3:.2f}us"
+    if ns < 1e9:
+        return f"{ns / 1e6:.2f}ms"
+    return f"{ns / 1e9:.2f}s"
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    threshold = 0.25
+    for a in argv[1:]:
+        if a.startswith("--threshold="):
+            try:
+                threshold = float(a.split("=", 1)[1])
+            except ValueError:
+                print("bench_regress: bad --threshold", file=sys.stderr)
+                return 2
+        elif a.startswith("--"):
+            print(f"bench_regress: unknown flag {a}", file=sys.stderr)
+            return 2
+    if len(args) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    current_path, baseline_path = args
+
+    try:
+        cur_sha, cur = load_timings(current_path)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"bench_regress: cannot read current report: {e}", file=sys.stderr)
+        return 2
+    try:
+        base_sha, base = load_timings(baseline_path)
+    except FileNotFoundError:
+        print(
+            f"bench_regress: no baseline at {baseline_path} — skipping "
+            "(commit a green run's report there to arm the gate)"
+        )
+        return 0
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"bench_regress: cannot read baseline: {e}", file=sys.stderr)
+        return 2
+
+    matched = sorted(set(cur) & set(base))
+    only_cur = sorted(set(cur) - set(base))
+    only_base = sorted(set(base) - set(cur))
+
+    print(f"bench_regress: current {cur_sha[:12]} vs baseline {base_sha[:12]}, "
+          f"{len(matched)} matched labels, threshold +{threshold:.0%}")
+
+    regressions = []
+    for label in matched:
+        b, c = base[label], cur[label]
+        ratio = c / b if b > 0 else float("inf")
+        mark = ""
+        if ratio > 1.0 + threshold:
+            regressions.append(label)
+            mark = "  <-- REGRESSION"
+        print(f"  {label}: {fmt_ns(b)} -> {fmt_ns(c)}  (x{ratio:.2f}){mark}")
+    for label in only_cur:
+        print(f"  (new, unguarded)   {label}: {fmt_ns(cur[label])}")
+    for label in only_base:
+        print(f"  (baseline-only)    {label}")
+
+    if regressions:
+        print(
+            f"bench_regress: FAIL — {len(regressions)} label(s) regressed "
+            f"more than {threshold:.0%}: {', '.join(regressions)}",
+            file=sys.stderr,
+        )
+        return 1
+    print("bench_regress: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
