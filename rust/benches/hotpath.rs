@@ -14,8 +14,6 @@
 
 mod harness;
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use cyclic_dp::comm::bucketed::BucketedReducer;
@@ -30,41 +28,18 @@ use cyclic_dp::tensor::ops::{
     add_into, add_scale_into, axpy, reduce_rows, scale, set_kernel_mode, KernelMode,
 };
 use cyclic_dp::tensor::Tensor;
+use cyclic_dp::testing::instrument::{
+    self, alloc_count, CountingAlloc,
+};
 
-// ---- allocation accounting ------------------------------------------------
-// Counts every heap allocation so the bench can prove the arena reduction
-// loop is allocation-free in steady state.
-
-struct CountingAlloc;
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
-    }
-}
-
+// Allocation accounting: the counting allocator lives in
+// `testing::instrument` (shared with the wire bench and the profiler);
+// only the `#[global_allocator]` declaration must sit in the binary.
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn allocs() -> u64 {
-    ALLOCS.load(Ordering::Relaxed)
+    alloc_count()
 }
 
 /// Synthetic model used by the artifact-free comparisons: 8 stages × 8
@@ -363,14 +338,11 @@ fn main() {
     // timeline proof: first grad-bucket send precedes the last backward
     // (a single step, so the overlap cannot come from step interleaving)
     let (tl_stats, _, _) = run_synthetic_step(&layout, 4, 1, true, true);
-    let first_send = tl_stats
-        .first_ns(EventKind::GradSend)
-        .expect("grad sends recorded");
-    let last_bwd = tl_stats
-        .last_ns(EventKind::BwdStageDone)
-        .expect("bwd marks recorded");
+    let digest = instrument::overlap_from_stats(&tl_stats)
+        .expect("grad sends and bwd marks recorded");
+    let (first_send, last_bwd) = (digest.first_grad_send_ns, digest.last_bwd_done_ns);
     assert!(
-        first_send < last_bwd,
+        digest.overlapped(),
         "eager reduction must start before the last backward completes \
          (first send {first_send} ns vs last bwd {last_bwd} ns)"
     );
@@ -675,22 +647,12 @@ fn xla_sections(
             },
         )
         .unwrap();
-        let first_send = rep
-            .timeline
-            .iter()
-            .filter(|e| e.kind == EventKind::GradSend)
-            .map(|e| e.ns)
-            .min()
-            .expect("grad sends");
-        let last_bwd = rep
-            .timeline
-            .iter()
-            .filter(|e| e.kind == EventKind::BwdStageDone)
-            .map(|e| e.ns)
-            .max()
-            .expect("bwd marks");
+        let digest = instrument::overlap_from_events(&rep.timeline)
+            .expect("grad sends and bwd marks");
+        let (first_send, last_bwd) =
+            (digest.first_grad_send_ns, digest.last_bwd_done_ns);
         assert!(
-            first_send < last_bwd,
+            digest.overlapped(),
             "trainer reduction must start before the last backward completes"
         );
         println!(

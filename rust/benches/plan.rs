@@ -1,0 +1,136 @@
+//! Auto-planner bench (DESIGN-PERF.md §Auto-planner): profile two
+//! contrasting synthetic shapes, run the planner's search, then *execute*
+//! the top-ranked candidates and compare predicted against measured step
+//! time.  The headline counter is `planner_pick_regret` — how much slower
+//! the planner's pick is than the best candidate we actually measured
+//! (0.0 = the planner picked the true winner).  The regret tolerance is
+//! soft by default and hard under `CDP_BENCH_STRICT=1`; results go to
+//! `BENCH_plan.json`, SHA-stamped, for the CI regression gate.
+
+mod harness;
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use cyclic_dp::coordinator::{execute_plan, SharedBackend};
+use cyclic_dp::plan::{search, Candidate, SearchSpace};
+use cyclic_dp::profile::{ProfileOpts, StageProfiler};
+use cyclic_dp::runtime::{NativeBackend, NativeMlpConfig};
+
+/// Regret tolerance the ISSUE acceptance pins: the pick must be within
+/// 15% of the best measured candidate.
+const REGRET_TOL: f64 = 0.15;
+
+/// Candidates executed per shape (deduped by trainer/variant/rule/k —
+/// bucket size and precision variants of the same coordinator measure
+/// nearly identically and would only pad the bench).
+const MAX_EXEC: usize = 5;
+
+fn main() {
+    // Pool spawn + kernel-mode resolution before any timed window.
+    cyclic_dp::util::par::warm();
+    std::hint::black_box(cyclic_dp::tensor::ops::kernel_mode());
+
+    let b = harness::Bench::new("plan");
+    let mut stats: Vec<harness::Stat> = Vec::new();
+    let mut counters: Vec<(String, f64)> = Vec::new();
+    let strict = std::env::var("CDP_BENCH_STRICT").as_deref() == Ok("1");
+    let mut worst_regret = 0.0f64;
+
+    for (shape, cfg) in [
+        ("deep_narrow", NativeMlpConfig::deep_narrow()),
+        ("shallow_wide", NativeMlpConfig::shallow_wide()),
+    ] {
+        b.section(&format!("{shape}: profile, search, execute top plans"));
+
+        let profiler = StageProfiler::new(ProfileOpts::default());
+        let profile = profiler.profile_native(&cfg).expect("profile");
+        let budget = 4u64 << 30; // generous: rank purely by predicted time
+        let space = SearchSpace::for_profile(&profile);
+        let ranked = search(&profile, budget, &space).expect("search");
+        println!(
+            "  {} candidates, pick: {}",
+            ranked.candidates.len(),
+            ranked.winner().plan.label()
+        );
+
+        // Dedupe to one candidate per coordinator configuration; the
+        // planner's pick is candidate 0, so it always executes.
+        let mut seen: BTreeSet<String> = BTreeSet::new();
+        let exec_cands: Vec<&Candidate> = ranked
+            .candidates
+            .iter()
+            .filter(|c| c.feasible)
+            .filter(|c| {
+                let p = &c.plan;
+                seen.insert(format!(
+                    "{}/{}/{}/k{}",
+                    p.trainer.name(),
+                    p.variant.name(),
+                    p.rule.name(),
+                    p.n_stages
+                ))
+            })
+            .take(MAX_EXEC)
+            .collect();
+
+        let base = NativeBackend::synthetic(cfg);
+        let mut best_meas = f64::INFINITY;
+        let mut pick_meas = f64::INFINITY;
+        for (i, c) in exec_cands.iter().enumerate() {
+            let plan = &c.plan;
+            let rt = base
+                .repartitioned(plan.n_stages as usize)
+                .expect("divisor stage count")
+                .with_precision(plan.precision);
+            let n_mb = rt.manifest.n_microbatches.max(1) as f64;
+            let shared = SharedBackend(Arc::new(rt));
+            let label = format!("{shape} {}", plan.label());
+            let st = b.time_stat(&label, 1, 3, || {
+                std::hint::black_box(
+                    execute_plan(shared.clone(), plan, 1).expect("plan executes"),
+                );
+            });
+            // Normalize to per-micro-batch so stage counts with different
+            // square-schedule widths compare on equal work.
+            let meas_per_mb = st.mean_ns / n_mb;
+            println!(
+                "    predicted {:9.1} us/mb | measured {:9.1} us/mb",
+                plan.predicted_step_ns / 1e3,
+                meas_per_mb / 1e3
+            );
+            counters.push((format!("pred_us::{label}"), plan.predicted_step_ns / 1e3));
+            counters.push((format!("meas_us::{label}"), meas_per_mb / 1e3));
+            stats.push(st);
+            best_meas = best_meas.min(meas_per_mb);
+            if i == 0 {
+                pick_meas = meas_per_mb;
+            }
+        }
+
+        let regret = pick_meas / best_meas - 1.0;
+        println!(
+            "  {shape} planner-pick regret: {:.1}% (tolerance {:.0}%)",
+            regret * 100.0,
+            REGRET_TOL * 100.0
+        );
+        counters.push((format!("plan_regret_{shape}"), regret));
+        worst_regret = worst_regret.max(regret);
+    }
+
+    counters.push(("planner_pick_regret".into(), worst_regret));
+    counters.push(("planner_regret_tolerance".into(), REGRET_TOL));
+    if worst_regret > REGRET_TOL {
+        let msg = format!(
+            "planner pick regret {:.1}% exceeds {:.0}% tolerance",
+            worst_regret * 100.0,
+            REGRET_TOL * 100.0
+        );
+        if strict {
+            panic!("{msg} (CDP_BENCH_STRICT=1)");
+        }
+        println!("  WARN: {msg} — soft outside CDP_BENCH_STRICT=1");
+    }
+
+    harness::write_json("BENCH_plan.json", "plan", &stats, &counters);
+}

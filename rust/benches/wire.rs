@@ -11,10 +11,11 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use cyclic_dp::cluster::run_workers;
-use cyclic_dp::comm::{tags, Endpoint, EventKind, Fabric, WireConfig, WireKind};
+use cyclic_dp::comm::{tags, Endpoint, Fabric, WireConfig, WireKind};
 use cyclic_dp::coordinator::{multi, SharedBackend};
 use cyclic_dp::parallel::Rule;
 use cyclic_dp::runtime::NativeBackend;
+use cyclic_dp::testing::instrument;
 
 fn rdv(label: &str) -> PathBuf {
     std::env::temp_dir().join(format!("cdp-bench-wire-{label}-{}", std::process::id()))
@@ -104,10 +105,11 @@ fn main() {
 
     // a single step, so overlap cannot come from step interleaving
     let tl = run_ring("ring-timeline", true);
-    let first_send = tl.first_ns(EventKind::GradSend).expect("grad sends recorded");
-    let last_bwd = tl.last_ns(EventKind::BwdStageDone).expect("bwd marks recorded");
+    let digest = instrument::overlap_from_stats(&tl)
+        .expect("grad sends and bwd marks recorded");
+    let (first_send, last_bwd) = (digest.first_grad_send_ns, digest.last_bwd_done_ns);
     assert!(
-        first_send < last_bwd,
+        digest.overlapped(),
         "eager reduction over the wire must start before the last backward \
          completes (first send {first_send} ns vs last bwd {last_bwd} ns)"
     );

@@ -213,6 +213,102 @@ pub struct StepLog {
     pub loss: f64,
 }
 
+/// Execute a planner [`Plan`] on the backend it was searched for: pick
+/// the coordinator from [`TrainerKind`], map the plan's [`Variant`] onto
+/// that coordinator's own vocabulary, and train `steps` steps.
+///
+/// The backend must already realize the plan's *partition and precision*
+/// (for synthetic native bundles, `NativeBackend::repartitioned` +
+/// `with_precision` — the CLI's `--plan` path does this); this function
+/// validates the stage count and refuses a mismatched backend rather
+/// than silently training a different configuration.
+///
+/// [`Plan`]: crate::plan::Plan
+/// [`TrainerKind`]: crate::plan::TrainerKind
+/// [`Variant`]: crate::plan::Variant
+pub fn execute_plan<B: Backend + Send + Sync + 'static>(
+    rt: SharedBackend<B>,
+    plan: &crate::plan::Plan,
+    steps: usize,
+) -> anyhow::Result<Vec<StepLog>> {
+    use crate::plan::{TrainerKind, Variant};
+
+    anyhow::ensure!(
+        rt.manifest().n_stages == plan.n_stages as usize,
+        "backend has {} stages but plan `{}` wants {} — repartition the \
+         backend before executing the plan",
+        rt.manifest().n_stages,
+        plan.label(),
+        plan.n_stages
+    );
+    match plan.trainer {
+        TrainerKind::Single => {
+            anyhow::ensure!(
+                plan.variant == Variant::None,
+                "single trainer takes no schedule variant, plan `{}` has `{}`",
+                plan.label(),
+                plan.variant.name()
+            );
+            let mut t = single::RefTrainer::from_plan(&rt, plan)?;
+            t.train(steps)
+        }
+        TrainerKind::Multi => {
+            let pattern = match plan.variant {
+                Variant::Ring => multi::CommPattern::Ring,
+                Variant::Barrier => multi::CommPattern::Barrier,
+                v => anyhow::bail!(
+                    "plan variant `{}` is not a multi comm pattern (ring|barrier)",
+                    v.name()
+                ),
+            };
+            let rep = multi::train_with(
+                rt,
+                plan.rule.clone(),
+                pattern,
+                steps,
+                multi::MultiOpts::from_plan(plan),
+            )?;
+            Ok(rep.logs)
+        }
+        TrainerKind::Zero => {
+            let flow = match plan.variant {
+                Variant::Broadcast => zero::StateFlow::Broadcast,
+                Variant::Cyclic => zero::StateFlow::Cyclic,
+                v => anyhow::bail!(
+                    "plan variant `{}` is not a ZeRO state flow (broadcast|cyclic)",
+                    v.name()
+                ),
+            };
+            let rep = zero::train_with(
+                rt,
+                plan.rule.clone(),
+                flow,
+                steps,
+                zero::ZeroOpts::from_plan(plan),
+            )?;
+            Ok(rep.logs)
+        }
+        TrainerKind::Pipeline => {
+            let sched = match plan.variant {
+                Variant::GPipe => pipeline::PipeSchedule::GPipe,
+                Variant::OneFOneB => pipeline::PipeSchedule::OneFOneB,
+                v => anyhow::bail!(
+                    "plan variant `{}` is not a pipeline schedule (gpipe|1f1b)",
+                    v.name()
+                ),
+            };
+            let rep = pipeline::train_with(
+                &rt,
+                plan.rule.clone(),
+                sched,
+                steps,
+                pipeline::PipeOpts::from_plan(plan),
+            )?;
+            Ok(rep.logs)
+        }
+    }
+}
+
 /// θ-version id a backend's per-version caches key under for
 /// (micro-batch `i`, `stage`) at training step `step`: the commit step
 /// that produced the selected θ.  Fresh ⇒ `step`, stale ⇒ `step − 1`;

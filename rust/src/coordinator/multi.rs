@@ -98,6 +98,16 @@ impl Default for MultiOpts {
     }
 }
 
+impl MultiOpts {
+    /// Options for executing a planner [`crate::plan::Plan`]: the plan's
+    /// bucket size, defaults everywhere else (the rule and comm pattern
+    /// are passed to [`train_with`] directly by
+    /// [`crate::coordinator::execute_plan`]).
+    pub fn from_plan(plan: &crate::plan::Plan) -> Self {
+        Self { bucket_elems: plan.bucket_elems as usize, ..Self::default() }
+    }
+}
+
 pub struct MultiReport {
     pub logs: Vec<StepLog>,
     pub comm_bytes: u64,

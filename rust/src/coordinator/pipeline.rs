@@ -77,6 +77,15 @@ impl Default for PipeOpts {
     }
 }
 
+impl PipeOpts {
+    /// Options for executing a planner [`crate::plan::Plan`]: the plan's
+    /// bucket size, defaults everywhere else (rule and schedule are
+    /// passed to [`train_with`] by [`crate::coordinator::execute_plan`]).
+    pub fn from_plan(plan: &crate::plan::Plan) -> Self {
+        Self { bucket_elems: plan.bucket_elems as usize, ..Self::default() }
+    }
+}
+
 pub struct PipelineReport {
     pub logs: Vec<StepLog>,
     /// Fraction of device-time-slots idle during a steady training step.

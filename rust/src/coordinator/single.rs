@@ -62,6 +62,14 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
         Ok(Self::assemble(rt, rule, store, mode))
     }
 
+    /// Build the reference trainer from a planner [`crate::plan::Plan`].
+    /// The backend must already match the plan's partition and precision
+    /// (see `NativeBackend::repartitioned`); only the rule applies here —
+    /// the single trainer has no comm variant or bucket dimension.
+    pub fn from_plan(rt: &'rt B, plan: &crate::plan::Plan) -> Result<Self> {
+        Self::new(rt, plan.rule.clone())
+    }
+
     /// With explicit initial params (equivalence tests inject these).
     pub fn with_params(rt: &'rt B, rule: Rule, init: Vec<Vec<Tensor>>) -> Self {
         Self::assemble(rt, rule, ParamStore::new(init), ExecMode::HostLiteral)

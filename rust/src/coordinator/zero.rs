@@ -112,6 +112,15 @@ impl Default for ZeroOpts {
     }
 }
 
+impl ZeroOpts {
+    /// Options for executing a planner [`crate::plan::Plan`]: the plan's
+    /// bucket size, defaults everywhere else (rule and state flow are
+    /// passed to [`train_with`] by [`crate::coordinator::execute_plan`]).
+    pub fn from_plan(plan: &crate::plan::Plan) -> Self {
+        Self { bucket_elems: plan.bucket_elems as usize, ..Self::default() }
+    }
+}
+
 pub struct ZeroReport {
     pub logs: Vec<StepLog>,
     pub comm_bytes: u64,

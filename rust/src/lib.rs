@@ -22,6 +22,9 @@
 //! - [`coordinator`] — trainers: reference, multi-worker, ZeRO-DP, pipeline.
 //! - [`sim`]       — discrete-time scheme simulator (Fig 1, Fig 2, Tab 1).
 //! - [`memsim`]    — activation-memory tracking + extrapolation (Fig 4).
+//! - [`profile`]   — calibration pass: per-stage costs, fabric probe.
+//! - [`plan`]      — auto-planner: search partition × schedule × shard,
+//!                   emit a serializable execution [`plan::Plan`].
 //! - [`metrics`]   — counters, CSV/JSON emission.
 //! - [`testing`]   — property-test mini-framework (no crates.io access).
 
@@ -34,6 +37,8 @@ pub mod memsim;
 pub mod metrics;
 pub mod model;
 pub mod parallel;
+pub mod plan;
+pub mod profile;
 pub mod runtime;
 pub mod sim;
 pub mod tensor;

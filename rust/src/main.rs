@@ -7,6 +7,11 @@
 //!                                       for the mlp family — try --bundle native_mlp)
 //!             [--precision f32|bf16]   (also CDP_PRECISION; native backend only —
 //!                                       f32 is the bit-identical default)
+//!             [--plan auto|FILE]       (auto: profile + search + run the winner
+//!                                       under --mem-budget; FILE: run a saved plan)
+//!   plan      --model native_mlp|deep_narrow|shallow_wide --mem-budget 2GiB
+//!             [--calib-steps 3] [--save plan.bin]
+//!             (profile + search standalone; ranked table on stderr, JSON on stdout)
 //!   launch    --workers N --transport uds|tcp --trainer multi|zero
 //!             [--rule ...] [--steps ...] [--wire-faults disc:F:T:K,...]
 //!             (spawns one OS process per worker; see `worker` below)
@@ -33,6 +38,7 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "train" => cmd_train(&args),
+        "plan" => cmd_plan(&args),
         "launch" => cmd_launch(&args),
         "worker" => cmd_worker(&args),
         "timeline" => cmd_timeline(&args),
@@ -54,7 +60,7 @@ fn main() {
 fn print_help() {
     println!(
         "cdp — Cyclic Data Parallelism coordinator\n\
-         subcommands: train | launch | worker | timeline | schemes | table1 | memsim | golden\n\
+         subcommands: train | plan | launch | worker | timeline | schemes | table1 | memsim | golden\n\
          backend: --backend native|xla (or CDP_BACKEND); this build has \
          xla {}\n\
          see rust/src/main.rs header for flags",
@@ -88,10 +94,107 @@ fn load_native_bundle(args: &Args) -> Result<NativeBackend> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    if args.get("plan").is_some() {
+        anyhow::ensure!(
+            matches!(backend_choice(args.get("backend"))?, BackendChoice::Native),
+            "--plan drives the native backend only (repartitioning rebuilds \
+             the synthetic stage graph)"
+        );
+        return cmd_train_plan(args);
+    }
     match backend_choice(args.get("backend"))? {
         BackendChoice::Native => run_train(load_native_bundle(args)?, args),
         BackendChoice::Xla => train_xla(args),
     }
+}
+
+/// `cdp train --plan auto|FILE`: resolve the plan (auto = profile +
+/// search under `--mem-budget`, logging the ranked table to stderr; FILE
+/// = a saved `Plan`), rebuild the backend to the plan's partition and
+/// precision, and run the winning coordinator.
+fn cmd_train_plan(args: &Args) -> Result<()> {
+    use cyclic_dp::coordinator::execute_plan;
+    use cyclic_dp::plan::{parse_mem_budget, search, Plan, SearchSpace};
+    use cyclic_dp::profile::ProfileOpts;
+
+    let steps = args.usize_or("steps", 10);
+    let bundle = args.str_or("bundle", "native_mlp");
+    let plan = match args.str_or("plan", "auto") {
+        "auto" => {
+            let budget = parse_mem_budget(args.str_or("mem-budget", "4GiB"))?;
+            let opts = ProfileOpts {
+                calib_steps: args.usize_or("calib-steps", 3),
+                ..ProfileOpts::default()
+            };
+            let profile = profile_for_model(bundle, opts)?;
+            eprint!("{}", profile.render());
+            let ranked = search(&profile, budget, &SearchSpace::for_profile(&profile))
+                .map_err(anyhow::Error::new)?;
+            eprint!("{}", ranked.render());
+            ranked.winner().plan.clone()
+        }
+        path => Plan::load(std::path::Path::new(path))?,
+    };
+    println!("plan: {} (predicted {:.1} us/mb)", plan.label(), plan.predicted_step_ns / 1e3);
+    if let Some(p) = args.get("save-plan") {
+        plan.save(std::path::Path::new(p))?;
+        eprintln!("saved plan to {p}");
+    }
+
+    // Realize the plan's partition + precision on a fresh backend.
+    let rt = NativeBackend::load_or_synthetic(bundle)?;
+    let rt = if rt.manifest().n_stages == plan.n_stages as usize {
+        rt
+    } else {
+        rt.repartitioned(plan.n_stages as usize)?
+    };
+    let rt = rt.with_precision(plan.precision);
+    let logs = execute_plan(SharedBackend(Arc::new(rt)), &plan, steps)?;
+    for log in &logs {
+        println!("step {:>4}  loss {:.5}", log.step, log.loss);
+    }
+    Ok(())
+}
+
+/// Profile `model`: native-preset granularity (per-layer refinement +
+/// trainer calibration) when the bundle is synthetic, stage granularity
+/// for on-disk bundles.
+fn profile_for_model(
+    model: &str,
+    opts: cyclic_dp::profile::ProfileOpts,
+) -> Result<cyclic_dp::profile::ModelProfile> {
+    use cyclic_dp::profile::StageProfiler;
+    let profiler = StageProfiler::new(opts);
+    let rt = NativeBackend::load_or_synthetic(model)?;
+    match rt.synthetic_config() {
+        Some(cfg) => profiler.profile_native(&cfg),
+        None => profiler.profile(&rt),
+    }
+}
+
+/// `cdp plan`: the standalone profile + search.  Ranked table to stderr,
+/// machine-readable JSON to stdout, optional `--save` of the winner.
+fn cmd_plan(args: &Args) -> Result<()> {
+    use cyclic_dp::plan::{parse_mem_budget, search, SearchSpace};
+    use cyclic_dp::profile::ProfileOpts;
+
+    let model = args.str_or("model", "native_mlp");
+    let budget = parse_mem_budget(args.str_or("mem-budget", "4GiB"))?;
+    let opts = ProfileOpts {
+        calib_steps: args.usize_or("calib-steps", 3),
+        ..ProfileOpts::default()
+    };
+    let profile = profile_for_model(model, opts)?;
+    eprint!("{}", profile.render());
+    let ranked = search(&profile, budget, &SearchSpace::for_profile(&profile))
+        .map_err(anyhow::Error::new)?;
+    eprint!("{}", ranked.render());
+    println!("{}", ranked.to_json());
+    if let Some(p) = args.get("save") {
+        ranked.winner().plan.save(std::path::Path::new(p))?;
+        eprintln!("saved winning plan to {p}");
+    }
+    Ok(())
 }
 
 #[cfg(feature = "xla")]

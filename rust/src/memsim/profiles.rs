@@ -116,6 +116,66 @@ mod tests {
     }
 
     #[test]
+    fn profiles_are_nonempty_with_exact_layer_counts() {
+        // stem + 16 bottleneck blocks (3/4/6/3) + head
+        assert_eq!(resnet50_profile(1).len(), 18);
+        // patch embed + 12 transformer layers + head
+        assert_eq!(vit_b16_profile(1).len(), 14);
+        for l in resnet50_profile(1).iter().chain(vit_b16_profile(1).iter()) {
+            assert!(l.act_bytes > 0, "{} stashes nothing", l.name);
+            assert!(l.flops > 0, "{} costs nothing", l.name);
+        }
+    }
+
+    #[test]
+    fn byte_totals_match_closed_forms() {
+        let b = 8u64;
+        let f32b = 4u64;
+
+        // ViT-B/16: B·4·[s·d + 12·(4·s·d + h·s² + s·ff) + d]
+        let (s, d, ff, heads) = (197u64, 768u64, 3072u64, 12u64);
+        let vit_expect =
+            b * f32b * (s * d + 12 * (4 * s * d + heads * s * s + s * ff) + d);
+        let vit_total: u64 = vit_b16_profile(b).iter().map(|l| l.act_bytes).sum();
+        assert_eq!(vit_total, vit_expect);
+
+        // ResNet-50: B·4·[stem + Σ blocks·(2·hw²·(c/4) + hw²·c) + 2048]
+        let stem = 112 * 112 * 64 + 56 * 56 * 64;
+        let stages: [(u64, u64, u64); 4] =
+            [(3, 56, 256), (4, 28, 512), (6, 14, 1024), (3, 7, 2048)];
+        let blocks: u64 = stages
+            .iter()
+            .map(|(n, hw, c)| n * (2 * hw * hw * (c / 4) + hw * hw * c))
+            .sum();
+        let resnet_expect = b * f32b * (stem + blocks + 2048);
+        let resnet_total: u64 = resnet50_profile(b).iter().map(|l| l.act_bytes).sum();
+        assert_eq!(resnet_total, resnet_expect);
+
+        // Both scale linearly in batch.
+        let vit1: u64 = vit_b16_profile(1).iter().map(|l| l.act_bytes).sum();
+        assert_eq!(vit_total, b * vit1);
+    }
+
+    #[test]
+    fn per_layer_act_bytes_feed_the_planner_budget_check() {
+        // The planner's memory feasibility consumes these profiles through
+        // plan::peak_act_from_layers; the predicate must flip exactly at
+        // the measured peak.
+        for layers in [vit_b16_profile(4), resnet50_profile(4)] {
+            let peak = crate::plan::peak_act_from_layers(&layers);
+            assert!(peak > 0);
+            // Peak is at most the full stash sum, at least the largest layer.
+            let total: u64 = layers.iter().map(|l| l.act_bytes).sum();
+            let largest = layers.iter().map(|l| l.act_bytes).max().unwrap();
+            assert!(peak <= total);
+            assert!(peak >= largest);
+            assert!(crate::plan::fits_budget(peak, peak));
+            assert!(!crate::plan::fits_budget(peak, peak - 1));
+            assert!(crate::plan::fits_budget(peak, peak + 1));
+        }
+    }
+
+    #[test]
     fn magnitudes_are_plausible() {
         // ViT-B/16 batch 64 activation total: paper tracks ~3.9 GB
         let p = vit_b16_profile(64);

@@ -1,0 +1,416 @@
+//! `plan` — the profiler-driven auto-planner (ROADMAP item 2; OSDP /
+//! PipeDream's profile → search → execute loop).
+//!
+//! A [`Plan`] is a complete, serializable training configuration: which
+//! coordinator to run ([`TrainerKind`]), under which update rule and
+//! communication variant, at which stage partition, bucket size and
+//! precision — plus the predicted per-micro-batch step time and peak
+//! per-worker memory the search scored it with.  [`search`] enumerates
+//! the candidate space against a measured [`ModelProfile`] and a memory
+//! budget, scoring each candidate with the measured-cost-calibrated
+//! analytic model (DESIGN-PERF.md §Auto-planner); when nothing fits the
+//! budget it returns the typed [`PlanError::NoFeasiblePlan`] naming the
+//! cheapest infeasible candidate.
+//!
+//! Serialization follows the checkpoint discipline
+//! ([`crate::parallel::Checkpoint`]): versioned magic, little-endian
+//! fields via [`crate::util::binio`], an FNV-1a64 trailer, tmp-file +
+//! rename saves, typed errors on magic/version/checksum mismatch.
+//!
+//! ## Wire format (version 1)
+//!
+//! ```text
+//! magic      8   b"CDPPLAN1"
+//! version    u32 (= 1)
+//! model      u32 len + UTF-8
+//! trainer    u32 len + UTF-8      single|multi|zero|pipeline
+//! rule       u32 len + UTF-8      dp|cdp_v1|cdp_v2
+//! variant    u32 len + UTF-8      none|ring|barrier|broadcast|cyclic|gpipe|1f1b
+//! n_stages   u32
+//! layers_per_stage u32
+//! bucket_elems u64
+//! precision  u32 len + UTF-8      f32|bf16
+//! predicted_step_ns   u64         f64 bits (per micro-batch)
+//! predicted_peak_bytes u64        per worker
+//! checksum   u64                  FNV-1a64 of all preceding bytes
+//! ```
+
+pub mod search;
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::memsim::{LayerProfile, MemoryCurve};
+use crate::parallel::{rule_by_name, Rule};
+use crate::runtime::Precision;
+use crate::util::binio::{fnv1a64, ByteReader, ByteWriter};
+
+pub use crate::profile::ModelProfile;
+pub use search::{partition_balanced, search, Candidate, RankedPlans, SearchSpace};
+
+const MAGIC: &[u8; 8] = b"CDPPLAN1";
+const FORMAT_VERSION: u32 = 1;
+
+/// Which coordinator executes the plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainerKind {
+    /// `coordinator::single::RefTrainer` — one host thread, N micro-batches.
+    Single,
+    /// `coordinator::multi` — one worker thread per micro-batch.
+    Multi,
+    /// `coordinator::zero` — multi with ZeRO-sharded optimizer state.
+    Zero,
+    /// `coordinator::pipeline` — one simulated device per stage.
+    Pipeline,
+}
+
+impl TrainerKind {
+    /// CLI/report name (`--trainer` vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            TrainerKind::Single => "single",
+            TrainerKind::Multi => "multi",
+            TrainerKind::Zero => "zero",
+            TrainerKind::Pipeline => "pipeline",
+        }
+    }
+
+    /// Parse a CLI/serialized name.
+    pub fn parse(v: &str) -> Result<Self> {
+        match v {
+            "single" => Ok(TrainerKind::Single),
+            "multi" => Ok(TrainerKind::Multi),
+            "zero" => Ok(TrainerKind::Zero),
+            "pipeline" => Ok(TrainerKind::Pipeline),
+            other => anyhow::bail!("unknown trainer `{other}` (single|multi|zero|pipeline)"),
+        }
+    }
+}
+
+/// Trainer-specific schedule variant (comm pattern / state flow /
+/// pipeline schedule).  `None` for the single trainer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Single trainer: no variant dimension.
+    None,
+    /// Multi: cyclic ring reduction (the paper's balanced p2p pattern).
+    Ring,
+    /// Multi: all-to-owner barrier reduction.
+    Barrier,
+    /// ZeRO: owner broadcasts updated params each step.
+    Broadcast,
+    /// ZeRO: cyclic parameter flow (overlapped with backward).
+    Cyclic,
+    /// Pipeline: GPipe schedule (all forwards, then all backwards).
+    GPipe,
+    /// Pipeline: one-forward-one-backward (PipeDream-flavored).
+    OneFOneB,
+}
+
+impl Variant {
+    /// CLI/report name (matches the coordinators' own vocabularies).
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::None => "none",
+            Variant::Ring => "ring",
+            Variant::Barrier => "barrier",
+            Variant::Broadcast => "broadcast",
+            Variant::Cyclic => "cyclic",
+            Variant::GPipe => "gpipe",
+            Variant::OneFOneB => "1f1b",
+        }
+    }
+
+    /// Parse a CLI/serialized name.
+    pub fn parse(v: &str) -> Result<Self> {
+        match v {
+            "none" => Ok(Variant::None),
+            "ring" => Ok(Variant::Ring),
+            "barrier" => Ok(Variant::Barrier),
+            "broadcast" => Ok(Variant::Broadcast),
+            "cyclic" => Ok(Variant::Cyclic),
+            "gpipe" => Ok(Variant::GPipe),
+            "1f1b" | "one_f_one_b" => Ok(Variant::OneFOneB),
+            other => anyhow::bail!(
+                "unknown schedule variant `{other}` \
+                 (none|ring|barrier|broadcast|cyclic|gpipe|1f1b)"
+            ),
+        }
+    }
+}
+
+/// A complete training configuration plus the scores the search gave it.
+/// See the module docs for the wire format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    /// Model label the plan was searched for (informational).
+    pub model: String,
+    /// Executing coordinator.
+    pub trainer: TrainerKind,
+    /// Update rule (DP / CDP-v1 / CDP-v2).
+    pub rule: Rule,
+    /// Trainer-specific schedule variant.
+    pub variant: Variant,
+    /// Stage partition: contiguous stage count N (= workers for multi/
+    /// zero, devices for pipeline, micro-batches everywhere — the square
+    /// schedule).
+    pub n_stages: u32,
+    /// Residual layers per stage of the partition (0 = keep the
+    /// manifest's own partition).
+    pub layers_per_stage: u32,
+    /// Gradient bucket size, elements.
+    pub bucket_elems: u64,
+    /// Storage precision the backend should run at.
+    pub precision: Precision,
+    /// Predicted step time per micro-batch, ns (model-based).
+    pub predicted_step_ns: f64,
+    /// Predicted peak per-worker memory, bytes.
+    pub predicted_peak_bytes: u64,
+}
+
+impl Plan {
+    /// Compact one-line label (`multi/ring/cdp_v2 k4 b16384 f32`).
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{} k{} b{} {}",
+            self.trainer.name(),
+            self.variant.name(),
+            self.rule.name(),
+            self.n_stages,
+            self.bucket_elems,
+            self.precision.name()
+        )
+    }
+
+    /// Serialize (see the wire format in the module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::with_capacity(128 + self.model.len());
+        w.bytes(MAGIC);
+        w.u32(FORMAT_VERSION);
+        w.str(&self.model);
+        w.str(self.trainer.name());
+        w.str(self.rule.name());
+        w.str(self.variant.name());
+        w.u32(self.n_stages);
+        w.u32(self.layers_per_stage);
+        w.u64(self.bucket_elems);
+        w.str(self.precision.name());
+        w.u64(self.predicted_step_ns.to_bits());
+        w.u64(self.predicted_peak_bytes);
+        let sum = fnv1a64(w.as_slice());
+        w.u64(sum);
+        w.finish()
+    }
+
+    /// Deserialize + integrity-check; magic/version/checksum mismatches
+    /// and unknown enum names are typed errors.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(bytes);
+        let magic = r.bytes(8).context("plan header")?;
+        anyhow::ensure!(magic == MAGIC, "not a CDP plan (bad magic {magic:02x?})");
+        let version = r.u32()?;
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "plan format version {version} unsupported (this build reads {FORMAT_VERSION})"
+        );
+        let model = r.str()?;
+        let trainer = TrainerKind::parse(&r.str()?)?;
+        let rule = rule_by_name(&r.str()?)?;
+        let variant = Variant::parse(&r.str()?)?;
+        let n_stages = r.u32()?;
+        let layers_per_stage = r.u32()?;
+        let bucket_elems = r.u64()?;
+        let precision = Precision::parse(&r.str()?)?;
+        let predicted_step_ns = f64::from_bits(r.u64()?);
+        let predicted_peak_bytes = r.u64()?;
+        let want_sum = fnv1a64(r.consumed());
+        let got_sum = r.u64().context("plan checksum")?;
+        anyhow::ensure!(
+            want_sum == got_sum,
+            "plan checksum mismatch (file {got_sum:#018x}, computed {want_sum:#018x}) — \
+             truncated or corrupt"
+        );
+        anyhow::ensure!(r.remaining() == 0, "trailing bytes after plan");
+        Ok(Self {
+            model,
+            trainer,
+            rule,
+            variant,
+            n_stages,
+            layers_per_stage,
+            bucket_elems,
+            precision,
+            predicted_step_ns,
+            predicted_peak_bytes,
+        })
+    }
+
+    /// Write to a file (tmp sibling + rename, like checkpoints).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("plan.tmp");
+        std::fs::write(&tmp, self.to_bytes()).with_context(|| format!("write plan {tmp:?}"))?;
+        std::fs::rename(&tmp, path).with_context(|| format!("rename plan into {path:?}"))?;
+        Ok(())
+    }
+
+    /// Read + validate a plan file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path).with_context(|| format!("read plan {path:?}"))?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+/// Typed search failures.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlanError {
+    /// Every candidate's predicted peak memory exceeds the budget.  The
+    /// cheapest (lowest-memory) infeasible candidate is named so the user
+    /// knows how far off the budget is.
+    NoFeasiblePlan {
+        /// The user-supplied budget, bytes.
+        budget_bytes: u64,
+        /// Label of the lowest-memory candidate that still did not fit.
+        cheapest: String,
+        /// That candidate's predicted peak bytes.
+        cheapest_bytes: u64,
+    },
+    /// The search space or profile was degenerate (no candidates).
+    EmptySearchSpace,
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::NoFeasiblePlan { budget_bytes, cheapest, cheapest_bytes } => write!(
+                f,
+                "no plan fits the {budget_bytes}-byte memory budget: cheapest candidate \
+                 `{cheapest}` still needs {cheapest_bytes} bytes"
+            ),
+            PlanError::EmptySearchSpace => {
+                write!(f, "planner search space is empty (degenerate profile?)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Parse a human memory budget: a plain byte count, or a number with a
+/// `K`/`M`/`G` (or `KiB`/`MiB`/`GiB`/`KB`/`MB`/`GB`) suffix — all binary
+/// multiples of 1024.
+pub fn parse_mem_budget(s: &str) -> Result<u64> {
+    let t = s.trim();
+    let lower = t.to_ascii_lowercase();
+    let (digits, mult) = if let Some(p) = lower.strip_suffix("kib").or(lower.strip_suffix("kb")) {
+        (p, 1u64 << 10)
+    } else if let Some(p) = lower.strip_suffix("mib").or(lower.strip_suffix("mb")) {
+        (p, 1u64 << 20)
+    } else if let Some(p) = lower.strip_suffix("gib").or(lower.strip_suffix("gb")) {
+        (p, 1u64 << 30)
+    } else if let Some(p) = lower.strip_suffix('k') {
+        (p, 1u64 << 10)
+    } else if let Some(p) = lower.strip_suffix('m') {
+        (p, 1u64 << 20)
+    } else if let Some(p) = lower.strip_suffix('g') {
+        (p, 1u64 << 30)
+    } else if let Some(p) = lower.strip_suffix('b') {
+        (p, 1)
+    } else {
+        (lower.as_str(), 1)
+    };
+    let n: f64 = digits
+        .trim()
+        .parse()
+        .with_context(|| format!("invalid memory budget `{s}` (e.g. 512MiB, 2GiB, 1073741824)"))?;
+    anyhow::ensure!(n > 0.0, "memory budget must be positive (got `{s}`)");
+    Ok((n * mult as f64) as u64)
+}
+
+/// Peak live activation bytes of a per-layer profile, via the memsim
+/// curve (forward stashes in layer order, backward releases in reverse).
+/// This is how `memsim::profiles` feed the planner's budget check.
+pub fn peak_act_from_layers(layers: &[LayerProfile]) -> u64 {
+    MemoryCurve::from_layers(layers).peak().ceil() as u64
+}
+
+/// The planner's feasibility predicate, exposed for tests: a candidate
+/// fits iff its predicted peak is within the budget.
+pub fn fits_budget(peak_bytes: u64, budget_bytes: u64) -> bool {
+    peak_bytes <= budget_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_plan() -> Plan {
+        Plan {
+            model: "native_mlp".into(),
+            trainer: TrainerKind::Multi,
+            rule: Rule::CdpV2,
+            variant: Variant::Ring,
+            n_stages: 4,
+            layers_per_stage: 2,
+            bucket_elems: 16_384,
+            precision: Precision::F32,
+            predicted_step_ns: 123_456.75,
+            predicted_peak_bytes: 1 << 20,
+        }
+    }
+
+    #[test]
+    fn round_trips_bit_exact() {
+        let p = sample_plan();
+        let q = Plan::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_typed_errors() {
+        let p = sample_plan();
+        let mut b = p.to_bytes();
+        let mid = b.len() / 2;
+        b[mid] ^= 0xFF;
+        assert!(Plan::from_bytes(&b).is_err(), "bit flip must fail the checksum");
+        let b = p.to_bytes();
+        assert!(Plan::from_bytes(&b[..b.len() - 3]).is_err(), "truncation must fail");
+        let mut b = p.to_bytes();
+        b[0] = b'X';
+        let err = Plan::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("magic"), "bad magic names itself: {err}");
+    }
+
+    #[test]
+    fn mem_budget_parses_suffixes() {
+        assert_eq!(parse_mem_budget("1024").unwrap(), 1024);
+        assert_eq!(parse_mem_budget("4096B").unwrap(), 4096);
+        assert_eq!(parse_mem_budget("512KiB").unwrap(), 512 << 10);
+        assert_eq!(parse_mem_budget("512kb").unwrap(), 512 << 10);
+        assert_eq!(parse_mem_budget("2MiB").unwrap(), 2 << 20);
+        assert_eq!(parse_mem_budget("3G").unwrap(), 3 << 30);
+        assert_eq!(parse_mem_budget("1.5m").unwrap(), (1.5 * 1048576.0) as u64);
+        assert!(parse_mem_budget("chunky").is_err());
+        assert!(parse_mem_budget("-5MiB").is_err());
+    }
+
+    #[test]
+    fn trainer_and_variant_names_round_trip() {
+        for t in [TrainerKind::Single, TrainerKind::Multi, TrainerKind::Zero, TrainerKind::Pipeline]
+        {
+            assert_eq!(TrainerKind::parse(t.name()).unwrap(), t);
+        }
+        for v in [
+            Variant::None,
+            Variant::Ring,
+            Variant::Barrier,
+            Variant::Broadcast,
+            Variant::Cyclic,
+            Variant::GPipe,
+            Variant::OneFOneB,
+        ] {
+            assert_eq!(Variant::parse(v.name()).unwrap(), v);
+        }
+    }
+}

@@ -1,0 +1,819 @@
+//! The planner's search: enumerate partition × schedule × shard × bucket
+//! × precision candidates and score each with the measured-cost-calibrated
+//! analytic model (DESIGN-PERF.md §Auto-planner).
+//!
+//! ## Cost model
+//!
+//! Scores are **predicted host wall time per micro-batch, ns** — the
+//! planner optimizes what this repo actually runs (thread-parallel
+//! simulated workers on one host), not an idealized cluster.  All inputs
+//! come from a [`ModelProfile`]:
+//!
+//! - compute: Σ per-layer fwd+bwd ns (`layer_costs_ns`) + fused-SGD ns,
+//!   scaled by the measured bf16 ratio when the candidate runs bf16;
+//! - comm: bottleneck-link bytes / measured fabric bandwidth + per-message
+//!   latency × bucket-message count, with the **communication-step factor
+//!   taken from [`table1_rows`]** (log₂N for synchronized DP reductions,
+//!   1 for cyclic) so the planner's ordering agrees with `sim::analytic`
+//!   by construction;
+//! - cyclic rules earn an overlap credit (gradient buckets hide behind
+//!   the backward pass) that grows with the bucket count — one bucket
+//!   cannot overlap, many buckets approach full overlap;
+//! - thread-parallel trainers (multi, zero) divide worker wall time by
+//!   `min(N, host_threads) × η`, where η is the parallel efficiency
+//!   observed by the profiler's single-vs-multi calibration runs;
+//!   serial trainers (single, pipeline-simulation) are scaled by the
+//!   measured-vs-raw single-step calibration factor.
+//!
+//! Peak per-worker memory mirrors the implementations, not the paper's
+//! idealized table: the arena keeps 4 parameter-sized buffers (θ, grads,
+//! momentum, next-θ), ZeRO shards three of them, pipeline devices hold
+//! 1/N of each plus their activation stash.  Candidates over the budget
+//! are kept in the ranking (marked infeasible) so the table explains
+//! *why* a cheaper-but-slower plan won.
+
+use crate::comm::bucketed::effective_bucket_elems;
+use crate::parallel::Rule;
+use crate::runtime::Precision;
+use crate::sim::analytic::table1_rows;
+
+use super::{fits_budget, ModelProfile, Plan, PlanError, TrainerKind, Variant};
+
+/// Balanced contiguous partition of `costs` into `k` segments minimizing
+/// the bottleneck (max segment sum) — classic linear-partition DP,
+/// O(k·n²), exact.  Returns `(ends, bottleneck)` where `ends[i]` is the
+/// exclusive end index of segment `i` (`ends.len() == min(k, n)`).
+pub fn partition_balanced(costs: &[f64], k: usize) -> (Vec<usize>, f64) {
+    let n = costs.len();
+    if n == 0 || k == 0 {
+        return (Vec::new(), 0.0);
+    }
+    let k = k.min(n);
+    let mut pre = vec![0.0f64; n + 1];
+    for (i, c) in costs.iter().enumerate() {
+        pre[i + 1] = pre[i] + c;
+    }
+    let seg = |a: usize, b: usize| pre[b] - pre[a]; // cost of [a, b)
+
+    // dp[j][i] = minimal bottleneck splitting the first i layers into j
+    // segments; cut[j][i] = start of the j-th segment in that optimum.
+    let mut dp = vec![vec![f64::INFINITY; n + 1]; k + 1];
+    let mut cut = vec![vec![0usize; n + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for j in 1..=k {
+        for i in j..=n {
+            for p in (j - 1)..i {
+                let cand = dp[j - 1][p].max(seg(p, i));
+                if cand < dp[j][i] {
+                    dp[j][i] = cand;
+                    cut[j][i] = p;
+                }
+            }
+        }
+    }
+
+    let mut ends = vec![0usize; k];
+    let mut i = n;
+    for j in (1..=k).rev() {
+        ends[j - 1] = i;
+        i = cut[j][i];
+    }
+    (ends, dp[k][n])
+}
+
+/// The candidate dimensions the search enumerates.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    /// Stage counts to try (must divide the layer count to be executable
+    /// on a uniform residual MLP; [`SearchSpace::for_profile`] emits the
+    /// divisors).
+    pub stage_counts: Vec<usize>,
+    /// Gradient bucket sizes, elements.
+    pub bucket_elems: Vec<u64>,
+    /// Storage precisions (bf16 only offered when the profile measured
+    /// its step ratio).
+    pub precisions: Vec<Precision>,
+    /// Coordinators in play.
+    pub trainers: Vec<TrainerKind>,
+}
+
+impl SearchSpace {
+    /// The default space for a profile: every stage count dividing the
+    /// layer count (≤ 64), two bucket sizes spanning the eager-overlap
+    /// trade-off, f32 (+ bf16 iff measured), all four trainers.
+    pub fn for_profile(p: &ModelProfile) -> Self {
+        let l = p.layer_costs_ns.len().max(1);
+        let mut stage_counts: Vec<usize> =
+            (1..=l.min(64)).filter(|k| l % k == 0).collect();
+        let k0 = p.n_stages();
+        if k0 >= 1 && !stage_counts.contains(&k0) {
+            // The profiled partition is always executable; keep it even
+            // when it does not divide a refined layer count.
+            stage_counts.push(k0);
+            stage_counts.sort_unstable();
+        }
+        let precisions = if (p.bf16_step_ratio - 1.0).abs() > f64::EPSILON {
+            vec![Precision::F32, Precision::Bf16]
+        } else {
+            vec![Precision::F32]
+        };
+        Self {
+            stage_counts,
+            bucket_elems: vec![4096, 65536],
+            precisions,
+            trainers: vec![
+                TrainerKind::Single,
+                TrainerKind::Multi,
+                TrainerKind::Zero,
+                TrainerKind::Pipeline,
+            ],
+        }
+    }
+
+    fn is_degenerate(&self) -> bool {
+        self.stage_counts.is_empty()
+            || self.bucket_elems.is_empty()
+            || self.precisions.is_empty()
+            || self.trainers.is_empty()
+    }
+}
+
+/// One scored candidate: the executable [`Plan`] plus the score
+/// decomposition the ranked table shows.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// The executable configuration (carries the headline predictions).
+    pub plan: Plan,
+    /// Whether `predicted_peak_bytes` fits the budget.
+    pub feasible: bool,
+    /// Predicted per-micro-batch compute ns (fwd+bwd+SGD share).
+    pub compute_ns: f64,
+    /// Predicted per-micro-batch effective comm ns (after overlap credit).
+    pub comm_ns: f64,
+    /// Bottleneck segment cost of the balanced partition at this stage
+    /// count, ns (the pipeline's slowest stage).
+    pub bottleneck_ns: f64,
+    /// Pipeline bubble fraction ((N−1)/(m+N−1)); 0 for non-pipeline.
+    pub bubble_fraction: f64,
+}
+
+/// The search result: candidates sorted feasible-first, then by predicted
+/// step time, then label (deterministic).
+#[derive(Clone, Debug)]
+pub struct RankedPlans {
+    /// Model label the search ran for.
+    pub model: String,
+    /// The memory budget candidates were checked against, bytes.
+    pub budget_bytes: u64,
+    /// All scored candidates, best first.
+    pub candidates: Vec<Candidate>,
+}
+
+impl RankedPlans {
+    /// The winning candidate.  [`search`] only returns a `RankedPlans`
+    /// when at least one candidate is feasible, so this is it.
+    pub fn winner(&self) -> &Candidate {
+        &self.candidates[0]
+    }
+
+    /// Human-readable ranked table (for `--plan auto` logging).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "ranked plans for {} (budget {} B, {} candidates)\n",
+            self.model,
+            self.budget_bytes,
+            self.candidates.len()
+        ));
+        out.push_str(
+            "rank | plan                                 | pred us/mb | peak KiB | comm us | bubble | fits\n",
+        );
+        for (i, c) in self.candidates.iter().enumerate() {
+            out.push_str(&format!(
+                "{:4} | {:36} | {:10.1} | {:8} | {:7.1} | {:6.2} | {}\n",
+                i + 1,
+                c.plan.label(),
+                c.plan.predicted_step_ns / 1_000.0,
+                c.plan.predicted_peak_bytes / 1024,
+                c.comm_ns / 1_000.0,
+                c.bubble_fraction,
+                if c.feasible { "yes" } else { "NO" }
+            ));
+        }
+        out
+    }
+
+    /// The ranked table as JSON (for `cdp plan`).  Hand-rolled like the
+    /// bench harness — no serde in the dependency set.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push('{');
+        out.push_str(&format!("\"model\":\"{}\",", json_escape(&self.model)));
+        out.push_str(&format!("\"budget_bytes\":{},", self.budget_bytes));
+        out.push_str(&format!(
+            "\"winner\":\"{}\",",
+            json_escape(&self.winner().plan.label())
+        ));
+        out.push_str("\"candidates\":[");
+        for (i, c) in self.candidates.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let p = &c.plan;
+            out.push_str(&format!(
+                "{{\"label\":\"{}\",\"trainer\":\"{}\",\"variant\":\"{}\",\"rule\":\"{}\",\
+                 \"n_stages\":{},\"layers_per_stage\":{},\"bucket_elems\":{},\"precision\":\"{}\",\
+                 \"predicted_step_ns\":{:.1},\"predicted_peak_bytes\":{},\"feasible\":{},\
+                 \"compute_ns\":{:.1},\"comm_ns\":{:.1},\"bottleneck_ns\":{:.1},\"bubble\":{:.4}}}",
+                json_escape(&p.label()),
+                p.trainer.name(),
+                p.variant.name(),
+                p.rule.name(),
+                p.n_stages,
+                p.layers_per_stage,
+                p.bucket_elems,
+                p.precision.name(),
+                p.predicted_step_ns,
+                p.predicted_peak_bytes,
+                c.feasible,
+                c.compute_ns,
+                c.comm_ns,
+                c.bottleneck_ns,
+                c.bubble_fraction,
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Calibrated constants derived once per search from the profile.
+struct Ctx<'a> {
+    p: &'a ModelProfile,
+    /// f32 per-micro-batch fwd+bwd chain, ns (Σ layer costs).
+    chain_ns: f64,
+    /// f32 per-micro-batch backward total, ns (the overlap window).
+    bwd_ns: f64,
+    /// f32 full-model fused-SGD sweep, ns.
+    sgd_ns: f64,
+    /// Mean stage-boundary activation bytes.
+    bnd: f64,
+    /// Activation stash floor excluding boundary stashes (the input
+    /// micro-batch itself).
+    act_base: f64,
+    /// Ψ_P, bytes.
+    psi: f64,
+    /// Fabric bandwidth, bytes/ns (0.0 = unprobed ⇒ byte time omitted).
+    bw: f64,
+    /// Fabric per-hop latency, ns.
+    lat: f64,
+    /// Host hardware threads.
+    threads: f64,
+    /// Observed parallel efficiency of the thread-parallel trainers.
+    eta: f64,
+    /// Measured-vs-raw calibration for host-serial trainers.
+    c_serial: f64,
+}
+
+impl<'a> Ctx<'a> {
+    fn new(p: &'a ModelProfile) -> Self {
+        let layer_sum: f64 = p.layer_costs_ns.iter().sum();
+        let chain_ns = if layer_sum > 0.0 { layer_sum } else { p.chain_ns() };
+        let sgd_ns = p.sgd_total_ns();
+        let bnd = p.mean_boundary_bytes() as f64;
+        let k0 = p.n_stages().max(1) as f64;
+        let act_base =
+            (p.peak_act_bytes as f64 - (k0 - 1.0) * bnd).max(bnd.max(1.0));
+        let threads = p.host_threads.max(1) as f64;
+
+        // Parallel efficiency η: observed single/multi speedup over the
+        // ideal min(N, threads) at the profiled stage count.
+        let eta = if p.single_step_ns > 0.0 && p.multi_step_ns > 0.0 {
+            let sigma = p.single_step_ns / p.multi_step_ns;
+            let ideal = k0.min(threads).max(1.0);
+            (sigma / ideal).clamp(0.05, 1.25)
+        } else {
+            0.7
+        };
+
+        // Serial calibration: measured single-trainer step over the raw
+        // model's prediction for the profiled partition.
+        let m0 = p.n_microbatches.max(1) as f64;
+        let raw_single = m0 * chain_ns + sgd_ns;
+        let c_serial = if p.single_step_ns > 0.0 && raw_single > 0.0 {
+            (p.single_step_ns / raw_single).clamp(0.2, 5.0)
+        } else {
+            1.0
+        };
+
+        Self {
+            p,
+            chain_ns,
+            bwd_ns: p.bwd_total_ns(),
+            sgd_ns,
+            bnd,
+            act_base,
+            psi: p.psi_p_bytes as f64,
+            bw: p.bw_bytes_per_ns,
+            lat: p.hop_latency_ns,
+            threads,
+            eta,
+            c_serial,
+        }
+    }
+
+    fn prec_factor(&self, prec: Precision) -> f64 {
+        match prec {
+            Precision::F32 => 1.0,
+            Precision::Bf16 => self.p.bf16_step_ratio,
+        }
+    }
+
+    /// Predicted peak live activation bytes at stage count k (input stash
+    /// plus one boundary stash per cut).
+    fn act_bytes(&self, k: usize) -> f64 {
+        self.act_base + (k.saturating_sub(1)) as f64 * self.bnd
+    }
+
+    /// Gradient bucket messages one worker emits per step at stage count
+    /// k and the requested bucket size.
+    fn total_buckets(&self, k: usize, bucket_elems: u64) -> f64 {
+        let stage_elems = ((self.psi / 4.0) / k as f64).ceil().max(1.0) as usize;
+        let be = effective_bucket_elems(bucket_elems as usize, stage_elems).max(1);
+        (k * stage_elems.div_ceil(be)) as f64
+    }
+
+    fn bytes_ns(&self, bytes: f64) -> f64 {
+        if self.bw > 0.0 {
+            bytes / self.bw
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Comm-step factor from Table 1 — the calibration hook that makes the
+/// planner's ordering agree with `sim::analytic` by construction.
+fn table1_steps(k: usize, implementation: &str) -> f64 {
+    table1_rows(k)
+        .iter()
+        .find(|r| r.implementation == implementation)
+        .map(|r| r.max_comm_steps)
+        .unwrap_or(1.0)
+        .max(0.0)
+}
+
+struct Score {
+    per_mb_ns: f64,
+    peak_bytes: f64,
+    compute_ns: f64,
+    comm_ns: f64,
+    bubble: f64,
+}
+
+/// Score one candidate.  See the module docs for the model.
+fn score(
+    ctx: &Ctx<'_>,
+    trainer: TrainerKind,
+    variant: Variant,
+    rule: &Rule,
+    k: usize,
+    bucket_elems: u64,
+    prec: Precision,
+) -> Score {
+    let n = k as f64;
+    let f = ctx.prec_factor(prec);
+    let cyclic = !matches!(rule, Rule::Dp);
+    let act = ctx.act_bytes(k);
+
+    match trainer {
+        TrainerKind::Single => {
+            // One host thread runs N micro-batches then one SGD sweep.
+            let m = n.max(1.0);
+            let per_mb = ctx.c_serial * f * (ctx.chain_ns + ctx.sgd_ns / m);
+            Score {
+                per_mb_ns: per_mb,
+                peak_bytes: 4.0 * ctx.psi + act,
+                compute_ns: per_mb,
+                comm_ns: 0.0,
+                bubble: 0.0,
+            }
+        }
+        TrainerKind::Multi | TrainerKind::Zero => {
+            let zero = trainer == TrainerKind::Zero;
+            // Per-worker compute: one chain plus this worker's SGD share.
+            // The barrier variant funnels the full update through the
+            // owner — the bottleneck worker pays the whole sweep.
+            let sgd_share = if variant == Variant::Barrier {
+                ctx.sgd_ns
+            } else {
+                ctx.sgd_ns / n
+            };
+            let compute = f * (ctx.chain_ns + sgd_share);
+
+            // Bottleneck-link bytes: ring/cyclic spread 2(N−1)/N·Ψ per
+            // link; the barrier owner serializes 2(N−1)·Ψ.
+            let bytes = if variant == Variant::Barrier {
+                2.0 * (n - 1.0) * ctx.psi
+            } else {
+                2.0 * (n - 1.0) / n * ctx.psi
+            };
+            let steps_row = match (zero, cyclic) {
+                (false, false) => "Multi-GPU DP",
+                (false, true) => "Multi-GPU + Cyclic",
+                (true, false) => "ZeRO-DP",
+                (true, true) => "ZeRO-DP + Cyclic",
+            };
+            let steps = table1_steps(k, steps_row);
+            let buckets = ctx.total_buckets(k, bucket_elems);
+            let comm_raw = ctx.bytes_ns(bytes) + steps * buckets * ctx.lat;
+
+            // Overlap credit: cyclic rules hide bucketed reduction behind
+            // the backward pass; one bucket cannot overlap at all.
+            let comm_eff = if cyclic && buckets >= 2.0 {
+                let credit = f * ctx.bwd_ns * (1.0 - 1.0 / buckets);
+                (comm_raw - credit).max(0.15 * comm_raw)
+            } else {
+                comm_raw
+            };
+
+            let wall_worker = compute + comm_eff;
+            let per_mb = wall_worker / (n.min(ctx.threads) * ctx.eta);
+            let peak = if zero {
+                // Full gathered params + this worker's 3 sharded states.
+                ctx.psi + 3.0 * ctx.psi / n + act
+            } else {
+                // Full replica: θ, grads, momentum, next-θ.
+                4.0 * ctx.psi + act
+            };
+            Score {
+                per_mb_ns: per_mb,
+                peak_bytes: peak,
+                compute_ns: compute / (n.min(ctx.threads) * ctx.eta),
+                comm_ns: comm_eff / (n.min(ctx.threads) * ctx.eta),
+                bubble: 0.0,
+            }
+        }
+        TrainerKind::Pipeline => {
+            // The pipeline coordinator simulates its devices on one host
+            // thread: host wall = all device work, no parallel speedup.
+            // The bubble is recorded for the table but not charged —
+            // idle simulated devices cost no host time.
+            let m = n; // square schedule: m micro-batches = N devices
+            let compute = ctx.c_serial * f * (ctx.chain_ns + ctx.sgd_ns / m);
+            let hops = 2.0 * (n - 1.0); // fwd act + bwd grad-act per mb
+            let comm = ctx.bytes_ns(hops * ctx.bnd) + hops * ctx.lat;
+            let bubble = if n > 1.0 { (n - 1.0) / (m + n - 1.0) } else { 0.0 };
+            // Per-device: 1/N of the 4 arena buffers, one extra θ version
+            // per device for cyclic rules, plus the activation stash
+            // (GPipe keeps all m in flight, 1F1B caps at (N+1)/2).
+            let versions = if cyclic { 1.0 } else { 0.0 };
+            let stash_factor = if variant == Variant::OneFOneB {
+                (n + 1.0) / 2.0 / n
+            } else {
+                m / n
+            };
+            let peak = (4.0 + versions) * ctx.psi / n + stash_factor * act;
+            Score {
+                per_mb_ns: compute + comm,
+                peak_bytes: peak,
+                compute_ns: compute,
+                comm_ns: comm,
+                bubble,
+            }
+        }
+    }
+}
+
+/// Run the search: enumerate the space, score each candidate against the
+/// profile, rank.  Errors: [`PlanError::EmptySearchSpace`] when the space
+/// or profile is degenerate, [`PlanError::NoFeasiblePlan`] (naming the
+/// cheapest infeasible candidate) when nothing fits `budget_bytes`.
+pub fn search(
+    p: &ModelProfile,
+    budget_bytes: u64,
+    space: &SearchSpace,
+) -> Result<RankedPlans, PlanError> {
+    if space.is_degenerate() || p.layer_costs_ns.is_empty() || p.n_stages() == 0 {
+        return Err(PlanError::EmptySearchSpace);
+    }
+    let ctx = Ctx::new(p);
+    let l = p.layer_costs_ns.len();
+    let mut cands: Vec<Candidate> = Vec::new();
+
+    for &k in &space.stage_counts {
+        if k == 0 || k > l {
+            continue;
+        }
+        let (_, bottleneck) = partition_balanced(&p.layer_costs_ns, k);
+        let lps = if l % k == 0 { (l / k) as u32 } else { 0 };
+        for &prec in &space.precisions {
+            for &trainer in &space.trainers {
+                // (variant, rule, bucket-sensitive) combos per trainer.
+                let combos: Vec<(Variant, Rule, bool)> = match trainer {
+                    TrainerKind::Single => vec![
+                        (Variant::None, Rule::Dp, false),
+                        (Variant::None, Rule::CdpV2, false),
+                    ],
+                    TrainerKind::Multi if k >= 2 => vec![
+                        (Variant::Barrier, Rule::Dp, true),
+                        (Variant::Ring, Rule::CdpV1, true),
+                        (Variant::Ring, Rule::CdpV2, true),
+                    ],
+                    TrainerKind::Zero if k >= 2 => vec![
+                        (Variant::Broadcast, Rule::Dp, true),
+                        (Variant::Cyclic, Rule::CdpV2, true),
+                    ],
+                    TrainerKind::Pipeline if k >= 2 => vec![
+                        (Variant::GPipe, Rule::Dp, false),
+                        (Variant::OneFOneB, Rule::CdpV1, false),
+                    ],
+                    _ => Vec::new(),
+                };
+                for (variant, rule, bucketed) in combos {
+                    let buckets: &[u64] = if bucketed {
+                        &space.bucket_elems
+                    } else {
+                        &space.bucket_elems[..1]
+                    };
+                    for &b in buckets {
+                        let s = score(&ctx, trainer, variant, &rule, k, b, prec);
+                        let plan = Plan {
+                            model: p.model.clone(),
+                            trainer,
+                            rule: rule.clone(),
+                            variant,
+                            n_stages: k as u32,
+                            layers_per_stage: lps,
+                            bucket_elems: b,
+                            precision: prec,
+                            predicted_step_ns: s.per_mb_ns,
+                            predicted_peak_bytes: s.peak_bytes.ceil() as u64,
+                        };
+                        cands.push(Candidate {
+                            feasible: fits_budget(plan.predicted_peak_bytes, budget_bytes),
+                            plan,
+                            compute_ns: s.compute_ns,
+                            comm_ns: s.comm_ns,
+                            bottleneck_ns: bottleneck,
+                            bubble_fraction: s.bubble,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    if cands.is_empty() {
+        return Err(PlanError::EmptySearchSpace);
+    }
+    cands.sort_by(|a, b| {
+        b.feasible
+            .cmp(&a.feasible)
+            .then(a.plan.predicted_step_ns.total_cmp(&b.plan.predicted_step_ns))
+            .then_with(|| a.plan.label().cmp(&b.plan.label()))
+    });
+    if !cands[0].feasible {
+        let cheapest = cands
+            .iter()
+            .min_by_key(|c| c.plan.predicted_peak_bytes)
+            .expect("non-empty");
+        return Err(PlanError::NoFeasiblePlan {
+            budget_bytes,
+            cheapest: cheapest.plan.label(),
+            cheapest_bytes: cheapest.plan.predicted_peak_bytes,
+        });
+    }
+    Ok(RankedPlans { model: p.model.clone(), budget_bytes, candidates: cands })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::StageProfile;
+
+    /// A hand-built profile with explicit compute/comm weights.
+    fn synth(
+        k0: usize,
+        layers: usize,
+        layer_ns: f64,
+        sgd_ns: f64,
+        bnd: u64,
+        psi: u64,
+        bw: f64,
+        lat: f64,
+    ) -> ModelProfile {
+        assert_eq!(layers % k0, 0);
+        let lps = layers / k0;
+        let stages: Vec<StageProfile> = (0..k0)
+            .map(|j| StageProfile {
+                stage: j,
+                fwd_ns: 0.4 * layer_ns * lps as f64,
+                bwd_ns: 0.6 * layer_ns * lps as f64,
+                sgd_ns: sgd_ns / k0 as f64,
+                boundary_bytes: if j + 1 < k0 { bnd } else { 0 },
+                param_bytes: psi / k0 as u64,
+                grad_buckets: 1,
+                grad_bucket_bytes: psi / k0 as u64,
+                act_bytes: bnd,
+            })
+            .collect();
+        ModelProfile {
+            model: "synthetic".into(),
+            stages,
+            microbatch: 8,
+            n_microbatches: k0,
+            psi_p_bytes: psi,
+            peak_act_bytes: bnd * k0 as u64,
+            layer_costs_ns: vec![layer_ns; layers],
+            bw_bytes_per_ns: bw,
+            hop_latency_ns: lat,
+            bf16_step_ratio: 1.0,
+            single_step_ns: 0.0,
+            multi_step_ns: 0.0,
+            host_threads: 8,
+            calib_steps: 2,
+            alloc_per_step: 0,
+        }
+    }
+
+    #[test]
+    fn partition_covers_and_balances() {
+        let (ends, b) = partition_balanced(&[3.0, 1.0, 1.0, 1.0], 2);
+        assert_eq!(ends, vec![1, 4]);
+        assert_eq!(b, 3.0);
+        let (ends, b) = partition_balanced(&[1.0, 1.0, 1.0, 1.0], 2);
+        assert_eq!(*ends.last().unwrap(), 4);
+        assert_eq!(b, 2.0);
+        // k >= n: every layer its own segment.
+        let (ends, b) = partition_balanced(&[2.0, 5.0], 7);
+        assert_eq!(ends, vec![1, 2]);
+        assert_eq!(b, 5.0);
+        // Degenerate inputs.
+        assert_eq!(partition_balanced(&[], 3).0.len(), 0);
+        assert_eq!(partition_balanced(&[1.0], 0).0.len(), 0);
+    }
+
+    #[test]
+    fn partition_matches_brute_force_on_small_cases() {
+        crate::testing::check("partition-optimal", 40, |g| {
+            let n = g.usize_in(2, 7);
+            let k = g.usize_in(1, 3.min(n));
+            let costs: Vec<f64> =
+                (0..n).map(|_| g.f32_in(0.5, 10.0) as f64).collect();
+            let (ends, got) = partition_balanced(&costs, k);
+            assert_eq!(ends.len(), k);
+            assert_eq!(*ends.last().unwrap(), n);
+            for w in ends.windows(2) {
+                assert!(w[0] < w[1], "segments must be non-empty and ordered");
+            }
+            // Brute force: enumerate all cut positions.
+            let mut best = f64::INFINITY;
+            let cuts = k - 1;
+            let mut idx = vec![0usize; cuts];
+            fn rec(
+                costs: &[f64],
+                cuts: usize,
+                start: usize,
+                idx: &mut Vec<usize>,
+                d: usize,
+                best: &mut f64,
+            ) {
+                if d == cuts {
+                    let mut prev = 0usize;
+                    let mut bott = 0.0f64;
+                    for &c in idx.iter() {
+                        let s: f64 = costs[prev..c].iter().sum();
+                        bott = bott.max(s);
+                        prev = c;
+                    }
+                    let s: f64 = costs[prev..].iter().sum();
+                    bott = bott.max(s);
+                    *best = best.min(bott);
+                    return;
+                }
+                for c in start..costs.len() - (cuts - d - 1) {
+                    idx[d] = c;
+                    rec(costs, cuts, c + 1, idx, d + 1, best);
+                }
+            }
+            rec(&costs, cuts, 1, &mut idx, 0, &mut best);
+            assert!(
+                (got - best).abs() < 1e-9 * best.max(1.0),
+                "dp {got} vs brute {best} for {costs:?} k={k}"
+            );
+        });
+    }
+
+    #[test]
+    fn ring_cyclic_beats_barrier_dp_when_comm_dominates() {
+        // Huge gradients over a slow, laggy fabric; trivial compute.
+        let p = synth(4, 8, 1_000.0, 1_000.0, 1 << 10, 64 << 20, 0.05, 5_000.0);
+        let space = SearchSpace::for_profile(&p);
+        let ranked = search(&p, u64::MAX, &space).unwrap();
+        let find = |t: TrainerKind, v: Variant, r: &str| {
+            ranked
+                .candidates
+                .iter()
+                .find(|c| {
+                    c.plan.trainer == t
+                        && c.plan.variant == v
+                        && c.plan.rule.name() == r
+                        && c.plan.n_stages == 4
+                        && c.plan.bucket_elems == space.bucket_elems[0]
+                        && c.plan.precision == Precision::F32
+                })
+                .unwrap()
+        };
+        let ring = find(TrainerKind::Multi, Variant::Ring, "cdp_v2");
+        let barrier = find(TrainerKind::Multi, Variant::Barrier, "dp");
+        assert!(
+            ring.plan.predicted_step_ns < barrier.plan.predicted_step_ns,
+            "cyclic ring {} must beat barrier dp {}",
+            ring.plan.predicted_step_ns,
+            barrier.plan.predicted_step_ns
+        );
+        // Same ordering for ZeRO: cyclic flow beats broadcast.
+        let zc = find(TrainerKind::Zero, Variant::Cyclic, "cdp_v2");
+        let zb = find(TrainerKind::Zero, Variant::Broadcast, "dp");
+        assert!(zc.plan.predicted_step_ns < zb.plan.predicted_step_ns);
+    }
+
+    #[test]
+    fn zero_shards_optimizer_state() {
+        let p = synth(4, 8, 1_000.0, 400.0, 1 << 10, 8 << 20, 10.0, 100.0);
+        let ranked = search(&p, u64::MAX, &SearchSpace::for_profile(&p)).unwrap();
+        let peak = |t: TrainerKind| {
+            ranked
+                .candidates
+                .iter()
+                .filter(|c| c.plan.trainer == t && c.plan.n_stages == 4)
+                .map(|c| c.plan.predicted_peak_bytes)
+                .min()
+                .unwrap()
+        };
+        assert!(
+            peak(TrainerKind::Zero) < peak(TrainerKind::Multi),
+            "ZeRO must shard optimizer state below the full replica"
+        );
+        assert!(
+            peak(TrainerKind::Pipeline) < peak(TrainerKind::Multi),
+            "pipeline devices hold 1/N of the arena"
+        );
+    }
+
+    #[test]
+    fn over_budget_is_a_typed_error_naming_the_cheapest() {
+        let p = synth(2, 4, 1_000.0, 400.0, 1 << 10, 1 << 20, 10.0, 100.0);
+        match search(&p, 1, &SearchSpace::for_profile(&p)) {
+            Err(PlanError::NoFeasiblePlan { budget_bytes, cheapest, cheapest_bytes }) => {
+                assert_eq!(budget_bytes, 1);
+                assert!(!cheapest.is_empty());
+                assert!(cheapest_bytes > 1);
+            }
+            other => panic!("expected NoFeasiblePlan, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn budget_excludes_full_replicas_but_keeps_sharded() {
+        // Budget sized between the sharded and replicated footprints at
+        // k=4: ZeRO/pipeline fit, single/multi (4Ψ) do not.
+        let psi: u64 = 8 << 20;
+        let p = synth(4, 8, 1_000.0, 400.0, 1 << 10, psi, 10.0, 100.0);
+        let budget = 3 * psi; // < 4Ψ, > Ψ(1+3/4)+act and > 5Ψ/4+stash
+        let ranked = search(&p, budget, &SearchSpace::for_profile(&p)).unwrap();
+        let w = ranked.winner();
+        assert!(w.feasible);
+        assert!(
+            matches!(w.plan.trainer, TrainerKind::Zero | TrainerKind::Pipeline),
+            "winner {} must be a sharded trainer under a 3Ψ budget",
+            w.plan.label()
+        );
+        // Infeasible candidates stay in the table, marked.
+        assert!(ranked.candidates.iter().any(|c| !c.feasible));
+    }
+
+    #[test]
+    fn ranked_output_is_renderable_and_json() {
+        let p = synth(2, 4, 1_000.0, 400.0, 1 << 10, 1 << 20, 10.0, 100.0);
+        let ranked = search(&p, u64::MAX, &SearchSpace::for_profile(&p)).unwrap();
+        let table = ranked.render();
+        assert!(table.contains(&ranked.winner().plan.label()));
+        let json = ranked.to_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"winner\":"));
+        assert!(json.contains("\"candidates\":["));
+        // Deterministic: same inputs, same ranking.
+        let again = search(&p, u64::MAX, &SearchSpace::for_profile(&p)).unwrap();
+        let labels: Vec<String> =
+            ranked.candidates.iter().map(|c| c.plan.label()).collect();
+        let labels2: Vec<String> =
+            again.candidates.iter().map(|c| c.plan.label()).collect();
+        assert_eq!(labels, labels2);
+    }
+}

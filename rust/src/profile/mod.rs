@@ -1,0 +1,555 @@
+//! `profile` — measure what [`crate::plan`] predicts.
+//!
+//! [`StageProfiler`] runs a few calibration steps on a [`Backend`]
+//! (in practice the [`NativeBackend`]) and records, per stage:
+//!
+//! - forward / backward / SGD **wall time** (the backward of the loss
+//!   stage fuses its forward, mirroring the `last_bwd` artifact contract,
+//!   so its forward cost is reported inside `bwd_ns` and `fwd_ns` is 0);
+//! - **bytes moved at each stage boundary** (the activation hand-off the
+//!   pipeline trainer puts on the fabric), measured from the real
+//!   [`Activation::bytes`] of each produced activation;
+//! - **gradient bytes per bucket** at the session's bucket size
+//!   ([`crate::comm::bucketed::bucket_elems_from_env`]);
+//! - **peak activation bytes** of one micro-batch chain (the stage-input
+//!   stash that rematerializing backward keeps live).
+//!
+//! On top of the per-stage pass it calibrates the constants the planner's
+//! analytic cost model needs (DESIGN-PERF.md §Auto-planner):
+//!
+//! - fabric **bandwidth** and **per-hop latency** from a two-endpoint
+//!   [`Fabric`] probe (the same [`crate::comm::CommStats`]-counted
+//!   machinery the benches use);
+//! - the **bf16 step ratio** (bf16 chain time / f32 chain time);
+//! - measured **single-trainer** and **multi-ring** step wall times, so
+//!   thread-parallel candidates are scored against observed — not ideal —
+//!   parallel efficiency;
+//! - steady-state **allocations per step** via
+//!   [`crate::testing::instrument::alloc_delta`] (non-zero only in
+//!   binaries that install the counting allocator).
+//!
+//! Everything here is measurement; the search/scoring lives in
+//! [`crate::plan`].
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::comm::bucketed::{bucket_elems_from_env, effective_bucket_elems};
+use crate::comm::{tags, Fabric};
+use crate::coordinator::{multi, single::RefTrainer, SharedBackend};
+use crate::data::{DataSource, MicroBatch};
+use crate::parallel::arena::ArenaLayout;
+use crate::parallel::Rule;
+use crate::runtime::{Activation, Backend, ExecMode, NativeBackend, NativeMlpConfig, Precision};
+use crate::tensor::HostTensor;
+use crate::testing::instrument;
+
+/// Per-stage measured costs (means over the calibration steps, warm-up
+/// step excluded).
+#[derive(Clone, Debug)]
+pub struct StageProfile {
+    /// Stage index.
+    pub stage: usize,
+    /// Mean forward wall time per micro-batch, ns (0 for the loss stage —
+    /// its forward is fused into `bwd_ns`).
+    pub fwd_ns: f64,
+    /// Mean backward wall time per micro-batch, ns.
+    pub bwd_ns: f64,
+    /// Mean fused-SGD wall time for this stage's parameter run, ns.
+    pub sgd_ns: f64,
+    /// Activation bytes leaving this stage (0 for the last stage).
+    pub boundary_bytes: u64,
+    /// Parameter bytes of this stage's arena run.
+    pub param_bytes: u64,
+    /// Gradient buckets at the profiled bucket size.
+    pub grad_buckets: usize,
+    /// Bytes per (full) gradient bucket.
+    pub grad_bucket_bytes: u64,
+    /// Manifest's analytic activation bytes (for cross-checks).
+    pub act_bytes: u64,
+}
+
+/// The complete calibration record the planner consumes.  All fields are
+/// public so tests can construct synthetic profiles directly.
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    /// Human-readable model label.
+    pub model: String,
+    /// Per-stage measurements, stage-ordered.
+    pub stages: Vec<StageProfile>,
+    /// Micro-batch size b.
+    pub microbatch: usize,
+    /// Micro-batches per step (N of the square schedule).
+    pub n_microbatches: usize,
+    /// Total parameter bytes Ψ_P.
+    pub psi_p_bytes: u64,
+    /// Measured peak live activation bytes of one micro-batch chain.
+    pub peak_act_bytes: u64,
+    /// Per-layer fwd+bwd cost, contiguous layer order — the partition
+    /// search's input.  For backends without sub-stage visibility this is
+    /// one entry per stage; [`StageProfiler::profile_native`] refines it
+    /// to residual-layer granularity.
+    pub layer_costs_ns: Vec<f64>,
+    /// Fabric bandwidth, bytes per ns (0.0 = not probed).
+    pub bw_bytes_per_ns: f64,
+    /// Fabric per-hop latency, ns.
+    pub hop_latency_ns: f64,
+    /// bf16 chain time / f32 chain time (1.0 = not measured).
+    pub bf16_step_ratio: f64,
+    /// Measured single-trainer step wall time, ns (0.0 = not measured).
+    pub single_step_ns: f64,
+    /// Measured multi-ring step wall time at the profiled stage count, ns
+    /// (0.0 = not measured).
+    pub multi_step_ns: f64,
+    /// Host hardware parallelism the multi/zero trainers can draw on.
+    pub host_threads: usize,
+    /// Calibration steps run (first is warm-up, excluded from means).
+    pub calib_steps: usize,
+    /// Heap allocations per calibration chain (0 unless the binary
+    /// installs [`instrument::CountingAlloc`]).
+    pub alloc_per_step: u64,
+}
+
+impl ModelProfile {
+    /// Stage count of the profiled partition.
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Σ forward ns of one micro-batch chain.
+    pub fn fwd_total_ns(&self) -> f64 {
+        self.stages.iter().map(|s| s.fwd_ns).sum()
+    }
+
+    /// Σ backward ns of one micro-batch chain.
+    pub fn bwd_total_ns(&self) -> f64 {
+        self.stages.iter().map(|s| s.bwd_ns).sum()
+    }
+
+    /// Σ fused-SGD ns of one full update.
+    pub fn sgd_total_ns(&self) -> f64 {
+        self.stages.iter().map(|s| s.sgd_ns).sum()
+    }
+
+    /// One micro-batch's full fwd+bwd chain, ns.
+    pub fn chain_ns(&self) -> f64 {
+        self.fwd_total_ns() + self.bwd_total_ns()
+    }
+
+    /// Mean activation bytes crossing one stage boundary.
+    pub fn mean_boundary_bytes(&self) -> u64 {
+        let cuts: Vec<u64> = self
+            .stages
+            .iter()
+            .filter(|s| s.boundary_bytes > 0)
+            .map(|s| s.boundary_bytes)
+            .collect();
+        if cuts.is_empty() {
+            0
+        } else {
+            cuts.iter().sum::<u64>() / cuts.len() as u64
+        }
+    }
+
+    /// Human-readable per-stage table (for `--plan auto` logging).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "profile of {} ({} stages, {} mb/step, Ψ_P {} B, peak act {} B, \
+             bw {:.3} B/ns, hop {:.0} ns, bf16 ratio {:.2})\n",
+            self.model,
+            self.n_stages(),
+            self.n_microbatches,
+            self.psi_p_bytes,
+            self.peak_act_bytes,
+            self.bw_bytes_per_ns,
+            self.hop_latency_ns,
+            self.bf16_step_ratio,
+        ));
+        out.push_str("stage |    fwd ns |    bwd ns |    sgd ns | boundary B |  param B | buckets\n");
+        for s in &self.stages {
+            out.push_str(&format!(
+                "{:5} | {:9.0} | {:9.0} | {:9.0} | {:10} | {:8} | {:7}\n",
+                s.stage,
+                s.fwd_ns,
+                s.bwd_ns,
+                s.sgd_ns,
+                s.boundary_bytes,
+                s.param_bytes,
+                s.grad_buckets
+            ));
+        }
+        out
+    }
+}
+
+/// Options for a profiling pass.
+#[derive(Clone, Copy, Debug)]
+pub struct ProfileOpts {
+    /// Calibration steps; the first is a warm-up excluded from means.
+    pub calib_steps: usize,
+    /// Probe fabric bandwidth/latency (small constant cost).
+    pub probe_fabric: bool,
+    /// Also measure bf16 and trainer-level wall times (native only).
+    pub calibrate_trainers: bool,
+}
+
+impl Default for ProfileOpts {
+    fn default() -> Self {
+        Self { calib_steps: 3, probe_fabric: true, calibrate_trainers: true }
+    }
+}
+
+/// The profiling pass.  See the module docs for what is measured.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageProfiler {
+    /// Pass options.
+    pub opts: ProfileOpts,
+}
+
+/// Raw per-chain accumulators of [`StageProfiler::run_chain`].
+struct ChainRecord {
+    fwd_ns: Vec<f64>,
+    bwd_ns: Vec<f64>,
+    sgd_ns: Vec<f64>,
+    boundary_bytes: Vec<u64>,
+    peak_act_bytes: u64,
+    total_ns: f64,
+    allocs: u64,
+}
+
+impl StageProfiler {
+    /// A profiler with explicit options.
+    pub fn new(opts: ProfileOpts) -> Self {
+        Self { opts }
+    }
+
+    /// Profile any backend at its manifest's stage granularity.
+    pub fn profile<B: Backend>(&self, rt: &B) -> Result<ModelProfile> {
+        // Pool spawn + kernel-mode resolution happen before any timed
+        // window (DESIGN-PERF.md §Zero-alloc windowing).
+        crate::util::par::warm();
+        std::hint::black_box(crate::tensor::ops::kernel_mode());
+
+        let m = rt.manifest();
+        let n = m.n_stages;
+        let layout = ArenaLayout::from_manifest(m);
+        let bucket = bucket_elems_from_env();
+        let steps = self.opts.calib_steps.max(1);
+
+        let mut records: Vec<ChainRecord> = Vec::with_capacity(steps);
+        for s in 0..steps {
+            records.push(self.run_chain(rt, &layout, s as u64)?);
+        }
+        // Warm-up exclusion: with >1 steps, drop the first record.
+        let kept: &[ChainRecord] = if records.len() > 1 { &records[1..] } else { &records };
+        let kn = kept.len() as f64;
+
+        let mut stages = Vec::with_capacity(n);
+        for j in 0..n {
+            let be = effective_bucket_elems(bucket, layout.stage_len(j));
+            stages.push(StageProfile {
+                stage: j,
+                fwd_ns: kept.iter().map(|r| r.fwd_ns[j]).sum::<f64>() / kn,
+                bwd_ns: kept.iter().map(|r| r.bwd_ns[j]).sum::<f64>() / kn,
+                sgd_ns: kept.iter().map(|r| r.sgd_ns[j]).sum::<f64>() / kn,
+                boundary_bytes: kept[0].boundary_bytes[j],
+                param_bytes: 4 * layout.stage_len(j) as u64,
+                grad_buckets: layout.n_buckets(j, be),
+                grad_bucket_bytes: 4 * be as u64,
+                act_bytes: m.stages[j].act_bytes,
+            });
+        }
+        let layer_costs_ns: Vec<f64> =
+            stages.iter().map(|s| s.fwd_ns + s.bwd_ns).collect();
+        let (bw, lat) = if self.opts.probe_fabric {
+            probe_fabric()?
+        } else {
+            (0.0, 0.0)
+        };
+        Ok(ModelProfile {
+            model: m.name.clone(),
+            stages,
+            microbatch: m.target.shape[0],
+            n_microbatches: m.n_microbatches,
+            psi_p_bytes: m.psi_p_bytes(),
+            peak_act_bytes: kept[0].peak_act_bytes,
+            layer_costs_ns,
+            bw_bytes_per_ns: bw,
+            hop_latency_ns: lat,
+            bf16_step_ratio: 1.0,
+            single_step_ns: 0.0,
+            multi_step_ns: 0.0,
+            host_threads: host_threads(),
+            calib_steps: steps,
+            alloc_per_step: kept.iter().map(|r| r.allocs).sum::<u64>() / kept.len() as u64,
+        })
+    }
+
+    /// Profile a synthetic native MLP, refining the generic pass with
+    /// residual-layer cost granularity, the bf16 ratio, and measured
+    /// single/multi trainer step times (the parallel-efficiency
+    /// calibration the planner's thread-parallel candidates use).
+    pub fn profile_native(&self, cfg: &NativeMlpConfig) -> Result<ModelProfile> {
+        let rt = NativeBackend::synthetic(*cfg);
+        let mut p = self.profile(&rt)?;
+        p.model = format!(
+            "native_mlp[h{} {}x{} mb{}]",
+            cfg.hidden, cfg.n_stages, cfg.layers_per_stage, cfg.microbatch
+        );
+
+        // Per-layer costs: split each stage's chain cost evenly over its
+        // residual layers (the stage-0 prologue and loss head stay folded
+        // into their stage's layers — the partition search only needs
+        // relative weights).
+        let lps = cfg.layers_per_stage.max(1);
+        p.layer_costs_ns = p
+            .stages
+            .iter()
+            .flat_map(|s| {
+                let share = (s.fwd_ns + s.bwd_ns) / lps as f64;
+                std::iter::repeat_n(share, lps)
+            })
+            .collect();
+
+        if self.opts.calibrate_trainers {
+            // bf16 ratio: one chain on a bf16 twin, against the mean f32
+            // chain time from the main pass.
+            let rt16 = NativeBackend::synthetic(*cfg).with_precision(Precision::Bf16);
+            let layout16 = ArenaLayout::from_manifest(rt16.manifest());
+            self.run_chain(&rt16, &layout16, 0)?; // warm bf16 scratch
+            let r16 = self.run_chain(&rt16, &layout16, 1)?;
+            let f32_chain = p.chain_ns() + p.sgd_total_ns();
+            if f32_chain > 0.0 && r16.total_ns > 0.0 {
+                p.bf16_step_ratio = (r16.total_ns / f32_chain).clamp(0.25, 4.0);
+            }
+
+            // Trainer-level wall times (3 steps each, first not excluded:
+            // thread spawn is part of what the multi trainer costs here).
+            let calib_steps = 3usize;
+            let mut single = RefTrainer::new(&rt, Rule::Dp)?;
+            single.train(1)?; // warm
+            let t0 = Instant::now();
+            single.train(calib_steps)?;
+            p.single_step_ns = t0.elapsed().as_nanos() as f64 / calib_steps as f64;
+
+            let shared = SharedBackend(Arc::new(NativeBackend::synthetic(*cfg)));
+            let t0 = Instant::now();
+            multi::train(shared, Rule::CdpV2, multi::CommPattern::Ring, calib_steps)?;
+            p.multi_step_ns = t0.elapsed().as_nanos() as f64 / calib_steps as f64;
+        }
+        Ok(p)
+    }
+
+    /// One calibration chain: a single micro-batch's fwd+bwd over every
+    /// stage plus a full fused-SGD sweep, each call individually timed.
+    /// Mirrors `RefTrainer::run_microbatch` (the θ-version argument is the
+    /// step counter — the native backend is stateless in it).
+    fn run_chain<B: Backend>(
+        &self,
+        rt: &B,
+        layout: &ArenaLayout,
+        step: u64,
+    ) -> Result<ChainRecord> {
+        let m = rt.manifest();
+        let n = m.n_stages;
+        let data = DataSource::from_manifest(m);
+        let flat = rt.init_params_flat()?;
+        let mut exec = rt.executor(ExecMode::HostLiteral);
+        let mut gop = layout.zeros_aligned();
+        let mut moms = layout.zeros_aligned();
+        let mut next = layout.zeros_aligned();
+
+        let mut rec = ChainRecord {
+            fwd_ns: vec![0.0; n],
+            bwd_ns: vec![0.0; n],
+            sgd_ns: vec![0.0; n],
+            boundary_bytes: vec![0; n],
+            peak_act_bytes: 0,
+            total_ns: 0.0,
+            allocs: 0,
+        };
+
+        let mb = data.microbatch(step, step % m.n_microbatches.max(1) as u64);
+        let (x0, targets) = match mb {
+            MicroBatch::Lm { tokens, targets } => (HostTensor::I32(tokens), targets),
+            MicroBatch::Class { x, labels } => (HostTensor::F32(x), labels),
+        };
+
+        let alloc_before = instrument::alloc_count();
+        let chain_t0 = Instant::now();
+
+        // Forward chain, stashing stage inputs (the remat unit); peak
+        // live bytes = Σ stashed inputs + the activation in flight.
+        let mut acts: Vec<B::Act> = Vec::with_capacity(n);
+        acts.push(rt.input(&mut exec, x0)?);
+        let mut live: u64 = acts[0].bytes() as u64;
+        rec.peak_act_bytes = live;
+        for j in 0..n - 1 {
+            let t0 = Instant::now();
+            let y = rt.fwd(&mut exec, j, step, &flat[layout.stage_range(j)], &acts[j])?;
+            rec.fwd_ns[j] = t0.elapsed().as_nanos() as f64;
+            rec.boundary_bytes[j] = y.bytes() as u64;
+            live += y.bytes() as u64;
+            rec.peak_act_bytes = rec.peak_act_bytes.max(live);
+            acts.push(y);
+        }
+
+        // Backward chain (loss stage fuses its forward).
+        let last = n - 1;
+        let t0 = Instant::now();
+        let (loss, mut gx) = rt.last_bwd(
+            &mut exec,
+            step,
+            &flat[layout.stage_range(last)],
+            &acts[last],
+            &targets,
+            &mut gop[layout.stage_range(last)],
+        )?;
+        rec.bwd_ns[last] = t0.elapsed().as_nanos() as f64;
+        std::hint::black_box(loss);
+        for j in (1..last).rev() {
+            let t0 = Instant::now();
+            gx = rt.mid_bwd(
+                &mut exec,
+                j,
+                step,
+                &flat[layout.stage_range(j)],
+                &acts[j],
+                &gx,
+                &mut gop[layout.stage_range(j)],
+            )?;
+            rec.bwd_ns[j] = t0.elapsed().as_nanos() as f64;
+        }
+        if n > 1 {
+            let t0 = Instant::now();
+            rt.first_bwd(
+                &mut exec,
+                step,
+                &flat[layout.stage_range(0)],
+                &acts[0],
+                &gx,
+                &mut gop[layout.stage_range(0)],
+            )?;
+            rec.bwd_ns[0] = t0.elapsed().as_nanos() as f64;
+        }
+
+        // Fused SGD per stage.
+        for j in 0..n {
+            let r = layout.stage_range(j);
+            let t0 = Instant::now();
+            rt.sgd(
+                &mut exec,
+                j,
+                step,
+                &flat[r.clone()],
+                &mut moms[r.clone()],
+                &gop[r.clone()],
+                m.lr,
+                &mut next[r],
+            )?;
+            rec.sgd_ns[j] = t0.elapsed().as_nanos() as f64;
+        }
+
+        rec.total_ns = chain_t0.elapsed().as_nanos() as f64;
+        rec.allocs = instrument::alloc_count() - alloc_before;
+        Ok(rec)
+    }
+}
+
+/// Host hardware parallelism (≥ 1).
+fn host_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Probe the in-process fabric: `(bytes_per_ns, per_hop_latency_ns)`.
+///
+/// Bandwidth from repeated 1 MiB send+recv pairs, latency from tiny
+/// payloads — both over a two-endpoint [`Fabric`] whose [`CommStats`]
+/// count the moved bytes, exactly like the trainers' fabrics.
+///
+/// [`CommStats`]: crate::comm::CommStats
+pub fn probe_fabric() -> Result<(f64, f64)> {
+    const BIG_ELEMS: usize = 262_144; // 1 MiB of f32
+    const BIG_ITERS: u64 = 8;
+    const SMALL_ITERS: u64 = 64;
+
+    let (mut eps, stats) = Fabric::new(2);
+    let mut e1 = eps.pop().expect("two endpoints");
+    let e0 = eps.pop().expect("two endpoints");
+
+    let big = vec![1.0f32; BIG_ELEMS];
+    e0.send_copy(1, tags::grad(0, 0), &big)?;
+    std::hint::black_box(e1.recv(0, tags::grad(0, 0))?);
+
+    let t0 = Instant::now();
+    for t in 1..=BIG_ITERS {
+        e0.send_copy(1, tags::grad(t, 0), &big)?;
+        std::hint::black_box(e1.recv(0, tags::grad(t, 0))?);
+    }
+    let big_ns = t0.elapsed().as_nanos() as f64;
+    let bw = (BIG_ITERS as f64 * BIG_ELEMS as f64 * 4.0) / big_ns.max(1.0);
+
+    let small = [1.0f32; 1];
+    let t0 = Instant::now();
+    for t in 1..=SMALL_ITERS {
+        e0.send_copy(1, tags::param(t, 0), &small)?;
+        std::hint::black_box(e1.recv(0, tags::param(t, 0))?);
+    }
+    let lat = t0.elapsed().as_nanos() as f64 / SMALL_ITERS as f64;
+
+    debug_assert!(stats.bytes() > 0, "probe bytes must be counted");
+    Ok((bw, lat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_tiny_native_mlp() {
+        let profiler = StageProfiler::new(ProfileOpts {
+            calib_steps: 2,
+            probe_fabric: false,
+            calibrate_trainers: false,
+        });
+        let rt = NativeBackend::synthetic(NativeMlpConfig::tiny());
+        let p = profiler.profile(&rt).unwrap();
+        assert_eq!(p.n_stages(), 2);
+        assert!(p.chain_ns() > 0.0, "chain must take time");
+        assert!(p.sgd_total_ns() > 0.0);
+        // Loss stage's forward is fused into its backward.
+        assert_eq!(p.stages[1].fwd_ns, 0.0);
+        assert!(p.stages[1].bwd_ns > 0.0);
+        // Boundary bytes: stage 0 hands mb×hidden f32 to stage 1.
+        assert_eq!(p.stages[0].boundary_bytes, 2 * 6 * 4);
+        assert_eq!(p.stages[1].boundary_bytes, 0);
+        assert!(p.peak_act_bytes >= p.stages[0].boundary_bytes);
+        assert_eq!(p.psi_p_bytes, rt.manifest.psi_p_bytes());
+        assert!(p.stages.iter().all(|s| s.grad_buckets >= 1));
+        assert_eq!(p.layer_costs_ns.len(), 2);
+    }
+
+    #[test]
+    fn native_profile_refines_layers() {
+        let profiler = StageProfiler::new(ProfileOpts {
+            calib_steps: 2,
+            probe_fabric: false,
+            calibrate_trainers: false,
+        });
+        let cfg = NativeMlpConfig { layers_per_stage: 2, ..NativeMlpConfig::tiny() };
+        let p = profiler.profile_native(&cfg).unwrap();
+        assert_eq!(p.layer_costs_ns.len(), cfg.n_stages * cfg.layers_per_stage);
+        let sum: f64 = p.layer_costs_ns.iter().sum();
+        assert!((sum - p.chain_ns()).abs() < 1e-6 * sum.max(1.0));
+    }
+
+    #[test]
+    fn fabric_probe_yields_positive_calibration() {
+        let (bw, lat) = probe_fabric().unwrap();
+        assert!(bw > 0.0);
+        assert!(lat > 0.0);
+    }
+}

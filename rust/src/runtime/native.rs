@@ -133,6 +133,31 @@ impl NativeMlpConfig {
             ..Self::default()
         }
     }
+
+    /// Planner-bench shape: deep and narrow (16 residual layers of width
+    /// 32) — per-layer compute is small relative to the stage hand-offs,
+    /// so partition/schedule choice dominates.
+    pub fn deep_narrow() -> Self {
+        Self {
+            hidden: 32,
+            layers_per_stage: 4,
+            n_stages: 4,
+            microbatch: 4,
+            ..Self::default()
+        }
+    }
+
+    /// Planner-bench shape: shallow and wide (2 residual layers of width
+    /// 256, fat micro-batches) — compute-dominated, few useful cuts.
+    pub fn shallow_wide() -> Self {
+        Self {
+            hidden: 256,
+            layers_per_stage: 1,
+            n_stages: 2,
+            microbatch: 16,
+            ..Self::default()
+        }
+    }
 }
 
 /// Per-trainer execution state of the native backend.  The native path
@@ -156,6 +181,9 @@ pub struct NativeBackend {
     init: Vec<f32>,
     /// Storage precision of the compute path (f32 master state either way).
     precision: Precision,
+    /// The synthetic config this bundle was built from (`None` for
+    /// on-disk bundles, whose stage graphs cannot be re-cut).
+    cfg: Option<NativeMlpConfig>,
 }
 
 impl NativeBackend {
@@ -174,7 +202,7 @@ impl NativeBackend {
             init.len(),
             manifest.total_param_elems
         );
-        Ok(Self { manifest, layout, shape, init, precision: Precision::default() })
+        Ok(Self { manifest, layout, shape, init, precision: Precision::default(), cfg: None })
     }
 
     /// Build a fully in-memory mlp bundle: manifest synthesized from
@@ -188,7 +216,40 @@ impl NativeBackend {
             classes: cfg.classes,
         };
         let init = init_params(&manifest, cfg.param_seed);
-        Self { manifest, layout, shape, init, precision: Precision::default() }
+        Self { manifest, layout, shape, init, precision: Precision::default(), cfg: Some(cfg) }
+    }
+
+    /// The synthetic config this backend was built from, when it has one.
+    pub fn synthetic_config(&self) -> Option<NativeMlpConfig> {
+        self.cfg
+    }
+
+    /// Rebuild this synthetic bundle cut into `k` stages, preserving the
+    /// total residual layer count (`k` must divide it) and the precision.
+    /// The planner's partition dimension executes through here.  On-disk
+    /// bundles cannot be re-cut — their stage graphs are baked into the
+    /// compiled artifacts — so they error.
+    pub fn repartitioned(&self, k: usize) -> Result<Self> {
+        let cfg = self.cfg.ok_or_else(|| {
+            anyhow::anyhow!(
+                "cannot repartition bundle `{}`: its stage graph is baked into \
+                 on-disk artifacts; only synthetic native bundles support plan \
+                 repartitioning",
+                self.manifest.name
+            )
+        })?;
+        let total = cfg.n_stages * cfg.layers_per_stage;
+        anyhow::ensure!(
+            k >= 1 && total % k == 0,
+            "stage count {k} does not divide the {total} residual layers"
+        );
+        let recut = NativeMlpConfig {
+            n_stages: k,
+            layers_per_stage: total / k,
+            n_microbatches: 0, // follow k: the square schedule
+            ..cfg
+        };
+        Ok(Self::synthetic(recut).with_precision(self.precision))
     }
 
     /// The default synthetic bundle (`native_mlp`).
@@ -205,11 +266,14 @@ impl NativeBackend {
         }
         match name {
             "mlp" | "native_mlp" => Ok(Self::default_mlp()),
+            "deep_narrow" => Ok(Self::synthetic(NativeMlpConfig::deep_narrow())),
+            "shallow_wide" => Ok(Self::synthetic(NativeMlpConfig::shallow_wide())),
             other => anyhow::bail!(
                 "bundle `{other}` not found under {:?} and has no synthetic \
                  fallback — the native backend executes the mlp family only \
-                 (`mlp`, `native_mlp`); transformer/convnet bundles need \
-                 `--features xla` + `make artifacts`",
+                 (`mlp`, `native_mlp`, `deep_narrow`, `shallow_wide`); \
+                 transformer/convnet bundles need `--features xla` + \
+                 `make artifacts`",
                 crate::model::artifacts_root()
             ),
         }
@@ -832,6 +896,21 @@ mod tests {
         assert_eq!(nb.stage_shape(0), (true, 2, false));
         assert_eq!(nb.stage_shape(3), (false, 2, true));
         assert!(m.psi_p_bytes() > 0 && m.b_psi_a_bytes() > 0);
+    }
+
+    #[test]
+    fn repartitioned_preserves_totals() {
+        let nb = NativeBackend::synthetic(NativeMlpConfig::deep_narrow());
+        assert_eq!(nb.synthetic_config().unwrap().n_stages, 4);
+        let re = nb.repartitioned(8).unwrap(); // 16 residual layers → 8×2
+        assert_eq!(re.manifest.n_stages, 8);
+        assert_eq!(re.manifest.n_microbatches, 8);
+        assert_eq!(re.manifest.total_param_elems, nb.manifest.total_param_elems);
+        assert!(validate_mlp(&re.manifest).is_ok());
+        assert!(nb.repartitioned(5).is_err(), "5 does not divide 16");
+        let one = nb.repartitioned(1).unwrap();
+        assert_eq!(one.manifest.n_stages, 1);
+        assert!(validate_mlp(&one.manifest).is_ok());
     }
 
     #[test]

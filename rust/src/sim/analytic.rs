@@ -18,8 +18,9 @@ pub struct Table1Row {
     pub comm_psi_p: f64,
     /// … plus this many units of B·Ψ_A^int.
     pub comm_psi_a_int: f64,
-    /// Max communication steps between two time steps (log N ≡ f64 for
-    /// display; O(1) = 1).
+    /// Max communication steps between two time steps.  O(1) rows are
+    /// uniformly `1.0`; log-N rows carry the *unclamped* `log₂ N`, so the
+    /// degenerate cases stay honest (`0.0` at N=1, `1.0` at N=2).
     pub max_comm_steps: f64,
     pub n_gpus: f64,
     pub rule: &'static str,
@@ -28,7 +29,10 @@ pub struct Table1Row {
 /// All rows of Table 1 for a given N.
 pub fn table1_rows(n: usize) -> Vec<Table1Row> {
     let nf = n as f64;
-    let logn = (nf).log2().max(1.0);
+    // Honest log₂N: 0.0 at N=1 (no peers, no comm rounds), 1.0 at N=2.
+    // The old `.max(1.0)` clamp erased the N=1/N=2 distinction and made
+    // log-N rows indistinguishable from O(1) rows at small N.
+    let logn = nf.log2();
     vec![
         Table1Row {
             implementation: "Single-GPU DP",
@@ -37,7 +41,7 @@ pub fn table1_rows(n: usize) -> Vec<Table1Row> {
             param_mem: 1.0,
             comm_psi_p: 0.0,
             comm_psi_a_int: 0.0,
-            max_comm_steps: 0.0,
+            max_comm_steps: 1.0,
             n_gpus: 1.0,
             rule: "DP",
         },
@@ -48,7 +52,7 @@ pub fn table1_rows(n: usize) -> Vec<Table1Row> {
             param_mem: 1.0,
             comm_psi_p: 0.0,
             comm_psi_a_int: 0.0,
-            max_comm_steps: 0.0,
+            max_comm_steps: 1.0,
             n_gpus: 1.0,
             rule: "CDP",
         },
@@ -182,6 +186,39 @@ mod tests {
             );
             assert_eq!(get("ZeRO-DP + Cyclic").max_comm_steps, 1.0);
         }
+    }
+
+    #[test]
+    fn degenerate_n_rows_are_pinned() {
+        // Every row's max_comm_steps at N = 1, 2, 8.  O(1) rows are
+        // uniformly 1.0 at every N; log-N rows are the unclamped log₂N:
+        // 0.0 / 1.0 / 3.0.  This pins the fix for the old `.max(1.0)`
+        // clamp that hid the N=1 and N=2 distinctions.
+        for (n, logn) in [(1usize, 0.0f64), (2, 1.0), (8, 3.0)] {
+            let rows = table1_rows(n);
+            assert_eq!(rows.len(), 9, "row count at N={n}");
+            for r in &rows {
+                let expect = match r.implementation {
+                    // Log-N rows: synchronized reductions.
+                    "Multi-GPU DP" | "DP with MP" | "ZeRO-DP" => logn,
+                    // Everything else is O(1) per time step.
+                    _ => 1.0,
+                };
+                assert_eq!(
+                    r.max_comm_steps, expect,
+                    "{} at N={n}: got {} want {expect}",
+                    r.implementation, r.max_comm_steps
+                );
+            }
+        }
+        // Degenerate N=1 sanity for the other columns: one micro-batch,
+        // one device, nothing to communicate, triangular count collapses.
+        let rows = table1_rows(1);
+        let get = |name: &str| rows.iter().find(|r| r.implementation == name).unwrap();
+        assert_eq!(get("Single-GPU DP").act_mem, 1.0);
+        assert_eq!(get("Single-GPU + Cyclic").act_mem, 1.0);
+        assert_eq!(get("DP with MP + Cyclic").n_gpus, 1.0);
+        assert_eq!(get("Multi-GPU DP").n_gpus, 1.0);
     }
 
     #[test]

@@ -1,0 +1,135 @@
+//! Shared measurement instrumentation, promoted out of `benches/hotpath.rs`
+//! so the profiler ([`crate::profile`]), the benches and the tests use one
+//! implementation (ISSUE 9 satellite):
+//!
+//! - [`CountingAlloc`] — a counting [`GlobalAlloc`] wrapper around
+//!   [`System`].  A `#[global_allocator]` can only be *declared* in the
+//!   final binary, so each bench keeps its one-line declaration
+//!   (`#[global_allocator] static GLOBAL: CountingAlloc = CountingAlloc;`)
+//!   and everything else — the counter, [`alloc_count`], the
+//!   [`alloc_delta`] window helper — lives here.  In a binary that does
+//!   not install the allocator the counter simply stays at zero, so
+//!   library code (the profiler) can record deltas unconditionally.
+//! - [`OverlapDigest`] — the comm/backward overlap digest the hotpath and
+//!   wire benches both derive from a [`CommStats`] timeline: the first
+//!   eager gradient send must precede the last backward-stage completion.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::comm::{CommStats, EventKind, TimelineEvent};
+
+/// Global allocation counter behind [`CountingAlloc`].  One per process;
+/// shared by every window so deltas compose.
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Counting allocator: forwards to [`System`], bumping [`ALLOCS`] on every
+/// `alloc` / `realloc` / `alloc_zeroed` (frees are not counted — the
+/// benches prove *allocation-free* steady states, not leak-free ones).
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Total allocations observed so far (0 unless the binary installed
+/// [`CountingAlloc`] as its `#[global_allocator]`).
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Run `f` and return `(result, allocations performed inside it)`.
+pub fn alloc_delta<R>(f: impl FnOnce() -> R) -> (R, u64) {
+    let before = alloc_count();
+    let r = f();
+    (r, alloc_count() - before)
+}
+
+/// The eager-overlap digest: when did gradient reduction start relative
+/// to the end of the backward pass?  `first_grad_send_ns <
+/// last_bwd_done_ns` is the paper's comm/backprop overlap property.
+#[derive(Clone, Copy, Debug)]
+pub struct OverlapDigest {
+    /// Timestamp (ns, timeline clock) of the first `GradSend` event.
+    pub first_grad_send_ns: u64,
+    /// Timestamp of the last `BwdStageDone` event.
+    pub last_bwd_done_ns: u64,
+}
+
+impl OverlapDigest {
+    /// True iff reduction started before the last backward completed.
+    pub fn overlapped(&self) -> bool {
+        self.first_grad_send_ns < self.last_bwd_done_ns
+    }
+}
+
+/// Digest from a [`CommStats`] with its timeline enabled; `None` when
+/// either event kind was never recorded.
+pub fn overlap_from_stats(stats: &CommStats) -> Option<OverlapDigest> {
+    Some(OverlapDigest {
+        first_grad_send_ns: stats.first_ns(EventKind::GradSend)?,
+        last_bwd_done_ns: stats.last_ns(EventKind::BwdStageDone)?,
+    })
+}
+
+/// Digest from a raw event slice (e.g. a report's captured timeline).
+pub fn overlap_from_events(events: &[TimelineEvent]) -> Option<OverlapDigest> {
+    let first = events
+        .iter()
+        .filter(|e| e.kind == EventKind::GradSend)
+        .map(|e| e.ns)
+        .min()?;
+    let last = events
+        .iter()
+        .filter(|e| e.kind == EventKind::BwdStageDone)
+        .map(|e| e.ns)
+        .max()?;
+    Some(OverlapDigest { first_grad_send_ns: first, last_bwd_done_ns: last })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_delta_composes_and_is_monotone() {
+        // The library test binary does not install CountingAlloc, so the
+        // counter is constant — but the window algebra must still hold.
+        let (v, d1) = alloc_delta(|| vec![1u8; 64]);
+        assert_eq!(v.len(), 64);
+        let (_, d2) = alloc_delta(|| ());
+        assert!(d2 <= d1 + alloc_count());
+    }
+
+    #[test]
+    fn overlap_digest_from_events() {
+        let ev = |kind, ns| TimelineEvent { ns, kind, worker: 0, stage: 0, bytes: 0 };
+        let events = vec![
+            ev(EventKind::BwdStageDone, 10),
+            ev(EventKind::GradSend, 12),
+            ev(EventKind::BwdStageDone, 20),
+        ];
+        let d = overlap_from_events(&events).unwrap();
+        assert_eq!(d.first_grad_send_ns, 12);
+        assert_eq!(d.last_bwd_done_ns, 20);
+        assert!(d.overlapped());
+        assert!(overlap_from_events(&[]).is_none());
+    }
+}

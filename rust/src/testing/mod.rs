@@ -4,6 +4,11 @@
 //! inputs drawn through the [`Gen`] handle.  On failure it re-raises with
 //! the offending case index and seed so the case can be replayed with
 //! `Gen::replay`.  No shrinking — cases are kept small instead.
+//!
+//! [`instrument`] holds the shared measurement plumbing (counting
+//! allocator, comm-overlap digests) used by the benches and the profiler.
+
+pub mod instrument;
 
 use crate::util::rng::XorShift64Star;
 

@@ -1,0 +1,223 @@
+//! Auto-planner integration tests (`cargo test -q planner`):
+//!
+//! - the search's schedule ordering agrees with `sim::analytic`'s Table 1
+//!   on regimes where the table is unambiguous (latency-dominated comm,
+//!   k ≥ 4: O(1) cyclic rows must outrank log-N DP rows);
+//! - a searched [`Plan`] round-trips bit-exactly through its file format;
+//! - an over-budget search fails with the typed error naming the cheapest
+//!   infeasible candidate;
+//! - the winning plan executes end-to-end through
+//!   [`cyclic_dp::coordinator::execute_plan`] on a repartitioned native
+//!   backend, and a mismatched backend is refused.
+
+use std::sync::Arc;
+
+use cyclic_dp::coordinator::{execute_plan, SharedBackend};
+use cyclic_dp::plan::{search, Plan, PlanError, SearchSpace, TrainerKind, Variant};
+use cyclic_dp::profile::{ModelProfile, ProfileOpts, StageProfile, StageProfiler};
+use cyclic_dp::runtime::{NativeBackend, NativeMlpConfig, Precision};
+use cyclic_dp::sim::analytic::table1_rows;
+
+/// Hand-built profile with explicit compute/comm weights (mirrors the
+/// unit-test helper in `plan::search`, at lps = 1 so every stage count
+/// dividing `k0` is in the default space).
+fn synth_profile(
+    k0: usize,
+    layer_ns: f64,
+    sgd_ns: f64,
+    bnd: u64,
+    psi: u64,
+    bw: f64,
+    lat: f64,
+) -> ModelProfile {
+    let stages: Vec<StageProfile> = (0..k0)
+        .map(|j| StageProfile {
+            stage: j,
+            fwd_ns: 0.4 * layer_ns,
+            bwd_ns: 0.6 * layer_ns,
+            sgd_ns: sgd_ns / k0 as f64,
+            boundary_bytes: if j + 1 < k0 { bnd } else { 0 },
+            param_bytes: psi / k0 as u64,
+            grad_buckets: 1,
+            grad_bucket_bytes: psi / k0 as u64,
+            act_bytes: bnd,
+        })
+        .collect();
+    ModelProfile {
+        model: "planner-test".into(),
+        stages,
+        microbatch: 8,
+        n_microbatches: k0,
+        psi_p_bytes: psi,
+        peak_act_bytes: bnd * k0 as u64,
+        layer_costs_ns: vec![layer_ns; k0],
+        bw_bytes_per_ns: bw,
+        hop_latency_ns: lat,
+        bf16_step_ratio: 1.0,
+        single_step_ns: 0.0,
+        multi_step_ns: 0.0,
+        host_threads: 8,
+        calib_steps: 2,
+        alloc_per_step: 0,
+    }
+}
+
+/// Candidate lookup at a fixed (trainer, variant, rule) cell of the
+/// ranked table, pinned to stage count `k`, the smallest bucket, f32.
+fn find<'a>(
+    ranked: &'a cyclic_dp::plan::RankedPlans,
+    space: &SearchSpace,
+    t: TrainerKind,
+    v: Variant,
+    rule: &str,
+    k: u32,
+) -> &'a cyclic_dp::plan::Candidate {
+    ranked
+        .candidates
+        .iter()
+        .find(|c| {
+            c.plan.trainer == t
+                && c.plan.variant == v
+                && c.plan.rule.name() == rule
+                && c.plan.n_stages == k
+                && c.plan.bucket_elems == space.bucket_elems[0]
+                && c.plan.precision == Precision::F32
+        })
+        .unwrap_or_else(|| panic!("no candidate {t:?}/{v:?}/{rule} at k{k}"))
+}
+
+#[test]
+fn planner_ranking_agrees_with_table1_where_unambiguous() {
+    // Latency-dominated fabric: per-hop latency dwarfs both byte time
+    // (high bandwidth) and compute.  In this regime Table 1's comm-step
+    // column decides the ordering, and for k ≥ 4 it is unambiguous:
+    // cyclic rows are O(1), DP rows are log₂N ≥ 2.
+    for k in [4usize, 8] {
+        let rows = table1_rows(k);
+        let steps = |name: &str| {
+            rows.iter().find(|r| r.implementation == name).unwrap().max_comm_steps
+        };
+        // Precondition: the analytic table itself must be unambiguous.
+        assert!(steps("Multi-GPU DP") > steps("Multi-GPU + Cyclic"));
+        assert!(steps("ZeRO-DP") > steps("ZeRO-DP + Cyclic"));
+
+        let p = synth_profile(k, 500.0, 200.0, 1 << 10, 4 << 20, 100.0, 50_000.0);
+        let space = SearchSpace::for_profile(&p);
+        let ranked = search(&p, u64::MAX, &space).unwrap();
+        let kk = k as u32;
+
+        let ring = find(&ranked, &space, TrainerKind::Multi, Variant::Ring, "cdp_v2", kk);
+        let barrier =
+            find(&ranked, &space, TrainerKind::Multi, Variant::Barrier, "dp", kk);
+        assert!(
+            ring.plan.predicted_step_ns < barrier.plan.predicted_step_ns,
+            "k={k}: table1 says cyclic ring ({}) beats barrier dp ({})",
+            ring.plan.predicted_step_ns,
+            barrier.plan.predicted_step_ns
+        );
+        assert!(ring.comm_ns < barrier.comm_ns, "the win must come from comm");
+
+        let zc = find(&ranked, &space, TrainerKind::Zero, Variant::Cyclic, "cdp_v2", kk);
+        let zb = find(&ranked, &space, TrainerKind::Zero, Variant::Broadcast, "dp", kk);
+        assert!(
+            zc.plan.predicted_step_ns < zb.plan.predicted_step_ns,
+            "k={k}: ZeRO cyclic flow must outrank broadcast"
+        );
+        assert!(zc.comm_ns < zb.comm_ns);
+    }
+}
+
+#[test]
+fn planner_plans_round_trip_through_files() {
+    let p = synth_profile(4, 800.0, 300.0, 1 << 12, 2 << 20, 10.0, 500.0);
+    let ranked = search(&p, u64::MAX, &SearchSpace::for_profile(&p)).unwrap();
+    let dir = std::env::temp_dir();
+    // The winner and the worst-ranked candidate both survive the file.
+    for (tag, cand) in [
+        ("winner", ranked.winner()),
+        ("last", ranked.candidates.last().unwrap()),
+    ] {
+        let path = dir.join(format!(
+            "cdp-planner-test-{tag}-{}.plan",
+            std::process::id()
+        ));
+        cand.plan.save(&path).unwrap();
+        let loaded = Plan::load(&path).unwrap();
+        assert_eq!(loaded, cand.plan, "{tag} plan must round-trip bit-exactly");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn planner_over_budget_is_typed_and_names_the_cheapest() {
+    let p = synth_profile(4, 800.0, 300.0, 1 << 12, 2 << 20, 10.0, 500.0);
+    let space = SearchSpace::for_profile(&p);
+    let err = search(&p, 1, &space).unwrap_err();
+    let PlanError::NoFeasiblePlan { budget_bytes, cheapest, cheapest_bytes } = err else {
+        panic!("expected NoFeasiblePlan, got {err:?}");
+    };
+    assert_eq!(budget_bytes, 1);
+    assert!(cheapest_bytes > 1);
+    // Cross-check against the unbounded ranking: the named candidate is
+    // the true memory minimum of the same space.
+    let ranked = search(&p, u64::MAX, &space).unwrap();
+    let min_peak = ranked
+        .candidates
+        .iter()
+        .map(|c| c.plan.predicted_peak_bytes)
+        .min()
+        .unwrap();
+    assert_eq!(cheapest_bytes, min_peak);
+    assert!(
+        ranked
+            .candidates
+            .iter()
+            .any(|c| c.plan.label() == cheapest
+                && c.plan.predicted_peak_bytes == min_peak),
+        "error must name an actual minimum-memory candidate, got `{cheapest}`"
+    );
+    // The error also renders its numbers.
+    let msg = PlanError::NoFeasiblePlan {
+        budget_bytes,
+        cheapest: cheapest.clone(),
+        cheapest_bytes,
+    }
+    .to_string();
+    assert!(msg.contains(&cheapest) && msg.contains(&cheapest_bytes.to_string()));
+}
+
+#[test]
+fn planner_winner_executes_end_to_end_on_native() {
+    let cfg = NativeMlpConfig { layers_per_stage: 2, ..NativeMlpConfig::tiny() };
+    let profiler = StageProfiler::new(ProfileOpts {
+        calib_steps: 2,
+        probe_fabric: false,
+        calibrate_trainers: false,
+    });
+    let profile = profiler.profile_native(&cfg).unwrap();
+    let ranked = search(&profile, u64::MAX, &SearchSpace::for_profile(&profile)).unwrap();
+    let plan = &ranked.winner().plan;
+
+    let rt = NativeBackend::synthetic(cfg)
+        .repartitioned(plan.n_stages as usize)
+        .unwrap()
+        .with_precision(plan.precision);
+    let logs = execute_plan(SharedBackend(Arc::new(rt)), plan, 2).unwrap();
+    assert_eq!(logs.len(), 2, "two steps logged for `{}`", plan.label());
+    for l in &logs {
+        assert!(l.loss.is_finite(), "step {} loss must be finite", l.step);
+    }
+
+    // A backend on the wrong partition is refused, not silently retrained.
+    if let Some(other_k) = [1usize, 2, 4]
+        .into_iter()
+        .find(|&k| k != plan.n_stages as usize)
+    {
+        let wrong = NativeBackend::synthetic(cfg).repartitioned(other_k).unwrap();
+        let err = execute_plan(SharedBackend(Arc::new(wrong)), plan, 1).unwrap_err();
+        assert!(
+            err.to_string().contains("repartition"),
+            "mismatch error must say how to fix it: {err}"
+        );
+    }
+}

@@ -3,13 +3,22 @@
 
 Usage:
     bench_regress.py CURRENT.json BASELINE.json [--threshold=0.25]
+    bench_regress.py CURRENT.json BASELINE.json --counter=NAME [--slack=0.25]
 
-Compares the ``timings`` arrays of two reports produced by the bench
-harness (``rust/benches/harness.rs``::write_json).  For every label
-present in *both* files, fails if the current ``mean_ns`` exceeds the
-baseline by more than the threshold (default +25%).  Labels only present
-on one side are reported but never fail the gate — benches grow sections
-over time and the baseline lags by design.
+Default mode compares the ``timings`` arrays of two reports produced by
+the bench harness (``rust/benches/harness.rs``::write_json).  For every
+label present in *both* files, fails if the current ``mean_ns`` exceeds
+the baseline by more than the threshold (default +25%).  Labels only
+present on one side are reported but never fail the gate — benches grow
+sections over time and the baseline lags by design.
+
+``--counter=NAME`` instead gates a single named scalar from the
+``counters`` object with an *absolute* slack (default 0.25): fails when
+``current > baseline + slack``.  Counters like the planner's
+``planner_pick_regret`` are legitimately 0.0 at baseline, where a
+relative ratio is meaningless — the absolute-slack form is the right
+contract for them.  A counter missing from the baseline is seeded (skip,
+exit 0); missing from the current report is an error.
 
 The script self-skips (exit 0, with a notice) when the baseline file
 does not exist: the first green CI run on quiet hardware seeds the
@@ -23,9 +32,13 @@ import json
 import sys
 
 
-def load_timings(path):
+def load_report(path):
     with open(path, encoding="utf-8") as f:
-        report = json.load(f)
+        return json.load(f)
+
+
+def load_timings(path):
+    report = load_report(path)
     timings = report.get("timings")
     if not isinstance(timings, list):
         raise ValueError(f"{path}: no 'timings' array")
@@ -38,6 +51,17 @@ def load_timings(path):
     return report.get("git_sha", "unknown"), out
 
 
+def load_counter(path, name):
+    report = load_report(path)
+    counters = report.get("counters")
+    if not isinstance(counters, dict):
+        raise ValueError(f"{path}: no 'counters' object")
+    value = counters.get(name)
+    if value is not None and not isinstance(value, (int, float)):
+        raise ValueError(f"{path}: counter {name!r} is not a number: {value!r}")
+    return report.get("git_sha", "unknown"), value
+
+
 def fmt_ns(ns):
     if ns < 1e3:
         return f"{ns:.0f}ns"
@@ -48,15 +72,75 @@ def fmt_ns(ns):
     return f"{ns / 1e9:.2f}s"
 
 
+def gate_counter(current_path, baseline_path, name, slack):
+    try:
+        cur_sha, cur = load_counter(current_path, name)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"bench_regress: cannot read current report: {e}", file=sys.stderr)
+        return 2
+    if cur is None:
+        print(
+            f"bench_regress: counter {name!r} missing from {current_path}",
+            file=sys.stderr,
+        )
+        return 2
+    try:
+        base_sha, base = load_counter(baseline_path, name)
+    except FileNotFoundError:
+        print(
+            f"bench_regress: no baseline at {baseline_path} — skipping "
+            "(commit a green run's report there to arm the gate)"
+        )
+        return 0
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"bench_regress: cannot read baseline: {e}", file=sys.stderr)
+        return 2
+    if base is None:
+        print(
+            f"bench_regress: counter {name!r} not in baseline yet — skipping "
+            "(re-seed the baseline to arm it)"
+        )
+        return 0
+
+    limit = base + slack
+    print(
+        f"bench_regress: counter {name!r}, current {cur_sha[:12]} vs "
+        f"baseline {base_sha[:12]}: {cur:.4f} vs {base:.4f} "
+        f"(limit {limit:.4f} = baseline + {slack})"
+    )
+    if cur > limit:
+        print(
+            f"bench_regress: FAIL — counter {name!r} rose from {base:.4f} "
+            f"to {cur:.4f}, beyond the +{slack} absolute slack",
+            file=sys.stderr,
+        )
+        return 1
+    print("bench_regress: OK")
+    return 0
+
+
 def main(argv):
     args = [a for a in argv[1:] if not a.startswith("--")]
     threshold = 0.25
+    slack = 0.25
+    counter = None
     for a in argv[1:]:
         if a.startswith("--threshold="):
             try:
                 threshold = float(a.split("=", 1)[1])
             except ValueError:
                 print("bench_regress: bad --threshold", file=sys.stderr)
+                return 2
+        elif a.startswith("--slack="):
+            try:
+                slack = float(a.split("=", 1)[1])
+            except ValueError:
+                print("bench_regress: bad --slack", file=sys.stderr)
+                return 2
+        elif a.startswith("--counter="):
+            counter = a.split("=", 1)[1]
+            if not counter:
+                print("bench_regress: empty --counter name", file=sys.stderr)
                 return 2
         elif a.startswith("--"):
             print(f"bench_regress: unknown flag {a}", file=sys.stderr)
@@ -65,6 +149,9 @@ def main(argv):
         print(__doc__, file=sys.stderr)
         return 2
     current_path, baseline_path = args
+
+    if counter is not None:
+        return gate_counter(current_path, baseline_path, counter, slack)
 
     try:
         cur_sha, cur = load_timings(current_path)
