@@ -365,6 +365,64 @@ fn main() {
     ts_counters.push(("eager_pool_recycled".into(), pool_rec as f64));
     ts_counters.push(("eager_pool_allocated".into(), pool_alloc as f64));
 
+    // ---- structured tracing: disabled hook cost + enabled-ring steady state
+    // The trace layer's cost contract (DESIGN-OBS.md): with tracing
+    // disabled every hook is one relaxed atomic load — allocation-free
+    // and low-single-digit nanoseconds; with tracing enabled, steady-state
+    // records write into the preallocated ring (wrap overwrites the
+    // oldest slot and counts a drop) without touching the heap.
+    b.section("trace recorder: disabled hook vs enabled ring");
+    {
+        use cyclic_dp::trace::{self, Fields, TraceKind};
+        assert!(!trace::enabled(), "recorder must start disabled");
+        const OPS: u64 = 1_000_000;
+        for i in 0..1_000u64 {
+            trace::instant(TraceKind::Heartbeat, Fields { step: i, ..Fields::default() });
+        }
+        let a0 = allocs();
+        let t0 = std::time::Instant::now();
+        for i in 0..OPS {
+            trace::instant(TraceKind::Heartbeat, Fields { step: i, ..Fields::default() });
+        }
+        let ns_per_op = t0.elapsed().as_nanos() as f64 / OPS as f64;
+        let disabled_allocs = allocs() - a0;
+        println!(
+            "  disabled hook                                 {ns_per_op:.2} ns/op | {disabled_allocs} allocs (want 0)"
+        );
+        counters.push(("trace_disabled_overhead".into(), ns_per_op));
+        counters.push(("trace_disabled_allocs".into(), disabled_allocs as f64));
+        assert_eq!(
+            disabled_allocs, 0,
+            "disabled trace hook must not allocate"
+        );
+
+        // enabled ring: warm past the first wrap, then prove a steady
+        // window of records never allocates while drops are counted
+        const CAP: usize = 1024;
+        trace::enable(CAP);
+        for i in 0..(2 * CAP as u64) {
+            trace::instant(TraceKind::Heartbeat, Fields { step: i, ..Fields::default() });
+        }
+        let a0 = allocs();
+        for i in 0..(4 * CAP as u64) {
+            trace::instant(TraceKind::Heartbeat, Fields { step: i, ..Fields::default() });
+        }
+        let enabled_allocs = allocs() - a0;
+        let (events, dropped) = trace::drain();
+        println!(
+            "  enabled ring (cap {CAP})                       {enabled_allocs} allocs (want 0) | kept {} | dropped {dropped}",
+            events.len()
+        );
+        counters.push(("trace_enabled_steady_state_allocs".into(), enabled_allocs as f64));
+        assert_eq!(
+            enabled_allocs, 0,
+            "enabled ring record must not allocate in steady state"
+        );
+        assert_eq!(events.len(), CAP, "full ring drains exactly its capacity");
+        assert!(dropped > 0, "wrapping ring must count overwritten events");
+        assert!(!trace::enabled(), "drain must leave the recorder disabled");
+    }
+
     // ---- native-backend training step (always runs, no artifacts) --------
     native_sections(&b, &mut stats, &mut ts_stats, &mut ts_counters);
 
@@ -751,7 +809,7 @@ fn run_synthetic_step(
                         for j in (0..layout.n_stages()).rev() {
                             let r = layout.stage_range(j);
                             synthetic_bwd(&mut gmb[r.clone()]);
-                            ep.stats().mark(EventKind::BwdStageDone, w, j, 0);
+                            ep.stats().mark(EventKind::BwdStageDone, w, j, t, 0);
                             let out = if w == owner {
                                 Some(&mut avg[r.clone()])
                             } else {
@@ -765,7 +823,7 @@ fn run_synthetic_step(
                         for j in (0..layout.n_stages()).rev() {
                             let r = layout.stage_range(j);
                             synthetic_bwd(&mut gmb[r]);
-                            ep.stats().mark(EventKind::BwdStageDone, w, j, 0);
+                            ep.stats().mark(EventKind::BwdStageDone, w, j, t, 0);
                         }
                         for j in (0..layout.n_stages()).rev() {
                             let r = layout.stage_range(j);

@@ -9,7 +9,7 @@
 //! launcher (and tests) can compare losses *bit*-exactly across process
 //! boundaries — text-formatted floats would round.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::{Command, Output, Stdio};
 
 use anyhow::{Context, Result};
@@ -118,6 +118,36 @@ pub fn parse_loss_bits(stdout: &str) -> Result<Vec<(u64, f64)>> {
     Ok(out)
 }
 
+/// The per-worker trace file a `cdp worker --trace-dir DIR` child writes.
+pub fn worker_trace_path(dir: &Path, w: usize) -> PathBuf {
+    dir.join(format!("trace-w{w}.jsonl"))
+}
+
+/// Merge the fleet's per-process trace files (`trace-w{id}.jsonl` under
+/// `dir`) into one event stream ordered by worker id, then event order.
+/// Missing files are tolerated (a worker may have died before its flush;
+/// the merged trace should still analyze) and each file is parsed with
+/// the tolerant JSONL reader — `skipped` aggregates corrupt lines and
+/// `dropped` the ring overflows across the fleet.
+pub fn merge_traces(dir: &Path, workers: usize) -> Result<crate::trace::ParsedTrace> {
+    let mut merged = crate::trace::ParsedTrace {
+        version: Some(crate::trace::TRACE_MAGIC.to_string()),
+        ..Default::default()
+    };
+    for w in 0..workers {
+        let path = worker_trace_path(dir, w);
+        if !path.exists() {
+            continue;
+        }
+        let part = crate::trace::parse_jsonl_file(&path)
+            .with_context(|| format!("parsing worker {w} trace {}", path.display()))?;
+        merged.dropped += part.dropped;
+        merged.skipped += part.skipped;
+        merged.events.extend(part.events);
+    }
+    Ok(merged)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +174,36 @@ mod tests {
         assert!(parse_loss_bits("CDP_LOSS 3").is_err());
         assert!(parse_loss_bits("CDP_LOSS x 3ff0000000000000").is_err());
         assert!(parse_loss_bits("CDP_LOSS 3 nothex!").is_err());
+    }
+
+    #[test]
+    fn merge_traces_concatenates_by_worker_and_tolerates_gaps() {
+        use crate::trace::{Fields, TraceEvent, TraceKind};
+        let dir = std::env::temp_dir().join(format!("cdp-merge-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // worker 0: two events + one ring drop; worker 2: one event with a
+        // corrupt line in the middle; worker 1: no file (died before flush)
+        let ev = |w: u32, step: u64| {
+            TraceEvent::new(
+                TraceKind::StepBegin,
+                step * 10,
+                0,
+                Fields { worker: w, step, ..Fields::default() },
+            )
+        };
+        crate::trace::write_jsonl(&worker_trace_path(&dir, 0), &[ev(0, 0), ev(0, 1)], 3)
+            .unwrap();
+        let mut w2 = crate::trace::to_jsonl(&[ev(2, 0)], 0);
+        w2.push_str("{ corrupt trailing line\n");
+        std::fs::write(worker_trace_path(&dir, 2), w2).unwrap();
+
+        let merged = merge_traces(&dir, 3).unwrap();
+        assert_eq!(merged.events.len(), 3);
+        assert_eq!(merged.dropped, 3);
+        assert_eq!(merged.skipped, 1);
+        let workers: Vec<u32> = merged.events.iter().map(|e| e.worker).collect();
+        assert_eq!(workers, vec![0, 0, 2], "rank order, gaps tolerated");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -127,13 +127,23 @@ impl BucketedReducer {
             let tag = tags::grad_bucket(step, stage, b.index);
             let nbytes = b.len() as u64 * 4;
             if pos == 0 {
-                ep.stats().mark(EventKind::GradSend, ep.id, stage, nbytes);
+                ep.stats().mark(EventKind::GradSend, ep.id, stage, step, nbytes);
                 ep.send_copy(ring.right, tag, &own[b.range()])?;
             } else {
                 let mut part = ep.recv(ring.left, tag)?;
+                crate::trace::instant(
+                    crate::trace::TraceKind::GradRecv,
+                    crate::trace::Fields {
+                        worker: ep.id as u32,
+                        stage: stage as u32,
+                        step,
+                        bytes: nbytes,
+                        ..crate::trace::Fields::default()
+                    },
+                );
                 if pos < owner {
                     ops::add_into(part.make_mut(), &own[b.range()]);
-                    ep.stats().mark(EventKind::GradSend, ep.id, stage, nbytes);
+                    ep.stats().mark(EventKind::GradSend, ep.id, stage, step, nbytes);
                     ep.send(ring.right, tag, part)?;
                 } else {
                     let out = avg_out.as_deref_mut().expect("owner has avg_out");
@@ -162,7 +172,7 @@ impl BucketedReducer {
         debug_assert_ne!(owner, ep.id, "own shard never travels");
         debug_assert_eq!(own.len(), layout.stage_len(stage));
         for b in layout.stage_buckets(stage, self.stage_elems(layout, stage)) {
-            ep.stats().mark(EventKind::GradSend, ep.id, stage, b.len() as u64 * 4);
+            ep.stats().mark(EventKind::GradSend, ep.id, stage, step, b.len() as u64 * 4);
             ep.send_copy(owner, tags::grad_shard(step, stage, mb, b.index), &own[b.range()])?;
         }
         Ok(())
@@ -193,6 +203,16 @@ impl BucketedReducer {
             } else {
                 for b in layout.stage_buckets(stage, self.stage_elems(layout, stage)) {
                     let part = ep.recv(mb - 1, tags::grad_shard(step, stage, mb, b.index))?;
+                    crate::trace::instant(
+                        crate::trace::TraceKind::GradRecv,
+                        crate::trace::Fields {
+                            worker: ep.id as u32,
+                            stage: stage as u32,
+                            step,
+                            bytes: part.len() as u64 * 4,
+                            ..crate::trace::Fields::default()
+                        },
+                    );
                     ops::add_into(&mut gsum[b.range()], &part);
                 }
             }

@@ -176,6 +176,11 @@ pub enum EventKind {
 
 /// One timestamped comm/compute event (`ns` is relative to the fabric's
 /// creation instant, so events from all workers share one clock).
+///
+/// Legacy view: since the structured tracing layer landed (`src/trace`),
+/// the timeline is *stored* as [`crate::trace::TraceEvent`]s and this
+/// struct is what [`CommStats::timeline`] converts back to for the
+/// benches and reports that predate it.
 #[derive(Clone, Copy, Debug)]
 pub struct TimelineEvent {
     pub ns: u64,
@@ -183,6 +188,26 @@ pub struct TimelineEvent {
     pub worker: usize,
     pub stage: usize,
     pub bytes: u64,
+}
+
+/// The structured-trace kind a legacy [`EventKind`] maps to.
+fn to_trace_kind(kind: EventKind) -> crate::trace::TraceKind {
+    match kind {
+        EventKind::GradSend => crate::trace::TraceKind::GradSend,
+        EventKind::BwdStageDone => crate::trace::TraceKind::Bwd,
+        EventKind::ParamSend => crate::trace::TraceKind::ParamSend,
+    }
+}
+
+/// Inverse of [`to_trace_kind`] for the kinds a [`CommStats`] timeline
+/// can contain.
+fn from_trace_kind(kind: crate::trace::TraceKind) -> Option<EventKind> {
+    match kind {
+        crate::trace::TraceKind::GradSend => Some(EventKind::GradSend),
+        crate::trace::TraceKind::Bwd => Some(EventKind::BwdStageDone),
+        crate::trace::TraceKind::ParamSend => Some(EventKind::ParamSend),
+        _ => None,
+    }
 }
 
 /// Global transfer accounting, shared by all endpoints of a fabric, plus
@@ -200,7 +225,7 @@ pub struct CommStats {
     pub messages: AtomicU64,
     timeline_on: AtomicBool,
     epoch: Instant,
-    timeline: Mutex<Vec<TimelineEvent>>,
+    timeline: Mutex<Vec<crate::trace::TraceEvent>>,
 }
 
 impl Default for CommStats {
@@ -226,13 +251,31 @@ impl CommStats {
 
     /// Start recording `mark` events (reserves capacity so steady-state
     /// recording does not reallocate per event).
+    ///
+    /// The enabled flag is published *while holding the timeline lock*:
+    /// a concurrent `mark` either sees the flag off (no-op) or takes the
+    /// lock after both the reserve and the store, so it can never
+    /// interleave with the reservation and trigger a mid-mark realloc.
     pub fn enable_timeline(&self) {
-        self.timeline.lock().expect("timeline poisoned").reserve(4096);
+        let mut tl = self.timeline.lock().expect("timeline poisoned");
+        tl.reserve(4096);
         self.timeline_on.store(true, Ordering::Release);
     }
 
-    /// Record one event; no-op unless the timeline is enabled.
-    pub fn mark(&self, kind: EventKind, worker: usize, stage: usize, bytes: u64) {
+    /// Record one event.  Always forwards to the crate-wide structured
+    /// trace (`crate::trace::instant`, a no-op unless `--trace` enabled
+    /// it); additionally keeps a local copy when the opt-in timeline is
+    /// enabled, timestamped against this fabric's epoch so all workers
+    /// share one clock.
+    pub fn mark(&self, kind: EventKind, worker: usize, stage: usize, step: u64, bytes: u64) {
+        let fields = crate::trace::Fields {
+            worker: worker as u32,
+            stage: stage as u32,
+            step,
+            bytes,
+            ..crate::trace::Fields::default()
+        };
+        crate::trace::instant(to_trace_kind(kind), fields);
         if !self.timeline_on.load(Ordering::Acquire) {
             return;
         }
@@ -240,32 +283,54 @@ impl CommStats {
         self.timeline
             .lock()
             .expect("timeline poisoned")
-            .push(TimelineEvent { ns, kind, worker, stage, bytes });
+            .push(crate::trace::TraceEvent::new(to_trace_kind(kind), ns, 0, fields));
     }
 
-    /// Snapshot of all recorded events (unsorted — workers interleave).
+    /// Snapshot of all recorded events in the legacy [`TimelineEvent`]
+    /// shape (unsorted — workers interleave).
     pub fn timeline(&self) -> Vec<TimelineEvent> {
+        self.timeline
+            .lock()
+            .expect("timeline poisoned")
+            .iter()
+            .filter_map(|e| {
+                Some(TimelineEvent {
+                    ns: e.ns,
+                    kind: from_trace_kind(e.kind)?,
+                    worker: e.worker as usize,
+                    stage: e.stage as usize,
+                    bytes: e.bytes,
+                })
+            })
+            .collect()
+    }
+
+    /// Snapshot of all recorded events as structured trace events — the
+    /// preferred view; [`CommStats::timeline`] is the legacy adapter.
+    pub fn trace_events(&self) -> Vec<crate::trace::TraceEvent> {
         self.timeline.lock().expect("timeline poisoned").clone()
     }
 
     /// Earliest timestamp of `kind`, if any was recorded.
     pub fn first_ns(&self, kind: EventKind) -> Option<u64> {
+        let want = to_trace_kind(kind);
         self.timeline
             .lock()
             .expect("timeline poisoned")
             .iter()
-            .filter(|e| e.kind == kind)
+            .filter(|e| e.kind == want)
             .map(|e| e.ns)
             .min()
     }
 
     /// Latest timestamp of `kind`, if any was recorded.
     pub fn last_ns(&self, kind: EventKind) -> Option<u64> {
+        let want = to_trace_kind(kind);
         self.timeline
             .lock()
             .expect("timeline poisoned")
             .iter()
-            .filter(|e| e.kind == kind)
+            .filter(|e| e.kind == want)
             .map(|e| e.ns)
             .max()
     }
@@ -1104,12 +1169,13 @@ mod tests {
 
     #[test]
     fn timeline_is_opt_in_and_ordered_by_clock() {
+        let _gate = crate::trace::recorder::test_gate();
         let stats = CommStats::default();
-        stats.mark(EventKind::GradSend, 0, 0, 4); // disabled → dropped
+        stats.mark(EventKind::GradSend, 0, 0, 0, 4); // disabled → dropped
         assert!(stats.timeline().is_empty());
         stats.enable_timeline();
-        stats.mark(EventKind::BwdStageDone, 1, 2, 0);
-        stats.mark(EventKind::GradSend, 1, 2, 64);
+        stats.mark(EventKind::BwdStageDone, 1, 2, 7, 0);
+        stats.mark(EventKind::GradSend, 1, 2, 7, 64);
         let tl = stats.timeline();
         assert_eq!(tl.len(), 2);
         assert_eq!(tl[0].kind, EventKind::BwdStageDone);
@@ -1117,6 +1183,52 @@ mod tests {
         assert_eq!(tl[0].stage, 2);
         assert!(stats.first_ns(EventKind::GradSend) >= stats.first_ns(EventKind::BwdStageDone));
         assert_eq!(stats.first_ns(EventKind::ParamSend), None);
+        // the structured view carries the step the legacy shape drops
+        let evs = stats.trace_events();
+        assert_eq!(evs.len(), 2);
+        assert!(evs.iter().all(|e| e.step == 7));
+        assert_eq!(evs[0].kind, crate::trace::TraceKind::Bwd);
+        assert_eq!(evs[1].kind, crate::trace::TraceKind::GradSend);
+    }
+
+    #[test]
+    fn enable_timeline_races_concurrent_marks_safely() {
+        // Regression test for the enable ordering hazard: the flag used
+        // to be stored *after* the reserve's lock was released, so a
+        // mark racing enable could observe flag=on while the capacity
+        // reservation was still pending.  With the store taken inside
+        // the lock, marks serialize against enable; hammer it to prove
+        // nothing panics, tears, or records a malformed event.
+        let _gate = crate::trace::recorder::test_gate();
+        let stats = Arc::new(CommStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let markers: Vec<_> = (0..4)
+            .map(|w| {
+                let stats = stats.clone();
+                let stop = stop.clone();
+                thread::spawn(move || {
+                    let mut n = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        stats.mark(EventKind::GradSend, w, w, n, 8);
+                        n += 1;
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..100 {
+            stats.enable_timeline();
+            std::thread::yield_now();
+        }
+        stop.store(true, Ordering::Relaxed);
+        for m in markers {
+            m.join().expect("marker thread panicked");
+        }
+        let tl = stats.timeline();
+        assert!(
+            tl.iter()
+                .all(|e| e.kind == EventKind::GradSend && e.bytes == 8 && e.worker < 4),
+            "every recorded event is well-formed"
+        );
     }
 
     #[test]

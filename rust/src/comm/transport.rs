@@ -803,6 +803,15 @@ fn deliver(
                 return false;
             };
             *conn = Some(c);
+            // the supervisor (re-)established this directed edge
+            crate::trace::instant(
+                crate::trace::TraceKind::Reconnect,
+                crate::trace::Fields {
+                    worker: ctx.me as u32,
+                    stage: ctx.peer as u32,
+                    ..crate::trace::Fields::default()
+                },
+            );
             let mut replay_ok = true;
             for m in replay.iter() {
                 frame::encode(m.from as u32, m.seq, m.tag, &m.data, buf);
@@ -818,6 +827,17 @@ fn deliver(
         }
         frame::encode(msg.from as u32, msg.seq, msg.tag, &msg.data, buf);
         if write_frame(conn, buf).is_ok() {
+            // one framed message on the wire (header + body + CRC)
+            crate::trace::instant(
+                crate::trace::TraceKind::FrameSend,
+                crate::trace::Fields {
+                    worker: ctx.me as u32,
+                    stage: ctx.peer as u32,
+                    step: super::tags::unpack(msg.tag).step,
+                    bytes: buf.len() as u64,
+                    ..crate::trace::Fields::default()
+                },
+            );
             return true;
         }
         *conn = None;
@@ -947,9 +967,21 @@ fn reader_loop(
             return;
         }
         let data = pool.payload_from_le_bytes(&body);
+        let (tag, body_len) = (h.tag, h.body_len as u64);
         if feed.send(Msg { from, seq: h.seq, tag: h.tag, data }).is_err() {
             return;
         }
+        // one framed message accepted off the wire
+        crate::trace::instant(
+            crate::trace::TraceKind::FrameRecv,
+            crate::trace::Fields {
+                worker: me as u32,
+                stage: from as u32,
+                step: super::tags::unpack(tag).step,
+                bytes: frame::HEADER_LEN as u64 + body_len,
+                ..crate::trace::Fields::default()
+            },
+        );
     }
 }
 

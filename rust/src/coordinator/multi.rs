@@ -53,6 +53,7 @@ use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{Checkpoint, ParamStore, Rule};
 use crate::runtime::Backend;
 use crate::tensor::{HostTensor, IntTensor};
+use crate::trace::{self, Fields, TraceKind};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -268,6 +269,7 @@ fn init_store<B: Backend>(
         Some(ck) => {
             let store = ck.clone().into_store(layout.clone(), rule)?;
             let t0 = store.step();
+            trace::instant(TraceKind::CkptResume, Fields { step: t0, ..Fields::default() });
             Ok((store, t0))
         }
         None => Ok((ParamStore::from_flat(layout.clone(), rt.init_params_flat()?), 0)),
@@ -295,7 +297,30 @@ fn forward_mb<B: Backend>(
     acts.push(rt.input(exec, x0)?);
     for j in 0..n - 1 {
         let ver = version_id(rule, store.step(), i, j, n);
+        let t_fwd = trace::start();
         let y = rt.fwd(exec, j, ver, store.select(rule, i, j), &acts[j])?;
+        trace::span(
+            TraceKind::Fwd,
+            t_fwd,
+            Fields {
+                worker: (i - 1) as u32,
+                stage: j as u32,
+                step: t,
+                version: ver,
+                ..Fields::default()
+            },
+        );
+        // stage j's output is stashed until stage j+1's backward frees it
+        trace::instant(
+            TraceKind::ActAlloc,
+            Fields {
+                worker: (i - 1) as u32,
+                stage: j as u32,
+                step: t,
+                bytes: rt.manifest().stages[j].act_bytes,
+                ..Fields::default()
+            },
+        );
         acts.push(y);
     }
     Ok((acts, targets))
@@ -319,7 +344,25 @@ fn compute_grads<B: Backend>(
     let layout = store.layout().clone();
     let (acts, targets) = forward_mb(rt, exec, store, data, rule, t, i)?;
     let last = n - 1;
+    let w = (i - 1) as u32;
+    let free_act = |j: usize| {
+        // stage j's backward consumed the stash forward_mb allocated for
+        // the stage below it (raw input at j == 0 was never counted)
+        if j > 0 {
+            trace::instant(
+                TraceKind::ActFree,
+                Fields {
+                    worker: w,
+                    stage: (j - 1) as u32,
+                    step: t,
+                    bytes: rt.manifest().stages[j - 1].act_bytes,
+                    ..Fields::default()
+                },
+            );
+        }
+    };
     let ver = version_id(rule, store.step(), i, last, n);
+    let t_bwd = trace::start();
     let (loss, mut gx) = rt.last_bwd(
         exec,
         ver,
@@ -328,8 +371,15 @@ fn compute_grads<B: Backend>(
         &targets,
         &mut gmb[layout.stage_range(last)],
     )?;
+    trace::span(
+        TraceKind::Bwd,
+        t_bwd,
+        Fields { worker: w, stage: last as u32, step: t, version: ver, ..Fields::default() },
+    );
+    free_act(last);
     for j in (1..last).rev() {
         let ver = version_id(rule, store.step(), i, j, n);
+        let t_bwd = trace::start();
         gx = rt.mid_bwd(
             exec,
             j,
@@ -339,9 +389,16 @@ fn compute_grads<B: Backend>(
             &gx,
             &mut gmb[layout.stage_range(j)],
         )?;
+        trace::span(
+            TraceKind::Bwd,
+            t_bwd,
+            Fields { worker: w, stage: j as u32, step: t, version: ver, ..Fields::default() },
+        );
+        free_act(j);
     }
     if n > 1 {
         let ver = version_id(rule, store.step(), i, 0, n);
+        let t_bwd = trace::start();
         rt.first_bwd(
             exec,
             ver,
@@ -350,6 +407,11 @@ fn compute_grads<B: Backend>(
             &gx,
             &mut gmb[layout.stage_range(0)],
         )?;
+        trace::span(
+            TraceKind::Bwd,
+            t_bwd,
+            Fields { worker: w, stage: 0, step: t, version: ver, ..Fields::default() },
+        );
     }
     Ok(loss)
 }
@@ -380,9 +442,26 @@ fn worker_dp<B: Backend>(
     let mut checkpoint = None;
 
     for t in t0..t0 + steps as u64 {
+        let t_step = trace::start();
+        trace::instant(
+            TraceKind::StepBegin,
+            Fields { worker: w as u32, step: t, ..Fields::default() },
+        );
         let loss =
             compute_grads(rt, &mut exec, &store, &data, rule, t, w + 1, &mut gmb)?;
 
+        // the barrier pattern ships the whole model-wide gradient run in
+        // one burst at the step boundary — the comm spike `cdp trace
+        // verify --expect spike` asserts against the eager ring
+        trace::instant(
+            TraceKind::GradSend,
+            Fields {
+                worker: w as u32,
+                step: t,
+                bytes: gmb.len() as u64 * 4,
+                ..Fields::default()
+            },
+        );
         // synchronous all-reduce over the model-wide gradient run (the
         // paper's waiting barrier); rank-ordered sum + 1/N at the root
         allreduce_mean(ep, t, &mut gmb)
@@ -391,8 +470,14 @@ fn worker_dp<B: Backend>(
         // every replica applies the identical update (N optimizer copies)
         let lr = rt.manifest().lr;
         for j in 0..n {
+            let t_sgd = trace::start();
             let (cur, moms, next) = store.update_parts(j);
             rt.sgd(&mut exec, j, t, cur, moms, &gmb[layout.stage_range(j)], lr, next)?;
+            trace::span(
+                TraceKind::Sgd,
+                t_sgd,
+                Fields { worker: w as u32, stage: j as u32, step: t, ..Fields::default() },
+            );
         }
         store.commit_step();
 
@@ -400,6 +485,10 @@ fn worker_dp<B: Backend>(
         // is the complete cluster state — direct capture
         if w == 0 && opts.checkpoint_at == Some(t) {
             checkpoint = Some(Checkpoint::capture(&store, rule));
+            trace::instant(
+                TraceKind::CkptSave,
+                Fields { worker: w as u32, step: t, ..Fields::default() },
+            );
         }
 
         // loss reporting: mean over micro-batches, gathered at worker 0
@@ -411,11 +500,18 @@ fn worker_dp<B: Backend>(
                     .with_context(|| format!("worker 0: loss gather, step {t}"))?;
                 sum += p[0] as f64;
             }
-            logs.push(StepLog { step: t, loss: sum / ep.n as f64 });
+            let mean = sum / ep.n as f64;
+            trace::loss(0, t, mean);
+            logs.push(StepLog { step: t, loss: mean });
         } else {
             ep.send(0, tags::loss(t), vec![loss])
                 .with_context(|| format!("worker {w}: loss report, step {t}"))?;
         }
+        trace::span(
+            TraceKind::StepEnd,
+            t_step,
+            Fields { worker: w as u32, step: t, ..Fields::default() },
+        );
     }
     Ok((logs, checkpoint))
 }
@@ -468,9 +564,22 @@ fn worker_ring<B: Backend>(
         if my_kill == Some(t) {
             // scripted crash: vanish at the θ-version boundary without a
             // word — peers must detect the silence, not be told
+            trace::instant(
+                TraceKind::Kill,
+                Fields { worker: w as u32, step: t, ..Fields::default() },
+            );
             return Ok((logs, checkpoint));
         }
+        let t_step = trace::start();
+        trace::instant(
+            TraceKind::StepBegin,
+            Fields { worker: w as u32, step: t, ..Fields::default() },
+        );
         if hb_active {
+            trace::instant(
+                TraceKind::Heartbeat,
+                Fields { worker: w as u32, step: t, ..Fields::default() },
+            );
             for &p in &live {
                 if p != w {
                     // a send error already proves the peer is gone; the
@@ -555,7 +664,20 @@ fn worker_ring<B: Backend>(
                     &mut gmb[grange.clone()],
                 )?;
             }
-            ep.stats().mark(EventKind::BwdStageDone, w, j, 0);
+            ep.stats().mark(EventKind::BwdStageDone, w, j, t, 0);
+            if j > 0 {
+                // stage j's backward consumed stage j−1's stashed output
+                trace::instant(
+                    TraceKind::ActFree,
+                    Fields {
+                        worker: (i - 1) as u32,
+                        stage: (j - 1) as u32,
+                        step: t,
+                        bytes: rt.manifest().stages[j - 1].act_bytes,
+                        ..Fields::default()
+                    },
+                );
+            }
 
             // eager hop: stage j's buckets enter the ring now
             let avg_out = if w == owner {
@@ -571,14 +693,21 @@ fn worker_ring<B: Backend>(
                 // update stage j immediately; θ_{t+1}^j hops the ring
                 // while backward continues below stage j
                 let g = &avg[grange];
+                let t_sgd = trace::start();
                 let (cur, moms, next) = store.update_parts(j);
                 rt.sgd(&mut exec, j, t, cur, moms, g, lr, next)?;
+                trace::span(
+                    TraceKind::Sgd,
+                    t_sgd,
+                    Fields { worker: w as u32, stage: j as u32, step: t, ..Fields::default() },
+                );
                 if m > 1 {
                     let fresh = store.next_stage(j);
                     ep.stats().mark(
                         EventKind::ParamSend,
                         w,
                         j,
+                        t,
                         fresh.len() as u64 * 4,
                     );
                     ep.send_copy(ring.right, tags::param(t, j), fresh)
@@ -596,6 +725,16 @@ fn worker_ring<B: Backend>(
                 let flat = ep
                     .recv(ring.left, tags::param(t, j))
                     .with_context(|| format!("worker {w}: param recv, step {t} stage {j}"))?;
+                trace::instant(
+                    TraceKind::ParamRecv,
+                    Fields {
+                        worker: w as u32,
+                        stage: j as u32,
+                        step: t,
+                        bytes: flat.len() as u64 * 4,
+                        ..Fields::default()
+                    },
+                );
                 if ring.right != owner {
                     ep.send(ring.right, tags::param(t, j), flat.clone())
                         .with_context(|| {
@@ -632,6 +771,10 @@ fn worker_ring<B: Backend>(
                     store.stale_flat().to_vec(),
                     moms,
                 ));
+                trace::instant(
+                    TraceKind::CkptSave,
+                    Fields { worker: w as u32, step: t, ..Fields::default() },
+                );
             }
         }
 
@@ -647,11 +790,18 @@ fn worker_ring<B: Backend>(
                     .with_context(|| format!("worker 0: loss gather, step {t}"))?;
                 sum += p[0] as f64;
             }
-            logs.push(StepLog { step: t, loss: sum / m as f64 });
+            let mean = sum / m as f64;
+            trace::loss(0, t, mean);
+            logs.push(StepLog { step: t, loss: mean });
         } else {
             ep.send(0, tags::loss(t), vec![loss])
                 .with_context(|| format!("worker {w}: loss report, step {t}"))?;
         }
+        trace::span(
+            TraceKind::StepEnd,
+            t_step,
+            Fields { worker: w as u32, step: t, ..Fields::default() },
+        );
     }
     Ok((logs, checkpoint))
 }

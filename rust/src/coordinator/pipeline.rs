@@ -44,6 +44,7 @@ use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{Checkpoint, GradBuffer, ParamStore, Rule};
 use crate::runtime::{Activation, Backend};
 use crate::tensor::HostTensor;
+use crate::trace::{self, Fields, TraceKind};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PipeSchedule {
@@ -242,6 +243,9 @@ fn run<B: Backend>(
         None => ParamStore::from_flat(layout.clone(), rt.init_params_flat()?),
     };
     let t0 = store.step();
+    if t0 > 0 {
+        trace::instant(TraceKind::CkptResume, Fields { step: t0, ..Fields::default() });
+    }
     let mut grads = GradBuffer::new(layout.clone(), m);
     let mut exec = rt.executor(opts.mode);
     // Warm the kernel pool before the timed loop; this trainer is
@@ -291,6 +295,8 @@ fn run<B: Backend>(
     let mut checkpoint = None;
 
     for step in t0..t0 + steps as u64 {
+        let t_step = trace::start();
+        trace::instant(TraceKind::StepBegin, Fields { step, ..Fields::default() });
         // per-(mb) in-flight state
         let mut inputs: HashMap<(usize, usize), B::Act> = HashMap::new(); // (mb, stage) → stashed input
         let mut gxs: HashMap<usize, B::Act> = HashMap::new(); // mb → current cotangent
@@ -314,8 +320,20 @@ fn run<B: Backend>(
                     devices[dev]
                         .alloc("stash", rt.manifest().stages[stage].act_bytes)
                         .with_context(|| format!("device {dev}: stash alloc, step {step}"))?;
+                    // mirror the device ledger: stash lives alloc → free
+                    trace::instant(
+                        TraceKind::ActAlloc,
+                        Fields {
+                            worker: dev as u32,
+                            stage: stage as u32,
+                            step,
+                            bytes: rt.manifest().stages[stage].act_bytes,
+                            ..Fields::default()
+                        },
+                    );
                     if stage < n - 1 {
                         let ver = version_id(&rule, step, mb + 1, stage, n);
+                        let t_fwd = trace::start();
                         let y = {
                             let x = inputs.get(&(mb, stage)).ok_or_else(|| {
                                 anyhow::anyhow!("fwd(mb {mb}, stage {stage}): input never arrived")
@@ -323,6 +341,17 @@ fn run<B: Backend>(
                             let params = store.select(&rule, mb + 1, stage);
                             rt.fwd(&mut exec, stage, ver, params, x)?
                         };
+                        trace::span(
+                            TraceKind::Fwd,
+                            t_fwd,
+                            Fields {
+                                worker: dev as u32,
+                                stage: stage as u32,
+                                step,
+                                version: ver,
+                                ..Fields::default()
+                            },
+                        );
                         act_comm += y.bytes() as u64; // → next device
                         inputs.insert((mb, stage + 1), y);
                     }
@@ -331,6 +360,7 @@ fn run<B: Backend>(
                 PipeOp::Bwd { mb, stage } => {
                     let ver = version_id(&rule, step, mb + 1, stage, n);
                     let grange = layout.stage_range(stage);
+                    let t_bwd = trace::start();
                     if stage == n - 1 {
                         let x = inputs.get(&(mb, stage)).ok_or_else(|| {
                             anyhow::anyhow!("bwd(mb {mb}, stage {stage}): stashed input missing")
@@ -384,10 +414,31 @@ fn run<B: Backend>(
                         rt.first_bwd(&mut exec, ver, params, x, &gy, &mut gop[grange.clone()])?;
                         grads.add_flat(0, mb + 1, &gop[grange]);
                     }
+                    trace::span(
+                        TraceKind::Bwd,
+                        t_bwd,
+                        Fields {
+                            worker: dev as u32,
+                            stage: stage as u32,
+                            step,
+                            version: ver,
+                            ..Fields::default()
+                        },
+                    );
                     inputs.remove(&(mb, stage));
                     devices[dev]
                         .free("stash")
                         .with_context(|| format!("device {dev}: stash free, step {step}"))?;
+                    trace::instant(
+                        TraceKind::ActFree,
+                        Fields {
+                            worker: dev as u32,
+                            stage: stage as u32,
+                            step,
+                            bytes: rt.manifest().stages[stage].act_bytes,
+                            ..Fields::default()
+                        },
+                    );
                 }
             }
         }
@@ -397,19 +448,28 @@ fn run<B: Backend>(
         let lr = rt.manifest().lr;
         for j in 0..n {
             let g = grads.stage(j);
+            let t_sgd = trace::start();
             let (cur, moms, next) = store.update_parts(j);
             rt.sgd(&mut exec, j, step, cur, moms, g, lr, next)?;
+            trace::span(
+                TraceKind::Sgd,
+                t_sgd,
+                Fields { worker: j as u32, stage: j as u32, step, ..Fields::default() },
+            );
         }
         grads.reset();
         store.commit_step();
 
         if opts.checkpoint_at == Some(step) {
             checkpoint = Some(Checkpoint::capture(&store, &rule));
+            trace::instant(TraceKind::CkptSave, Fields { step, ..Fields::default() });
         }
 
         let loss = losses.iter().sum::<f64>() / m as f64;
         metrics.record("loss", step as f64, loss);
+        trace::loss(0, step, loss);
         logs.push(StepLog { step, loss });
+        trace::span(TraceKind::StepEnd, t_step, Fields { step, ..Fields::default() });
     }
 
     let peak_stash = devices.iter().map(|d| d.peak()).max().unwrap_or(0);

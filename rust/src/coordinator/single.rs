@@ -30,6 +30,7 @@ use crate::parallel::arena::{AlignedBuf, ArenaLayout};
 use crate::parallel::{Checkpoint, GradBuffer, ParamStore, Rule};
 use crate::runtime::Backend;
 use crate::tensor::{HostTensor, Tensor};
+use crate::trace::{self, Fields, TraceKind};
 
 pub struct RefTrainer<'rt, B: Backend> {
     pub rt: &'rt B,
@@ -92,12 +93,20 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
     ) -> Result<Self> {
         let layout = ArenaLayout::from_manifest(rt.manifest());
         let store = ck.into_store(layout, &rule)?;
+        trace::instant(
+            TraceKind::CkptResume,
+            Fields { step: store.step(), ..Fields::default() },
+        );
         Ok(Self::assemble(rt, rule, store, mode))
     }
 
     /// Snapshot the trainer at its current θ-version boundary (between
     /// [`Self::step`] calls — never mid-step).
     pub fn checkpoint(&self) -> Checkpoint {
+        trace::instant(
+            TraceKind::CkptSave,
+            Fields { step: self.store.step(), ..Fields::default() },
+        );
         Checkpoint::capture(&self.store, &self.rule)
     }
 
@@ -158,14 +167,46 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
         for j in 0..n - 1 {
             let ver = version_id(&self.rule, self.store.step(), i, j, n);
             let flat = self.store.select(&self.rule, i, j);
+            let t_fwd = trace::start();
             let y = rt.fwd(&mut self.exec, j, ver, flat, &acts[j])?;
+            trace::span(
+                TraceKind::Fwd,
+                t_fwd,
+                Fields { stage: j as u32, step: t, version: ver, ..Fields::default() },
+            );
+            // stage j's output is stashed until stage j+1's backward
+            trace::instant(
+                TraceKind::ActAlloc,
+                Fields {
+                    stage: j as u32,
+                    step: t,
+                    bytes: rt.manifest().stages[j].act_bytes,
+                    ..Fields::default()
+                },
+            );
             acts.push(y);
         }
+        let free_act = |j: usize| {
+            // stage j's backward consumed stage j−1's stashed output (the
+            // raw input at j == 0 was never counted by ActAlloc)
+            if j > 0 {
+                trace::instant(
+                    TraceKind::ActFree,
+                    Fields {
+                        stage: (j - 1) as u32,
+                        step: t,
+                        bytes: rt.manifest().stages[j - 1].act_bytes,
+                        ..Fields::default()
+                    },
+                );
+            }
+        };
 
         // backward chain, grads straight into the arena scratch
         let last = n - 1;
         let ver = version_id(&self.rule, self.store.step(), i, last, n);
         let flat = self.store.select(&self.rule, i, last);
+        let t_bwd = trace::start();
         let (loss, mut gx) = rt.last_bwd(
             &mut self.exec,
             ver,
@@ -174,9 +215,16 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
             &targets,
             &mut gmb[layout.stage_range(last)],
         )?;
+        trace::span(
+            TraceKind::Bwd,
+            t_bwd,
+            Fields { stage: last as u32, step: t, version: ver, ..Fields::default() },
+        );
+        free_act(last);
         for j in (1..last).rev() {
             let ver = version_id(&self.rule, self.store.step(), i, j, n);
             let flat = self.store.select(&self.rule, i, j);
+            let t_bwd = trace::start();
             gx = rt.mid_bwd(
                 &mut self.exec,
                 j,
@@ -186,10 +234,17 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
                 &gx,
                 &mut gmb[layout.stage_range(j)],
             )?;
+            trace::span(
+                TraceKind::Bwd,
+                t_bwd,
+                Fields { stage: j as u32, step: t, version: ver, ..Fields::default() },
+            );
+            free_act(j);
         }
         if n > 1 {
             let ver = version_id(&self.rule, self.store.step(), i, 0, n);
             let flat = self.store.select(&self.rule, i, 0);
+            let t_bwd = trace::start();
             rt.first_bwd(
                 &mut self.exec,
                 ver,
@@ -198,6 +253,11 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
                 &gx,
                 &mut gmb[layout.stage_range(0)],
             )?;
+            trace::span(
+                TraceKind::Bwd,
+                t_bwd,
+                Fields { stage: 0, step: t, version: ver, ..Fields::default() },
+            );
         }
         Ok(loss)
     }
@@ -208,6 +268,8 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
         let n_mb = self.rt.manifest().n_microbatches;
         let t = self.store.step();
         let lr = self.lr;
+        let t_step = trace::start();
+        trace::instant(TraceKind::StepBegin, Fields { step: t, ..Fields::default() });
 
         let mut loss_sum = 0f64;
         let mut gmb = std::mem::take(&mut self.gmb);
@@ -231,14 +293,22 @@ impl<'rt, B: Backend> RefTrainer<'rt, B> {
         for j in 0..n {
             let rt = self.rt;
             let g = self.grads.stage(j);
+            let t_sgd = trace::start();
             let (cur, moms, next) = self.store.update_parts(j);
             rt.sgd(&mut self.exec, j, t, cur, moms, g, lr, next)?;
+            trace::span(
+                TraceKind::Sgd,
+                t_sgd,
+                Fields { stage: j as u32, step: t, ..Fields::default() },
+            );
         }
         self.grads.reset();
         self.store.commit_step();
 
         let loss = loss_sum / n_mb as f64;
         self.metrics.record("loss", t as f64, loss);
+        trace::loss(0, t, loss);
+        trace::span(TraceKind::StepEnd, t_step, Fields { step: t, ..Fields::default() });
         Ok(StepLog { step: t, loss })
     }
 

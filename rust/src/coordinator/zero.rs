@@ -62,6 +62,7 @@ use crate::parallel::arena::ArenaLayout;
 use crate::parallel::{Checkpoint, Rule, Version};
 use crate::runtime::Backend;
 use crate::tensor::HostTensor;
+use crate::trace::{self, Fields, TraceKind};
 use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
@@ -591,6 +592,10 @@ fn worker<B: Backend>(
         match init {
             WorkerInit::Resume(ck) => {
                 let full = ck.into_store(layout.clone(), rule)?;
+                trace::instant(
+                    TraceKind::CkptResume,
+                    Fields { worker: w as u32, step: full.step(), ..Fields::default() },
+                );
                 (
                     full.flat_params()[range.clone()].to_vec(),
                     full.stale_flat()[range.clone()].to_vec(),
@@ -648,9 +653,22 @@ fn worker<B: Backend>(
         if my_kill == Some(t) {
             // scripted crash: vanish at the θ-version boundary without a
             // word — peers must detect the silence, not be told
+            trace::instant(
+                TraceKind::Kill,
+                Fields { worker: w as u32, step: t, ..Fields::default() },
+            );
             return Ok(WorkerOut { logs, peak_state, checkpoint, handoff: None });
         }
+        let t_step = trace::start();
+        trace::instant(
+            TraceKind::StepBegin,
+            Fields { worker: w as u32, step: t, ..Fields::default() },
+        );
         if hb_active {
+            trace::instant(
+                TraceKind::Heartbeat,
+                Fields { worker: w as u32, step: t, ..Fields::default() },
+            );
             for &p in &peers {
                 // a send error already proves the peer is gone; the recv
                 // sweep below records it
@@ -711,6 +729,16 @@ fn worker<B: Backend>(
                     .get_or_insert_with(|| pool.payload_from_slice(&own_prev))
                     .clone(),
             };
+            trace::instant(
+                TraceKind::ParamSend,
+                Fields {
+                    worker: w as u32,
+                    stage: w as u32,
+                    step: t,
+                    bytes: payload.len() as u64 * 4,
+                    ..Fields::default()
+                },
+            );
             ep.send(peer, tags::param(t, w), payload)
                 .with_context(|| format!("owner {w}: param hand-off, step {t}"))?;
         }
@@ -727,6 +755,16 @@ fn worker<B: Backend>(
                 .recv(j, tags::param(t, j))
                 .with_context(|| format!("worker {w}: stage params, step {t}"))?;
             recv_bytes += payload.len() as u64 * 4;
+            trace::instant(
+                TraceKind::ParamRecv,
+                Fields {
+                    worker: w as u32,
+                    stage: j as u32,
+                    step: t,
+                    bytes: payload.len() as u64 * 4,
+                    ..Fields::default()
+                },
+            );
             recv_params[j] = Some(payload);
         }
         // ZeRO memory property: a worker transiently holds its own states
@@ -744,7 +782,30 @@ fn worker<B: Backend>(
         for j in 0..n - 1 {
             let ver = version_id(rule, t, i, j, n);
             let p = stage_run(j, w, i, n, rule, &own_cur, &own_prev, &recv_params)?;
+            let t_fwd = trace::start();
             let y = rt.fwd(&mut exec, j, ver, p, &acts[j])?;
+            trace::span(
+                TraceKind::Fwd,
+                t_fwd,
+                Fields {
+                    worker: w as u32,
+                    stage: j as u32,
+                    step: t,
+                    version: ver,
+                    ..Fields::default()
+                },
+            );
+            // stage j's output is stashed until stage j+1's backward
+            trace::instant(
+                TraceKind::ActAlloc,
+                Fields {
+                    worker: w as u32,
+                    stage: j as u32,
+                    step: t,
+                    bytes: rt.manifest().stages[j].act_bytes,
+                    ..Fields::default()
+                },
+            );
             acts.push(y);
         }
 
@@ -752,6 +813,22 @@ fn worker<B: Backend>(
         // Stage j's gradients fly to owner j bucket by bucket the moment
         // they land; stages below j keep backpropagating meanwhile.  The
         // own-stage slice stays local for the in-order reduction below.
+        let free_act = |j: usize| {
+            // stage j's backward consumed stage j−1's stashed output (the
+            // raw input at j == 0 was never counted by ActAlloc)
+            if j > 0 {
+                trace::instant(
+                    TraceKind::ActFree,
+                    Fields {
+                        worker: w as u32,
+                        stage: (j - 1) as u32,
+                        step: t,
+                        bytes: rt.manifest().stages[j - 1].act_bytes,
+                        ..Fields::default()
+                    },
+                );
+            }
+        };
         let last = n - 1;
         let ver = version_id(rule, t, i, last, n);
         let (loss, mut gx) = rt.last_bwd(
@@ -762,7 +839,8 @@ fn worker<B: Backend>(
             &targets,
             &mut gmb[layout.stage_range(last)],
         )?;
-        ep.stats().mark(EventKind::BwdStageDone, w, last, 0);
+        ep.stats().mark(EventKind::BwdStageDone, w, last, t, 0);
+        free_act(last);
         if last != w {
             reducer
                 .shard_send(ep, &layout, t, last, i, last, &gmb[layout.stage_range(last)])
@@ -779,7 +857,8 @@ fn worker<B: Backend>(
                 &gx,
                 &mut gmb[layout.stage_range(j)],
             )?;
-            ep.stats().mark(EventKind::BwdStageDone, w, j, 0);
+            ep.stats().mark(EventKind::BwdStageDone, w, j, t, 0);
+            free_act(j);
             if j != w {
                 reducer
                     .shard_send(ep, &layout, t, j, i, j, &gmb[layout.stage_range(j)])
@@ -796,7 +875,7 @@ fn worker<B: Backend>(
                 &gx,
                 &mut gmb[layout.stage_range(0)],
             )?;
-            ep.stats().mark(EventKind::BwdStageDone, w, 0, 0);
+            ep.stats().mark(EventKind::BwdStageDone, w, 0, t, 0);
             if w != 0 {
                 reducer
                     .shard_send(ep, &layout, t, 0, i, 0, &gmb[layout.stage_range(0)])
@@ -820,6 +899,7 @@ fn worker<B: Backend>(
             .with_context(|| format!("owner {w}: shard reduce, step {t}"))?;
 
         // ---- owner update ----------------------------------------------
+        let t_sgd = trace::start();
         rt.sgd(
             &mut exec,
             w,
@@ -830,6 +910,11 @@ fn worker<B: Backend>(
             rt.manifest().lr,
             &mut own_next,
         )?;
+        trace::span(
+            TraceKind::Sgd,
+            t_sgd,
+            Fields { worker: w as u32, stage: w as u32, step: t, ..Fields::default() },
+        );
         std::mem::swap(&mut own_prev, &mut own_cur); // prev ← θ_t
         std::mem::swap(&mut own_cur, &mut own_next); // cur ← θ_{t+1}
 
@@ -869,6 +954,10 @@ fn worker<B: Backend>(
                         .with_context(|| format!("worker 0: persist checkpoint, step {t}"))?;
                 }
                 checkpoint = Some(ck);
+                trace::instant(
+                    TraceKind::CkptSave,
+                    Fields { worker: w as u32, step: t, ..Fields::default() },
+                );
             }
         }
 
@@ -881,11 +970,18 @@ fn worker<B: Backend>(
                     .with_context(|| format!("worker 0: loss gather, step {t}"))?;
                 sum += p[0] as f64;
             }
-            logs.push(StepLog { step: t, loss: sum / n_mb as f64 });
+            let mean = sum / n_mb as f64;
+            trace::loss(0, t, mean);
+            logs.push(StepLog { step: t, loss: mean });
         } else {
             ep.send(0, tags::loss(t), vec![loss])
                 .with_context(|| format!("worker {w}: loss report, step {t}"))?;
         }
+        trace::span(
+            TraceKind::StepEnd,
+            t_step,
+            Fields { worker: w as u32, step: t, ..Fields::default() },
+        );
     }
     Ok(WorkerOut { logs, peak_state, checkpoint, handoff: None })
 }

@@ -26,6 +26,8 @@
 //! - [`plan`]      — auto-planner: search partition × schedule × shard,
 //!                   emit a serializable execution [`plan::Plan`].
 //! - [`metrics`]   — counters, CSV/JSON emission.
+//! - [`trace`]     — structured tracing: ring recorder, CDPTRACE1 JSONL,
+//!                   Chrome export, and the paper-claim verifier.
 //! - [`testing`]   — property-test mini-framework (no crates.io access).
 
 pub mod cli;
@@ -43,4 +45,5 @@ pub mod runtime;
 pub mod sim;
 pub mod tensor;
 pub mod testing;
+pub mod trace;
 pub mod util;

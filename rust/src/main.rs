@@ -17,6 +17,13 @@
 //!             (spawns one OS process per worker; see `worker` below)
 //!   worker    --worker-id W --workers N --transport uds|tcp --rendezvous DIR
 //!             (one rank of a multi-process fleet; normally spawned by launch)
+//!   trace     summarize|chrome|verify FILE  (CDPTRACE1 JSONL analyzer;
+//!             verify: [--expect balanced|spike] [--balance-ratio 2.5]
+//!             [--mem-factor 1.5]; chrome: [--out FILE]; summarize:
+//!             [--buckets 20].  Produce traces with `train --trace FILE
+//!             [--trace-kernels] [--trace-cap N]`, `worker --trace FILE |
+//!             --trace-dir DIR`, or `launch --trace FILE` which merges
+//!             the per-process files from the rendezvous dir.)
 //!   timeline  --n 3 --horizon 18            (Fig 1)
 //!   schemes   --n 3                         (Fig 2)
 //!   table1    --n 4                         (Tab 1)
@@ -41,6 +48,7 @@ fn main() {
         "plan" => cmd_plan(&args),
         "launch" => cmd_launch(&args),
         "worker" => cmd_worker(&args),
+        "trace" => cmd_trace(&args),
         "timeline" => cmd_timeline(&args),
         "schemes" => cmd_schemes(&args),
         "table1" => cmd_table1(&args),
@@ -60,7 +68,7 @@ fn main() {
 fn print_help() {
     println!(
         "cdp — Cyclic Data Parallelism coordinator\n\
-         subcommands: train | plan | launch | worker | timeline | schemes | table1 | memsim | golden\n\
+         subcommands: train | plan | launch | worker | trace | timeline | schemes | table1 | memsim | golden\n\
          backend: --backend native|xla (or CDP_BACKEND); this build has \
          xla {}\n\
          see rust/src/main.rs header for flags",
@@ -207,10 +215,37 @@ fn train_xla(_args: &Args) -> Result<()> {
     unreachable!("backend_choice rejects xla without the feature")
 }
 
+/// Default trace-ring capacity (events).  ~26 MB resident when enabled;
+/// big enough that a smoke run never wraps, bounded when one does.
+const TRACE_CAP_DEFAULT: usize = 262_144;
+
+/// Turn the recorder on when `--trace`/`--trace-dir` asks for a file;
+/// returns the output path to flush to after the run.
+fn trace_setup(args: &Args, out: Option<std::path::PathBuf>) -> Option<std::path::PathBuf> {
+    if out.is_some() {
+        cyclic_dp::trace::enable(args.usize_or("trace-cap", TRACE_CAP_DEFAULT));
+        cyclic_dp::trace::set_kernels(args.bool_or("trace-kernels", false));
+    }
+    out
+}
+
+/// Drain the recorder and write the CDPTRACE1 JSONL file.
+fn trace_flush(path: &std::path::Path) -> Result<()> {
+    let (events, dropped) = cyclic_dp::trace::drain();
+    cyclic_dp::trace::write_jsonl(path, &events, dropped)?;
+    eprintln!(
+        "trace: {} events ({dropped} dropped) -> {}",
+        events.len(),
+        path.display()
+    );
+    Ok(())
+}
+
 fn run_train<B: Backend + Send + Sync + 'static>(rt: B, args: &Args) -> Result<()> {
     let rule = rule_by_name(args.str_or("rule", "cdp_v2"))?;
     let steps = args.usize_or("steps", 10);
     let trainer = args.str_or("trainer", "single");
+    let trace_to = trace_setup(args, args.get("trace").map(std::path::PathBuf::from));
     println!(
         "bundle={} family={} stages={} params={} rule={} trainer={trainer} backend={}",
         rt.manifest().name,
@@ -286,6 +321,65 @@ fn run_train<B: Backend + Send + Sync + 'static>(rt: B, args: &Args) -> Result<(
         }
         other => anyhow::bail!("unknown trainer `{other}`"),
     }
+    if let Some(path) = trace_to {
+        trace_flush(&path)?;
+    }
+    Ok(())
+}
+
+/// `cdp trace summarize|chrome|verify FILE`: analyze a CDPTRACE1 JSONL
+/// trace — per-stage/per-kind breakdown, Chrome trace-event export, or
+/// the paper-claim verifier (constant activation memory + balanced
+/// gradient communication for the cyclic rules; `--expect spike` asserts
+/// the barrier baseline *fails* balance).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use anyhow::Context;
+    use cyclic_dp::trace as tr;
+
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("summarize");
+    let file = args
+        .positional
+        .get(2)
+        .context("usage: cdp trace summarize|chrome|verify FILE")?;
+    let parsed = tr::parse_jsonl_file(std::path::Path::new(file))
+        .with_context(|| format!("parsing trace {file}"))?;
+    if parsed.skipped > 0 {
+        eprintln!("note: skipped {} corrupt/unknown lines", parsed.skipped);
+    }
+    match sub {
+        "summarize" => {
+            let s = tr::summarize(&parsed.events, args.usize_or("buckets", 20));
+            print!("{}", tr::render_summary(&s));
+        }
+        "chrome" => {
+            let json = tr::to_chrome(&parsed.events);
+            match args.get("out") {
+                Some(p) => {
+                    std::fs::write(p, &json)
+                        .with_context(|| format!("writing chrome trace {p}"))?;
+                    eprintln!("wrote chrome trace to {p} (open in chrome://tracing or Perfetto)");
+                }
+                None => println!("{json}"),
+            }
+        }
+        "verify" => {
+            let expect = match args.str_or("expect", "balanced") {
+                "spike" => tr::Expect::Spike,
+                _ => tr::Expect::Balanced,
+            };
+            let opts = tr::VerifyOpts {
+                balance_ratio: args.f64_or("balance-ratio", 2.5),
+                mem_factor: args.f64_or("mem-factor", 1.5),
+                expect,
+            };
+            let report = tr::verify(&parsed.events, &opts);
+            print!("{}", tr::render_verify(&report));
+            anyhow::ensure!(report.ok, "trace verification failed");
+        }
+        other => {
+            anyhow::bail!("unknown trace subcommand `{other}` (summarize|chrome|verify)")
+        }
+    }
     Ok(())
 }
 
@@ -328,6 +422,17 @@ fn cmd_launch(args: &Args) -> Result<()> {
             forward.push(v.to_string());
         }
     }
+    // --trace FILE: children write per-rank trace-w{id}.jsonl files into
+    // the rendezvous dir; the launcher merges them after the fleet exits.
+    let trace_out = args.get("trace").map(std::path::PathBuf::from);
+    if trace_out.is_some() {
+        forward.push("--trace-dir".to_string());
+        forward.push(rendezvous.display().to_string());
+        if let Some(cap) = args.get("trace-cap") {
+            forward.push("--trace-cap".to_string());
+            forward.push(cap.to_string());
+        }
+    }
     let spec = LaunchSpec {
         workers,
         transport,
@@ -341,10 +446,29 @@ fn cmd_launch(args: &Args) -> Result<()> {
         rendezvous.display()
     );
     let result = launch(&spec);
+    // Merge whatever per-rank traces exist before the rendezvous dir is
+    // cleaned up — even a failed fleet leaves evidence worth keeping.
+    let merged = trace_out.as_ref().map(|out| {
+        cyclic_dp::cluster::launch::merge_traces(&rendezvous, workers)
+            .and_then(|m| {
+                cyclic_dp::trace::write_jsonl(out, &m.events, m.dropped)?;
+                eprintln!(
+                    "trace: merged {} events ({} dropped, {} skipped) -> {}",
+                    m.events.len(),
+                    m.dropped,
+                    m.skipped,
+                    out.display()
+                );
+                Ok(())
+            })
+    });
     if created {
         let _ = std::fs::remove_dir_all(&rendezvous);
     }
     let outs = result?;
+    if let Some(m) = merged {
+        m?;
+    }
     print!("{}", String::from_utf8_lossy(&outs[0].stdout));
     Ok(())
 }
@@ -379,6 +503,16 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let rt = load_native_bundle(args)?;
     let rule = rule_by_name(args.str_or("rule", "cdp_v2"))?;
     let steps = args.usize_or("steps", 10);
+    // --trace FILE names the worker's own file; --trace-dir DIR (what the
+    // launcher forwards) derives the per-rank name the merger expects.
+    let trace_to = trace_setup(
+        args,
+        args.get("trace").map(std::path::PathBuf::from).or_else(|| {
+            args.get("trace-dir").map(|d| {
+                cyclic_dp::cluster::launch::worker_trace_path(std::path::Path::new(d), id)
+            })
+        }),
+    );
 
     let pool = BufferPool::new();
     let stats = Arc::new(CommStats::default());
@@ -422,10 +556,19 @@ fn cmd_worker(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("worker supports --trainer multi|zero, got `{other}`"),
     };
+    if let Some(path) = trace_to {
+        trace_flush(&path)?;
+    }
     if id == 0 {
         for log in &logs {
             println!("step {:>4}  loss {:.5}", log.step, log.loss);
-            println!("CDP_LOSS {} {:016x}", log.step, log.loss.to_bits());
+            // The bit-exact loss line is *derived from* the structured
+            // Loss trace event — one format, two renderings (the trainers
+            // record the same event into the trace stream).
+            let ev = cyclic_dp::trace::TraceEvent::loss(id, log.step, log.loss);
+            let line = cyclic_dp::trace::render_loss_line(&ev)
+                .expect("a Loss event always renders a CDP_LOSS line");
+            println!("{line}");
         }
     }
     Ok(())

@@ -65,7 +65,13 @@ impl Metrics {
     }
 
     pub fn inc(&mut self, name: &str, by: u64) {
-        *self.counters.entry(name.to_string()).or_insert(0) += by;
+        // get_mut-first: the steady-state path (key already present)
+        // must not allocate a `String` per call.
+        if let Some(c) = self.counters.get_mut(name) {
+            *c += by;
+        } else {
+            self.counters.insert(name.to_string(), by);
+        }
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -73,10 +79,14 @@ impl Metrics {
     }
 
     pub fn record(&mut self, series: &str, x: f64, y: f64) {
-        self.series
-            .entry(series.to_string())
-            .or_insert_with(|| Series::new(series))
-            .push(x, y);
+        // Same discipline as `inc`: allocate the key only on first use.
+        if let Some(s) = self.series.get_mut(series) {
+            s.push(x, y);
+        } else {
+            let mut s = Series::new(series);
+            s.push(x, y);
+            self.series.insert(series.to_string(), s);
+        }
     }
 
     pub fn get_series(&self, name: &str) -> Option<&Series> {
@@ -217,5 +227,23 @@ mod tests {
         let back = parse_metrics(&text).unwrap();
         assert_eq!(back.counter("a"), 7);
         assert_eq!(back.get_series("s").unwrap().values(), vec![1.5]);
+    }
+
+    #[test]
+    fn non_finite_series_round_trip_as_valid_json() {
+        let mut m = Metrics::new();
+        m.record("loss", 0.0, f64::NAN);
+        m.record("loss", 1.0, f64::INFINITY);
+        m.record("loss", 2.0, f64::NEG_INFINITY);
+        m.record("loss", 3.0, 0.25);
+        let text = m.to_json().to_string();
+        // The emitted document must be parseable JSON even with the
+        // diverged-loss values in it.
+        let back = parse_metrics(&text).unwrap();
+        let vals = back.get_series("loss").unwrap().values();
+        assert!(vals[0].is_nan());
+        assert_eq!(vals[1], f64::INFINITY);
+        assert_eq!(vals[2], f64::NEG_INFINITY);
+        assert_eq!(vals[3], 0.25);
     }
 }

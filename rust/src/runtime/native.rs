@@ -573,7 +573,12 @@ impl Backend for NativeBackend {
         flat: &[f32],
         x: &HostTensor,
     ) -> Result<HostTensor> {
-        Ok(HostTensor::F32(Backend::stage_fwd_flat(self, stage, flat, x)?))
+        // kernel-level spans are opt-in (trace --trace-kernels knob);
+        // kernel_start is a single atomic load when the knob is off
+        let t0 = crate::trace::kernel_start();
+        let y = HostTensor::F32(Backend::stage_fwd_flat(self, stage, flat, x)?);
+        crate::trace::kernel_end(t0, 0, stage, _version);
+        Ok(y)
     }
 
     fn last_bwd(
@@ -587,7 +592,9 @@ impl Backend for NativeBackend {
     ) -> Result<(f32, HostTensor)> {
         let last = self.manifest.n_stages - 1;
         let x = self.act_f32(last, x)?;
+        let t0 = crate::trace::kernel_start();
         let (loss, gx) = self.stage_bwd(last, flat, x, None, Some(targets), gdst)?;
+        crate::trace::kernel_end(t0, 1, last, _version);
         Ok((loss, HostTensor::F32(gx)))
     }
 
@@ -603,7 +610,9 @@ impl Backend for NativeBackend {
     ) -> Result<HostTensor> {
         let x = self.act_f32(stage, x)?;
         let gy = self.act_f32(stage, gy)?;
+        let t0 = crate::trace::kernel_start();
         let (_, gx) = self.stage_bwd(stage, flat, x, Some(gy), None, gdst)?;
+        crate::trace::kernel_end(t0, 1, stage, _version);
         Ok(HostTensor::F32(gx))
     }
 
@@ -618,7 +627,9 @@ impl Backend for NativeBackend {
     ) -> Result<()> {
         let x = self.act_f32(0, x)?;
         let gy = self.act_f32(0, gy)?;
+        let t0 = crate::trace::kernel_start();
         self.stage_bwd(0, flat, x, Some(gy), None, gdst)?;
+        crate::trace::kernel_end(t0, 1, 0, _version);
         Ok(())
     }
 
@@ -633,7 +644,10 @@ impl Backend for NativeBackend {
         lr: f32,
         out: &mut [f32],
     ) -> Result<()> {
-        Backend::sgd_update_flat(self, stage, cur, moms, grads, lr, out)
+        let t0 = crate::trace::kernel_start();
+        Backend::sgd_update_flat(self, stage, cur, moms, grads, lr, out)?;
+        crate::trace::kernel_end(t0, 2, stage, _version);
+        Ok(())
     }
 
     fn stage_fwd_flat(&self, stage: usize, flat: &[f32], x: &HostTensor) -> Result<Tensor> {

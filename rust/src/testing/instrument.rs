@@ -89,6 +89,24 @@ pub fn overlap_from_stats(stats: &CommStats) -> Option<OverlapDigest> {
     })
 }
 
+/// Digest from a structured trace (`src/trace`): the first `GradSend`
+/// departure against the *end* of the last `Bwd` span (bwd events are
+/// spans there, so the completion time is `end_ns`, not `ns`).
+pub fn overlap_from_trace(events: &[crate::trace::TraceEvent]) -> Option<OverlapDigest> {
+    use crate::trace::TraceKind;
+    let first = events
+        .iter()
+        .filter(|e| e.kind == TraceKind::GradSend)
+        .map(|e| e.ns)
+        .min()?;
+    let last = events
+        .iter()
+        .filter(|e| e.kind == TraceKind::Bwd)
+        .map(|e| e.end_ns())
+        .max()?;
+    Some(OverlapDigest { first_grad_send_ns: first, last_bwd_done_ns: last })
+}
+
 /// Digest from a raw event slice (e.g. a report's captured timeline).
 pub fn overlap_from_events(events: &[TimelineEvent]) -> Option<OverlapDigest> {
     let first = events
@@ -131,5 +149,26 @@ mod tests {
         assert_eq!(d.last_bwd_done_ns, 20);
         assert!(d.overlapped());
         assert!(overlap_from_events(&[]).is_none());
+    }
+
+    #[test]
+    fn overlap_digest_from_structured_trace_uses_span_ends() {
+        use crate::trace::{Fields, TraceEvent, TraceKind};
+        let events = vec![
+            // bwd span [5, 25): completion is end_ns=25, not start ns=5
+            TraceEvent::new(TraceKind::Bwd, 5, 20, Fields::default()),
+            TraceEvent::new(TraceKind::GradSend, 12, 0, Fields::default()),
+        ];
+        let d = overlap_from_trace(&events).unwrap();
+        assert_eq!(d.first_grad_send_ns, 12);
+        assert_eq!(d.last_bwd_done_ns, 25);
+        assert!(d.overlapped());
+        assert!(overlap_from_trace(&[]).is_none());
+        // a send after every backward completed is not an overlap
+        let late = vec![
+            TraceEvent::new(TraceKind::Bwd, 5, 2, Fields::default()),
+            TraceEvent::new(TraceKind::GradSend, 12, 0, Fields::default()),
+        ];
+        assert!(!overlap_from_trace(&late).unwrap().overlapped());
     }
 }

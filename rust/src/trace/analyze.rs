@@ -1,0 +1,619 @@
+//! Offline analysis over a parsed trace: human summaries, Chrome
+//! trace-event export, and — the teeth — machine-checked verification
+//! of the paper's two timeline claims:
+//!
+//! 1. **Constant activation memory**: the peak of live activation
+//!    bytes, reconstructed per worker from `act_alloc`/`act_free`
+//!    events, is the same every step (max/min per-step peak bounded by
+//!    a small factor).  A schedule that stashes more activations as
+//!    the run proceeds — or leaks — fails.
+//! 2. **Balanced gradient communication**: slicing each worker's step
+//!    into the intervals delimited by its backward-stage completions,
+//!    the gradient bytes sent per interval have bounded peak-to-mean
+//!    ratio for the eager cyclic rules.  The barrier baseline sends
+//!    everything in the final interval, so its ratio is the interval
+//!    count — far over the bound — and `--expect spike` turns that
+//!    demonstrated failure into a passing check.
+
+use std::collections::BTreeMap;
+
+use super::event::{TraceEvent, TraceKind};
+
+/// Aggregate per-stage span time for one compute kind.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KindTime {
+    /// Summed span duration, ns.
+    pub dur_ns: u64,
+    /// Number of spans/instants.
+    pub count: u64,
+}
+
+/// Per-stage fwd/bwd/sgd breakdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimes {
+    /// Forward spans on this stage.
+    pub fwd: KindTime,
+    /// Backward spans/instants on this stage.
+    pub bwd: KindTime,
+    /// Optimizer spans on this stage.
+    pub sgd: KindTime,
+    /// Kernel spans on this stage (when the kernel knob was on).
+    pub kernel: KindTime,
+}
+
+/// What `cdp trace summarize` reports.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    /// Total events analyzed.
+    pub events: usize,
+    /// Wall-clock span covered, ns (max end − min start).
+    pub wall_ns: u64,
+    /// Count + summed duration per event kind, keyed by wire name.
+    pub per_kind: BTreeMap<&'static str, KindTime>,
+    /// fwd/bwd/sgd breakdown per stage.
+    pub per_stage: BTreeMap<u32, StageTimes>,
+    /// Fraction of gradient sends that depart before the last backward
+    /// completes — the comm/compute overlap the cyclic rules exist to
+    /// create.  `None` when the trace has no sends or no backwards.
+    pub overlap_fraction: Option<f64>,
+    /// Peak live activation bytes overall.
+    pub peak_live_bytes: u64,
+    /// Peak live activation bytes per wall-clock bucket.
+    pub live_buckets: Vec<u64>,
+}
+
+fn bucket_of(ns: u64, t0: u64, span: u64, buckets: usize) -> usize {
+    if span == 0 {
+        return 0;
+    }
+    (((ns - t0) as u128 * buckets as u128 / (span as u128 + 1)) as usize).min(buckets - 1)
+}
+
+/// Summarize a trace into [`Summary`]; `buckets` controls the
+/// wall-clock resolution of the live-activation curve.
+pub fn summarize(events: &[TraceEvent], buckets: usize) -> Summary {
+    let buckets = buckets.max(1);
+    let mut s = Summary { events: events.len(), ..Summary::default() };
+    if events.is_empty() {
+        s.live_buckets = vec![0; buckets];
+        return s;
+    }
+    let t0 = events.iter().map(|e| e.ns).min().unwrap_or(0);
+    let t1 = events.iter().map(TraceEvent::end_ns).max().unwrap_or(t0);
+    s.wall_ns = t1 - t0;
+
+    for ev in events {
+        let kt = s.per_kind.entry(ev.kind.name()).or_default();
+        kt.count += 1;
+        kt.dur_ns += ev.dur_ns;
+        let slot = match ev.kind {
+            TraceKind::Fwd => Some(0),
+            TraceKind::Bwd => Some(1),
+            TraceKind::Sgd => Some(2),
+            TraceKind::Kernel => Some(3),
+            _ => None,
+        };
+        if let Some(slot) = slot {
+            let st = s.per_stage.entry(ev.stage).or_default();
+            let kt = match slot {
+                0 => &mut st.fwd,
+                1 => &mut st.bwd,
+                2 => &mut st.sgd,
+                _ => &mut st.kernel,
+            };
+            kt.count += 1;
+            kt.dur_ns += ev.dur_ns;
+        }
+    }
+
+    // Overlap is judged within each (worker, step): a send overlaps
+    // compute iff it departs before that worker's last backward of the
+    // same step completes.
+    let mut last_bwd: BTreeMap<(u32, u64), u64> = BTreeMap::new();
+    for e in events.iter().filter(|e| e.kind == TraceKind::Bwd) {
+        let end = last_bwd.entry((e.worker, e.step)).or_insert(0);
+        *end = (*end).max(e.end_ns());
+    }
+    let (mut sends, mut overlapped) = (0u64, 0u64);
+    for e in events.iter().filter(|e| e.kind == TraceKind::GradSend) {
+        sends += 1;
+        if last_bwd.get(&(e.worker, e.step)).is_some_and(|&end| e.ns <= end) {
+            overlapped += 1;
+        }
+    }
+    s.overlap_fraction = (sends > 0 && !last_bwd.is_empty())
+        .then(|| overlapped as f64 / sends as f64);
+
+    // Live-activation sweep: signed deltas in time order, peak per bucket.
+    let mut deltas: Vec<(u64, i64)> = events
+        .iter()
+        .filter_map(|e| match e.kind {
+            TraceKind::ActAlloc => Some((e.ns, e.bytes as i64)),
+            TraceKind::ActFree => Some((e.end_ns(), -(e.bytes as i64))),
+            _ => None,
+        })
+        .collect();
+    deltas.sort_unstable();
+    let mut live = 0i64;
+    let mut peaks = vec![0u64; buckets];
+    let mut cursor = 0usize;
+    for (ns, d) in deltas {
+        let b = bucket_of(ns, t0, s.wall_ns, buckets);
+        // A bucket with no events holds whatever was live entering it.
+        for p in peaks.iter_mut().take(b).skip(cursor + 1) {
+            *p = (*p).max(live.max(0) as u64);
+        }
+        live += d;
+        peaks[b] = peaks[b].max(live.max(0) as u64);
+        s.peak_live_bytes = s.peak_live_bytes.max(live.max(0) as u64);
+        cursor = b;
+    }
+    s.live_buckets = peaks;
+    s
+}
+
+fn fmt_ms(ns: u64) -> String {
+    format!("{:.3}ms", ns as f64 / 1e6)
+}
+
+fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 20 {
+        format!("{:.1}MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1}KiB", b as f64 / 1024.0)
+    } else {
+        format!("{b}B")
+    }
+}
+
+/// Render a [`Summary`] as the text `cdp trace summarize` prints.
+pub fn render_summary(s: &Summary) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("events {}  wall {}\n", s.events, fmt_ms(s.wall_ns)));
+    out.push_str("per-kind:\n");
+    for (name, kt) in &s.per_kind {
+        out.push_str(&format!("  {name:<12} n={:<7} dur={}\n", kt.count, fmt_ms(kt.dur_ns)));
+    }
+    if !s.per_stage.is_empty() {
+        out.push_str("per-stage (dur/count):\n");
+        out.push_str(&format!(
+            "  {:<6} {:<18} {:<18} {:<18} {:<18}\n",
+            "stage", "fwd", "bwd", "sgd", "kernel"
+        ));
+        for (stage, st) in &s.per_stage {
+            let cell = |kt: &KindTime| format!("{}/{}", fmt_ms(kt.dur_ns), kt.count);
+            out.push_str(&format!(
+                "  {:<6} {:<18} {:<18} {:<18} {:<18}\n",
+                stage,
+                cell(&st.fwd),
+                cell(&st.bwd),
+                cell(&st.sgd),
+                cell(&st.kernel),
+            ));
+        }
+    }
+    match s.overlap_fraction {
+        Some(f) => out.push_str(&format!(
+            "overlap: {:.0}% of grad sends depart before the last backward completes\n",
+            f * 100.0
+        )),
+        None => out.push_str("overlap: n/a (no grad sends or no backward events)\n"),
+    }
+    out.push_str(&format!(
+        "peak live activations: {}\nlive-bytes buckets: [{}]\n",
+        fmt_bytes(s.peak_live_bytes),
+        s.live_buckets.iter().map(|b| fmt_bytes(*b)).collect::<Vec<_>>().join(", ")
+    ));
+    out
+}
+
+/// Export a trace as Chrome trace-event-format JSON (load in
+/// `chrome://tracing` or Perfetto).  `pid` is the worker, `tid` the
+/// stage; spans become `ph:"X"`, instants `ph:"i"`.
+pub fn to_chrome(events: &[TraceEvent]) -> String {
+    let mut out = String::with_capacity(64 + events.len() * 128);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let ts = ev.ns as f64 / 1e3;
+        let mut args = format!("\"step\":{}", ev.step);
+        if ev.version > 0 {
+            args.push_str(&format!(",\"ver\":{}", ev.version));
+        }
+        if ev.bytes > 0 {
+            args.push_str(&format!(",\"bytes\":{}", ev.bytes));
+        }
+        if ev.bits > 0 {
+            args.push_str(&format!(",\"bits\":\"{:016x}\"", ev.bits));
+        }
+        if ev.dur_ns > 0 {
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":{},\"tid\":{},\"args\":{{{args}}}}}",
+                ev.kind.name(),
+                ts,
+                ev.dur_ns as f64 / 1e3,
+                ev.worker,
+                ev.stage,
+            ));
+        } else {
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{:.3},\"pid\":{},\"tid\":{},\"args\":{{{args}}}}}",
+                ev.kind.name(),
+                ts,
+                ev.worker,
+                ev.stage,
+            ));
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Which comm shape a verify run expects the trace to exhibit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Expect {
+    /// Cyclic rules: gradient bytes must be balanced over the step.
+    Balanced,
+    /// Barrier baseline: the balance check must *fail* (and gradient
+    /// sends must exist) — proving the invariant has teeth.
+    Spike,
+}
+
+/// Knobs for [`verify`].
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyOpts {
+    /// Max allowed per-interval gradient-bytes peak-to-mean ratio.
+    pub balance_ratio: f64,
+    /// Max allowed (max step peak)/(min step peak) of live activation
+    /// bytes per worker.
+    pub mem_factor: f64,
+    /// Expected comm shape.
+    pub expect: Expect,
+}
+
+impl Default for VerifyOpts {
+    fn default() -> Self {
+        VerifyOpts { balance_ratio: 2.5, mem_factor: 1.5, expect: Expect::Balanced }
+    }
+}
+
+/// Constant-memory check result.
+#[derive(Clone, Copy, Debug)]
+pub struct MemCheck {
+    /// False when no worker had activation events spanning ≥ 2 steps
+    /// (the check is then vacuously passing and reported as skipped).
+    pub evaluated: bool,
+    /// Largest per-step live-bytes peak seen on the worst worker.
+    pub max_step_peak: u64,
+    /// Smallest per-step live-bytes peak on that same worker.
+    pub min_step_peak: u64,
+    /// Worst per-worker max/min per-step-peak ratio.
+    pub ratio: f64,
+    /// The bound the ratio was held to.
+    pub factor: f64,
+    /// Whether the check passed.
+    pub ok: bool,
+}
+
+/// Balanced-communication check result.
+#[derive(Clone, Copy, Debug)]
+pub struct BalanceCheck {
+    /// False when no (worker, step) group had ≥ 2 backward completions
+    /// and ≥ 1 gradient send.
+    pub evaluated: bool,
+    /// Number of (worker, step) groups measured.
+    pub groups: usize,
+    /// Worst per-interval bytes peak-to-mean ratio across groups.
+    pub max_ratio: f64,
+    /// The bound a balanced trace must stay under.
+    pub threshold: f64,
+    /// Whether the measured traffic was balanced (ratio ≤ threshold).
+    pub balanced: bool,
+}
+
+/// What `cdp trace verify` reports.
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyReport {
+    /// Constant-memory invariant result.
+    pub mem: MemCheck,
+    /// Balanced-communication invariant result.
+    pub balance: BalanceCheck,
+    /// The expectation the report was judged against.
+    pub expect: Expect,
+    /// Overall verdict: memory ok, and the balance shape matched
+    /// `expect`.
+    pub ok: bool,
+}
+
+fn check_memory(events: &[TraceEvent], factor: f64) -> MemCheck {
+    // Per worker: sweep alloc/free in time order, track the live-bytes
+    // peak attained within each step (keyed by the events' step field).
+    let mut per_worker: BTreeMap<u32, Vec<(u64, u64, i64)>> = BTreeMap::new();
+    for ev in events {
+        match ev.kind {
+            TraceKind::ActAlloc => per_worker
+                .entry(ev.worker)
+                .or_default()
+                .push((ev.ns, ev.step, ev.bytes as i64)),
+            TraceKind::ActFree => per_worker
+                .entry(ev.worker)
+                .or_default()
+                .push((ev.end_ns(), ev.step, -(ev.bytes as i64))),
+            _ => {}
+        }
+    }
+    let mut out = MemCheck {
+        evaluated: false,
+        max_step_peak: 0,
+        min_step_peak: 0,
+        ratio: 1.0,
+        factor,
+        ok: true,
+    };
+    for deltas in per_worker.values_mut() {
+        deltas.sort_unstable();
+        let mut live = 0i64;
+        let mut step_peak: BTreeMap<u64, u64> = BTreeMap::new();
+        for &(_, step, d) in deltas.iter() {
+            live += d;
+            let p = step_peak.entry(step).or_insert(0);
+            *p = (*p).max(live.max(0) as u64);
+        }
+        if step_peak.len() < 2 {
+            continue;
+        }
+        let max = step_peak.values().copied().max().unwrap_or(0);
+        let min = step_peak.values().copied().min().unwrap_or(0);
+        let ratio = if min == 0 { f64::INFINITY } else { max as f64 / min as f64 };
+        if !out.evaluated || ratio > out.ratio {
+            out.evaluated = true;
+            out.max_step_peak = max;
+            out.min_step_peak = min;
+            out.ratio = ratio;
+        }
+    }
+    out.ok = !out.evaluated || out.ratio <= factor;
+    out
+}
+
+fn check_balance(events: &[TraceEvent], threshold: f64) -> BalanceCheck {
+    // Per (worker, step): interval boundaries are the backward-stage
+    // completion times; each gradient send's bytes land in the interval
+    // containing its departure.  K backwards ⇒ K+1 intervals (the last
+    // is the after-all-backwards tail where the barrier baseline dumps
+    // everything).
+    let mut groups: BTreeMap<(u32, u64), (Vec<u64>, Vec<(u64, u64)>)> = BTreeMap::new();
+    for ev in events {
+        match ev.kind {
+            TraceKind::Bwd => groups
+                .entry((ev.worker, ev.step))
+                .or_default()
+                .0
+                .push(ev.end_ns()),
+            TraceKind::GradSend => groups
+                .entry((ev.worker, ev.step))
+                .or_default()
+                .1
+                .push((ev.ns, ev.bytes)),
+            _ => {}
+        }
+    }
+    let mut out = BalanceCheck {
+        evaluated: false,
+        groups: 0,
+        max_ratio: 0.0,
+        threshold,
+        balanced: true,
+    };
+    for (ends, sends) in groups.values_mut() {
+        if ends.len() < 2 || sends.is_empty() {
+            continue;
+        }
+        ends.sort_unstable();
+        let mut interval_bytes = vec![0u64; ends.len() + 1];
+        let mut total = 0u64;
+        for &(ns, bytes) in sends.iter() {
+            let idx = ends.partition_point(|&e| e < ns);
+            interval_bytes[idx] += bytes;
+            total += bytes;
+        }
+        if total == 0 {
+            continue;
+        }
+        let peak = interval_bytes.iter().copied().max().unwrap_or(0);
+        let mean = total as f64 / interval_bytes.len() as f64;
+        let ratio = peak as f64 / mean;
+        out.evaluated = true;
+        out.groups += 1;
+        out.max_ratio = out.max_ratio.max(ratio);
+    }
+    out.balanced = !out.evaluated || out.max_ratio <= threshold;
+    out
+}
+
+/// Run both invariant checks over a trace and judge them against the
+/// expectation in `opts`.
+pub fn verify(events: &[TraceEvent], opts: &VerifyOpts) -> VerifyReport {
+    let mem = check_memory(events, opts.mem_factor);
+    let balance = check_balance(events, opts.balance_ratio);
+    let shape_ok = match opts.expect {
+        Expect::Balanced => balance.balanced,
+        // A spike must be *demonstrated*: gradient sends measured and
+        // over the bound.  A trace with no sends proves nothing.
+        Expect::Spike => balance.evaluated && !balance.balanced,
+    };
+    VerifyReport { mem, balance, expect: opts.expect, ok: mem.ok && shape_ok }
+}
+
+/// Render a [`VerifyReport`] as the text `cdp trace verify` prints.
+pub fn render_verify(r: &VerifyReport) -> String {
+    let mut out = String::new();
+    if r.mem.evaluated {
+        out.push_str(&format!(
+            "memory   {}  per-step live-bytes peak max/min = {}/{} (ratio {:.2} ≤ {:.2})\n",
+            if r.mem.ok { "PASS" } else { "FAIL" },
+            fmt_bytes(r.mem.max_step_peak),
+            fmt_bytes(r.mem.min_step_peak),
+            r.mem.ratio,
+            r.mem.factor,
+        ));
+    } else {
+        out.push_str("memory   SKIP  (<2 steps with activation events)\n");
+    }
+    if r.balance.evaluated {
+        let shape = if r.balance.balanced { "balanced" } else { "spike" };
+        let pass = match r.expect {
+            Expect::Balanced => r.balance.balanced,
+            Expect::Spike => !r.balance.balanced,
+        };
+        out.push_str(&format!(
+            "comm     {}  {} groups, per-interval grad-bytes peak/mean worst {:.2} (bound {:.2}) → {} (expected {})\n",
+            if pass { "PASS" } else { "FAIL" },
+            r.balance.groups,
+            r.balance.max_ratio,
+            r.balance.threshold,
+            shape,
+            match r.expect {
+                Expect::Balanced => "balanced",
+                Expect::Spike => "spike",
+            },
+        ));
+    } else {
+        let pass = r.expect == Expect::Balanced;
+        out.push_str(&format!(
+            "comm     {}  (no gradient sends in trace{})\n",
+            if pass { "SKIP" } else { "FAIL" },
+            if pass { "" } else { "; a spike cannot be demonstrated" },
+        ));
+    }
+    out.push_str(&format!("verify   {}\n", if r.ok { "PASS" } else { "FAIL" }));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::Fields;
+
+    fn ev(kind: TraceKind, ns: u64, worker: u32, stage: u32, step: u64, bytes: u64) -> TraceEvent {
+        TraceEvent::new(
+            kind,
+            ns,
+            0,
+            Fields { worker, stage, step, bytes, ..Fields::default() },
+        )
+    }
+
+    /// One worker, `steps` steps, `stages` stages: eager sends right
+    /// after each backward (cyclic) or one big send after all of them
+    /// (barrier).  Activations alloc on fwd, free on bwd.
+    fn synthetic(steps: u64, stages: u32, eager: bool) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        let mut t = 0u64;
+        for step in 0..steps {
+            for j in 0..stages {
+                t += 10;
+                out.push(ev(TraceKind::ActAlloc, t, 0, j, step, 1024));
+            }
+            for j in (0..stages).rev() {
+                t += 10;
+                out.push(ev(TraceKind::Bwd, t, 0, j, step, 0));
+                t += 1;
+                out.push(ev(TraceKind::ActFree, t, 0, j, step, 1024));
+                if eager {
+                    t += 1;
+                    out.push(ev(TraceKind::GradSend, t, 0, j, step, 4096));
+                }
+            }
+            if !eager {
+                t += 5;
+                out.push(ev(TraceKind::GradSend, t, 0, 0, step, 4096 * stages as u64));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn eager_trace_is_balanced_and_constant_memory() {
+        let evs = synthetic(3, 4, true);
+        let r = verify(&evs, &VerifyOpts::default());
+        assert!(r.mem.evaluated && r.mem.ok, "{:?}", r.mem);
+        assert!((r.mem.ratio - 1.0).abs() < 1e-9);
+        assert!(r.balance.evaluated && r.balance.balanced, "{:?}", r.balance);
+        assert!(r.ok);
+    }
+
+    #[test]
+    fn barrier_trace_spikes_and_expect_spike_passes() {
+        let evs = synthetic(3, 4, false);
+        let balanced = verify(&evs, &VerifyOpts::default());
+        assert!(balanced.mem.ok, "barrier still has constant memory");
+        assert!(!balanced.ok, "barrier must fail the balance check");
+        assert!(balanced.balance.max_ratio > 2.5, "{}", balanced.balance.max_ratio);
+        let spike = verify(
+            &evs,
+            &VerifyOpts { expect: Expect::Spike, ..VerifyOpts::default() },
+        );
+        assert!(spike.ok, "expect=spike turns the failure into the check");
+    }
+
+    #[test]
+    fn growing_stash_fails_memory_check() {
+        // A leaky schedule: step t allocates t+1 stashes and frees none.
+        let mut evs = Vec::new();
+        let mut t = 0;
+        for step in 0..3u64 {
+            for _ in 0..=step {
+                t += 10;
+                evs.push(ev(TraceKind::ActAlloc, t, 0, 0, step, 1 << 10));
+            }
+        }
+        let r = verify(&evs, &VerifyOpts::default());
+        assert!(r.mem.evaluated && !r.mem.ok, "{:?}", r.mem);
+        assert!(!r.ok);
+    }
+
+    #[test]
+    fn no_send_trace_skips_balance_but_cannot_claim_spike() {
+        let evs: Vec<TraceEvent> = synthetic(2, 3, true)
+            .into_iter()
+            .filter(|e| e.kind != TraceKind::GradSend)
+            .collect();
+        assert!(verify(&evs, &VerifyOpts::default()).ok);
+        let spike = verify(
+            &evs,
+            &VerifyOpts { expect: Expect::Spike, ..VerifyOpts::default() },
+        );
+        assert!(!spike.ok);
+    }
+
+    #[test]
+    fn summary_reports_overlap_and_live_curve() {
+        let evs = synthetic(2, 3, true);
+        let s = summarize(&evs, 8);
+        assert_eq!(s.events, evs.len());
+        // The final stage's send trails its own backward; the rest overlap.
+        assert!(s.overlap_fraction.unwrap() > 0.5, "{:?}", s.overlap_fraction);
+        assert_eq!(s.peak_live_bytes, 3 * 1024);
+        assert_eq!(s.live_buckets.len(), 8);
+        assert_eq!(s.live_buckets.iter().copied().max(), Some(3 * 1024));
+        let text = render_summary(&s);
+        assert!(text.contains("peak live activations"));
+        let barrier = summarize(&synthetic(2, 3, false), 8);
+        assert_eq!(barrier.overlap_fraction, Some(0.0));
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_one_record_per_event() {
+        let evs = synthetic(1, 2, true);
+        let text = to_chrome(&evs);
+        let j = crate::util::json::Json::parse(&text).expect("chrome export parses");
+        let arr = j.get("traceEvents").expect("traceEvents");
+        match arr {
+            crate::util::json::Json::Arr(items) => assert_eq!(items.len(), evs.len()),
+            other => panic!("traceEvents not an array: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,446 @@
+//! The trace event schema and its versioned JSONL wire format.
+//!
+//! One [`TraceEvent`] is a flat, `Copy`, fixed-size record — no strings,
+//! no heap — so the recorder can buffer them in a preallocated ring
+//! without allocating (`trace::recorder`).  On disk a trace is JSONL:
+//! a header line `{"v":"CDPTRACE1",...}` followed by one event object
+//! per line.  The parser is synchronous, line-oriented and *tolerant*
+//! (the codex-wrapper `ThreadEvent` contract): a truncated final line,
+//! interleaved garbage, CRLF endings, or an event kind from a future
+//! format version are all skipped and counted, never an error — only
+//! I/O failures are.
+//!
+//! Versioning rule: the magic (`CDPTRACE1`) names the *line grammar*.
+//! Adding event kinds or fields is backward-compatible (old parsers
+//! skip-with-count unknown kinds and default missing fields to zero);
+//! only a change to the line grammar itself bumps the magic.
+//!
+//! Numbers ride as JSON numbers (f64-exact for any `ns` below 2⁵³ ≈ 104
+//! days of run time); the one field that genuinely needs all 64 bits —
+//! `bits`, which carries f64 loss bit patterns — rides as a hex string.
+
+use std::io::BufRead;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Trace format magic, written as the `v` field of the header line.
+pub const TRACE_MAGIC: &str = "CDPTRACE1";
+
+/// What a [`TraceEvent`] records.  Instants have `dur_ns == 0`; spans
+/// carry their measured duration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TraceKind {
+    /// A training step started on a worker.
+    StepBegin,
+    /// A training step committed on a worker.
+    StepEnd,
+    /// One stage's forward pass (span).
+    Fwd,
+    /// One stage's backward pass (span from the coordinators, instant
+    /// when adapted from a legacy `CommStats` mark).
+    Bwd,
+    /// One stage's SGD-momentum update (span).
+    Sgd,
+    /// Gradient data left a worker (bucket partial, shard, or the
+    /// barrier baseline's whole-model send).
+    GradSend,
+    /// Gradient data arrived at its reduction owner.
+    GradRecv,
+    /// Updated parameters left the optimizer owner.
+    ParamSend,
+    /// Updated parameters arrived at a worker.
+    ParamRecv,
+    /// An activation stash was allocated (`bytes` = its size).
+    ActAlloc,
+    /// An activation stash was freed (`bytes` = its size).
+    ActFree,
+    /// A per-step scalar loss report; `bits` holds `f64::to_bits`.
+    Loss,
+    /// A checkpoint was captured/persisted.
+    CkptSave,
+    /// Training resumed from a checkpoint.
+    CkptResume,
+    /// A wire edge (re)connected after a dial.
+    Reconnect,
+    /// A scripted worker kill took effect.
+    Kill,
+    /// A liveness heartbeat exchange.
+    Heartbeat,
+    /// A framed message left on a socket edge (`bytes` = frame size).
+    FrameSend,
+    /// A framed message arrived on a socket edge (`bytes` = frame size).
+    FrameRecv,
+    /// A kernel-level timing span (`bits` = opcode: 0 fwd, 1 bwd, 2 sgd).
+    Kernel,
+}
+
+impl TraceKind {
+    /// Every kind, for round-trip tests and exhaustive tooling.
+    pub const ALL: [TraceKind; 20] = [
+        TraceKind::StepBegin,
+        TraceKind::StepEnd,
+        TraceKind::Fwd,
+        TraceKind::Bwd,
+        TraceKind::Sgd,
+        TraceKind::GradSend,
+        TraceKind::GradRecv,
+        TraceKind::ParamSend,
+        TraceKind::ParamRecv,
+        TraceKind::ActAlloc,
+        TraceKind::ActFree,
+        TraceKind::Loss,
+        TraceKind::CkptSave,
+        TraceKind::CkptResume,
+        TraceKind::Reconnect,
+        TraceKind::Kill,
+        TraceKind::Heartbeat,
+        TraceKind::FrameSend,
+        TraceKind::FrameRecv,
+        TraceKind::Kernel,
+    ];
+
+    /// Canonical wire name (the JSONL `k` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::StepBegin => "step_begin",
+            TraceKind::StepEnd => "step_end",
+            TraceKind::Fwd => "fwd",
+            TraceKind::Bwd => "bwd",
+            TraceKind::Sgd => "sgd",
+            TraceKind::GradSend => "grad_send",
+            TraceKind::GradRecv => "grad_recv",
+            TraceKind::ParamSend => "param_send",
+            TraceKind::ParamRecv => "param_recv",
+            TraceKind::ActAlloc => "act_alloc",
+            TraceKind::ActFree => "act_free",
+            TraceKind::Loss => "loss",
+            TraceKind::CkptSave => "ckpt_save",
+            TraceKind::CkptResume => "ckpt_resume",
+            TraceKind::Reconnect => "reconnect",
+            TraceKind::Kill => "kill",
+            TraceKind::Heartbeat => "heartbeat",
+            TraceKind::FrameSend => "frame_send",
+            TraceKind::FrameRecv => "frame_recv",
+            TraceKind::Kernel => "kernel",
+        }
+    }
+
+    /// Inverse of [`TraceKind::name`]; `None` for unknown (future) kinds.
+    pub fn parse_name(s: &str) -> Option<TraceKind> {
+        TraceKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// The non-timing payload of an event, grouped so recording call sites
+/// stay short (`..Default::default()` for the fields they don't carry).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fields {
+    /// Worker id (micro-batch lane on in-process trainers).
+    pub worker: u32,
+    /// Pipeline stage (or peer id for wire frame events).
+    pub stage: u32,
+    /// Training step t.
+    pub step: u64,
+    /// θ-version id the operation ran at (0 when not applicable).
+    pub version: u64,
+    /// Byte count moved/allocated (0 when not applicable).
+    pub bytes: u64,
+    /// Kind-specific bit payload: `f64::to_bits` of the loss for
+    /// [`TraceKind::Loss`], the opcode for [`TraceKind::Kernel`].
+    pub bits: u64,
+}
+
+/// One trace event: a timestamp (+ optional duration) and [`Fields`].
+/// `ns` is relative to the recorder's enable instant; events from
+/// different OS processes are in different clock domains (the launcher's
+/// merge keeps them separated by worker id).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Start timestamp, ns since the recorder was enabled.
+    pub ns: u64,
+    /// Span duration in ns; 0 for instants.
+    pub dur_ns: u64,
+    /// What happened.
+    pub kind: TraceKind,
+    /// Worker id.
+    pub worker: u32,
+    /// Stage (or peer for frame events).
+    pub stage: u32,
+    /// Training step.
+    pub step: u64,
+    /// θ-version id (0 when not applicable).
+    pub version: u64,
+    /// Bytes moved/allocated (0 when not applicable).
+    pub bytes: u64,
+    /// Kind-specific bit payload (see [`Fields::bits`]).
+    pub bits: u64,
+}
+
+impl TraceEvent {
+    /// Build an event from its parts (timestamps supplied by the caller).
+    pub fn new(kind: TraceKind, ns: u64, dur_ns: u64, f: Fields) -> Self {
+        TraceEvent {
+            ns,
+            dur_ns,
+            kind,
+            worker: f.worker,
+            stage: f.stage,
+            step: f.step,
+            version: f.version,
+            bytes: f.bytes,
+            bits: f.bits,
+        }
+    }
+
+    /// A [`TraceKind::Loss`] event (no timestamp — the recorder stamps
+    /// its own copy when recording is enabled).
+    pub fn loss(worker: usize, step: u64, loss: f64) -> Self {
+        TraceEvent::new(
+            TraceKind::Loss,
+            0,
+            0,
+            Fields {
+                worker: worker as u32,
+                step,
+                bits: loss.to_bits(),
+                ..Fields::default()
+            },
+        )
+    }
+
+    /// The loss value a [`TraceKind::Loss`] event carries.
+    pub fn loss_value(&self) -> Option<f64> {
+        (self.kind == TraceKind::Loss).then(|| f64::from_bits(self.bits))
+    }
+
+    /// One JSONL line (no trailing newline).  Zero-valued optional
+    /// fields (`dur`, `ver`, `b`, `bits`) are omitted; the parser
+    /// defaults them back to zero.
+    pub fn to_json_line(&self) -> String {
+        let mut s = String::with_capacity(96);
+        s.push_str("{\"k\":\"");
+        s.push_str(self.kind.name());
+        s.push_str("\",\"ns\":");
+        s.push_str(&self.ns.to_string());
+        if self.dur_ns > 0 {
+            s.push_str(",\"dur\":");
+            s.push_str(&self.dur_ns.to_string());
+        }
+        s.push_str(",\"w\":");
+        s.push_str(&self.worker.to_string());
+        s.push_str(",\"st\":");
+        s.push_str(&self.stage.to_string());
+        s.push_str(",\"step\":");
+        s.push_str(&self.step.to_string());
+        if self.version > 0 {
+            s.push_str(",\"ver\":");
+            s.push_str(&self.version.to_string());
+        }
+        if self.bytes > 0 {
+            s.push_str(",\"b\":");
+            s.push_str(&self.bytes.to_string());
+        }
+        if self.bits > 0 {
+            s.push_str(",\"bits\":\"");
+            s.push_str(&format!("{:016x}", self.bits));
+            s.push('"');
+        }
+        s.push('}');
+        s
+    }
+
+    /// Decode one parsed JSONL object; `None` when it is not a
+    /// recognizable event (missing/unknown `k`, non-object, bad `bits`).
+    pub fn from_json(j: &Json) -> Option<TraceEvent> {
+        let kind = TraceKind::parse_name(j.get("k")?.as_str()?)?;
+        let u = |key: &str| j.get(key).and_then(Json::as_u64).unwrap_or(0);
+        let bits = match j.get("bits") {
+            None => 0,
+            Some(Json::Str(s)) => {
+                u64::from_str_radix(s.trim_start_matches("0x"), 16).ok()?
+            }
+            Some(v) => v.as_f64()? as u64,
+        };
+        Some(TraceEvent {
+            ns: u("ns"),
+            dur_ns: u("dur"),
+            kind,
+            worker: u("w") as u32,
+            stage: u("st") as u32,
+            step: u("step"),
+            version: u("ver"),
+            bytes: u("b"),
+            bits,
+        })
+    }
+
+    /// End timestamp (start + duration) — what the analyzer orders
+    /// completion-sensitive checks by.
+    pub fn end_ns(&self) -> u64 {
+        self.ns + self.dur_ns
+    }
+}
+
+/// The launcher's legacy stdout loss line, derived from a
+/// [`TraceKind::Loss`] event so the wire protocol has one source of
+/// truth (`None` for any other kind).  Format: `CDP_LOSS <step> <hex>`
+/// where `<hex>` is the 16-digit `f64::to_bits` of the loss.
+pub fn render_loss_line(ev: &TraceEvent) -> Option<String> {
+    (ev.kind == TraceKind::Loss).then(|| format!("CDP_LOSS {} {:016x}", ev.step, ev.bits))
+}
+
+/// A parsed trace: the events that decoded, plus the bookkeeping the
+/// tolerant parser accumulated along the way.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedTrace {
+    /// The header's `v` magic, when a header line was present.
+    pub version: Option<String>,
+    /// Ring-overflow drop count the header reported (0 when absent).
+    pub dropped: u64,
+    /// Every line that decoded into an event, in file order.
+    pub events: Vec<TraceEvent>,
+    /// Lines skipped: truncated/corrupt JSON, non-event objects,
+    /// unknown future kinds.  Blank lines are not counted.
+    pub skipped: u64,
+}
+
+/// Serialize a trace to its JSONL text (header + one line per event).
+pub fn to_jsonl(events: &[TraceEvent], dropped: u64) -> String {
+    let mut out = String::with_capacity(32 + events.len() * 96);
+    out.push_str(&format!("{{\"v\":\"{TRACE_MAGIC}\",\"dropped\":{dropped}}}\n"));
+    for ev in events {
+        out.push_str(&ev.to_json_line());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a trace file atomically (tmp + rename, the checkpoint
+/// discipline) so a crashed run leaves either the old file or the new
+/// one, never a half-written trace.
+pub fn write_jsonl(path: &Path, events: &[TraceEvent], dropped: u64) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = path.with_extension("jsonl.tmp");
+    std::fs::write(&tmp, to_jsonl(events, dropped))?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Tolerant line-oriented parse of a whole trace text (see the module
+/// docs for exactly what is skipped vs. kept).
+pub fn parse_jsonl(text: &str) -> ParsedTrace {
+    let mut out = ParsedTrace::default();
+    for line in text.lines() {
+        parse_line(line, &mut out);
+    }
+    out
+}
+
+/// Tolerant parse from any synchronous reader.  Only I/O errors
+/// propagate; malformed content is counted in
+/// [`ParsedTrace::skipped`].
+pub fn parse_jsonl_reader(r: impl BufRead) -> std::io::Result<ParsedTrace> {
+    let mut out = ParsedTrace::default();
+    for line in r.lines() {
+        parse_line(&line?, &mut out);
+    }
+    Ok(out)
+}
+
+/// Tolerant parse of a trace file on disk.
+pub fn parse_jsonl_file(path: &Path) -> anyhow::Result<ParsedTrace> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open trace {}: {e}", path.display()))?;
+    Ok(parse_jsonl_reader(std::io::BufReader::new(f))?)
+}
+
+fn parse_line(raw: &str, out: &mut ParsedTrace) {
+    let line = raw.trim_end_matches('\r').trim();
+    if line.is_empty() {
+        return; // blank lines are not corruption
+    }
+    let Ok(j) = Json::parse(line) else {
+        out.skipped += 1; // truncated final line, interleaved garbage
+        return;
+    };
+    if let Some(v) = j.get("v").and_then(Json::as_str) {
+        if out.version.is_none() {
+            out.version = Some(v.to_string());
+            out.dropped = j.get("dropped").and_then(Json::as_u64).unwrap_or(0);
+        }
+        return;
+    }
+    match TraceEvent::from_json(&j) {
+        Some(ev) => out.events.push(ev),
+        None => out.skipped += 1, // unknown future kind / non-event object
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_round_trip_exhaustively() {
+        for k in TraceKind::ALL {
+            assert_eq!(TraceKind::parse_name(k.name()), Some(k), "{}", k.name());
+        }
+        assert_eq!(TraceKind::parse_name("teleport"), None);
+    }
+
+    #[test]
+    fn event_json_line_round_trips() {
+        let ev = TraceEvent::new(
+            TraceKind::GradSend,
+            123_456,
+            789,
+            Fields {
+                worker: 2,
+                stage: 1,
+                step: 7,
+                version: 30,
+                bytes: 4096,
+                bits: 0xdead_beef_0000_0001,
+            },
+        );
+        let line = ev.to_json_line();
+        let j = Json::parse(&line).expect("emitted line is valid JSON");
+        assert_eq!(TraceEvent::from_json(&j), Some(ev));
+    }
+
+    #[test]
+    fn loss_event_carries_exact_bits() {
+        let ev = TraceEvent::loss(0, 3, 2.718281828459045);
+        assert_eq!(ev.loss_value(), Some(2.718281828459045));
+        let line = render_loss_line(&ev).unwrap();
+        assert_eq!(
+            line,
+            format!("CDP_LOSS 3 {:016x}", 2.718281828459045f64.to_bits())
+        );
+        assert_eq!(render_loss_line(&TraceEvent::new(
+            TraceKind::Fwd,
+            0,
+            0,
+            Fields::default()
+        )), None);
+    }
+
+    #[test]
+    fn header_and_events_round_trip() {
+        let evs = vec![
+            TraceEvent::new(TraceKind::StepBegin, 1, 0, Fields::default()),
+            TraceEvent::loss(1, 0, std::f64::consts::PI),
+        ];
+        let text = to_jsonl(&evs, 5);
+        let p = parse_jsonl(&text);
+        assert_eq!(p.version.as_deref(), Some(TRACE_MAGIC));
+        assert_eq!(p.dropped, 5);
+        assert_eq!(p.events, evs);
+        assert_eq!(p.skipped, 0);
+    }
+}

@@ -1,0 +1,38 @@
+//! Crate-wide structured tracing: one event stream for everything the
+//! bespoke instrumentation used to measure separately.
+//!
+//! * [`event`] — the flat [`TraceEvent`] record, its kind vocabulary,
+//!   and the versioned (`CDPTRACE1`) JSONL wire format with a tolerant
+//!   line-oriented parser (truncation/garbage/unknown-kind lines are
+//!   skipped and counted, never fatal).
+//! * [`recorder`] — the process-global ring recorder: one relaxed
+//!   atomic load when disabled, zero steady-state allocation when
+//!   enabled (the contract `benches/hotpath.rs` asserts and records as
+//!   `trace_disabled_overhead`).
+//! * [`analyze`] — `cdp trace` back-end: summaries, Chrome
+//!   trace-event export, and machine-checked verification of the
+//!   paper's constant-memory and balanced-communication claims.
+//!
+//! Producers: all four coordinators (step/fwd/bwd/sgd/loss/checkpoint
+//! lifecycles and activation stash accounting), `comm` (every
+//! `CommStats::mark` forwards here, making the legacy timeline an
+//! adapter), `comm::transport` (frame send/recv and reconnects),
+//! `runtime::native` (kernel spans behind [`recorder::set_kernels`]),
+//! and the `cdp` CLI (`--trace`).  See `rust/DESIGN-OBS.md`.
+
+pub mod analyze;
+pub mod event;
+pub mod recorder;
+
+pub use analyze::{
+    render_summary, render_verify, summarize, to_chrome, verify, Expect, Summary, VerifyOpts,
+    VerifyReport,
+};
+pub use event::{
+    parse_jsonl, parse_jsonl_file, parse_jsonl_reader, render_loss_line, to_jsonl, write_jsonl,
+    Fields, ParsedTrace, TraceEvent, TraceKind, TRACE_MAGIC,
+};
+pub use recorder::{
+    capture, drain, enable, enabled, instant, kernel_end, kernel_start, kernels_enabled, loss,
+    set_kernels, span, start,
+};

@@ -1,0 +1,316 @@
+//! The process-global ring-buffered trace recorder.
+//!
+//! Cost contract (asserted by `benches/hotpath.rs` and recorded as the
+//! `trace_disabled_overhead` counter in `BENCH_hotpath.json`):
+//!
+//! * **Disabled** (the default): every recording call is a single
+//!   `Relaxed` atomic load and an immediate return — no lock, no clock
+//!   read, no allocation.  This is the state every hot path ships in.
+//! * **Enabled**: a short mutex hold and one write into a ring buffer
+//!   preallocated by [`enable`] — zero steady-state allocation.  When
+//!   the ring wraps, the oldest event is overwritten and the drop is
+//!   counted, so a bounded trace of the *most recent* activity always
+//!   survives; the drop count rides in the JSONL header.
+//!
+//! [`enable`] publishes the enabled flag *inside* the ring lock — the
+//! same discipline `CommStats::enable_timeline` was retrofitted to —
+//! so a concurrent recording call can never observe the flag before
+//! the buffer it implies exists.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::event::{Fields, TraceEvent, TraceKind};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static KERNELS: AtomicBool = AtomicBool::new(false);
+static RING: Mutex<Option<Ring>> = Mutex::new(None);
+/// Serializes tests that exercise the process-global recorder.
+static CAPTURE_GATE: Mutex<()> = Mutex::new(());
+
+struct Ring {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    head: usize,
+    dropped: u64,
+    epoch: Instant,
+}
+
+fn lock_ring() -> std::sync::MutexGuard<'static, Option<Ring>> {
+    RING.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Turn recording on with a ring of `capacity` events (clamped to ≥ 1).
+/// Allocates the whole ring up front; recording never allocates after
+/// this returns.  Re-enabling discards any events from a prior window.
+pub fn enable(capacity: usize) {
+    let mut g = lock_ring();
+    *g = Some(Ring {
+        buf: Vec::with_capacity(capacity.max(1)),
+        cap: capacity.max(1),
+        head: 0,
+        dropped: 0,
+        epoch: Instant::now(),
+    });
+    // Published under the lock: no recorder can see ENABLED=true while
+    // the ring it implies is still being installed.
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Whether recording is on.  This load *is* the entire disabled-path
+/// cost of every `instant`/`span` call site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Gate the (hotter, finer-grained) kernel-level spans in
+/// `runtime::native` separately from the rest of the trace.
+pub fn set_kernels(on: bool) {
+    KERNELS.store(on, Ordering::Relaxed);
+}
+
+/// True only when recording is on *and* the kernel knob is set.
+#[inline]
+pub fn kernels_enabled() -> bool {
+    enabled() && KERNELS.load(Ordering::Relaxed)
+}
+
+/// Nanoseconds since [`enable`]; 0 when disabled.  Use as the start
+/// timestamp handed back to [`span`].
+#[inline]
+pub fn start() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    lock_ring().as_ref().map_or(0, |r| r.epoch.elapsed().as_nanos() as u64)
+}
+
+fn push(kind: TraceKind, started_ns: Option<u64>, f: Fields) {
+    let mut g = lock_ring();
+    let Some(r) = g.as_mut() else { return };
+    let now = r.epoch.elapsed().as_nanos() as u64;
+    let (ns, dur_ns) = match started_ns {
+        Some(t0) => (t0, now.saturating_sub(t0)),
+        None => (now, 0),
+    };
+    let ev = TraceEvent::new(kind, ns, dur_ns, f);
+    if r.buf.len() < r.cap {
+        r.buf.push(ev); // within preallocated capacity: no allocation
+    } else {
+        r.buf[r.head] = ev;
+        r.head = (r.head + 1) % r.cap;
+        r.dropped += 1;
+    }
+}
+
+/// Record an instant event.  No-op (one atomic load) when disabled.
+#[inline]
+pub fn instant(kind: TraceKind, f: Fields) {
+    if !enabled() {
+        return;
+    }
+    push(kind, None, f);
+}
+
+/// Record a span that began at `started_ns` (a value from [`start`])
+/// and ends now.  No-op (one atomic load) when disabled.
+#[inline]
+pub fn span(kind: TraceKind, started_ns: u64, f: Fields) {
+    if !enabled() {
+        return;
+    }
+    push(kind, Some(started_ns), f);
+}
+
+/// Record a [`TraceKind::Loss`] event and return it (timestamp-free)
+/// so callers — the worker CLI's `CDP_LOSS` back-compat line — can
+/// derive their output from the very event that entered the stream.
+pub fn loss(worker: usize, step: u64, loss: f64) -> TraceEvent {
+    let ev = TraceEvent::loss(worker, step, loss);
+    instant(
+        TraceKind::Loss,
+        Fields {
+            worker: ev.worker,
+            step: ev.step,
+            bits: ev.bits,
+            ..Fields::default()
+        },
+    );
+    ev
+}
+
+/// Start timestamp for a kernel span; 0 (and no later cost) unless the
+/// kernel knob is on.
+#[inline]
+pub fn kernel_start() -> u64 {
+    if kernels_enabled() {
+        start()
+    } else {
+        0
+    }
+}
+
+/// Close a kernel span opened by [`kernel_start`].  `op` is the opcode
+/// (0 fwd, 1 bwd, 2 sgd), carried in `bits`.
+#[inline]
+pub fn kernel_end(started_ns: u64, op: u64, stage: usize, step: u64) {
+    if !kernels_enabled() {
+        return;
+    }
+    push(
+        TraceKind::Kernel,
+        Some(started_ns),
+        Fields {
+            stage: stage as u32,
+            step,
+            bits: op,
+            ..Fields::default()
+        },
+    );
+}
+
+/// Turn recording off and take everything buffered, oldest first,
+/// together with the ring-overflow drop count.
+pub fn drain() -> (Vec<TraceEvent>, u64) {
+    let mut g = lock_ring();
+    ENABLED.store(false, Ordering::Release);
+    let Some(mut r) = g.take() else {
+        return (Vec::new(), 0);
+    };
+    if r.buf.len() == r.cap && r.head > 0 {
+        r.buf.rotate_left(r.head); // unwrap the ring into time order
+    }
+    (r.buf, r.dropped)
+}
+
+/// The gate [`capture`] serializes on, for tests that feed the
+/// process-global recorder *without* capturing (e.g. through
+/// `CommStats::mark` forwarding) — hold it so parallel test threads
+/// don't pollute another test's capture window.  Do not call [`capture`]
+/// while holding it (same mutex).
+#[doc(hidden)]
+pub fn test_gate() -> std::sync::MutexGuard<'static, ()> {
+    CAPTURE_GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with recording enabled (ring of `capacity`), then drain.
+/// Returns `(f's result, events, dropped)`.  Holds a process-wide gate
+/// so concurrent tests of the global recorder serialize instead of
+/// stomping each other's windows.
+pub fn capture<R>(capacity: usize, f: impl FnOnce() -> R) -> (R, Vec<TraceEvent>, u64) {
+    let _gate = CAPTURE_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    enable(capacity);
+    let out = f();
+    let (events, dropped) = drain();
+    (out, events, dropped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let _gate = CAPTURE_GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let (evs, dropped) = drain(); // ensure off
+        drop((evs, dropped));
+        assert!(!enabled());
+        instant(TraceKind::Fwd, Fields::default());
+        span(TraceKind::Bwd, start(), Fields::default());
+        assert_eq!(start(), 0);
+        let (evs, dropped) = drain();
+        assert!(evs.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn capture_orders_events_and_measures_spans() {
+        let ((), evs, dropped) = capture(64, || {
+            let t0 = start();
+            instant(
+                TraceKind::GradSend,
+                Fields {
+                    worker: 1,
+                    stage: 2,
+                    step: 3,
+                    bytes: 16,
+                    ..Fields::default()
+                },
+            );
+            span(TraceKind::Fwd, t0, Fields { stage: 1, ..Fields::default() });
+        });
+        assert_eq!(dropped, 0);
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, TraceKind::GradSend);
+        assert_eq!(evs[0].bytes, 16);
+        assert_eq!(evs[1].kind, TraceKind::Fwd);
+        assert!(evs[1].ns <= evs[0].ns, "span start precedes the instant");
+        assert!(evs[1].end_ns() >= evs[1].ns);
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let ((), evs, dropped) = capture(4, || {
+            for i in 0..10u64 {
+                instant(TraceKind::Heartbeat, Fields { step: i, ..Fields::default() });
+            }
+        });
+        assert_eq!(evs.len(), 4);
+        assert_eq!(dropped, 6);
+        let steps: Vec<u64> = evs.iter().map(|e| e.step).collect();
+        assert_eq!(steps, vec![6, 7, 8, 9], "newest events survive, in order");
+    }
+
+    #[test]
+    fn kernel_knob_gates_kernel_spans() {
+        let ((), evs, _) = capture(16, || {
+            set_kernels(false);
+            let t0 = kernel_start();
+            kernel_end(t0, 0, 1, 2);
+            set_kernels(true);
+            let t1 = kernel_start();
+            kernel_end(t1, 2, 3, 4);
+            set_kernels(false);
+        });
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].kind, TraceKind::Kernel);
+        assert_eq!((evs[0].bits, evs[0].stage, evs[0].step), (2, 3, 4));
+    }
+
+    #[test]
+    fn enable_under_concurrent_recording_is_safe() {
+        // The ordering discipline this module exists to enforce (the
+        // CommStats::enable_timeline hazard): threads hammer the
+        // recorder while the main thread flips it on and off.
+        let _gate = CAPTURE_GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let threads: Vec<_> = (0..4u32)
+            .map(|w| {
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut n = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        instant(
+                            TraceKind::Heartbeat,
+                            Fields { worker: w, step: n, ..Fields::default() },
+                        );
+                        n += 1;
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..50 {
+            enable(128);
+            std::thread::yield_now();
+            let (evs, _) = drain();
+            assert!(evs.len() <= 128);
+            assert!(evs.iter().all(|e| e.kind == TraceKind::Heartbeat));
+        }
+        stop.store(true, Ordering::Relaxed);
+        for t in threads {
+            t.join().expect("recorder stress thread panicked");
+        }
+    }
+}

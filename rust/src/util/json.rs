@@ -55,6 +55,14 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            // Non-finite numbers ride as string sentinels (see `write`);
+            // map them back so emit → parse → as_f64 round-trips.
+            Json::Str(s) => match s.as_str() {
+                "NaN" => Some(f64::NAN),
+                "Infinity" => Some(f64::INFINITY),
+                "-Infinity" => Some(f64::NEG_INFINITY),
+                _ => None,
+            },
             _ => None,
         }
     }
@@ -137,7 +145,19 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // Bare `NaN`/`inf` is invalid JSON; emit the string
+                    // sentinels `as_f64` maps back to non-finite f64s.
+                    out.push('"');
+                    out.push_str(if n.is_nan() {
+                        "NaN"
+                    } else if *n > 0.0 {
+                        "Infinity"
+                    } else {
+                        "-Infinity"
+                    });
+                    out.push('"');
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -426,5 +446,24 @@ mod tests {
     fn integers_emit_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_emit_valid_json_and_round_trip() {
+        for (v, sentinel) in [
+            (f64::NAN, "\"NaN\""),
+            (f64::INFINITY, "\"Infinity\""),
+            (f64::NEG_INFINITY, "\"-Infinity\""),
+        ] {
+            let text = Json::Num(v).to_string();
+            assert_eq!(text, sentinel);
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{sentinel}");
+        }
+        // Embedded in a structure, the document stays parseable.
+        let j = obj(vec![("bad", Json::Num(f64::NAN)), ("ok", Json::Num(1.0))]);
+        let re = Json::parse(&j.to_string()).unwrap();
+        assert!(re.get("bad").unwrap().as_f64().unwrap().is_nan());
+        assert_eq!(re.get("ok").unwrap().as_f64(), Some(1.0));
     }
 }

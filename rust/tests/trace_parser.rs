@@ -1,0 +1,158 @@
+//! Tolerance contract of the `CDPTRACE1` JSONL parser (ISSUE 10
+//! satellite): corrupt input is *counted*, never fatal, and well-formed
+//! events survive byte-exactly — including a property round-trip over
+//! the full event-kind vocabulary.
+
+use cyclic_dp::testing;
+use cyclic_dp::trace::{
+    parse_jsonl, parse_jsonl_file, parse_jsonl_reader, to_jsonl, write_jsonl, Fields, TraceEvent,
+    TraceKind, TRACE_MAGIC,
+};
+
+fn ev(kind: TraceKind, ns: u64, step: u64) -> TraceEvent {
+    TraceEvent::new(kind, ns, 0, Fields { step, ..Fields::default() })
+}
+
+#[test]
+fn empty_and_blank_inputs_parse_to_nothing() {
+    for text in ["", "\n", "\n\n\r\n  \n"] {
+        let p = parse_jsonl(text);
+        assert_eq!(p.version, None);
+        assert_eq!(p.dropped, 0);
+        assert!(p.events.is_empty());
+        assert_eq!(p.skipped, 0, "blank lines are not corruption: {text:?}");
+    }
+}
+
+#[test]
+fn truncated_final_line_is_skipped_not_fatal() {
+    let mut text = to_jsonl(&[ev(TraceKind::StepBegin, 10, 0), ev(TraceKind::StepEnd, 20, 0)], 0);
+    // simulate a crash mid-flush: chop the last line in half
+    let cut = text.len() - 12;
+    text.truncate(cut);
+    let p = parse_jsonl(&text);
+    assert_eq!(p.version.as_deref(), Some(TRACE_MAGIC));
+    assert_eq!(p.events.len(), 1, "the intact line survives");
+    assert_eq!(p.skipped, 1, "the truncated line is counted");
+}
+
+#[test]
+fn interleaved_garbage_and_unknown_kinds_are_counted() {
+    let good = ev(TraceKind::Fwd, 5, 1);
+    let text = format!(
+        "{{\"v\":\"{TRACE_MAGIC}\",\"dropped\":2}}\n\
+         not json at all\n\
+         {}\n\
+         {{\"k\":\"warp_drive\",\"ns\":9}}\n\
+         {{\"no_kind\":1}}\n\
+         [1,2,3]\n",
+        good.to_json_line()
+    );
+    let p = parse_jsonl(&text);
+    assert_eq!(p.version.as_deref(), Some(TRACE_MAGIC));
+    assert_eq!(p.dropped, 2);
+    assert_eq!(p.events, vec![good]);
+    // garbage line + unknown future kind + kind-less object + non-object
+    assert_eq!(p.skipped, 4);
+}
+
+#[test]
+fn crlf_line_endings_parse_cleanly() {
+    let unix = to_jsonl(&[ev(TraceKind::Loss, 1, 0), ev(TraceKind::Sgd, 2, 0)], 1);
+    let dos = unix.replace('\n', "\r\n");
+    let p = parse_jsonl(&dos);
+    assert_eq!(p.version.as_deref(), Some(TRACE_MAGIC));
+    assert_eq!(p.dropped, 1);
+    assert_eq!(p.events.len(), 2);
+    assert_eq!(p.skipped, 0, "CRLF is not corruption");
+}
+
+#[test]
+fn headerless_stream_still_yields_events() {
+    // a tail of a rotated file: events with no header line
+    let text = format!("{}\n{}\n", ev(TraceKind::Bwd, 1, 0).to_json_line(),
+        ev(TraceKind::GradSend, 2, 0).to_json_line());
+    let p = parse_jsonl(&text);
+    assert_eq!(p.version, None);
+    assert_eq!(p.dropped, 0);
+    assert_eq!(p.events.len(), 2);
+}
+
+#[test]
+fn only_first_header_wins() {
+    // concatenated files: the second header must not clobber the first
+    let a = to_jsonl(&[ev(TraceKind::StepBegin, 1, 0)], 3);
+    let b = to_jsonl(&[ev(TraceKind::StepEnd, 2, 0)], 9);
+    let p = parse_jsonl(&format!("{a}{b}"));
+    assert_eq!(p.version.as_deref(), Some(TRACE_MAGIC));
+    assert_eq!(p.dropped, 3, "first header's drop count is kept");
+    assert_eq!(p.events.len(), 2, "events from both segments survive");
+}
+
+#[test]
+fn reader_and_file_paths_agree_with_str_parse() {
+    let events = vec![
+        ev(TraceKind::Fwd, 1, 0),
+        TraceEvent::loss(2, 1, -0.125),
+        TraceEvent::new(
+            TraceKind::Kernel,
+            7,
+            13,
+            Fields { stage: 3, step: 2, bits: 1, ..Fields::default() },
+        ),
+    ];
+    let text = to_jsonl(&events, 4);
+    let from_str = parse_jsonl(&text);
+    let from_reader = parse_jsonl_reader(std::io::Cursor::new(text.clone())).unwrap();
+    assert_eq!(from_str.events, from_reader.events);
+    assert_eq!(from_str.dropped, from_reader.dropped);
+
+    let dir = std::env::temp_dir().join(format!("cdp-trace-parser-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.jsonl");
+    write_jsonl(&path, &events, 4).unwrap();
+    let from_file = parse_jsonl_file(&path).unwrap();
+    assert_eq!(from_file.events, events);
+    assert_eq!(from_file.dropped, 4);
+    assert_eq!(from_file.version.as_deref(), Some(TRACE_MAGIC));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_trace_file_is_an_error_not_a_panic() {
+    let err = parse_jsonl_file(std::path::Path::new("/nonexistent/cdp-no-such-trace.jsonl"));
+    assert!(err.is_err(), "I/O failures propagate; only content is tolerant");
+}
+
+#[test]
+fn property_round_trip_over_every_kind() {
+    // Timestamps/counters stay below 2^53 (the format's f64-exact range);
+    // `bits` exercises all 64 bits — it rides as a hex string.
+    const MAX_EXACT: u64 = 1 << 53;
+    testing::check("trace-jsonl-round-trip", 200, |g| {
+        let n = g.usize_in(0, 12);
+        let events: Vec<TraceEvent> = (0..n)
+            .map(|_| {
+                TraceEvent::new(
+                    *g.choose(&TraceKind::ALL),
+                    g.u64() % MAX_EXACT,
+                    g.u64() % MAX_EXACT,
+                    Fields {
+                        worker: g.usize_in(0, 64) as u32,
+                        stage: g.usize_in(0, 64) as u32,
+                        step: g.u64() % MAX_EXACT,
+                        version: g.u64() % MAX_EXACT,
+                        bytes: g.u64() % MAX_EXACT,
+                        bits: g.u64(),
+                    },
+                )
+            })
+            .collect();
+        let dropped = g.u64() % MAX_EXACT;
+        let p = parse_jsonl(&to_jsonl(&events, dropped));
+        assert_eq!(p.version.as_deref(), Some(TRACE_MAGIC));
+        assert_eq!(p.dropped, dropped);
+        assert_eq!(p.skipped, 0);
+        assert_eq!(p.events, events);
+    });
+}

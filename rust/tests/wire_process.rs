@@ -8,11 +8,12 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use cyclic_dp::cluster::launch::{launch, parse_loss_bits, LaunchSpec};
+use cyclic_dp::cluster::launch::{launch, merge_traces, parse_loss_bits, LaunchSpec};
 use cyclic_dp::comm::WireKind;
 use cyclic_dp::coordinator::{multi, zero, SharedBackend, StepLog};
 use cyclic_dp::parallel::Rule;
 use cyclic_dp::runtime::NativeBackend;
+use cyclic_dp::trace::{render_loss_line, verify, TraceKind, VerifyOpts};
 
 const STEPS: usize = 3;
 
@@ -86,4 +87,61 @@ fn zero_worker_processes_over_uds_match_the_in_process_fabric() {
         .logs;
     let got = fleet("zero", WireKind::Uds, "zero-uds");
     assert_bit_identical(&got, &want);
+}
+
+#[test]
+fn traced_fleet_loss_events_bit_match_the_stdout_protocol() {
+    // Per-process tracing: each worker writes trace-w{id}.jsonl into the
+    // rendezvous dir; the launcher-side merge must yield a stream whose
+    // worker-0 Loss events *are* the CDP_LOSS stdout lines (the stdout
+    // protocol is derived from the trace event, so they agree by
+    // construction — this proves the plumbing end to end), and the
+    // merged fleet trace must still satisfy the cyclic invariants.
+    let dir = std::env::temp_dir().join(format!("cdp-proc-traced-{}", std::process::id()));
+    let n = shared().manifest().n_microbatches;
+    let spec = LaunchSpec {
+        workers: n,
+        transport: WireKind::Uds,
+        rendezvous: dir.clone(),
+        exe: Some(PathBuf::from(env!("CARGO_BIN_EXE_cdp"))),
+        forward: vec![
+            "--trainer".into(),
+            "multi".into(),
+            "--rule".into(),
+            "cdp_v2".into(),
+            "--steps".into(),
+            STEPS.to_string(),
+            "--trace-dir".into(),
+            dir.to_string_lossy().into_owned(),
+        ],
+    };
+    let result = launch(&spec);
+    let merged = merge_traces(&dir, n);
+    std::fs::remove_dir_all(&dir).ok();
+    let outs = result.unwrap_or_else(|e| panic!("traced launch failed: {e:#}"));
+    let merged = merged.unwrap_or_else(|e| panic!("merge failed: {e:#}"));
+
+    let stdout = String::from_utf8_lossy(&outs[0].stdout);
+    let lines: Vec<&str> = stdout.lines().filter(|l| l.starts_with("CDP_LOSS ")).collect();
+    let loss_events: Vec<_> = merged
+        .events
+        .iter()
+        .filter(|e| e.kind == TraceKind::Loss && e.worker == 0)
+        .collect();
+    assert_eq!(lines.len(), STEPS, "one stdout loss line per step");
+    assert_eq!(loss_events.len(), STEPS, "one traced loss event per step");
+    for (ev, line) in loss_events.iter().zip(&lines) {
+        assert_eq!(
+            render_loss_line(ev).as_deref(),
+            Some(*line),
+            "stdout protocol and trace stream must be the same event"
+        );
+    }
+
+    // fleet traces carry the wire layer too
+    assert!(merged.events.iter().any(|e| e.kind == TraceKind::FrameSend));
+    assert!(merged.events.iter().any(|e| e.kind == TraceKind::FrameRecv));
+    let r = verify(&merged.events, &VerifyOpts::default());
+    assert!(r.mem.evaluated && r.balance.evaluated, "{r:?}");
+    assert!(r.ok, "merged fleet trace must verify: {r:?}");
 }
